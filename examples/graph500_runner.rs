@@ -1,0 +1,135 @@
+//! End-to-end driver (the repo's headline validation run): a Graph500
+//! style multi-root BFS benchmark that exercises **every layer** of the
+//! stack on one workload:
+//!
+//! 1. materialize a Table-I dataset;
+//! 2. run the Algorithm-2 functional engine + U280 timing model over 16
+//!    sampled roots (harmonic-mean GTEPS, Graph500 aggregation);
+//! 3. cross-check one root on the cycle-accurate simulator;
+//! 4. cross-check a shrunk copy of the graph through the **XLA/PJRT
+//!    path** (Pallas kernel -> JAX model -> HLO text -> Rust execute),
+//!    proving the three-layer architecture composes.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example graph500_runner [-- dataset scale]
+//! ```
+
+use scalabfs::bfs::bitmap::run_bfs;
+use scalabfs::bfs::gteps::harmonic_mean;
+use scalabfs::bfs::reference;
+use scalabfs::graph::datasets;
+use scalabfs::runtime::XlaBfsEngine;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::cycle::CycleSim;
+use scalabfs::sim::throughput::ThroughputSim;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("RMAT22-16");
+    let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let seed = 42u64;
+
+    println!("=== ScalaBFS end-to-end driver: {dataset} (scale 1/{scale}) ===\n");
+
+    // ---- 1. dataset ----
+    let graph = datasets::by_name(dataset, scale, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    println!(
+        "[1/4] dataset {}: |V|={} |E|={} avg deg {:.1}",
+        graph.name,
+        graph.num_vertices(),
+        graph.num_edges(),
+        graph.avg_degree()
+    );
+
+    // ---- 2. multi-root functional + timing runs ----
+    let cfg = SimConfig::u280_full();
+    let roots = reference::sample_roots(&graph, 16, seed);
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let sim = ThroughputSim::new(cfg.clone());
+    let mut gteps = Vec::new();
+    let mut checked = 0usize;
+    for &root in &roots {
+        let run = run_bfs(&graph, cfg.part, root, &mut Hybrid::default());
+        // Validate every root against the reference BFS.
+        let truth = reference::bfs(&graph, root);
+        anyhow::ensure!(run.levels == truth.levels, "level mismatch at root {root}");
+        checked += 1;
+        let res = sim.simulate(&run, &graph.name, bytes);
+        gteps.push(res.gteps);
+    }
+    let hm = harmonic_mean(&gteps);
+    let max = gteps.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "[2/4] {} roots validated; GTEPS harmonic mean {:.2}, max {:.2} (32PC/64PE hybrid)",
+        checked, hm, max
+    );
+
+    // ---- 3. cycle-sim cross-check on one root ----
+    let small = datasets::by_name("RMAT18-8", (scale * 4).max(32), seed).unwrap();
+    let root0 = reference::sample_roots(&small, 1, seed)[0];
+    let ccfg = SimConfig::u280(8, 16);
+    let cyc = CycleSim::new(&small, ccfg.clone()).run(root0, &mut Hybrid::default());
+    let truth = reference::bfs(&small, root0);
+    anyhow::ensure!(cyc.levels == truth.levels, "cycle sim mismatch");
+    let (func_run, thr) = scalabfs::sim::throughput::simulate_bfs(
+        &small,
+        ccfg,
+        root0,
+        &mut Hybrid::default(),
+    );
+    anyhow::ensure!(func_run.levels == truth.levels);
+    let ratio = cyc.cycles as f64 / thr.total_cycles as f64;
+    println!(
+        "[3/4] cycle sim on {}: {} cycles vs analytic {} (ratio {:.2}); levels match",
+        small.name, cyc.cycles, thr.total_cycles, ratio
+    );
+
+    // ---- 4. XLA/PJRT path on a tiny copy ----
+    match XlaBfsEngine::new() {
+        Ok(mut engine) => {
+            // Shrink until the graph fits the largest dense artifact.
+            let mut shrink = 256u32;
+            let tiny = loop {
+                let g = datasets::by_name(dataset, shrink.max(scale), seed).unwrap();
+                if g.num_vertices() <= 2048 {
+                    break g;
+                }
+                shrink *= 2;
+            };
+            let troot = reference::sample_roots(&tiny, 1, seed)[0];
+            let res = engine.run(&tiny, troot)?;
+            let truth = reference::bfs(&tiny, troot);
+            anyhow::ensure!(
+                res.levels == truth.levels,
+                "XLA levels diverge from reference"
+            );
+            println!(
+                "[4/4] XLA path on {} (|V|={}): {} iterations, {} reached, exec {:.1} ms - levels MATCH",
+                tiny.name,
+                tiny.num_vertices(),
+                res.iterations,
+                res.reached,
+                res.execute_seconds * 1e3
+            );
+            // Whole-BFS-on-device variant (one PJRT call, lax.while_loop).
+            if let Ok(full) = engine.run_full(&tiny, troot) {
+                anyhow::ensure!(full.levels == truth.levels, "bfs_full diverges");
+                println!(
+                    "      bfs_full (single execute): exec {:.1} ms ({:.1}x vs per-step)",
+                    full.execute_seconds * 1e3,
+                    res.execute_seconds / full.execute_seconds.max(1e-12)
+                );
+            }
+        }
+        Err(e) => {
+            println!("[4/4] SKIPPED XLA path ({e}); run `make artifacts` first");
+        }
+    }
+
+    println!("\nend-to-end driver: ALL CHECKS PASSED");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Mode study (Fig 8 companion): run push-only, pull-only, scripted and
+//! hybrid schedules on one graph and break down *why* hybrid wins —
+//! per-iteration bytes and the mode chosen at each level.
+//!
+//! ```bash
+//! cargo run --release --example mode_study [-- dataset scale]
+//! ```
+
+use scalabfs::bfs::bitmap::run_bfs;
+use scalabfs::bfs::reference;
+use scalabfs::bfs::Mode;
+use scalabfs::graph::datasets;
+use scalabfs::sched::{Fixed, Hybrid, ModePolicy, Scripted};
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::throughput::ThroughputSim;
+use scalabfs::util::tables::{fmt_f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("RMAT22-32");
+    let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let graph = datasets::by_name(dataset, scale, 42)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let cfg = SimConfig::u280_full();
+    let root = reference::sample_roots(&graph, 1, 9)[0];
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let sim = ThroughputSim::new(cfg.clone());
+
+    let mut policies: Vec<(&str, Box<dyn ModePolicy>)> = vec![
+        ("push-only", Box::new(Fixed(Mode::Push))),
+        ("pull-only", Box::new(Fixed(Mode::Pull))),
+        (
+            "scripted (push,push,pull,pull,push...)",
+            Box::new(Scripted(vec![
+                Mode::Push,
+                Mode::Push,
+                Mode::Pull,
+                Mode::Pull,
+                Mode::Push,
+            ])),
+        ),
+        ("hybrid (direction-optimizing)", Box::new(Hybrid::default())),
+    ];
+
+    let mut t = Table::new(vec![
+        "policy", "iters", "HBM bytes", "GTEPS", "vs push", "vs pull",
+    ]);
+    let mut reference_gteps = (0.0f64, 0.0f64); // (push, pull)
+    let truth = reference::bfs(&graph, root);
+    let mut rows = Vec::new();
+    for (name, policy) in policies.iter_mut() {
+        let run = run_bfs(&graph, cfg.part, root, policy.as_mut());
+        anyhow::ensure!(run.levels == truth.levels, "{name} wrong levels");
+        let res = sim.simulate(&run, &graph.name, bytes);
+        if *name == "push-only" {
+            reference_gteps.0 = res.gteps;
+        }
+        if *name == "pull-only" {
+            reference_gteps.1 = res.gteps;
+        }
+        rows.push((name.to_string(), run, res));
+    }
+    for (name, run, res) in &rows {
+        t.row(vec![
+            name.clone(),
+            run.traffic.iters.len().to_string(),
+            format!("{:.1} MB", run.traffic.total_bytes() as f64 / 1e6),
+            fmt_f(res.gteps),
+            format!("{:.2}x", res.gteps / reference_gteps.0),
+            format!("{:.2}x", res.gteps / reference_gteps.1),
+        ]);
+    }
+    println!(
+        "mode study on {} (|V|={}, root {}):\n\n{}",
+        graph.name,
+        graph.num_vertices(),
+        root,
+        t.render()
+    );
+
+    // Show the hybrid schedule's decisions.
+    let (_, run, _) = &rows[3];
+    print!("hybrid schedule: ");
+    for it in &run.traffic.iters {
+        print!("{} ", it.mode);
+    }
+    println!("\n(paper: push at the sparse beginning/end, pull mid-term)");
+    Ok(())
+}

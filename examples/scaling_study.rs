@@ -1,0 +1,66 @@
+//! Scaling study: sweep both of the paper's scaling directions on one
+//! graph — HBM PCs (Fig 9) and PEs per PC (Fig 10) — and print the two
+//! series side by side with speedup columns.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study [-- dataset scale]
+//! ```
+
+use scalabfs::bfs::reference;
+use scalabfs::graph::datasets;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::throughput::simulate_bfs;
+use scalabfs::util::tables::{fmt_f, Table};
+
+fn gteps_for(graph: &scalabfs::graph::Graph, pcs: usize, pes: usize, seed: u64) -> f64 {
+    let cfg = SimConfig::u280(pcs, pes);
+    let root = reference::sample_roots(graph, 1, seed)[0];
+    let (_, res) = simulate_bfs(graph, cfg, root, &mut Hybrid::default());
+    res.gteps
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("RMAT22-16");
+    let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let graph = datasets::by_name(dataset, scale, 42)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    println!(
+        "scaling study on {} (|V|={}, |E|={})\n",
+        graph.name,
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+
+    // Direction 1: more PCs, 1 PE per PG (Fig 9).
+    let mut t1 = Table::new(vec!["#PC (1 PE each)", "GTEPS", "speedup vs 1 PC"]);
+    let base = gteps_for(&graph, 1, 1, 1);
+    for pcs in [1usize, 2, 4, 8, 16, 32] {
+        let g = gteps_for(&graph, pcs, pcs, 1);
+        t1.row(vec![
+            pcs.to_string(),
+            fmt_f(g),
+            format!("{:.2}x", g / base),
+        ]);
+    }
+    println!("direction 1 - HBM PCs (paper: near-linear):\n{}", t1.render());
+
+    // Direction 2: more PEs on a fixed PC count (Fig 10 generalized).
+    let mut t2 = Table::new(vec!["#PE (8 PCs)", "GTEPS", "speedup vs 8 PE"]);
+    let base2 = gteps_for(&graph, 8, 8, 1);
+    for pes in [8usize, 16, 32, 64, 128] {
+        let g = gteps_for(&graph, 8, pes, 1);
+        t2.row(vec![
+            pes.to_string(),
+            fmt_f(g),
+            format!("{:.2}x", g / base2),
+        ]);
+    }
+    println!(
+        "direction 2 - PEs per PC (paper: sub-linear, break-point):\n{}",
+        t2.render()
+    );
+    println!("paper's conclusion: prioritize scaling PCs over PEs (§VI-D).");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT compile path: lower the Layer-2 model to HLO **text** artifacts.
+
+Run once by `make artifacts`; Python never runs on the request path.
+
+HLO text (not `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the Rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/bfs_step_n{N}.hlo.txt   for N in SIZES
+  artifacts/manifest.txt            name\tN\ttile\tfile  per line
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import bfs_full, bfs_step, example_args
+
+# Padded sizes the Rust runtime can pick from. Dense n^2 f32 matrices:
+# 256 KiB, 4 MiB, 16 MiB respectively -- the XLA functional path is for
+# small graphs (DESIGN.md section 2); the Rust engines cover the rest.
+SIZES = (256, 1024, 2048)
+TILE = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bfs_step(n: int, tile: int = TILE) -> str:
+    """Lower bfs_step at size n to HLO text (tile clamped to n)."""
+    tile = min(tile, n)
+    fn = functools.partial(bfs_step, tile=tile)
+    lowered = jax.jit(fn).lower(*example_args(n, tile))
+    return to_hlo_text(lowered)
+
+
+def lower_bfs_full(n: int, tile: int = TILE) -> str:
+    """Lower the whole-BFS while-loop variant at size n."""
+    tile = min(tile, n)
+    fn = functools.partial(bfs_full, tile=tile)
+    lowered = jax.jit(fn).lower(*example_args(n, tile)[:4])
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, sizes=SIZES, tile: int = TILE) -> list[str]:
+    """Write all artifacts + manifest; returns the file list."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for n in sizes:
+        n_tile = min(tile, n)
+        for name, text in [
+            ("bfs_step", lower_bfs_step(n, n_tile)),
+            ("bfs_full", lower_bfs_full(n, n_tile)),
+        ]:
+            fname = f"{name}_n{n}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name}\t{n}\t{n_tile}\t{fname}")
+            written.append(path)
+            print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# name\tN\ttile\tfile\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    written.append(manifest)
+    print(f"wrote {manifest}")
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out", default="../artifacts", help="artifact output directory"
+    )
+    parser.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in SIZES),
+        help="comma-separated padded sizes",
+    )
+    args = parser.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    build(args.out, sizes=sizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: bitmap/level update (the P2/P3 stages).
+
+Given the raw expansion counts, compute the Algorithm-2 state update the
+FPGA PEs perform against their double-pump BRAM bitmaps and URAM level
+array:
+
+    new           = (counts > 0) & ~visited
+    next_frontier = new
+    visited'      = visited | new
+    level'        = new ? bfs_level + 1 : level
+
+All state is 0/1 (or level) float32 vectors, tiled through VMEM. This is
+VPU-shaped elementwise work, deliberately separate from the MXU-shaped
+expansion kernel -- mirroring the paper's decoupling of memory access
+(P1/HBM reader) from bitmap processing (P2/P3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(counts_ref, visited_ref, level_ref, bfs_level_ref,
+                   next_ref, visited_out_ref, level_out_ref):
+    counts = counts_ref[...]
+    visited = visited_ref[...]
+    level = level_ref[...]
+    bfs_level = bfs_level_ref[0]
+    new = jnp.where(counts > 0.0, 1.0, 0.0) * (1.0 - visited)
+    next_ref[...] = new
+    visited_out_ref[...] = jnp.minimum(visited + new, 1.0)
+    level_out_ref[...] = jnp.where(new > 0.0, bfs_level + 1.0, level)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bitmap_update(counts, visited, level, bfs_level, *, tile=128):
+    """Apply the Algorithm-2 P3 update, tiled.
+
+    Args:
+      counts: (n,) f32 expansion counts from `frontier_expand`.
+      visited: (n,) f32 0/1 visited map.
+      level: (n,) f32 levels (1e9 = unreached).
+      bfs_level: (1,) f32 current iteration index.
+      tile: VMEM tile length; n must divide evenly.
+
+    Returns:
+      (next_frontier, visited', level') -- each (n,) f32.
+    """
+    n = counts.shape[0]
+    assert n % tile == 0, (n, tile)
+    grid = (n // tile,)
+    vec_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec, scalar_spec],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(counts, visited, level, bfs_level)
+
+
+def _popcount_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(x_ref[...], keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def popcount(x, *, tile=128):
+    """Sum of a 0/1 f32 vector as a (1,) array (frontier size -- the
+    scheduler's switching signal), tiled through VMEM."""
+    n = x.shape[0]
+    assert n % tile == 0, (n, tile)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: blocked frontier expansion.
+
+The FPGA PE's hot operation -- stream the neighbor lists of the frontier
+and test bitmap bits -- is rethought for the TPU as a blocked boolean
+mat-vec on the MXU (DESIGN.md section 2):
+
+    reached[i] = 1  iff  exists j with adj[i, j] == 1 and frontier[j] == 1
+               = (adj @ frontier)[i] > 0
+
+over 0/1 float32 tiles. The adjacency matrix is streamed tile-by-tile
+through VMEM via the BlockSpec grid -- the role the HBM reader + AXI
+bursts play on the U280 -- and the accumulator lives across the
+column-tile grid dimension (double-buffered by Pallas).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both pytest and
+the Rust runtime execute. Real-TPU tiling notes live in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_kernel(adj_ref, frontier_ref, out_ref):
+    """One (TR, TC) tile: accumulate adj_tile @ frontier_tile into out."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # MXU-shaped: a (TR, TC) x (TC,) dot per tile. 0/1 values in f32 --
+    # the accumulated count is the number of active in-neighbors seen so
+    # far, thresholded by the caller.
+    out_ref[...] += jnp.dot(
+        adj_ref[...], frontier_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "tile_c"))
+def frontier_expand(adj, frontier, *, tile_r=128, tile_c=128):
+    """Blocked mat-vec: returns per-vertex active-in-neighbor counts.
+
+    Args:
+      adj: (n, n) float32 0/1 matrix, adj[dst, src] = 1 for edge src->dst.
+      frontier: (n,) float32 0/1 current-frontier vector.
+      tile_r / tile_c: VMEM tile shape; n must divide evenly.
+
+    Returns:
+      (n,) float32 counts (not yet thresholded).
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n), adj.shape
+    assert frontier.shape == (n,), frontier.shape
+    assert n % tile_r == 0 and n % tile_c == 0, (n, tile_r, tile_c)
+    grid = (n // tile_r, n // tile_c)
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, tile_c), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_c,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_r,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(adj, frontier)
+
+
+def vmem_bytes(tile_r: int, tile_c: int) -> int:
+    """Estimated VMEM footprint of one grid step (perf model for the
+    DESIGN.md roofline discussion): adj tile + frontier tile + out tile,
+    double-buffered."""
+    per_step = (tile_r * tile_c + tile_c + tile_r) * 4
+    return 2 * per_step

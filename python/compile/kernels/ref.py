@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its `*_ref` twin to float
+equality on 0/1 inputs; pytest + hypothesis sweep shapes and random
+graphs (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+INF_LEVEL = 1.0e9
+
+
+def frontier_expand_ref(adj, frontier):
+    """Reference mat-vec: per-vertex active-in-neighbor counts."""
+    return adj @ frontier
+
+
+def bitmap_update_ref(counts, visited, level, bfs_level):
+    """Reference Algorithm-2 P3 update."""
+    new = jnp.where(counts > 0.0, 1.0, 0.0) * (1.0 - visited)
+    next_frontier = new
+    visited_out = jnp.minimum(visited + new, 1.0)
+    level_out = jnp.where(new > 0.0, bfs_level[0] + 1.0, level)
+    return next_frontier, visited_out, level_out
+
+
+def popcount_ref(x):
+    """Reference popcount."""
+    return jnp.sum(x, keepdims=True)
+
+
+def bfs_step_ref(adj, frontier, visited, level, bfs_level):
+    """Reference one-iteration BFS step (the Layer-2 contract)."""
+    counts = frontier_expand_ref(adj, frontier)
+    next_frontier, visited_out, level_out = bitmap_update_ref(
+        counts, visited, level, bfs_level
+    )
+    num_new = popcount_ref(next_frontier)
+    return next_frontier, visited_out, level_out, num_new
+
+
+def bfs_full_ref(adj, root):
+    """Run BFS to completion with the reference step (tests only)."""
+    n = adj.shape[0]
+    frontier = jnp.zeros((n,), jnp.float32).at[root].set(1.0)
+    visited = jnp.zeros((n,), jnp.float32).at[root].set(1.0)
+    level = jnp.full((n,), INF_LEVEL, jnp.float32).at[root].set(0.0)
+    it = 0
+    while True:
+        bfs_level = jnp.array([float(it)], jnp.float32)
+        frontier, visited, level, num_new = bfs_step_ref(
+            adj, frontier, visited, level, bfs_level
+        )
+        it += 1
+        if float(num_new[0]) == 0.0 or it > n:
+            break
+    return level

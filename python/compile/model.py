@@ -1,0 +1,79 @@
+"""Layer-2 JAX model: one BFS iteration over the dense-blocked graph.
+
+`bfs_step` is the computation the Rust coordinator executes through PJRT
+every iteration. It composes the two Layer-1 Pallas kernels:
+
+  frontier_expand (MXU-shaped blocked mat-vec)  ->  counts
+  bitmap_update   (VPU-shaped P2/P3 state update)
+  popcount        (frontier size -- the scheduler's signal)
+
+Signature (all float32; the Rust side mirrors it in runtime/engine.rs):
+
+  bfs_step(adj (n,n), frontier (n,), visited (n,), level (n,),
+           bfs_level (1,))
+    -> (next_frontier (n,), visited' (n,), level' (n,), num_new (1,))
+
+Pull mode is the same artifact applied to adj^T -- the CSR/CSC duality of
+the paper collapses to a transpose in the dense formulation; the Rust
+engine picks the orientation when densifying.
+"""
+
+import functools
+
+import jax
+
+from .kernels.bitmap_ops import bitmap_update, popcount
+from .kernels.frontier_expand import frontier_expand
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bfs_step(adj, frontier, visited, level, bfs_level, *, tile=128):
+    """One Algorithm-2 iteration (see module docstring)."""
+    counts = frontier_expand(adj, frontier, tile_r=tile, tile_c=tile)
+    next_frontier, visited_out, level_out = bitmap_update(
+        counts, visited, level, bfs_level, tile=tile
+    )
+    num_new = popcount(next_frontier, tile=tile)
+    return next_frontier, visited_out, level_out, num_new
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bfs_full(adj, frontier, visited, level, *, tile=128):
+    """Whole-BFS-on-device: iterate `bfs_step` under a lax.while_loop
+    until the frontier empties.
+
+    One PJRT execute call replaces one per BFS level — the Layer-2
+    optimization recorded in EXPERIMENTS.md §Perf. Returns
+    (visited, level, iterations as f32[1]).
+    """
+    import jax.numpy as jnp
+
+    n = adj.shape[0]
+
+    def cond(state):
+        frontier, _, _, i = state
+        return jnp.logical_and(jnp.sum(frontier) > 0.0, i < n + 1)
+
+    def body(state):
+        frontier, visited, level, i = state
+        bfs_level = jnp.reshape(i.astype(jnp.float32), (1,))
+        nf, nv, nl, _ = bfs_step(adj, frontier, visited, level, bfs_level, tile=tile)
+        return nf, nv, nl, i + 1
+
+    state = (frontier, visited, level, jnp.int32(0))
+    frontier, visited, level, i = jax.lax.while_loop(cond, body, state)
+    return visited, level, jnp.reshape(i.astype(jnp.float32), (1,))
+
+
+def example_args(n, tile=128):
+    """ShapeDtypeStructs for AOT lowering at size n."""
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )

@@ -1,0 +1,57 @@
+"""AOT path checks: HLO text artifacts are well-formed, the manifest is
+consistent, and the lowered module exposes the agreed signature."""
+
+import os
+
+import pytest
+
+from compile.aot import build, lower_bfs_step, SIZES, TILE
+
+
+@pytest.fixture(scope="module")
+def hlo_256():
+    return lower_bfs_step(256, TILE)
+
+
+class TestLowering:
+    def test_hlo_text_is_module(self, hlo_256):
+        assert hlo_256.startswith("HloModule")
+
+    def test_signature_matches_contract(self, hlo_256):
+        # 5 inputs: adj (n,n) + 3 vectors + bfs_level (1,); 4 outputs.
+        head = hlo_256.splitlines()[0]
+        assert "f32[256,256]" in head
+        assert head.count("f32[256]{0}") >= 4  # 3 in + 3 out vectors
+        assert head.count("f32[1]{0}") == 2  # bfs_level in, num_new out
+
+    def test_no_custom_calls(self, hlo_256):
+        # interpret=True must lower to plain HLO the CPU client can run
+        # (a Mosaic custom-call would break the Rust side).
+        assert "custom-call" not in hlo_256 or "mosaic" not in hlo_256.lower()
+
+    def test_deterministic_lowering(self):
+        a = lower_bfs_step(256, TILE)
+        b = lower_bfs_step(256, TILE)
+        assert a == b
+
+
+class TestBuild:
+    def test_build_writes_manifest_and_files(self, tmp_path):
+        out = tmp_path / "artifacts"
+        files = build(str(out), sizes=(256,), tile=TILE)
+        assert (out / "bfs_step_n256.hlo.txt").exists()
+        assert (out / "bfs_full_n256.hlo.txt").exists()
+        manifest = (out / "manifest.txt").read_text().strip().splitlines()
+        rows = [l for l in manifest if not l.startswith("#")]
+        assert len(rows) == 2  # bfs_step + bfs_full
+        names = set()
+        for row in rows:
+            name, n, tile, fname = row.split("\t")
+            names.add(name)
+            assert int(n) == 256
+            assert int(tile) == min(TILE, 256)
+            assert any(os.path.basename(f) == fname for f in files)
+        assert names == {"bfs_step", "bfs_full"}
+
+    def test_default_sizes_cover_small_graphs(self):
+        assert 256 in SIZES and max(SIZES) >= 2048

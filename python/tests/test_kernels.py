@@ -1,0 +1,148 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps tile sizes, densities and seeds; every kernel must
+match its ref.py twin exactly on 0/1 inputs (float32 sums of 0/1 values
+are exact well past any realistic degree).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bitmap_ops import bitmap_update, popcount
+from compile.kernels.frontier_expand import frontier_expand, vmem_bytes
+
+SIZES = [128, 256]
+TILES = [64, 128]
+
+
+def rand_graph(n, density, seed):
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    return jnp.array(adj)
+
+
+def rand_mask(n, p, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.array((rng.random(n) < p).astype(np.float32))
+
+
+class TestFrontierExpand:
+    @pytest.mark.parametrize("n", SIZES)
+    @pytest.mark.parametrize("tile", TILES)
+    def test_matches_ref(self, n, tile):
+        adj = rand_graph(n, 0.05, n + tile)
+        f = rand_mask(n, 0.2, n * tile)
+        got = frontier_expand(adj, f, tile_r=tile, tile_c=tile)
+        want = ref.frontier_expand_ref(adj, f)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=0, atol=0)
+
+    def test_empty_frontier_all_zero(self):
+        adj = rand_graph(128, 0.1, 1)
+        z = jnp.zeros((128,), jnp.float32)
+        got = frontier_expand(adj, z, tile_r=64, tile_c=64)
+        assert float(jnp.sum(got)) == 0.0
+
+    def test_full_frontier_counts_in_degree(self):
+        adj = rand_graph(128, 0.1, 2)
+        ones = jnp.ones((128,), jnp.float32)
+        got = frontier_expand(adj, ones, tile_r=64, tile_c=64)
+        np.testing.assert_allclose(np.array(got), np.array(adj.sum(axis=1)))
+
+    def test_rectangular_tiles(self):
+        adj = rand_graph(256, 0.03, 3)
+        f = rand_mask(256, 0.3, 4)
+        got = frontier_expand(adj, f, tile_r=128, tile_c=64)
+        want = ref.frontier_expand_ref(adj, f)
+        np.testing.assert_allclose(np.array(got), np.array(want))
+
+    def test_rejects_misaligned_tile(self):
+        adj = rand_graph(128, 0.05, 5)
+        f = rand_mask(128, 0.2, 6)
+        with pytest.raises(AssertionError):
+            frontier_expand(adj, f, tile_r=100, tile_c=100)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        density=st.floats(0.0, 0.3),
+        fp=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, density, fp):
+        n = 128
+        adj = rand_graph(n, density, seed)
+        f = rand_mask(n, fp, seed ^ 0xABCD)
+        got = frontier_expand(adj, f, tile_r=64, tile_c=64)
+        want = ref.frontier_expand_ref(adj, f)
+        np.testing.assert_allclose(np.array(got), np.array(want))
+
+    def test_vmem_estimate_reasonable(self):
+        # 128x128 f32 tile double-buffered: ~132KB << 16MB VMEM.
+        assert vmem_bytes(128, 128) < 16 * 2**20
+        assert vmem_bytes(128, 128) == 2 * (128 * 128 + 128 + 128) * 4
+
+
+class TestBitmapUpdate:
+    @pytest.mark.parametrize("n", SIZES)
+    @pytest.mark.parametrize("tile", TILES)
+    def test_matches_ref(self, n, tile):
+        counts = jnp.array(
+            np.random.default_rng(n).integers(0, 4, n).astype(np.float32)
+        )
+        visited = rand_mask(n, 0.4, n + 1)
+        level = jnp.where(visited > 0, 1.0, ref.INF_LEVEL).astype(jnp.float32)
+        bl = jnp.array([3.0], jnp.float32)
+        got = bitmap_update(counts, visited, level, bl, tile=tile)
+        want = ref.bitmap_update_ref(counts, visited, level, bl)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.array(g), np.array(w))
+
+    def test_visited_is_monotone(self):
+        n = 128
+        counts = rand_mask(n, 0.5, 7) * 3.0
+        visited = rand_mask(n, 0.5, 8)
+        level = jnp.where(visited > 0, 0.0, ref.INF_LEVEL).astype(jnp.float32)
+        _, v2, _ = bitmap_update(counts, visited, level, jnp.array([0.0]), tile=64)
+        assert np.all(np.array(v2) >= np.array(visited))
+        assert set(np.unique(np.array(v2))).issubset({0.0, 1.0})
+
+    def test_already_visited_never_reactivated(self):
+        n = 128
+        counts = jnp.ones((n,), jnp.float32)
+        visited = jnp.ones((n,), jnp.float32)
+        level = jnp.zeros((n,), jnp.float32)
+        nf, v2, l2 = bitmap_update(counts, visited, level, jnp.array([5.0]), tile=64)
+        assert float(jnp.sum(nf)) == 0.0
+        np.testing.assert_allclose(np.array(l2), np.array(level))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), lvl=st.integers(0, 100))
+    def test_hypothesis_sweep(self, seed, lvl):
+        n = 128
+        rng = np.random.default_rng(seed)
+        counts = jnp.array(rng.integers(0, 3, n).astype(np.float32))
+        visited = rand_mask(n, 0.3, seed ^ 0x55)
+        level = jnp.where(visited > 0, float(max(lvl - 1, 0)), ref.INF_LEVEL).astype(
+            jnp.float32
+        )
+        bl = jnp.array([float(lvl)], jnp.float32)
+        got = bitmap_update(counts, visited, level, bl, tile=64)
+        want = ref.bitmap_update_ref(counts, visited, level, bl)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.array(g), np.array(w))
+
+
+class TestPopcount:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_matches_ref(self, n):
+        x = rand_mask(n, 0.37, n)
+        got = popcount(x, tile=64)
+        np.testing.assert_allclose(np.array(got), np.array(ref.popcount_ref(x)))
+
+    def test_zero_and_full(self):
+        n = 128
+        assert float(popcount(jnp.zeros((n,), jnp.float32), tile=64)[0]) == 0.0
+        assert float(popcount(jnp.ones((n,), jnp.float32), tile=64)[0]) == float(n)

@@ -1,0 +1,57 @@
+//! Bench: regenerate Fig 10 — GTEPS vs PEs within a single HBM PC on
+//! the RMAT18-* graphs, including a cycle-simulator cross-check.
+//!
+//! Paper shape: more PEs help until a break-point (4–8 PEs for sparse,
+//! 8–16 for dense graphs), earlier than the ideal Fig 7 model because
+//! real load balance is imperfect.
+
+use scalabfs::bfs::reference;
+use scalabfs::coordinator::experiments::{self, ExpOptions};
+use scalabfs::graph::datasets;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::cycle::CycleSim;
+use scalabfs::util::tables::{fmt_f, Table};
+
+fn env_scale(default: u32) -> u32 {
+    std::env::var("SCALABFS_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions {
+        scale_factor: env_scale(8),
+        num_roots: 2,
+        seed: 42,
+    };
+    let t0 = std::time::Instant::now();
+    println!(
+        "=== Fig 10: scaling with PEs on one HBM PC (scale 1/{}) ===\n",
+        opts.scale_factor
+    );
+    println!("{}", experiments::fig10(&opts)?.render());
+    println!("paper: break-points at 4-8 PEs (sparse) / 8-16 PEs (dense)\n");
+
+    // Cycle-level cross-check on the smallest graph.
+    println!("cycle-simulator cross-check (RMAT18-8, shrunk):");
+    let g = datasets::by_name("RMAT18-8", (opts.scale_factor * 8).max(64), opts.seed).unwrap();
+    let root = reference::sample_roots(&g, 1, opts.seed)[0];
+    let mut t = Table::new(vec!["#PE (1 PC)", "cycle-sim GTEPS", "analytic GTEPS", "ratio"]);
+    for pes in [1usize, 2, 4, 8] {
+        let cfg = SimConfig::u280(1, pes);
+        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default());
+        let (_, thr) =
+            scalabfs::sim::throughput::simulate_bfs(&g, cfg, root, &mut Hybrid::default());
+        t.row(vec![
+            pes.to_string(),
+            fmt_f(cyc.gteps),
+            fmt_f(thr.gteps),
+            format!("{:.2}", cyc.gteps / thr.gteps),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

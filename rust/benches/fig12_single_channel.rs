@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 12 — BFS throughput normalized to a single
+//! DRAM channel, ScalaBFS vs published FPGA accelerators, plus the
+//! edge-centric processing context.
+//!
+//! Paper shape: ScalaBFS leads per-channel (its 1-PC number beats the
+//! Convey builds' 156 MTEPS/ch, Dr.BFS's 235 MTEPS/ch, ForeGraph's 410
+//! MTEPS).
+
+use scalabfs::coordinator::experiments::{self, ExpOptions};
+
+fn env_scale(default: u32) -> u32 {
+    std::env::var("SCALABFS_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions {
+        scale_factor: env_scale(8),
+        num_roots: 2,
+        seed: 42,
+    };
+    let t0 = std::time::Instant::now();
+    println!(
+        "=== Fig 12: single-DRAM-channel comparison (scale 1/{}) ===\n",
+        opts.scale_factor
+    );
+    println!("{}", experiments::fig12(&opts)?.render());
+    println!("edge-centric context (§II-D):\n");
+    println!("{}", experiments::edge_centric_context(&opts)?.render());
+    println!("bench wall time: {:.1} s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

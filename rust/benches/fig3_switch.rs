@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 3 — per-AXI-channel throughput when reads
+//! cross 2^k neighboring HBM channels (switch-network penalty).
+//!
+//! Paper shape: 13.27 GB/s local; <0.5 GB/s crossing 32 channels
+//! (>20x degradation), monotone in k.
+
+use scalabfs::coordinator::experiments;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = experiments::fig3();
+    println!("=== Fig 3: switch-network crossing throughput ===\n");
+    println!("{}", table.render());
+    println!("paper endpoints: k=0 -> 13.27 GB/s, k=5 -> <0.5 GB/s (>20x)");
+    println!("bench wall time: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+}

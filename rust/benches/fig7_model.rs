@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig 7 — the Section-V theoretical performance of a
+//! single PG vs PE count, for Len_nl in {8,16,32,64} (Sv=32b, F=100MHz,
+//! BW_MAX=13.27 GB/s).
+//!
+//! Paper shape: performance rises with PEs, peaks at a break-point
+//! (~16 PEs), then degrades once the PC saturates; larger Len_nl is
+//! uniformly faster.
+
+use scalabfs::coordinator::experiments;
+use scalabfs::model::perf::PerfModel;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("=== Fig 7: theoretical Perf (GTEPS) on one HBM PC ===\n");
+    println!("{}", experiments::fig7().render());
+    let m = PerfModel::default();
+    for len in [8.0, 16.0, 32.0, 64.0] {
+        println!(
+            "Len_nl={len}: optimal PE count = {} (paper: break-point ~16)",
+            m.optimal_pes(len, 1024)
+        );
+    }
+    println!("bench wall time: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+}

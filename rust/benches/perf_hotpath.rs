@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the repo's hot paths (the §Perf deliverable):
+//! the Algorithm-2 functional engine (push / pull / hybrid), the
+//! throughput simulator's accounting, graph generation, and partition.
+//!
+//! Hand-rolled harness (no criterion offline): N timed repetitions with
+//! a warm-up, reporting min/mean in edges-per-second terms where
+//! meaningful. Used to drive the optimization loop in EXPERIMENTS.md
+//! §Perf.
+
+use scalabfs::bfs::bitmap::run_bfs;
+use scalabfs::bfs::reference;
+use scalabfs::bfs::Mode;
+use scalabfs::graph::{generators, partition, Partitioning};
+use scalabfs::sched::{Fixed, Hybrid};
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::throughput::ThroughputSim;
+
+fn time<F: FnMut()>(name: &str, reps: usize, mut f: F) -> f64 {
+    f(); // warm-up
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    println!(
+        "{name:<44} min {:>9.3} ms   mean {:>9.3} ms",
+        best * 1e3,
+        total / reps as f64 * 1e3
+    );
+    best
+}
+
+fn main() {
+    println!("=== hot-path micro-benchmarks ===\n");
+    let scale = std::env::var("SCALABFS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(18u32);
+    let g = generators::rmat_graph500(scale, 16, 1);
+    let edges = g.num_edges();
+    println!(
+        "workload: {} |V|={} |E|={}\n",
+        g.name,
+        g.num_vertices(),
+        edges
+    );
+    let root = reference::sample_roots(&g, 1, 1)[0];
+    let part = Partitioning::new(64, 32);
+
+    let t = time("generate RMAT (same scale)", 3, || {
+        let _ = generators::rmat_graph500(scale, 16, 2);
+    });
+    println!(
+        "{:>64}",
+        format!("-> {:.1} M edge-samples/s", edges as f64 / t / 2e6)
+    );
+
+    time("partition into 64 subgraphs", 3, || {
+        let _ = partition::partition(&g, part);
+    });
+
+    let t = time("reference BFS (queue)", 5, || {
+        let _ = reference::bfs(&g, root);
+    });
+    println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    let t = time("bitmap engine, push-only", 5, || {
+        let _ = run_bfs(&g, part, root, &mut Fixed(Mode::Push));
+    });
+    println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    let t = time("bitmap engine, pull-only", 5, || {
+        let _ = run_bfs(&g, part, root, &mut Fixed(Mode::Pull));
+    });
+    println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    let t = time("bitmap engine, hybrid", 5, || {
+        let _ = run_bfs(&g, part, root, &mut Hybrid::default());
+    });
+    println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    let run = run_bfs(&g, part, root, &mut Hybrid::default());
+    let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
+    let sim = ThroughputSim::new(SimConfig::u280_full());
+    time("throughput simulator (accounting only)", 10, || {
+        let _ = sim.simulate(&run, &g.name, bytes);
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Table II — FPGA resource utilization of the three
+//! published configurations, from the calibrated resource model, plus
+//! the Eq-7 maximum-PE bound and the full-vs-multilayer crossbar cost.
+//!
+//! Paper shape: 16/32 -> 35.76%, 32/32 -> 39.93%, 32/64 -> 42.08% LUTs;
+//! the 64-PE 3-layer dispatcher (768 FIFOs) is *cheaper* than the 32-PE
+//! full crossbar (1024 FIFOs); max 64 PEs on U280.
+
+use scalabfs::coordinator::experiments;
+use scalabfs::dispatcher::{Dispatcher, FullCrossbar, MultiLayerCrossbar};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("=== Table II: resource utilization model ===\n");
+    println!("{}", experiments::table2().render());
+    let full = FullCrossbar::new(64);
+    let ml = MultiLayerCrossbar::new(vec![4, 4, 4]);
+    println!(
+        "64-PE dispatchers: {} vs {}",
+        full.describe(),
+        ml.describe()
+    );
+    println!("bench wall time: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+}

@@ -1,0 +1,99 @@
+//! ForeGraph-style edge-centric single-channel baseline (paper §II-D).
+//!
+//! General-purpose FPGA graph frameworks stream the *whole* edge list
+//! every iteration (edge-centric model), which "limits their performances
+//! on BFS": ForeGraph reaches only ~410 MTEPS on soc-LiveJournal with one
+//! DDR4 channel. This module models that processing style so Fig 12's
+//! context (why vertex-centric + bitmaps wins per-channel) is
+//! reproducible, not just quoted.
+
+use crate::bfs::reference;
+use crate::graph::{Graph, VertexId};
+
+/// Single-channel parameters for the edge-centric baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeCentricConfig {
+    /// Channel bandwidth, bytes/s (DDR4: 19.2 GB/s theoretical, ~12-15
+    /// effective for streaming).
+    pub channel_bw: f64,
+    /// Bytes per edge record (src + dst).
+    pub edge_bytes: f64,
+    /// Streaming efficiency (row activations, turnarounds).
+    pub efficiency: f64,
+}
+
+impl Default for EdgeCentricConfig {
+    fn default() -> Self {
+        Self {
+            channel_bw: 19.2e9,
+            edge_bytes: 8.0,
+            efficiency: 0.75,
+        }
+    }
+}
+
+/// Result of the edge-centric estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeCentricResult {
+    /// BFS iterations (graph depth).
+    pub iterations: u32,
+    /// Total edges streamed (|E| per iteration).
+    pub edges_streamed: u64,
+    /// Execution seconds.
+    pub seconds: f64,
+    /// Graph500 GTEPS (traversed edges / time — same numerator as
+    /// ScalaBFS, so the comparison is apples-to-apples).
+    pub gteps: f64,
+}
+
+/// Estimate edge-centric BFS performance: every iteration streams the
+/// full edge list through the single channel.
+pub fn estimate(g: &Graph, root: VertexId, cfg: EdgeCentricConfig) -> EdgeCentricResult {
+    let r = reference::bfs(g, root);
+    let iterations = r.depth;
+    let edges_streamed = g.num_edges() * iterations as u64;
+    let bytes = edges_streamed as f64 * cfg.edge_bytes;
+    let seconds = bytes / (cfg.channel_bw * cfg.efficiency);
+    let traversed: u64 = r
+        .levels
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| l != crate::bfs::INF)
+        .map(|(v, _)| g.csr.degree(v as VertexId))
+        .sum();
+    EdgeCentricResult {
+        iterations,
+        edges_streamed,
+        seconds,
+        gteps: traversed as f64 / seconds / 1e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn edge_centric_streams_full_graph_each_iteration() {
+        let g = generators::chain(10);
+        let res = estimate(&g, 0, EdgeCentricConfig::default());
+        assert_eq!(res.iterations, 10);
+        assert_eq!(res.edges_streamed, 9 * 10);
+    }
+
+    #[test]
+    fn edge_centric_lands_in_foregraph_ballpark() {
+        // On an LJ-like scale-free graph the model should land in the
+        // hundreds-of-MTEPS range (ForeGraph: ~410 MTEPS), far below a
+        // GTEPS-class vertex-centric design.
+        let g = generators::rmat_graph500(13, 14, 77);
+        let root = reference::sample_roots(&g, 1, 1)[0];
+        let res = estimate(&g, root, EdgeCentricConfig::default());
+        assert!(
+            res.gteps > 0.05 && res.gteps < 2.0,
+            "gteps={}",
+            res.gteps
+        );
+    }
+}

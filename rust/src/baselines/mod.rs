@@ -1,0 +1,11 @@
+//! Baseline systems the paper compares against.
+//!
+//! * [`unpartitioned`] — the Fig 11 baseline: same PEs, but edge data
+//!   placed sequentially from PC0 so readers cross the HBM switch.
+//! * [`edge_centric`] — a ForeGraph-style edge-centric single-channel
+//!   processor (the §II-D context for Fig 12's per-channel comparison).
+//! * Push-only / pull-only baselines are [`crate::sched::Fixed`] policies
+//!   over the main engine (Fig 8).
+
+pub mod unpartitioned;
+pub mod edge_centric;

@@ -1,0 +1,58 @@
+//! The Fig 11 baseline: unpartitioned edge placement.
+//!
+//! Identical functional behaviour to ScalaBFS, but the CSR/CSC edge data
+//! is *not* interleaved across PCs: it fills PC0, then PC1, … . Every
+//! PG's HBM reader must therefore reach across the switch network to the
+//! data-holding PCs, paying the Fig 3 crossing penalty, and service
+//! concentrates on the few PCs with data ("stored in the PCs with small
+//! suffixes ... unbalanced accesses", §VI-E).
+
+use crate::bfs::bitmap::BfsRun;
+use crate::sim::config::{Placement, SimConfig};
+use crate::sim::results::SimResult;
+use crate::sim::throughput::ThroughputSim;
+
+/// Simulate the same functional run under baseline placement.
+pub fn simulate_baseline(
+    run: &BfsRun,
+    mut cfg: SimConfig,
+    graph_name: &str,
+    graph_bytes: u64,
+) -> SimResult {
+    cfg.placement = Placement::Unpartitioned;
+    ThroughputSim::new(cfg).simulate(run, &format!("{graph_name}(baseline)"), graph_bytes)
+}
+
+/// Number of PCs the unpartitioned data occupies (sequential fill).
+pub fn data_pcs(graph_bytes: u64, pc_capacity: u64, num_pcs: usize) -> usize {
+    ((graph_bytes as f64 / pc_capacity as f64).ceil() as usize).clamp(1, num_pcs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::bitmap::run_bfs;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::Hybrid;
+
+    #[test]
+    fn baseline_is_slower_and_uses_less_bandwidth() {
+        let g = generators::rmat_graph500(12, 16, 31);
+        let root = reference::sample_roots(&g, 1, 31)[0];
+        let cfg = SimConfig::u280(16, 32);
+        let run = run_bfs(&g, cfg.part, root, &mut Hybrid::default());
+        let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
+        let scala = ThroughputSim::new(cfg.clone()).simulate(&run, &g.name, bytes);
+        let base = simulate_baseline(&run, cfg, &g.name, bytes);
+        assert!(scala.gteps > base.gteps * 2.0, "{} vs {}", scala.gteps, base.gteps);
+        assert!(scala.aggregate_bw > base.aggregate_bw);
+    }
+
+    #[test]
+    fn data_pcs_sequential_fill() {
+        assert_eq!(data_pcs(100, 1000, 32), 1);
+        assert_eq!(data_pcs(1001, 1000, 32), 2);
+        assert_eq!(data_pcs(u64::MAX / 2, 1000, 32), 32);
+    }
+}

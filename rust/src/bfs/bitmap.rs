@@ -1,0 +1,394 @@
+//! The paper's Algorithm 2: three-bitmap BFS with push / pull / hybrid
+//! processing, partition-aware traffic accounting.
+//!
+//! This is the bit-exact functional model of what the 64 PEs on the U280
+//! compute. Per iteration it:
+//!
+//! * (P1) scans the current frontier (push) or visited map (pull) to find
+//!   work, issuing neighbor-list fetches to the owning PG's HBM PC;
+//! * (P2) routes streamed neighbors through the vertex dispatcher to the
+//!   PE owning the neighbor's bitmap bit, where the visited map (push) or
+//!   current frontier (pull) is checked;
+//! * (P3) sets next-frontier / visited bits and writes the level array.
+//!
+//! All HBM bytes and dispatcher messages are tallied into
+//! [`IterTraffic`](super::traffic::IterTraffic) for the timing simulators.
+
+use super::traffic::{IterTraffic, RunTraffic};
+use super::{Mode, INF};
+use crate::graph::{Graph, Partitioning, VertexId};
+use crate::sched::ModePolicy;
+use crate::util::Bitset;
+use crate::util::units::round_up;
+
+/// Accelerator data-path parameters that affect *traffic* (not timing):
+/// burst alignment and pull-mode early-exit chunking.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficConfig {
+    /// Bytes per vertex id (`S_v`, paper: 4).
+    pub sv_bytes: u64,
+    /// AXI data width in bytes (`DW = 2 * N_pe_per_pg * S_v`, Eq 1).
+    pub dw_bytes: u64,
+    /// Pull mode: fetch neighbor lists in DW-sized chunks and stop after
+    /// the chunk containing the first active parent. **Off by default**:
+    /// the paper's HBM reader issues whole-list burst reads that cannot
+    /// be aborted mid-flight (and Fig 8's modest hybrid/push gains of
+    /// 1.2–2.1x are only consistent with full-list pull). The early-exit
+    /// variant is kept as an ablation — it models a chunked reader and
+    /// roughly triples hybrid throughput (see `scalabfs ablation`).
+    pub pull_early_exit: bool,
+}
+
+impl TrafficConfig {
+    /// Traffic config for a partitioning, per Eq 1 (paper-faithful:
+    /// full-list pull).
+    pub fn for_partitioning(p: Partitioning) -> Self {
+        Self {
+            sv_bytes: 4,
+            dw_bytes: 2 * p.pes_per_pg() as u64 * 4,
+            pull_early_exit: false,
+        }
+    }
+
+    /// The chunked early-exit reader variant (ablation).
+    pub fn with_early_exit(mut self) -> Self {
+        self.pull_early_exit = true;
+        self
+    }
+}
+
+/// Complete result of an Algorithm-2 BFS run.
+#[derive(Clone, Debug)]
+pub struct BfsRun {
+    /// Per-vertex levels (INF when unreachable).
+    pub levels: Vec<u32>,
+    /// Vertices reached, root included.
+    pub reached: usize,
+    /// Per-iteration traffic.
+    pub traffic: RunTraffic,
+    /// Graph500 traversed-edge count: sum of out-degrees of reached
+    /// vertices (each edge counted once).
+    pub traversed_edges: u64,
+}
+
+/// The Algorithm-2 engine. Holds the three bitmaps plus the level array
+/// (the state the paper keeps in double-pump BRAM / URAM).
+pub struct BitmapEngine<'g> {
+    graph: &'g Graph,
+    part: Partitioning,
+    cfg: TrafficConfig,
+    current: Bitset,
+    next: Bitset,
+    visited: Bitset,
+    levels: Vec<u32>,
+}
+
+impl<'g> BitmapEngine<'g> {
+    /// New engine over `graph` partitioned as `part`.
+    pub fn new(graph: &'g Graph, part: Partitioning) -> Self {
+        let n = graph.num_vertices();
+        Self {
+            graph,
+            part,
+            cfg: TrafficConfig::for_partitioning(part),
+            current: Bitset::new(n),
+            next: Bitset::new(n),
+            visited: Bitset::new(n),
+            levels: vec![INF; n],
+        }
+    }
+
+    /// Override the traffic config (tests, ablations).
+    pub fn with_config(mut self, cfg: TrafficConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run BFS from `root` with the given mode policy.
+    pub fn run(mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
+        let n = self.graph.num_vertices();
+        self.levels[root as usize] = 0;
+        self.current.set(root as usize);
+        self.visited.set(root as usize);
+
+        let mut traffic = RunTraffic::default();
+        let mut bfs_level: u32 = 0;
+        let mut frontier_size: u64 = 1;
+        // Out-degree sum of the frontier: the scheduler's switching signal.
+        let mut frontier_edges: u64 = self.graph.csr.degree(root);
+        let mut visited_count: u64 = 1;
+
+        while frontier_size > 0 {
+            let mode = policy.decide(
+                bfs_level,
+                frontier_size,
+                frontier_edges,
+                visited_count,
+                n as u64,
+                self.graph.num_edges(),
+            );
+            let mut it = IterTraffic::new(
+                bfs_level,
+                mode,
+                self.part.num_pes,
+                self.part.num_pgs,
+            );
+            it.frontier_size = frontier_size;
+            // Pull accumulates the next frontier's out-degree sum inline
+            // (its scan order is ascending, so the lookups are cheap);
+            // push rescans the ordered next frontier afterwards — inline
+            // accumulation there touches offsets in neighbor order and
+            // measures ~35% slower.
+            let inline_edges = match mode {
+                Mode::Push => None,
+                Mode::Pull => Some(self.pull_iteration(&mut it)),
+            };
+            if inline_edges.is_none() {
+                self.push_iteration(&mut it);
+            }
+            // End of iteration: swap frontiers, recompute signals.
+            self.current.swap_with(&mut self.next);
+            self.next.clear_all();
+            frontier_edges = inline_edges.unwrap_or_else(|| {
+                self.current
+                    .iter_ones()
+                    .map(|v| self.graph.csr.degree(v as VertexId))
+                    .sum()
+            });
+            frontier_size = it.newly_visited;
+            visited_count += it.newly_visited;
+            traffic.iters.push(it);
+            bfs_level += 1;
+        }
+
+        let reached = self.visited.count_ones();
+        let traversed_edges = self
+            .visited
+            .iter_ones()
+            .map(|v| self.graph.csr.degree(v as VertexId))
+            .sum();
+        BfsRun {
+            levels: self.levels,
+            reached,
+            traffic,
+            traversed_edges,
+        }
+    }
+
+    /// Push iteration (Algorithm 2 lines 6-14): scan current frontier,
+    /// stream outgoing lists, check visited at the destination PE.
+    fn push_iteration(&mut self, it: &mut IterTraffic) {
+        let cfg = self.cfg;
+        let part = self.part;
+        // P1 scans every frontier word once (double-pump BRAM).
+        it.scanned_bits = self.current.len() as u64;
+        // Field-disjoint borrows: the scan reads `current`, P2/P3 write
+        // `visited`/`next`/`levels` (push never mutates `current`, just
+        // like the hardware, which snapshots the frontier at iteration
+        // start).
+        let graph = self.graph;
+        for v in self.current.iter_ones() {
+            let v = v as VertexId;
+            let pe = part.pe_of(v);
+            let pg = part.pg_of_pe(pe);
+            let list = graph.out_neighbors(v);
+            it.list_fetches += 1;
+            it.per_pe_fetches[pe] += 1;
+            // HBM reader: one offset fetch (burst-aligned) + the list.
+            it.per_pg_offset_bytes[pg] += cfg.dw_bytes;
+            it.per_pg_edge_bytes[pg] +=
+                round_up(list.len() as u64 * cfg.sv_bytes, cfg.dw_bytes);
+            it.neighbors_streamed += list.len() as u64;
+            for &w in list {
+                // Vertex dispatcher: route w to its owning PE.
+                it.per_pe_recv[part.pe_of(w)] += 1;
+                // P2/P3 at the destination PE.
+                if !self.visited.test_and_set(w as usize) {
+                    self.next.set(w as usize);
+                    self.levels[w as usize] = it.iteration + 1;
+                    it.newly_visited += 1;
+                }
+            }
+        }
+    }
+
+    /// Pull iteration (Algorithm 2 lines 15-22): scan unvisited vertices,
+    /// stream incoming lists (chunked early exit), check the current
+    /// frontier at the parent's PE, forward hits back to the child's PE.
+    fn pull_iteration(&mut self, it: &mut IterTraffic) -> u64 {
+        let cfg = self.cfg;
+        let part = self.part;
+        it.scanned_bits = self.visited.len() as u64;
+        let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
+        let mut next_frontier_edges = 0u64;
+        let graph = self.graph;
+        // Visited updates are staged in `next` and OR-ed into the
+        // visited map after the scan (each unvisited vertex is seen once
+        // per iteration, so deferral is safe) — this lets the scan
+        // iterate the visited map without snapshotting it.
+        for v in self.visited.iter_zeros() {
+            let v = v as VertexId;
+            let pe = part.pe_of(v);
+            let pg = part.pg_of_pe(pe);
+            let list = graph.in_neighbors(v);
+            if list.is_empty() {
+                continue;
+            }
+            it.list_fetches += 1;
+            it.per_pe_fetches[pe] += 1;
+            it.per_pg_offset_bytes[pg] += cfg.dw_bytes;
+            // Scan parents; with early exit we only *fetch* up to the
+            // chunk containing the first active parent.
+            let mut hit_at: Option<usize> = None;
+            for (i, &u) in list.iter().enumerate() {
+                if self.current.get(u as usize) {
+                    hit_at = Some(i);
+                    break;
+                }
+            }
+            let fetched = match (cfg.pull_early_exit, hit_at) {
+                (true, Some(i)) => round_up(i as u64 + 1, chunk_verts).min(list.len() as u64),
+                _ => list.len() as u64,
+            };
+            it.per_pg_edge_bytes[pg] += round_up(fetched * cfg.sv_bytes, cfg.dw_bytes);
+            it.neighbors_streamed += fetched;
+            // Dispatcher: each fetched parent id is routed to the PE that
+            // owns the parent's current-frontier bit for the P2 check.
+            for &u in &list[..fetched as usize] {
+                it.per_pe_recv[part.pe_of(u)] += 1;
+            }
+            if hit_at.is_some() {
+                // Soft crossbar: the (child) result returns to v's PE.
+                it.crossbar_results += 1;
+                self.next.set(v as usize);
+                self.levels[v as usize] = it.iteration + 1;
+                it.newly_visited += 1;
+                next_frontier_edges += graph.csr.degree(v);
+            }
+        }
+        for (vw, nw) in self
+            .visited
+            .words_mut()
+            .iter_mut()
+            .zip(self.next.words())
+        {
+            *vw |= nw;
+        }
+        next_frontier_edges
+    }
+}
+
+/// Convenience wrapper: run Algorithm 2 with a policy on a graph.
+pub fn run_bfs(
+    graph: &Graph,
+    part: Partitioning,
+    root: VertexId,
+    policy: &mut dyn ModePolicy,
+) -> BfsRun {
+    BitmapEngine::new(graph, part).run(root, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::{Fixed, Hybrid};
+
+    fn check_levels(g: &Graph, root: VertexId, policy: &mut dyn ModePolicy) {
+        let part = Partitioning::new(4, 2);
+        let run = run_bfs(g, part, root, policy);
+        let reference = reference::bfs(g, root);
+        assert_eq!(run.levels, reference.levels, "levels mismatch on {}", g.name);
+        assert_eq!(run.reached, reference.reached);
+    }
+
+    #[test]
+    fn push_matches_reference_on_rmat() {
+        let g = generators::rmat_graph500(9, 8, 1);
+        check_levels(&g, reference::sample_roots(&g, 1, 1)[0], &mut Fixed(Mode::Push));
+    }
+
+    #[test]
+    fn pull_matches_reference_on_rmat() {
+        let g = generators::rmat_graph500(9, 8, 2);
+        check_levels(&g, reference::sample_roots(&g, 1, 2)[0], &mut Fixed(Mode::Pull));
+    }
+
+    #[test]
+    fn hybrid_matches_reference_on_rmat() {
+        let g = generators::rmat_graph500(10, 16, 3);
+        check_levels(&g, reference::sample_roots(&g, 1, 3)[0], &mut Hybrid::default());
+    }
+
+    #[test]
+    fn hybrid_matches_on_chain_and_star() {
+        check_levels(&generators::chain(50), 0, &mut Hybrid::default());
+        check_levels(&generators::star(33), 0, &mut Hybrid::default());
+        check_levels(&generators::complete(17), 5, &mut Hybrid::default());
+    }
+
+    #[test]
+    fn traversed_edges_counts_each_once() {
+        let g = generators::complete(8);
+        let run = run_bfs(&g, Partitioning::new(2, 1), 0, &mut Fixed(Mode::Push));
+        // All 8 vertices reached; each has out-degree 7.
+        assert_eq!(run.traversed_edges, 56);
+    }
+
+    #[test]
+    fn hybrid_reduces_traffic_vs_pull_on_dense_graph() {
+        let g = generators::rmat_graph500(10, 32, 5);
+        let root = reference::sample_roots(&g, 1, 5)[0];
+        let part = Partitioning::new(8, 4);
+        let hybrid = run_bfs(&g, part, root, &mut Hybrid::default());
+        let pull = run_bfs(&g, part, root, &mut Fixed(Mode::Pull));
+        assert!(
+            hybrid.traffic.total_bytes() < pull.traffic.total_bytes(),
+            "hybrid {} >= pull {}",
+            hybrid.traffic.total_bytes(),
+            pull.traffic.total_bytes()
+        );
+    }
+
+    #[test]
+    fn dispatcher_recv_conserves_streamed_neighbors() {
+        let g = generators::rmat_graph500(9, 8, 7);
+        let root = reference::sample_roots(&g, 1, 7)[0];
+        let run = run_bfs(&g, Partitioning::new(4, 4), root, &mut Hybrid::default());
+        for it in &run.traffic.iters {
+            let recv: u64 = it.per_pe_recv.iter().sum();
+            assert_eq!(recv, it.neighbors_streamed, "iter {}", it.iteration);
+        }
+    }
+
+    #[test]
+    fn newly_visited_sums_to_reached_minus_root() {
+        let g = generators::rmat_graph500(9, 4, 9);
+        let root = reference::sample_roots(&g, 1, 9)[0];
+        let run = run_bfs(&g, Partitioning::new(4, 2), root, &mut Hybrid::default());
+        let total: u64 = run.traffic.iters.iter().map(|i| i.newly_visited).sum();
+        assert_eq!(total as usize, run.reached - 1);
+    }
+
+    #[test]
+    fn single_pe_configuration_works() {
+        let g = generators::rmat_graph500(8, 4, 4);
+        let root = reference::sample_roots(&g, 1, 4)[0];
+        let run = run_bfs(&g, Partitioning::new(1, 1), root, &mut Hybrid::default());
+        let reference = reference::bfs(&g, root);
+        assert_eq!(run.levels, reference.levels);
+    }
+
+    #[test]
+    fn burst_alignment_rounds_edge_bytes() {
+        // Star root push: hub list length 9 * 4B = 36B -> rounded to DW.
+        let g = generators::star(10);
+        let part = Partitioning::new(2, 1); // DW = 2*2*4 = 16B
+        let run = run_bfs(&g, part, 0, &mut Fixed(Mode::Push));
+        let it0 = &run.traffic.iters[0];
+        // 36B rounds to 48B; offset adds 16B.
+        assert_eq!(it0.per_pg_edge_bytes[0], 48);
+        assert_eq!(it0.per_pg_offset_bytes[0], 16);
+    }
+}

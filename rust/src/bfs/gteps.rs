@@ -1,0 +1,53 @@
+//! Graph500 GTEPS metric (paper §VI-A): traversed edges — the sum of
+//! neighbor-list lengths of all visited vertices, each edge counted once —
+//! divided by execution time.
+
+use super::bitmap::BfsRun;
+
+/// GTEPS from a traversed-edge count and a time in seconds.
+pub fn gteps(traversed_edges: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    traversed_edges as f64 / seconds / 1e9
+}
+
+/// GTEPS of a finished run given the simulated execution time.
+pub fn run_gteps(run: &BfsRun, seconds: f64) -> f64 {
+    gteps(run.traversed_edges, seconds)
+}
+
+/// Harmonic mean of per-root GTEPS — the Graph500 aggregation over a
+/// multi-root benchmark (each root weighted by its work).
+pub fn harmonic_mean(values: &[f64]) -> f64 {
+    let vals: Vec<f64> = values.iter().copied().filter(|v| *v > 0.0).collect();
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.len() as f64 / vals.iter().map(|v| 1.0 / v).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gteps_basic() {
+        assert!((gteps(19_700_000_000, 1.0) - 19.7).abs() < 1e-9);
+        assert_eq!(gteps(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn harmonic_mean_known_values() {
+        let hm = harmonic_mean(&[1.0, 1.0, 1.0]);
+        assert!((hm - 1.0).abs() < 1e-12);
+        let hm2 = harmonic_mean(&[2.0, 6.0]);
+        assert!((hm2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_mean_ignores_zeros() {
+        assert_eq!(harmonic_mean(&[0.0, 0.0]), 0.0);
+        assert!((harmonic_mean(&[0.0, 4.0]) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,39 @@
+//! BFS functional engines.
+//!
+//! * [`reference`] — textbook queue-based BFS: the ground truth every
+//!   other engine (bitmap, XLA) is validated against.
+//! * [`bitmap`] — the paper's Algorithm 2: three bitmaps (current
+//!   frontier, next frontier, visited map) with push / pull / hybrid
+//!   processing, partition-aware, emitting the per-iteration memory
+//!   traffic that drives the timing simulators.
+//! * [`traffic`] — the per-iteration counters (active vertices, neighbor
+//!   bytes per PC, dispatcher routing loads).
+//! * [`gteps`] — the Graph500 performance metric the paper reports.
+
+pub mod reference;
+pub mod bitmap;
+pub mod traffic;
+pub mod gteps;
+pub mod validate;
+pub mod batch;
+
+/// Level value for unreached vertices.
+pub const INF: u32 = u32::MAX;
+
+/// Processing direction of one iteration (paper Algorithms 1 & 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Scan the current frontier, push to outgoing (child) neighbors (CSR).
+    Push,
+    /// Scan the unvisited vertices, pull from incoming (parent) neighbors (CSC).
+    Pull,
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mode::Push => write!(f, "push"),
+            Mode::Pull => write!(f, "pull"),
+        }
+    }
+}

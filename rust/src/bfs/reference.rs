@@ -1,0 +1,118 @@
+//! Queue-based reference BFS: ground truth for every other engine.
+
+use super::INF;
+use crate::graph::{Graph, VertexId};
+use std::collections::VecDeque;
+
+/// Result of a reference BFS.
+#[derive(Clone, Debug)]
+pub struct ReferenceBfs {
+    /// Per-vertex level (distance from root); `INF` if unreachable.
+    pub levels: Vec<u32>,
+    /// Number of vertices reached (including the root).
+    pub reached: usize,
+    /// Number of BFS levels (max finite level + 1).
+    pub depth: u32,
+}
+
+/// Run BFS over outgoing edges from `root`.
+pub fn bfs(g: &Graph, root: VertexId) -> ReferenceBfs {
+    let n = g.num_vertices();
+    let mut levels = vec![INF; n];
+    let mut q = VecDeque::new();
+    levels[root as usize] = 0;
+    q.push_back(root);
+    let mut reached = 1usize;
+    let mut depth = 0u32;
+    while let Some(v) = q.pop_front() {
+        let lv = levels[v as usize];
+        for &w in g.out_neighbors(v) {
+            if levels[w as usize] == INF {
+                levels[w as usize] = lv + 1;
+                depth = depth.max(lv + 1);
+                reached += 1;
+                q.push_back(w);
+            }
+        }
+    }
+    ReferenceBfs {
+        levels,
+        reached,
+        depth: depth + 1,
+    }
+}
+
+/// Pick `k` roots with non-zero out-degree (Graph500 sampling rule),
+/// deterministically from `seed`.
+pub fn sample_roots(g: &Graph, k: usize, seed: u64) -> Vec<VertexId> {
+    let mut rng = crate::util::rng::Xoshiro256::seed_from(seed);
+    let n = g.num_vertices() as u64;
+    let mut roots = Vec::with_capacity(k);
+    let mut attempts = 0u64;
+    while roots.len() < k && attempts < n * 8 + 1024 {
+        attempts += 1;
+        let v = rng.next_below(n) as VertexId;
+        if g.csr.degree(v) > 0 && !roots.contains(&v) {
+            roots.push(v);
+        }
+    }
+    roots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn chain_levels_are_distances() {
+        let g = generators::chain(5);
+        let r = bfs(&g, 0);
+        assert_eq!(r.levels, vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.reached, 5);
+        assert_eq!(r.depth, 5);
+    }
+
+    #[test]
+    fn unreachable_vertices_stay_inf() {
+        let g = generators::chain(5);
+        let r = bfs(&g, 2);
+        assert_eq!(r.levels[0], INF);
+        assert_eq!(r.levels[1], INF);
+        assert_eq!(r.levels[2], 0);
+        assert_eq!(r.reached, 3);
+    }
+
+    #[test]
+    fn star_is_depth_two() {
+        let g = generators::star(10);
+        let r = bfs(&g, 0);
+        assert_eq!(r.depth, 2);
+        assert_eq!(r.reached, 10);
+    }
+
+    #[test]
+    fn sample_roots_have_outgoing_edges() {
+        let g = generators::rmat_graph500(10, 4, 1);
+        let roots = sample_roots(&g, 16, 99);
+        assert_eq!(roots.len(), 16);
+        for r in roots {
+            assert!(g.csr.degree(r) > 0);
+        }
+    }
+
+    #[test]
+    fn triangle_inequality_of_levels() {
+        // For every edge (u,v): level[v] <= level[u] + 1 when u reached.
+        let g = generators::rmat_graph500(9, 8, 2);
+        let r = bfs(&g, sample_roots(&g, 1, 0)[0]);
+        for u in 0..g.num_vertices() as u32 {
+            if r.levels[u as usize] == INF {
+                continue;
+            }
+            for &v in g.out_neighbors(u) {
+                assert!(r.levels[v as usize] <= r.levels[u as usize] + 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-iteration traffic counters emitted by the Algorithm-2 engine.
+//!
+//! These counters are the interface between the *functional* model (what
+//! the accelerator computes) and the *timing* model (how many cycles the
+//! U280 pays for it): every byte the HBM readers would fetch and every
+//! vertex the dispatcher would route is tallied here, per PE and per PG.
+
+use super::Mode;
+
+/// Counters for one BFS iteration.
+#[derive(Clone, Debug)]
+pub struct IterTraffic {
+    /// Iteration index (0-based).
+    pub iteration: u32,
+    /// Direction this iteration ran in.
+    pub mode: Mode,
+    /// Vertices whose neighbor lists were fetched (active in push,
+    /// unvisited-and-scanned in pull).
+    pub list_fetches: u64,
+    /// Total neighbor entries streamed out of HBM (after early-exit
+    /// chunking in pull mode).
+    pub neighbors_streamed: u64,
+    /// Vertices newly added to the next frontier.
+    pub newly_visited: u64,
+    /// Frontier size at the start of this iteration.
+    pub frontier_size: u64,
+    /// Bits scanned in P1 (frontier words in push, visited words in pull).
+    pub scanned_bits: u64,
+    /// Per-PE count of neighbor-list fetch requests issued (P1 load).
+    pub per_pe_fetches: Vec<u64>,
+    /// Per-PE count of messages routed *to* that PE by the vertex
+    /// dispatcher (P2 load; crossbar output-port pressure).
+    pub per_pe_recv: Vec<u64>,
+    /// Per-PG bytes read from the offset arrays.
+    pub per_pg_offset_bytes: Vec<u64>,
+    /// Per-PG bytes read from the edge arrays (burst-aligned).
+    pub per_pg_edge_bytes: Vec<u64>,
+    /// Pull mode only: results forwarded PE->PE over the soft crossbar
+    /// (child vertices whose parent check succeeded on a remote PE).
+    pub crossbar_results: u64,
+}
+
+impl IterTraffic {
+    /// Fresh zeroed counters for an iteration.
+    pub fn new(iteration: u32, mode: Mode, num_pes: usize, num_pgs: usize) -> Self {
+        Self {
+            iteration,
+            mode,
+            list_fetches: 0,
+            neighbors_streamed: 0,
+            newly_visited: 0,
+            frontier_size: 0,
+            scanned_bits: 0,
+            per_pe_fetches: vec![0; num_pes],
+            per_pe_recv: vec![0; num_pes],
+            per_pg_offset_bytes: vec![0; num_pgs],
+            per_pg_edge_bytes: vec![0; num_pgs],
+            crossbar_results: 0,
+        }
+    }
+
+    /// Total bytes this iteration reads from HBM.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_pg_offset_bytes.iter().sum::<u64>()
+            + self.per_pg_edge_bytes.iter().sum::<u64>()
+    }
+
+    /// Largest per-PG byte load (the critical path of the memory phase).
+    pub fn max_pg_bytes(&self) -> u64 {
+        (0..self.per_pg_offset_bytes.len())
+            .map(|i| self.per_pg_offset_bytes[i] + self.per_pg_edge_bytes[i])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Largest per-PE dispatcher output load.
+    pub fn max_pe_recv(&self) -> u64 {
+        self.per_pe_recv.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Load imbalance factor of the memory phase: max PG bytes / mean.
+    pub fn pg_imbalance(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.per_pg_offset_bytes.len() as f64;
+        self.max_pg_bytes() as f64 / mean
+    }
+}
+
+/// Totals accumulated over a whole BFS run.
+#[derive(Clone, Debug, Default)]
+pub struct RunTraffic {
+    /// Per-iteration records, in order.
+    pub iters: Vec<IterTraffic>,
+}
+
+impl RunTraffic {
+    /// Sum of HBM bytes across iterations.
+    pub fn total_bytes(&self) -> u64 {
+        self.iters.iter().map(|i| i.total_bytes()).sum()
+    }
+
+    /// Sum of streamed neighbors.
+    pub fn total_neighbors(&self) -> u64 {
+        self.iters.iter().map(|i| i.neighbors_streamed).sum()
+    }
+
+    /// Number of iterations per mode `(push, pull)`.
+    pub fn mode_counts(&self) -> (usize, usize) {
+        let push = self.iters.iter().filter(|i| i.mode == Mode::Push).count();
+        (push, self.iters.len() - push)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_are_consistent() {
+        let mut t = IterTraffic::new(0, Mode::Push, 4, 2);
+        t.per_pg_offset_bytes = vec![64, 32];
+        t.per_pg_edge_bytes = vec![128, 256];
+        assert_eq!(t.total_bytes(), 480);
+        assert_eq!(t.max_pg_bytes(), 288);
+        assert!((t.pg_imbalance() - 288.0 / 240.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_totals_sum_iterations() {
+        let mut r = RunTraffic::default();
+        let mut a = IterTraffic::new(0, Mode::Push, 2, 1);
+        a.neighbors_streamed = 10;
+        a.per_pg_edge_bytes = vec![100];
+        let mut b = IterTraffic::new(1, Mode::Pull, 2, 1);
+        b.neighbors_streamed = 5;
+        b.per_pg_edge_bytes = vec![50];
+        r.iters.push(a);
+        r.iters.push(b);
+        assert_eq!(r.total_bytes(), 150);
+        assert_eq!(r.total_neighbors(), 15);
+        assert_eq!(r.mode_counts(), (1, 1));
+    }
+
+    #[test]
+    fn empty_iteration_imbalance_is_one() {
+        let t = IterTraffic::new(0, Mode::Pull, 2, 2);
+        assert_eq!(t.pg_imbalance(), 1.0);
+        assert_eq!(t.max_pe_recv(), 0);
+    }
+}

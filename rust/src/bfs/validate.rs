@@ -1,0 +1,185 @@
+//! Graph500-style BFS result validation.
+//!
+//! The Graph500 specification requires five checks on a claimed BFS
+//! tree/level assignment; ScalaBFS (a Graph500-benchmark accelerator)
+//! must produce results that pass them. Our engines are additionally
+//! checked for exact level equality with the reference BFS, but the
+//! spec-level validator below is what a standalone run of the
+//! accelerator would use (it does not need a second BFS).
+
+use super::INF;
+use crate::graph::{Graph, VertexId};
+
+/// A validation failure with its rule number.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ValidationError {
+    /// Graph500 rule (1-5) that failed.
+    pub rule: u8,
+    /// Explanation.
+    pub detail: String,
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rule {}: {}", self.rule, self.detail)
+    }
+}
+
+/// Validate a level assignment for BFS from `root`.
+///
+/// Rules (adapted from the Graph500 spec to level arrays):
+/// 1. the root has level 0 and every other level is positive or INF;
+/// 2. levels are consistent with the edges: for every edge (u, v) with
+///    both endpoints reached, |level[u] - level[v]| <= 1;
+/// 3. every reached non-root vertex has a reached in-neighbor exactly
+///    one level below (a valid BFS parent);
+/// 4. every vertex adjacent (via an out-edge) to a reached vertex is
+///    reached;
+/// 5. level values of reached vertices are bounded by |V| - 1.
+pub fn validate(g: &Graph, root: VertexId, levels: &[u32]) -> Result<(), ValidationError> {
+    let n = g.num_vertices();
+    if levels.len() != n {
+        return Err(ValidationError {
+            rule: 1,
+            detail: format!("levels len {} != |V| {}", levels.len(), n),
+        });
+    }
+    // Rule 1.
+    if levels[root as usize] != 0 {
+        return Err(ValidationError {
+            rule: 1,
+            detail: format!("root level = {}", levels[root as usize]),
+        });
+    }
+    for (v, &l) in levels.iter().enumerate() {
+        if v != root as usize && l == 0 {
+            return Err(ValidationError {
+                rule: 1,
+                detail: format!("non-root vertex {v} has level 0"),
+            });
+        }
+        // Rule 5.
+        if l != INF && l as usize > n - 1 {
+            return Err(ValidationError {
+                rule: 5,
+                detail: format!("vertex {v} level {l} > |V|-1"),
+            });
+        }
+    }
+    for u in 0..n {
+        let lu = levels[u];
+        for &v in g.out_neighbors(u as VertexId) {
+            let lv = levels[v as usize];
+            // Rule 4: a reached vertex cannot have an unreached child.
+            if lu != INF && lv == INF {
+                return Err(ValidationError {
+                    rule: 4,
+                    detail: format!("edge {u}->{v}: reached -> unreached"),
+                });
+            }
+            // Rule 2: no out-edge may skip a level downward — for a
+            // directed graph, reachable u forces level[v] <= level[u]+1
+            // (back-edges to earlier levels are legal).
+            if lu != INF && lv != INF && lv > lu + 1 {
+                return Err(ValidationError {
+                    rule: 2,
+                    detail: format!("edge {u}->{v} spans levels {lu}->{lv}"),
+                });
+            }
+        }
+    }
+    // Rule 3: every reached non-root vertex has a parent one level up.
+    for v in 0..n {
+        let lv = levels[v];
+        if lv == INF || lv == 0 {
+            continue;
+        }
+        let has_parent = g
+            .in_neighbors(v as VertexId)
+            .iter()
+            .any(|&u| levels[u as usize] == lv - 1);
+        if !has_parent {
+            return Err(ValidationError {
+                rule: 3,
+                detail: format!("vertex {v} at level {lv} has no level-{} parent", lv - 1),
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::bitmap::run_bfs;
+    use crate::bfs::reference;
+    use crate::graph::{generators, Partitioning};
+    use crate::sched::Hybrid;
+
+    #[test]
+    fn reference_bfs_validates() {
+        let g = generators::rmat_graph500(10, 8, 1);
+        let root = reference::sample_roots(&g, 1, 1)[0];
+        let r = reference::bfs(&g, root);
+        validate(&g, root, &r.levels).unwrap();
+    }
+
+    #[test]
+    fn bitmap_engine_validates() {
+        let g = generators::rmat_graph500(10, 16, 2);
+        let root = reference::sample_roots(&g, 1, 2)[0];
+        let run = run_bfs(&g, Partitioning::new(8, 4), root, &mut Hybrid::default());
+        validate(&g, root, &run.levels).unwrap();
+    }
+
+    #[test]
+    fn detects_wrong_root_level() {
+        let g = generators::chain(4);
+        let mut levels = reference::bfs(&g, 0).levels;
+        levels[0] = 5;
+        let err = validate(&g, 0, &levels).unwrap_err();
+        assert_eq!(err.rule, 1);
+    }
+
+    #[test]
+    fn detects_level_jump() {
+        let g = generators::chain(4);
+        let mut levels = reference::bfs(&g, 0).levels;
+        levels[2] = 3; // edge 1 -> 2 now spans 1 -> 3 (within |V|-1)
+        let err = validate(&g, 0, &levels).unwrap_err();
+        assert!(err.rule == 2 || err.rule == 3, "{err}");
+    }
+
+    #[test]
+    fn detects_unreached_child_of_reached() {
+        let g = generators::chain(4);
+        let mut levels = reference::bfs(&g, 0).levels;
+        levels[3] = INF;
+        let err = validate(&g, 0, &levels).unwrap_err();
+        assert_eq!(err.rule, 4);
+    }
+
+    #[test]
+    fn detects_orphan_vertex() {
+        // 0 -> 1 -> 2, plus an unreached 3 -> 2. Claiming level(2) = 1
+        // violates no edge constraint (its only reached parent sits at
+        // the same level) but leaves 2 without a level-0 parent.
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.extend([(0, 1), (1, 2), (3, 2)]);
+        let g = b.build("orphan");
+        let mut levels = reference::bfs(&g, 0).levels;
+        assert_eq!(levels[2], 2);
+        levels[2] = 1;
+        let err = validate(&g, 0, &levels).unwrap_err();
+        assert_eq!(err.rule, 3);
+    }
+
+    #[test]
+    fn detects_level_exceeding_n() {
+        let g = generators::chain(3);
+        let mut levels = reference::bfs(&g, 0).levels;
+        levels[2] = 100;
+        let err = validate(&g, 0, &levels).unwrap_err();
+        assert_eq!(err.rule, 5);
+    }
+}

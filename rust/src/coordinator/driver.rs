@@ -1,0 +1,140 @@
+//! End-to-end dataset driver: materialize a Table-I dataset, run the
+//! functional engine over sampled roots, time it with the simulator, and
+//! aggregate GTEPS the Graph500 way.
+
+use crate::bfs::bitmap::run_bfs;
+use crate::bfs::gteps::harmonic_mean;
+use crate::bfs::reference;
+use crate::graph::{datasets, Graph};
+use crate::sched::{Fixed, Hybrid, ModePolicy};
+use crate::sim::config::SimConfig;
+use crate::sim::results::SimResult;
+use crate::sim::throughput::ThroughputSim;
+use crate::Result;
+
+/// Options for a dataset run.
+#[derive(Clone, Debug)]
+pub struct DriverOptions {
+    /// Dataset shrink factor (1 = published size).
+    pub scale_factor: u32,
+    /// Roots to sample (Graph500 uses 64; experiments default smaller).
+    pub num_roots: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Scheduling policy: "hybrid", "push", "pull".
+    pub policy: String,
+}
+
+impl Default for DriverOptions {
+    fn default() -> Self {
+        Self {
+            scale_factor: 1,
+            num_roots: 4,
+            seed: 42,
+            policy: "hybrid".into(),
+        }
+    }
+}
+
+/// Build the policy named in the options.
+pub fn make_policy(name: &str) -> Box<dyn ModePolicy> {
+    match name {
+        "push" => Box::new(Fixed(crate::bfs::Mode::Push)),
+        "pull" => Box::new(Fixed(crate::bfs::Mode::Pull)),
+        _ => Box::new(Hybrid::default()),
+    }
+}
+
+/// Aggregated result over the sampled roots of one dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetRun {
+    /// Dataset name.
+    pub name: String,
+    /// |V| and |E| of the materialized graph.
+    pub vertices: usize,
+    /// Directed edge count.
+    pub edges: u64,
+    /// Per-root sim results.
+    pub per_root: Vec<SimResult>,
+    /// Harmonic-mean GTEPS over roots.
+    pub gteps: f64,
+    /// Mean achieved aggregate bandwidth.
+    pub aggregate_bw: f64,
+}
+
+/// Run a materialized graph under a config.
+pub fn run_graph(
+    graph: &Graph,
+    cfg: &SimConfig,
+    opts: &DriverOptions,
+) -> Result<DatasetRun> {
+    let roots = reference::sample_roots(graph, opts.num_roots, opts.seed);
+    anyhow::ensure!(!roots.is_empty(), "no valid roots in {}", graph.name);
+    let bytes = graph.csr.footprint_bytes(cfg.sv_bytes as usize)
+        + graph.csc.footprint_bytes(cfg.sv_bytes as usize);
+    let sim = ThroughputSim::new(cfg.clone());
+    let mut per_root = Vec::with_capacity(roots.len());
+    for &root in &roots {
+        let mut policy = make_policy(&opts.policy);
+        let run = run_bfs(graph, cfg.part, root, policy.as_mut());
+        per_root.push(sim.simulate(&run, &graph.name, bytes));
+    }
+    let gteps = harmonic_mean(&per_root.iter().map(|r| r.gteps).collect::<Vec<_>>());
+    let aggregate_bw =
+        per_root.iter().map(|r| r.aggregate_bw).sum::<f64>() / per_root.len() as f64;
+    Ok(DatasetRun {
+        name: graph.name.clone(),
+        vertices: graph.num_vertices(),
+        edges: graph.num_edges(),
+        per_root,
+        gteps,
+        aggregate_bw,
+    })
+}
+
+/// Materialize a Table-I dataset by name and run it.
+pub fn run_dataset(name: &str, cfg: &SimConfig, opts: &DriverOptions) -> Result<DatasetRun> {
+    let graph = datasets::by_name(name, opts.scale_factor, opts.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    run_graph(&graph, cfg, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn run_graph_aggregates_roots() {
+        let g = generators::rmat_graph500(10, 8, 3);
+        let cfg = SimConfig::u280(4, 8);
+        let opts = DriverOptions {
+            num_roots: 3,
+            ..Default::default()
+        };
+        let run = run_graph(&g, &cfg, &opts).unwrap();
+        assert_eq!(run.per_root.len(), 3);
+        assert!(run.gteps > 0.0);
+        assert_eq!(run.vertices, 1024);
+    }
+
+    #[test]
+    fn run_dataset_by_name_scaled() {
+        let cfg = SimConfig::u280(4, 8);
+        let opts = DriverOptions {
+            scale_factor: 4,
+            num_roots: 1,
+            ..Default::default()
+        };
+        let run = run_dataset("RMAT18-8", &cfg, &opts).unwrap();
+        assert!(run.gteps > 0.0);
+        assert!(run_dataset("bogus", &cfg, &opts).is_err());
+    }
+
+    #[test]
+    fn policy_factory_names() {
+        assert_eq!(make_policy("push").name(), "push-only");
+        assert_eq!(make_policy("pull").name(), "pull-only");
+        assert!(make_policy("hybrid").name().starts_with("hybrid"));
+    }
+}

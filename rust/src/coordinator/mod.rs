@@ -1,0 +1,11 @@
+//! The Layer-3 coordinator: experiment drivers that tie the substrate
+//! together (dataset → partition → functional engine → timing simulator →
+//! report) and the per-figure/table experiment runners the CLI and the
+//! benches call into.
+
+pub mod driver;
+pub mod experiments;
+pub mod sweep;
+pub mod report;
+
+pub use driver::{run_dataset, DatasetRun, DriverOptions};

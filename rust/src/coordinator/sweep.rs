@@ -1,0 +1,134 @@
+//! Configuration sweeps: grid exploration over (PCs, PEs, policy,
+//! placement) for one graph, producing the data behind the scaling
+//! figures and the design-space discussion of §VI-D.
+
+use crate::bfs::bitmap::run_bfs;
+use crate::coordinator::driver::make_policy;
+use crate::graph::Graph;
+use crate::sim::config::{Placement, SimConfig};
+use crate::sim::throughput::ThroughputSim;
+use crate::Result;
+
+/// One point of a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// HBM PCs used.
+    pub pcs: usize,
+    /// Total PEs.
+    pub pes: usize,
+    /// Policy name.
+    pub policy: String,
+    /// Placement.
+    pub placement: Placement,
+    /// Measured GTEPS.
+    pub gteps: f64,
+    /// Achieved aggregate bandwidth (B/s).
+    pub aggregate_bw: f64,
+    /// Total cycles.
+    pub cycles: u64,
+}
+
+/// Sweep specification.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// PC counts to test.
+    pub pcs: Vec<usize>,
+    /// PEs per PC to test.
+    pub pes_per_pc: Vec<usize>,
+    /// Policies to test ("push", "pull", "hybrid").
+    pub policies: Vec<String>,
+    /// Placements to test.
+    pub placements: Vec<Placement>,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            pcs: vec![1, 4, 16, 32],
+            pes_per_pc: vec![1, 2],
+            policies: vec!["hybrid".into()],
+            placements: vec![Placement::Partitioned],
+            seed: 42,
+        }
+    }
+}
+
+/// Run the full grid on one graph.
+pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
+    let roots = crate::bfs::reference::sample_roots(graph, 1, spec.seed);
+    anyhow::ensure!(!roots.is_empty(), "no roots");
+    let root = roots[0];
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut out = Vec::new();
+    for &pcs in &spec.pcs {
+        for &ppc in &spec.pes_per_pc {
+            let pes = pcs * ppc;
+            for policy_name in &spec.policies {
+                for &placement in &spec.placements {
+                    let mut cfg = SimConfig::u280(pcs, pes);
+                    cfg.placement = placement;
+                    let mut policy = make_policy(policy_name);
+                    let run = run_bfs(graph, cfg.part, root, policy.as_mut());
+                    let res = ThroughputSim::new(cfg).simulate(&run, &graph.name, bytes);
+                    out.push(SweepPoint {
+                        pcs,
+                        pes,
+                        policy: policy_name.clone(),
+                        placement,
+                        gteps: res.gteps,
+                        aggregate_bw: res.aggregate_bw,
+                        cycles: res.total_cycles,
+                    });
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The best point of a sweep by GTEPS.
+pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .max_by(|a, b| a.gteps.partial_cmp(&b.gteps).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn grid_has_expected_cardinality() {
+        let g = generators::rmat_graph500(9, 8, 3);
+        let spec = SweepSpec {
+            pcs: vec![1, 4],
+            pes_per_pc: vec![1, 2],
+            policies: vec!["push".into(), "hybrid".into()],
+            placements: vec![Placement::Partitioned, Placement::Unpartitioned],
+            seed: 3,
+        };
+        let pts = sweep(&g, &spec).unwrap();
+        assert_eq!(pts.len(), 2 * 2 * 2 * 2);
+        let b = best(&pts).unwrap();
+        assert!(b.gteps > 0.0);
+        // Best point should be partitioned (baseline placement loses).
+        assert_eq!(b.placement, Placement::Partitioned);
+    }
+
+    #[test]
+    fn more_resources_never_hurt_at_fixed_ppc() {
+        let g = generators::rmat_graph500(11, 16, 5);
+        let spec = SweepSpec {
+            pcs: vec![2, 8],
+            pes_per_pc: vec![1],
+            policies: vec!["hybrid".into()],
+            placements: vec![Placement::Partitioned],
+            seed: 5,
+        };
+        let pts = sweep(&g, &spec).unwrap();
+        assert!(pts[1].gteps > pts[0].gteps);
+    }
+}

@@ -1,0 +1,63 @@
+//! Full N×N crossbar (paper Fig 6a): 1-hop routing, N² FIFOs.
+
+use super::Dispatcher;
+
+/// The naive full crossbar: every input port has a dedicated FIFO to
+/// every output port.
+#[derive(Clone, Copy, Debug)]
+pub struct FullCrossbar {
+    /// Number of ports (== PEs == subgraph streams).
+    pub n: usize,
+    /// FIFO depth per link (affects resources, not routing).
+    pub fifo_depth: usize,
+}
+
+impl FullCrossbar {
+    /// N×N crossbar with the paper's example FIFO depth (16).
+    pub fn new(n: usize) -> Self {
+        Self { n, fifo_depth: 16 }
+    }
+}
+
+impl Dispatcher for FullCrossbar {
+    fn route(&self, vid: u32) -> usize {
+        (vid as usize) % self.n
+    }
+
+    fn fifo_count(&self) -> u64 {
+        (self.n as u64) * (self.n as u64)
+    }
+
+    fn hops(&self) -> u32 {
+        1
+    }
+
+    fn describe(&self) -> String {
+        format!("full {}x{} crossbar ({} FIFOs)", self.n, self.n, self.fifo_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_by_modulo() {
+        let xb = FullCrossbar::new(16);
+        assert_eq!(xb.route(0), 0);
+        assert_eq!(xb.route(17), 1);
+        assert_eq!(xb.route(31), 15);
+    }
+
+    #[test]
+    fn fifo_count_is_n_squared() {
+        assert_eq!(FullCrossbar::new(16).fifo_count(), 256);
+        assert_eq!(FullCrossbar::new(32).fifo_count(), 1024);
+        assert_eq!(FullCrossbar::new(64).fifo_count(), 4096);
+    }
+
+    #[test]
+    fn single_hop() {
+        assert_eq!(FullCrossbar::new(8).hops(), 1);
+    }
+}

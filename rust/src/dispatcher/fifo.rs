@@ -1,0 +1,95 @@
+//! Bounded FIFO used between crossbar ports (the resource the paper
+//! counts: a full 64×64 crossbar needs 4096 of these and "consumes more
+//! than half of the LUTs in the U280").
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO carrying routed vertex messages.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    buf: VecDeque<T>,
+    /// Capacity in entries (paper example uses depth 16).
+    pub depth: usize,
+    /// Pushes rejected because the FIFO was full (backpressure events).
+    pub backpressure: u64,
+    /// High-water mark.
+    pub max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    /// FIFO of the given depth.
+    pub fn new(depth: usize) -> Self {
+        Self {
+            buf: VecDeque::with_capacity(depth),
+            depth,
+            backpressure: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    /// Try to enqueue; false (and a backpressure count) when full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.buf.len() >= self.depth {
+            self.backpressure += 1;
+            return false;
+        }
+        self.buf.push_back(item);
+        self.max_occupancy = self.max_occupancy.max(self.buf.len());
+        true
+    }
+
+    /// Dequeue the oldest entry.
+    pub fn pop(&mut self) -> Option<T> {
+        self.buf.pop_front()
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// True when full.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(i));
+        }
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(0));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_counted_when_full() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1));
+        assert!(f.push(2));
+        assert!(!f.push(3));
+        assert!(!f.push(4));
+        assert_eq!(f.backpressure, 2);
+        assert_eq!(f.max_occupancy, 2);
+    }
+
+    #[test]
+    fn empty_pop_is_none() {
+        let mut f: Fifo<u32> = Fifo::new(1);
+        assert!(f.is_empty());
+        assert_eq!(f.pop(), None);
+    }
+}

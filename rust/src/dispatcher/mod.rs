@@ -1,0 +1,30 @@
+//! Vertex dispatcher (paper §IV-D, Fig 6): gathers neighbor-list streams
+//! from all PCs and scatters each vertex to the PE owning it
+//! (`VID % N_pe`).
+//!
+//! Two interchangeable implementations:
+//! * [`crossbar::FullCrossbar`] — the naive N×N design: 1-hop latency,
+//!   N² FIFOs (unbuildable at N=64 on the U280).
+//! * [`multilayer::MultiLayerCrossbar`] — the paper's contribution: factor
+//!   N = C₁×…×C_k, route through k layers of small crossbars; FIFO count
+//!   drops to Σ (N/Cᵢ)·Cᵢ², latency grows to k hops. Throughput-critical
+//!   BFS tolerates the latency (§IV-D).
+
+pub mod fifo;
+pub mod crossbar;
+pub mod multilayer;
+
+pub use crossbar::FullCrossbar;
+pub use multilayer::MultiLayerCrossbar;
+
+/// Routing contract shared by both crossbar designs.
+pub trait Dispatcher {
+    /// Destination PE for a vertex id (must equal `vid % n_pes`).
+    fn route(&self, vid: u32) -> usize;
+    /// Number of FIFOs the design instantiates (resource model input).
+    fn fifo_count(&self) -> u64;
+    /// Hops a message traverses (latency model input).
+    fn hops(&self) -> u32;
+    /// Human-readable description.
+    fn describe(&self) -> String;
+}

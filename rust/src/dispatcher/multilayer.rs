@@ -1,0 +1,195 @@
+//! Multi-layer crossbar (paper §IV-D, Fig 6b): the resource-efficient
+//! vertex dispatcher that makes 64 PEs fit on the U280.
+//!
+//! Factor `N = C₁ × C₂ × … × C_k`. Layer 1 uses `N/C₁` small `C₁×C₁`
+//! crossbars and classifies vertices into `C₁` groups by `VID % C₁`;
+//! layer i refines the classification to `C₁×…×Cᵢ` groups by
+//! `VID % (C₁…Cᵢ)`; after layer k the `N` groups map 1:1 onto PEs. FIFO
+//! cost is `Σ (N/Cᵢ)·Cᵢ²` versus the full crossbar's `N²`; the price is
+//! `k`-hop latency, acceptable for throughput-critical BFS.
+
+use super::Dispatcher;
+
+/// A k-layer crossbar described by its factorization of N.
+#[derive(Clone, Debug)]
+pub struct MultiLayerCrossbar {
+    /// Layer radices; their product is N.
+    pub factors: Vec<usize>,
+    /// FIFO depth per link.
+    pub fifo_depth: usize,
+}
+
+impl MultiLayerCrossbar {
+    /// Build from explicit factors (e.g. `[4, 4, 4]` for the paper's
+    /// 64-PE configuration).
+    pub fn new(factors: Vec<usize>) -> Self {
+        assert!(!factors.is_empty());
+        assert!(factors.iter().all(|&c| c >= 2), "radix must be >= 2");
+        Self {
+            factors,
+            fifo_depth: 16,
+        }
+    }
+
+    /// Factor N into radix-`c` layers, with one smaller remainder layer
+    /// when N is not a pure power of c (e.g. 32 -> [4, 4, 2]). If N has
+    /// no factor of c at all, this degenerates to a single N×N layer
+    /// (i.e. a full crossbar).
+    pub fn balanced(n: usize, c: usize) -> Self {
+        assert!(c >= 2 && n >= 2);
+        let mut layers = Vec::new();
+        let mut rem = n;
+        while rem % c == 0 && rem > 1 {
+            layers.push(c);
+            rem /= c;
+        }
+        if rem > 1 {
+            layers.push(rem);
+        }
+        Self::new(layers)
+    }
+
+    /// Total port count N.
+    pub fn n(&self) -> usize {
+        self.factors.iter().product()
+    }
+
+    /// Number of small crossbars in layer `i`.
+    pub fn crossbars_in_layer(&self, i: usize) -> usize {
+        self.n() / self.factors[i]
+    }
+
+    /// The group index a vertex belongs to after traversing layer `i`
+    /// (0-based): `VID % (C₁·…·C_{i+1})`.
+    pub fn group_after_layer(&self, vid: u32, i: usize) -> usize {
+        let modulus: usize = self.factors[..=i].iter().product();
+        (vid as usize) % modulus
+    }
+
+    /// The output port of the layer-`i` crossbar a message selects:
+    /// the refinement digit `(VID / (C₁·…·Cᵢ₋₁)) % Cᵢ`... routing in the
+    /// paper is by residue: layer i sends to port `VID % Cᵢ` of the
+    /// appropriate small crossbar; equivalently the digit of `VID` in the
+    /// mixed-radix basis (C₁, …, C_k).
+    pub fn digit(&self, vid: u32, i: usize) -> usize {
+        let lower: usize = self.factors[..i].iter().product();
+        ((vid as usize) / lower) % self.factors[i]
+    }
+
+    /// Simulate the layer traversal of a vertex and return the final PE.
+    /// This mirrors Fig 6b: after layer i the message sits in group
+    /// `VID % (C₁…Cᵢ)`; after the last layer that group *is* the PE id.
+    pub fn simulate_route(&self, vid: u32) -> usize {
+        let mut group = 0usize;
+        let mut modulus = 1usize;
+        for (i, &c) in self.factors.iter().enumerate() {
+            // The layer refines the residue: group' = group + digit * modulus
+            // where digit = (vid / modulus) % c  == digit(vid, i).
+            group += self.digit(vid, i) * modulus;
+            modulus *= c;
+            debug_assert_eq!(group, self.group_after_layer(vid, i));
+        }
+        group
+    }
+}
+
+impl Dispatcher for MultiLayerCrossbar {
+    fn route(&self, vid: u32) -> usize {
+        self.simulate_route(vid)
+    }
+
+    fn fifo_count(&self) -> u64 {
+        self.factors
+            .iter()
+            .map(|&c| (self.n() / c) as u64 * (c as u64) * (c as u64))
+            .sum()
+    }
+
+    fn hops(&self) -> u32 {
+        self.factors.len() as u32
+    }
+
+    fn describe(&self) -> String {
+        let layers: Vec<String> = self.factors.iter().map(|c| format!("{c}x{c}")).collect();
+        format!(
+            "{}-layer crossbar [{}] on N={} ({} FIFOs)",
+            self.factors.len(),
+            layers.join(", "),
+            self.n(),
+            self.fifo_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatcher::crossbar::FullCrossbar;
+
+    #[test]
+    fn paper_16_example_two_layers_of_4() {
+        let ml = MultiLayerCrossbar::new(vec![4, 4]);
+        assert_eq!(ml.n(), 16);
+        // Paper: two-layer consumes 2*4*4*4 = 128 FIFOs vs 256 full.
+        assert_eq!(ml.fifo_count(), 128);
+        assert_eq!(FullCrossbar::new(16).fifo_count(), 256);
+        assert_eq!(ml.hops(), 2);
+    }
+
+    #[test]
+    fn paper_64_config_three_layers_of_4() {
+        let ml = MultiLayerCrossbar::new(vec![4, 4, 4]);
+        assert_eq!(ml.n(), 64);
+        // Paper §VI-B: 3 * 16 * 4 * 4 = 768 FIFOs (vs 4096 full).
+        assert_eq!(ml.fifo_count(), 768);
+        assert_eq!(ml.crossbars_in_layer(0), 16);
+    }
+
+    #[test]
+    fn routing_equals_modulo_for_all_vids() {
+        for factors in [vec![4, 4], vec![2, 2, 2, 2], vec![4, 2, 2], vec![8, 8]] {
+            let ml = MultiLayerCrossbar::new(factors.clone());
+            let n = ml.n();
+            for vid in 0..(4 * n as u32) {
+                assert_eq!(
+                    ml.route(vid),
+                    (vid as usize) % n,
+                    "factors {factors:?} vid {vid}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_factorization() {
+        let ml = MultiLayerCrossbar::balanced(64, 4);
+        assert_eq!(ml.factors, vec![4, 4, 4]);
+        let ml2 = MultiLayerCrossbar::balanced(16, 2);
+        assert_eq!(ml2.factors, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn multilayer_always_cheaper_than_full() {
+        for (n, c) in [(16, 4), (64, 4), (64, 2), (256, 4)] {
+            let ml = MultiLayerCrossbar::balanced(n, c);
+            assert!(
+                ml.fifo_count() < (n * n) as u64,
+                "n={n} c={c}: {} !< {}",
+                ml.fifo_count(),
+                n * n
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_handles_remainders() {
+        assert_eq!(MultiLayerCrossbar::balanced(32, 4).factors, vec![4, 4, 2]);
+        // No factor of 5 in 12: degenerates to a single full layer.
+        assert_eq!(MultiLayerCrossbar::balanced(12, 5).factors, vec![12]);
+        // Routing still correct with a remainder layer.
+        let ml = MultiLayerCrossbar::balanced(32, 4);
+        for vid in 0..128u32 {
+            assert_eq!(ml.route(vid), (vid as usize) % 32);
+        }
+    }
+}

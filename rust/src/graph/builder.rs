@@ -1,0 +1,142 @@
+//! Edge-list -> `Graph` builder with the normalizations the paper applies:
+//! undirected edges become two directed edges, and self-loops are dropped
+//! when symmetrizing (paper §VI-A: "except for the loop that connects the
+//! same vertex").
+
+use super::csr::{Csr, Graph, VertexId};
+
+/// Accumulates edges and produces a validated [`Graph`].
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    num_vertices: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    /// Treat input as undirected: each edge is mirrored.
+    symmetrize: bool,
+    /// Remove duplicate directed edges.
+    dedup: bool,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph over `n` vertices.
+    pub fn new(n: usize) -> Self {
+        Self {
+            num_vertices: n,
+            ..Default::default()
+        }
+    }
+
+    /// Mirror each added edge (undirected input, paper §VI-A).
+    pub fn symmetrize(mut self, yes: bool) -> Self {
+        self.symmetrize = yes;
+        self
+    }
+
+    /// Deduplicate directed edges before building.
+    pub fn dedup(mut self, yes: bool) -> Self {
+        self.dedup = yes;
+        self
+    }
+
+    /// Add a directed edge `src -> dst`.
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId) {
+        debug_assert!((src as usize) < self.num_vertices);
+        debug_assert!((dst as usize) < self.num_vertices);
+        self.edges.push((src, dst));
+    }
+
+    /// Bulk add.
+    pub fn extend(&mut self, it: impl IntoIterator<Item = (VertexId, VertexId)>) {
+        self.edges.extend(it);
+    }
+
+    /// Number of raw edges accumulated so far.
+    pub fn raw_edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Finalize into a `Graph` named `name`.
+    pub fn build(mut self, name: impl Into<String>) -> Graph {
+        if self.symmetrize {
+            let mirrored: Vec<(VertexId, VertexId)> = self
+                .edges
+                .iter()
+                .filter(|(s, d)| s != d)
+                .map(|&(s, d)| (d, s))
+                .collect();
+            self.edges.extend(mirrored);
+        }
+        if self.dedup {
+            self.edges.sort_unstable();
+            self.edges.dedup();
+        }
+        // Counting-sort the edges into CSR directly (avoids Vec<Vec<_>>).
+        let n = self.num_vertices;
+        let mut counts = vec![0u64; n + 1];
+        for &(s, _) in &self.edges {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut edge_arr = vec![0 as VertexId; self.edges.len()];
+        for &(s, d) in &self.edges {
+            let pos = cursor[s as usize];
+            edge_arr[pos as usize] = d;
+            cursor[s as usize] += 1;
+        }
+        let csr = Csr {
+            offsets,
+            edges: edge_arr,
+        };
+        Graph::from_csr(name, csr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_build_preserves_edges() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(3, 0);
+        let g = b.build("t");
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_neighbors(0), &[3]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn symmetrize_mirrors_and_skips_loops() {
+        let mut b = GraphBuilder::new(3).symmetrize(true);
+        b.add_edge(0, 1);
+        b.add_edge(2, 2); // self loop: kept once, not mirrored
+        let g = b.build("t");
+        assert_eq!(g.num_edges(), 3); // 0->1, 1->0, 2->2
+        assert_eq!(g.out_neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn dedup_removes_parallel_edges() {
+        let mut b = GraphBuilder::new(2).dedup(true);
+        b.add_edge(0, 1);
+        b.add_edge(0, 1);
+        b.add_edge(0, 1);
+        let g = b.build("t");
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn extend_bulk_adds() {
+        let mut b = GraphBuilder::new(5);
+        b.extend([(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(b.raw_edge_count(), 4);
+        let g = b.build("chain");
+        assert_eq!(g.num_edges(), 4);
+    }
+}

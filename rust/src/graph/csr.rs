@@ -1,0 +1,235 @@
+//! CSR/CSC graph storage (paper §II-C, Fig 2b).
+//!
+//! `Csr` is one direction (offset array + edge array); `Graph` bundles the
+//! CSR (outgoing lists — push mode reads these) and its transpose CSC
+//! (incoming lists — pull mode reads these), mirroring the data the HBM
+//! readers stream on the U280.
+
+/// Vertex identifier. 32 bits, matching the paper's `S_v = 32 bits`.
+pub type VertexId = u32;
+
+/// One adjacency direction in compressed sparse row form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `edges` for vertex `v`'s list.
+    pub offsets: Vec<u64>,
+    /// Concatenated neighbor lists.
+    pub edges: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from per-vertex adjacency lists.
+    pub fn from_adj(adj: &[Vec<VertexId>]) -> Self {
+        let mut offsets = Vec::with_capacity(adj.len() + 1);
+        offsets.push(0u64);
+        let mut total = 0u64;
+        for list in adj {
+            total += list.len() as u64;
+            offsets.push(total);
+        }
+        let mut edges = Vec::with_capacity(total as usize);
+        for list in adj {
+            edges.extend_from_slice(list);
+        }
+        Self { offsets, edges }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of (directed) edges.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.edges.len() as u64
+    }
+
+    /// Neighbor list of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.edges[s..e]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u64 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Transpose (CSR -> CSC or vice versa). Counting sort, O(V + E).
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_vertices();
+        let mut counts = vec![0u64; n + 1];
+        for &dst in &self.edges {
+            counts[dst as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut edges = vec![0 as VertexId; self.edges.len()];
+        for src in 0..n {
+            for &dst in self.neighbors(src as VertexId) {
+                let pos = cursor[dst as usize];
+                edges[pos as usize] = src as VertexId;
+                cursor[dst as usize] += 1;
+            }
+        }
+        Csr { offsets, edges }
+    }
+
+    /// Bytes consumed by this CSR when stored with `S_v`-byte vertex ids
+    /// and 8-byte offsets — used by the HBM capacity checks.
+    pub fn footprint_bytes(&self, sv_bytes: usize) -> u64 {
+        (self.offsets.len() * 8 + self.edges.len() * sv_bytes) as u64
+    }
+}
+
+/// A directed graph stored in both directions, as the accelerator needs.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Human-readable dataset name (e.g. "RMAT18-16", "LJ'").
+    pub name: String,
+    /// Outgoing neighbor lists (push mode).
+    pub csr: Csr,
+    /// Incoming neighbor lists (pull mode); transpose of `csr`.
+    pub csc: Csr,
+}
+
+impl Graph {
+    /// Assemble from a CSR; the CSC is derived by transposition.
+    pub fn from_csr(name: impl Into<String>, csr: Csr) -> Self {
+        let csc = csr.transpose();
+        Self {
+            name: name.into(),
+            csr,
+            csc,
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.csr.num_vertices()
+    }
+
+    /// Number of directed edges.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.csr.num_edges()
+    }
+
+    /// Average out-degree.
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_vertices().max(1) as f64
+    }
+
+    /// Out-neighbors (children) of `v`.
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        self.csr.neighbors(v)
+    }
+
+    /// In-neighbors (parents) of `v`.
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        self.csc.neighbors(v)
+    }
+
+    /// Validate structural invariants (used by tests / loaders).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_vertices();
+        if self.csc.num_vertices() != n {
+            return Err("csr/csc vertex count mismatch".into());
+        }
+        if self.csr.num_edges() != self.csc.num_edges() {
+            return Err("csr/csc edge count mismatch".into());
+        }
+        for dir in [&self.csr, &self.csc] {
+            if dir.offsets.windows(2).any(|w| w[0] > w[1]) {
+                return Err("offsets not monotone".into());
+            }
+            if *dir.offsets.last().unwrap() != dir.num_edges() {
+                return Err("last offset != |E|".into());
+            }
+            if dir.edges.iter().any(|&v| (v as usize) >= n) {
+                return Err("edge endpoint out of range".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The example graph of the paper's Fig 2a:
+    /// edges 0->1, 0->2, 1->3, 2->3, 2->4, 3->5, 4->5, 1->0 (mix to make
+    /// the transpose non-trivial).
+    fn example() -> Csr {
+        Csr::from_adj(&[
+            vec![1, 2],
+            vec![0, 3],
+            vec![3, 4],
+            vec![5],
+            vec![5],
+            vec![],
+        ])
+    }
+
+    #[test]
+    fn from_adj_offsets_and_degrees() {
+        let g = example();
+        assert_eq!(g.num_vertices(), 6);
+        assert_eq!(g.num_edges(), 8);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(5), 0);
+        assert_eq!(g.neighbors(2), &[3, 4]);
+    }
+
+    #[test]
+    fn transpose_reverses_edges() {
+        let g = example();
+        let t = g.transpose();
+        assert_eq!(t.num_edges(), g.num_edges());
+        // 3's parents are 1 and 2.
+        let mut p = t.neighbors(3).to_vec();
+        p.sort_unstable();
+        assert_eq!(p, vec![1, 2]);
+        // Double transpose = original edge multiset per vertex.
+        let tt = t.transpose();
+        for v in 0..g.num_vertices() as VertexId {
+            let mut a = g.neighbors(v).to_vec();
+            let mut b = tt.neighbors(v).to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn graph_validate_ok() {
+        let g = Graph::from_csr("ex", example());
+        assert!(g.validate().is_ok());
+        assert_eq!(g.in_neighbors(5), &[3, 4]);
+    }
+
+    #[test]
+    fn graph_validate_detects_corruption() {
+        let mut g = Graph::from_csr("ex", example());
+        g.csc.edges[0] = 99; // out of range
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn footprint_accounts_offsets_and_edges() {
+        let g = example();
+        assert_eq!(g.footprint_bytes(4), (7 * 8 + 8 * 4) as u64);
+    }
+}

@@ -1,0 +1,171 @@
+//! Table-I dataset registry.
+//!
+//! The paper evaluates four SuiteSparse real-world graphs and ten Graph500
+//! RMAT graphs. With no network access to SuiteSparse, the real graphs are
+//! **substituted by fitted synthetic analogs** (`PK'`, `LJ'`, `OR'`,
+//! `HO'`): Kronecker graphs whose scale and edge-sample count are chosen
+//! so |V|, |E| and average degree match the published Table-I rows
+//! (DESIGN.md §1 records the substitution). RMAT rows are generated
+//! exactly as the paper describes.
+//!
+//! Every dataset supports a `scale_factor` to shrink it for quick runs
+//! (vertices and edges shrink together, preserving average degree, the
+//! quantity the accelerator's behaviour keys on).
+
+use super::csr::Graph;
+use super::generators::{rmat, RmatParams};
+
+/// Static description of a Table-I row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetSpec {
+    /// Short name used throughout the paper ("PK", "RMAT18-8", ...).
+    pub name: &'static str,
+    /// Published vertex count (millions).
+    pub vertices_m: f64,
+    /// Published directed edge count (millions).
+    pub edges_m: f64,
+    /// Published average degree.
+    pub avg_degree: f64,
+    /// Whether the source graph is directed (`Y` column of Table I).
+    pub directed: bool,
+    /// True for the four real-world rows (which we synthesize analogs of).
+    pub real_world: bool,
+}
+
+/// All fourteen Table-I rows.
+pub const TABLE1: &[DatasetSpec] = &[
+    DatasetSpec { name: "PK", vertices_m: 1.63, edges_m: 30.62, avg_degree: 18.75, directed: true, real_world: true },
+    DatasetSpec { name: "LJ", vertices_m: 4.85, edges_m: 68.99, avg_degree: 14.23, directed: true, real_world: true },
+    DatasetSpec { name: "OR", vertices_m: 3.07, edges_m: 234.37, avg_degree: 76.28, directed: false, real_world: true },
+    DatasetSpec { name: "HO", vertices_m: 1.14, edges_m: 113.89, avg_degree: 99.91, directed: false, real_world: true },
+    DatasetSpec { name: "RMAT18-8", vertices_m: 0.26, edges_m: 2.05, avg_degree: 7.81, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT18-16", vertices_m: 0.26, edges_m: 4.03, avg_degree: 15.39, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT18-32", vertices_m: 0.26, edges_m: 7.88, avg_degree: 30.06, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT18-64", vertices_m: 0.26, edges_m: 15.22, avg_degree: 58.07, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT22-16", vertices_m: 4.19, edges_m: 65.97, avg_degree: 15.73, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT22-32", vertices_m: 4.19, edges_m: 130.49, avg_degree: 31.11, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT22-64", vertices_m: 4.19, edges_m: 256.62, avg_degree: 61.18, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT23-16", vertices_m: 8.39, edges_m: 132.38, avg_degree: 15.78, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT23-32", vertices_m: 8.39, edges_m: 262.33, avg_degree: 31.27, directed: false, real_world: false },
+    DatasetSpec { name: "RMAT23-64", vertices_m: 8.39, edges_m: 517.34, avg_degree: 61.67, directed: false, real_world: false },
+];
+
+/// Look up a spec by name (case-insensitive).
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    TABLE1.iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+/// The four real-world rows.
+pub fn real_world() -> impl Iterator<Item = &'static DatasetSpec> {
+    TABLE1.iter().filter(|s| s.real_world)
+}
+
+/// The RMAT18-* rows (used by Fig 10's single-PC study).
+pub fn rmat18() -> impl Iterator<Item = &'static DatasetSpec> {
+    TABLE1.iter().filter(|s| s.name.starts_with("RMAT18"))
+}
+
+/// Materialize a Table-I dataset (or its fitted analog), shrunk by
+/// `scale_factor >= 1` (1 = full published size).
+///
+/// For RMAT rows the scale exponent and degree are parsed from the name.
+/// For real-world rows we fit a Kronecker generator: scale = ceil(log2
+/// |V|), with edge samples chosen so the symmetrized output lands near the
+/// published |E|; the analog keeps the published directedness.
+pub fn materialize(spec: &DatasetSpec, scale_factor: u32, seed: u64) -> Graph {
+    assert!(scale_factor >= 1);
+    let shrink = (scale_factor as f64).log2().round() as u32;
+    let g = if let Some(rest) = spec.name.strip_prefix("RMAT") {
+        let mut it = rest.split('-');
+        let scale: u32 = it.next().unwrap().parse().expect("rmat scale");
+        let degree: u64 = it.next().unwrap().parse().expect("rmat degree");
+        let eff_scale = scale.saturating_sub(shrink).max(8);
+        // Undirected Table-I RMAT rows: |E| counts directed edges after
+        // symmetrization, so sample |E|/2 per direction -> degree/2
+        // samples per vertex... The generator already mirrors, and the
+        // published Avg Degree column is |E|/|V| after dedup of the
+        // sampling process; sampling `degree/2` per vertex then mirroring
+        // lands close to the published row (validated in tests).
+        let samples_per_vertex = (degree + 1) / 2;
+        rmat(eff_scale, samples_per_vertex, RmatParams::default(), seed)
+    } else {
+        // Real-world analog: fit Kronecker to (|V|, |E|).
+        let v = spec.vertices_m * 1e6 / scale_factor as f64;
+        let e = spec.edges_m * 1e6 / scale_factor as f64;
+        let scale = (v.log2().ceil() as u32).max(8);
+        let n = 1u64 << scale;
+        // Directed rows: sample e edges directly (no mirroring).
+        // Undirected rows: mirror, so sample e/2.
+        let params = RmatParams {
+            symmetrize: !spec.directed,
+            ..Default::default()
+        };
+        let samples = if spec.directed { e } else { e / 2.0 };
+        let per_vertex = ((samples / n as f64).round() as u64).max(1);
+        let mut g = rmat(scale, per_vertex, params, seed);
+        g.name = format!("{}'", spec.name);
+        g
+    };
+    g
+}
+
+/// Materialize by name.
+pub fn by_name(name: &str, scale_factor: u32, seed: u64) -> Option<Graph> {
+    spec(name).map(|s| materialize(s, scale_factor, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_fourteen_rows() {
+        assert_eq!(TABLE1.len(), 14);
+        assert_eq!(real_world().count(), 4);
+        assert_eq!(rmat18().count(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(spec("pk").is_some());
+        assert!(spec("RMAT22-64").is_some());
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn rmat18_8_matches_published_shape() {
+        let s = spec("RMAT18-8").unwrap();
+        let g = materialize(s, 1, 42);
+        assert_eq!(g.num_vertices(), 1 << 18);
+        let avg = g.avg_degree();
+        // Published avg degree 7.81; allow generator variance.
+        assert!((avg - s.avg_degree).abs() / s.avg_degree < 0.25, "avg={avg}");
+    }
+
+    #[test]
+    fn scale_factor_shrinks_preserving_degree() {
+        let s = spec("RMAT18-16").unwrap();
+        let full = materialize(s, 1, 1);
+        let quarter = materialize(s, 4, 1);
+        assert_eq!(quarter.num_vertices(), full.num_vertices() / 4);
+        let (a, b) = (full.avg_degree(), quarter.avg_degree());
+        assert!((a - b).abs() / a < 0.3, "degree drifted {a} vs {b}");
+    }
+
+    #[test]
+    fn real_world_analog_matches_scale() {
+        let s = spec("PK").unwrap();
+        let g = materialize(s, 8, 1); // shrunk for test speed
+        let v = g.num_vertices() as f64;
+        let target = s.vertices_m * 1e6 / 8.0;
+        // scale rounds up to next power of two
+        assert!(v >= target && v <= target * 2.5, "v={v} target={target}");
+        assert!(g.name.ends_with('\''));
+        // Degree within 2x of published (analog fidelity).
+        assert!(
+            g.avg_degree() > s.avg_degree * 0.4 && g.avg_degree() < s.avg_degree * 2.0,
+            "avg={}",
+            g.avg_degree()
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! Graph generators.
+//!
+//! * [`rmat`] — the Graph500 Kronecker generator with the paper's
+//!   parameters (A=0.57, B=0.19, C=0.19, D=0.05), producing the RMAT
+//!   rows of Table I (`RMAT{scale}-{degree}`).
+//! * [`erdos_renyi`] — uniform random graphs (used by tests and as a
+//!   low-skew contrast workload).
+//! * [`chain`], [`star`], [`complete`] — tiny deterministic topologies for
+//!   unit tests and edge cases.
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, VertexId};
+use crate::util::rng::Xoshiro256;
+
+/// Graph500 Kronecker parameters (paper §VI-A).
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    /// Probability of the top-left quadrant.
+    pub a: f64,
+    /// Probability of the top-right quadrant.
+    pub b: f64,
+    /// Probability of the bottom-left quadrant.
+    pub c: f64,
+    /// Symmetrize the output (Table I RMAT graphs are undirected).
+    pub symmetrize: bool,
+    /// Randomly permute vertex IDs to kill generator locality, as the
+    /// Graph500 reference generator does.
+    pub permute: bool,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        Self {
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            symmetrize: true,
+            permute: true,
+        }
+    }
+}
+
+/// Generate an RMAT graph with `2^scale` vertices and `2^scale * degree`
+/// directed edge samples (before symmetrization/dedup), seeded.
+pub fn rmat(scale: u32, degree: u64, params: RmatParams, seed: u64) -> Graph {
+    let n: u64 = 1 << scale;
+    let m = n * degree;
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut builder = GraphBuilder::new(n as usize).symmetrize(params.symmetrize);
+
+    // Optional relabeling permutation.
+    let perm: Option<Vec<VertexId>> = if params.permute {
+        let mut p: Vec<VertexId> = (0..n as VertexId).collect();
+        rng.shuffle(&mut p);
+        Some(p)
+    } else {
+        None
+    };
+
+    let ab = params.a + params.b;
+    let a_norm = params.a / ab;
+    let c_norm = params.c / (1.0 - ab);
+    // Integer thresholds on 32-bit halves of one u64 draw per level:
+    // one RNG call (and no float math) per quadrant descent step.
+    let two32 = 4294967296.0;
+    let ab_t = (ab * two32) as u64;
+    let a_t = (a_norm * two32) as u64;
+    let c_t = (c_norm * two32) as u64;
+    for _ in 0..m {
+        let (mut src, mut dst) = (0u64, 0u64);
+        for bit in (0..scale).rev() {
+            // Noise-free quadrant descent (standard Kronecker sampling).
+            let r = rng.next_u64();
+            let r1 = r & 0xFFFF_FFFF;
+            let r2 = r >> 32;
+            let down = r1 >= ab_t; // bottom half
+            let right = if down { r2 >= c_t } else { r2 >= a_t };
+            if down {
+                src |= 1 << bit;
+            }
+            if right {
+                dst |= 1 << bit;
+            }
+        }
+        let (s, d) = match &perm {
+            Some(p) => (p[src as usize], p[dst as usize]),
+            None => (src as VertexId, dst as VertexId),
+        };
+        if s != d {
+            builder.add_edge(s, d);
+        }
+    }
+    let name = format!("RMAT{scale}-{degree}");
+    builder.dedup(false).build(name)
+}
+
+/// Convenience: Table-I style RMAT graph with default Graph500 parameters.
+pub fn rmat_graph500(scale: u32, degree: u64, seed: u64) -> Graph {
+    rmat(scale, degree, RmatParams::default(), seed)
+}
+
+/// Erdős–Rényi G(n, m): `m` uniform directed edges over `n` vertices.
+pub fn erdos_renyi(n: usize, m: u64, seed: u64) -> Graph {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut builder = GraphBuilder::new(n);
+    for _ in 0..m {
+        let s = rng.next_below(n as u64) as VertexId;
+        let d = rng.next_below(n as u64) as VertexId;
+        if s != d {
+            builder.add_edge(s, d);
+        }
+    }
+    builder.build(format!("ER-{n}-{m}"))
+}
+
+/// Directed chain 0 -> 1 -> ... -> n-1 (BFS worst case: diameter n-1).
+pub fn chain(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for i in 0..n.saturating_sub(1) {
+        b.add_edge(i as VertexId, (i + 1) as VertexId);
+    }
+    b.build(format!("chain-{n}"))
+}
+
+/// Star: vertex 0 connected to all others, both directions.
+pub fn star(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for i in 1..n {
+        b.add_edge(0, i as VertexId);
+        b.add_edge(i as VertexId, 0);
+    }
+    b.build(format!("star-{n}"))
+}
+
+/// Complete directed graph (no self loops). Small n only.
+pub fn complete(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                b.add_edge(i as VertexId, j as VertexId);
+            }
+        }
+    }
+    b.build(format!("K{n}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape_matches_request() {
+        let g = rmat_graph500(10, 8, 1);
+        assert_eq!(g.num_vertices(), 1024);
+        // Symmetrized: up to 2x the samples, minus loops.
+        assert!(g.num_edges() > 8 * 1024);
+        assert!(g.num_edges() <= 2 * 8 * 1024);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn rmat_is_deterministic_per_seed() {
+        let a = rmat_graph500(8, 4, 7);
+        let b = rmat_graph500(8, 4, 7);
+        assert_eq!(a.csr.edges, b.csr.edges);
+        let c = rmat_graph500(8, 4, 8);
+        assert_ne!(a.csr.edges, c.csr.edges);
+    }
+
+    #[test]
+    fn rmat_is_skewed_vs_er() {
+        // Power-law-ish: the max degree of RMAT should far exceed ER's.
+        let r = rmat(12, 8, RmatParams { symmetrize: false, permute: false, ..Default::default() }, 3);
+        let e = erdos_renyi(4096, 8 * 4096, 3);
+        let max_r = (0..r.num_vertices()).map(|v| r.csr.degree(v as VertexId)).max().unwrap();
+        let max_e = (0..e.num_vertices()).map(|v| e.csr.degree(v as VertexId)).max().unwrap();
+        assert!(max_r > 3 * max_e, "rmat max {max_r} vs er max {max_e}");
+    }
+
+    #[test]
+    fn chain_star_complete_shapes() {
+        let c = chain(5);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.out_neighbors(2), &[3]);
+        let s = star(4);
+        assert_eq!(s.num_edges(), 6);
+        let k = complete(4);
+        assert_eq!(k.num_edges(), 12);
+    }
+
+    #[test]
+    fn erdos_renyi_no_self_loops() {
+        let g = erdos_renyi(100, 1000, 5);
+        for v in 0..100u32 {
+            assert!(!g.out_neighbors(v).contains(&v));
+        }
+    }
+}

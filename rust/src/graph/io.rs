@@ -1,0 +1,161 @@
+//! Graph (de)serialization: simple text edge lists and a compact binary
+//! CSR cache so large generated datasets can be reused across experiment
+//! runs (`artifacts/graphs/*.csr`).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::builder::GraphBuilder;
+use super::csr::{Csr, Graph, VertexId};
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"SCBFSCSR";
+const VERSION: u32 = 1;
+
+/// Load a whitespace-separated `src dst` edge list ( `#`-comments
+/// allowed). `n` is inferred as max id + 1.
+pub fn read_edge_list(path: &Path, symmetrize: bool) -> Result<Graph> {
+    let f = BufReader::new(File::open(path)?);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_id: VertexId = 0;
+    for line in f.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let s: VertexId = it.next().ok_or_else(|| anyhow::anyhow!("bad line"))?.parse()?;
+        let d: VertexId = it.next().ok_or_else(|| anyhow::anyhow!("bad line"))?.parse()?;
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d));
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "edgelist".into());
+    let mut b = GraphBuilder::new(max_id as usize + 1).symmetrize(symmetrize);
+    b.extend(edges);
+    Ok(b.build(name))
+}
+
+/// Write a graph's CSR as a text edge list.
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path)?);
+    writeln!(f, "# {} |V|={} |E|={}", g.name, g.num_vertices(), g.num_edges())?;
+    for v in 0..g.num_vertices() as VertexId {
+        for &d in g.out_neighbors(v) {
+            writeln!(f, "{v} {d}")?;
+        }
+    }
+    Ok(())
+}
+
+fn write_u64s(f: &mut impl Write, xs: &[u64]) -> Result<()> {
+    for &x in xs {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u32s(f: &mut impl Write, xs: &[u32]) -> Result<()> {
+    for &x in xs {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Save a graph (CSR only; CSC is re-derived on load) to the binary cache.
+pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let name = g.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    f.write_all(&g.num_edges().to_le_bytes())?;
+    write_u64s(&mut f, &g.csr.offsets)?;
+    write_u32s(&mut f, &g.csr.edges)?;
+    Ok(())
+}
+
+fn read_exact_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_exact_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Load a graph from the binary cache.
+pub fn load_binary(path: &Path) -> Result<Graph> {
+    let mut f = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    let version = read_exact_u32(&mut f)?;
+    anyhow::ensure!(version == VERSION, "unsupported version {version}");
+    let name_len = read_exact_u32(&mut f)? as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let n = read_exact_u64(&mut f)? as usize;
+    let m = read_exact_u64(&mut f)? as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(read_exact_u64(&mut f)?);
+    }
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        edges.push(read_exact_u32(&mut f)?);
+    }
+    let g = Graph::from_csr(String::from_utf8(name)?, Csr { offsets, edges });
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn binary_roundtrip_preserves_graph() {
+        let g = generators::rmat_graph500(8, 4, 3);
+        let dir = std::env::temp_dir();
+        let path = dir.join("scalabfs_io_test.csr");
+        save_binary(&g, &path).unwrap();
+        let g2 = load_binary(&path).unwrap();
+        assert_eq!(g.name, g2.name);
+        assert_eq!(g.csr.offsets, g2.csr.offsets);
+        assert_eq!(g.csr.edges, g2.csr.edges);
+        assert_eq!(g.csc.edges.len(), g2.csc.edges.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = generators::chain(6);
+        let dir = std::env::temp_dir();
+        let path = dir.join("scalabfs_io_test.el");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = read_edge_list(&path, false).unwrap();
+        assert_eq!(g2.num_edges(), g.num_edges());
+        assert_eq!(g2.out_neighbors(0), g.out_neighbors(0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_binary_rejects_garbage() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("scalabfs_io_bad.csr");
+        std::fs::write(&path, b"not a graph").unwrap();
+        assert!(load_binary(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

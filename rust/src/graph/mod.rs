@@ -1,0 +1,20 @@
+//! Graph substrate: CSR/CSC storage, generators, partitioning, datasets.
+//!
+//! The paper (§II-C) stores each input graph in both CSR (outgoing /
+//! child neighbor lists, used by push mode) and CSC (incoming / parent
+//! neighbor lists, used by pull mode), and partitions the vertex ID space
+//! across PEs by `VID % Q` (Fig 2). This module reproduces exactly that
+//! data layout plus the Graph500 Kronecker generator used for the RMAT
+//! datasets of Table I.
+
+pub mod csr;
+pub mod builder;
+pub mod generators;
+pub mod partition;
+pub mod datasets;
+pub mod stats;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use csr::{Csr, Graph, VertexId};
+pub use partition::Partitioning;

@@ -1,0 +1,226 @@
+//! Vertex-interval partitioning (paper §IV-A "Satisfying G2", Fig 2).
+//!
+//! ScalaBFS divides the vertex ID space into `Q` non-overlapping intervals
+//! by hashing: PE `i` owns every vertex with `VID % Q == i` (modulo
+//! interleaving gives load balance on scale-free graphs). Neighbor lists
+//! of the vertices in one interval form one *subgraph*, which is placed
+//! contiguously in that PE's PG's HBM pseudo channel — a *horizontal*
+//! partition of the adjacency matrix that keeps neighbor lists intact
+//! (longer sequential HBM bursts).
+
+use super::csr::{Csr, Graph, VertexId};
+
+/// Assignment of vertices to PEs (and PEs to PGs/PCs).
+#[derive(Clone, Copy, Debug)]
+pub struct Partitioning {
+    /// Total number of PEs, `Q`. Must be a power of two in ScalaBFS
+    /// (paper §V: "N_pe must be power of 2 in our project").
+    pub num_pes: usize,
+    /// Number of processing groups == HBM pseudo channels in use.
+    pub num_pgs: usize,
+    /// `num_pes - 1`: `VID % Q` as a mask (Q is a power of two). The
+    /// modulo is the per-neighbor hot operation of the dispatcher.
+    pe_mask: usize,
+    /// log2(pes_per_pg): PG of a PE as a shift.
+    ppg_shift: u32,
+}
+
+impl Partitioning {
+    /// Create a partitioning; `num_pes` and `num_pgs` must be powers of
+    /// two (as in ScalaBFS) with `num_pgs <= num_pes`.
+    pub fn new(num_pes: usize, num_pgs: usize) -> Self {
+        assert!(num_pes > 0 && num_pgs > 0);
+        assert!(
+            num_pes.is_power_of_two() && num_pgs.is_power_of_two(),
+            "PE/PG counts must be powers of two ({num_pes}/{num_pgs})"
+        );
+        assert!(
+            num_pes % num_pgs == 0,
+            "PEs ({num_pes}) must divide evenly into PGs ({num_pgs})"
+        );
+        Self {
+            num_pes,
+            num_pgs,
+            pe_mask: num_pes - 1,
+            ppg_shift: (num_pes / num_pgs).trailing_zeros(),
+        }
+    }
+
+    /// PEs per PG.
+    #[inline]
+    pub fn pes_per_pg(&self) -> usize {
+        self.num_pes / self.num_pgs
+    }
+
+    /// Owning PE of a vertex: `VID % Q` (mask — Q is a power of two).
+    #[inline]
+    pub fn pe_of(&self, v: VertexId) -> usize {
+        (v as usize) & self.pe_mask
+    }
+
+    /// PG (and thus HBM PC) hosting a PE. PEs are assigned to PGs
+    /// round-robin-contiguously: PE i lives in PG i / pes_per_pg.
+    #[inline]
+    pub fn pg_of_pe(&self, pe: usize) -> usize {
+        pe >> self.ppg_shift
+    }
+
+    /// PG (HBM PC) owning a vertex's subgraph slice.
+    #[inline]
+    pub fn pg_of(&self, v: VertexId) -> usize {
+        self.pg_of_pe(self.pe_of(v))
+    }
+
+    /// Local index of a vertex within its PE's interval.
+    #[inline]
+    pub fn local_index(&self, v: VertexId) -> usize {
+        (v as usize) / self.num_pes
+    }
+
+    /// Number of vertices a PE owns out of `n` total.
+    #[inline]
+    pub fn interval_len(&self, pe: usize, n: usize) -> usize {
+        debug_assert!(pe < self.num_pes);
+        // ceil((n - pe) / Q) for pe < n else 0
+        if pe >= n {
+            0
+        } else {
+            (n - pe).div_ceil(self.num_pes)
+        }
+    }
+}
+
+/// One PE's subgraph: the CSR (and CSC) rows of the vertices it owns,
+/// reindexed by local position (Fig 2c).
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// Owning PE id.
+    pub pe: usize,
+    /// Outgoing lists of owned vertices (global neighbor IDs kept —
+    /// the dispatcher routes them to their owners).
+    pub csr: Csr,
+    /// Incoming lists of owned vertices.
+    pub csc: Csr,
+    /// Global IDs of the owned vertices, in local order
+    /// (`global_ids[local] = local * Q + pe`).
+    pub global_ids: Vec<VertexId>,
+}
+
+impl Subgraph {
+    /// Bytes of graph data this subgraph stores in its PC.
+    pub fn footprint_bytes(&self, sv_bytes: usize) -> u64 {
+        self.csr.footprint_bytes(sv_bytes) + self.csc.footprint_bytes(sv_bytes)
+    }
+}
+
+/// Partition a graph into per-PE subgraphs per the modulo scheme.
+pub fn partition(graph: &Graph, p: Partitioning) -> Vec<Subgraph> {
+    let n = graph.num_vertices();
+    (0..p.num_pes)
+        .map(|pe| {
+            let ids: Vec<VertexId> = (pe..n)
+                .step_by(p.num_pes)
+                .map(|v| v as VertexId)
+                .collect();
+            let out_adj: Vec<Vec<VertexId>> = ids
+                .iter()
+                .map(|&v| graph.out_neighbors(v).to_vec())
+                .collect();
+            let in_adj: Vec<Vec<VertexId>> = ids
+                .iter()
+                .map(|&v| graph.in_neighbors(v).to_vec())
+                .collect();
+            Subgraph {
+                pe,
+                csr: Csr::from_adj(&out_adj),
+                csc: Csr::from_adj(&in_adj),
+                global_ids: ids,
+            }
+        })
+        .collect()
+}
+
+/// Per-PG edge-byte totals — what each HBM PC stores (ScalaBFS placement,
+/// Fig 2c). Used for load-balance stats and the Fig 11 contrast with the
+/// unpartitioned baseline.
+pub fn pg_footprints(subgraphs: &[Subgraph], p: Partitioning, sv_bytes: usize) -> Vec<u64> {
+    let mut per_pg = vec![0u64; p.num_pgs];
+    for sg in subgraphs {
+        per_pg[p.pg_of_pe(sg.pe)] += sg.footprint_bytes(sv_bytes);
+    }
+    per_pg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn pe_assignment_is_modulo() {
+        let p = Partitioning::new(8, 4);
+        assert_eq!(p.pe_of(0), 0);
+        assert_eq!(p.pe_of(9), 1);
+        assert_eq!(p.pe_of(15), 7);
+        assert_eq!(p.pes_per_pg(), 2);
+        assert_eq!(p.pg_of_pe(0), 0);
+        assert_eq!(p.pg_of_pe(7), 3);
+    }
+
+    #[test]
+    fn interval_lengths_cover_all_vertices() {
+        let p = Partitioning::new(4, 2);
+        for n in [0usize, 1, 3, 4, 5, 17, 64] {
+            let total: usize = (0..4).map(|pe| p.interval_len(pe, n)).sum();
+            assert_eq!(total, n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn partition_preserves_edges_and_ids() {
+        let g = generators::rmat_graph500(8, 4, 11);
+        let p = Partitioning::new(4, 2);
+        let sgs = partition(&g, p);
+        let total: u64 = sgs.iter().map(|s| s.csr.num_edges()).sum();
+        assert_eq!(total, g.num_edges());
+        for sg in &sgs {
+            for (local, &gid) in sg.global_ids.iter().enumerate() {
+                assert_eq!(p.pe_of(gid), sg.pe);
+                assert_eq!(p.local_index(gid), local);
+                assert_eq!(sg.csr.neighbors(local as VertexId), g.out_neighbors(gid));
+                assert_eq!(sg.csc.neighbors(local as VertexId), g.in_neighbors(gid));
+            }
+        }
+    }
+
+    #[test]
+    fn modulo_balance_on_scale_free_graph() {
+        // Interleaved intervals should balance edges to within ~3x even on
+        // skewed graphs (the paper's load-balancing rationale).
+        let g = generators::rmat_graph500(12, 8, 5);
+        let p = Partitioning::new(8, 8);
+        let sgs = partition(&g, p);
+        let edges: Vec<u64> = sgs.iter().map(|s| s.csr.num_edges()).collect();
+        let max = *edges.iter().max().unwrap() as f64;
+        let min = *edges.iter().min().unwrap().max(&1) as f64;
+        assert!(max / min < 3.0, "imbalance {max}/{min}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn pes_must_divide_into_pgs() {
+        let _ = Partitioning::new(6, 4);
+    }
+
+    #[test]
+    fn pg_footprints_sum_to_total() {
+        let g = generators::rmat_graph500(8, 4, 2);
+        let p = Partitioning::new(8, 4);
+        let sgs = partition(&g, p);
+        let fps = pg_footprints(&sgs, p, 4);
+        assert_eq!(fps.len(), 4);
+        let total: u64 = fps.iter().sum();
+        let expect: u64 = sgs.iter().map(|s| s.footprint_bytes(4)).sum();
+        assert_eq!(total, expect);
+    }
+}

@@ -1,0 +1,100 @@
+//! Degree/structure statistics used by experiment reports and by the
+//! dataset-fidelity tests (Table I column checks, skew verification).
+
+use super::csr::{Graph, VertexId};
+
+/// Summary statistics of a graph.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    /// Dataset name.
+    pub name: String,
+    /// |V|.
+    pub vertices: usize,
+    /// |E| (directed).
+    pub edges: u64,
+    /// Average out-degree.
+    pub avg_degree: f64,
+    /// Maximum out-degree.
+    pub max_degree: u64,
+    /// Fraction of vertices with zero out-degree.
+    pub zero_degree_frac: f64,
+    /// Gini coefficient of the out-degree distribution (skew proxy:
+    /// ~0.3 for ER, >0.6 for scale-free graphs).
+    pub degree_gini: f64,
+}
+
+/// Compute stats over the out-degree distribution.
+pub fn stats(g: &Graph) -> GraphStats {
+    let n = g.num_vertices();
+    let mut degrees: Vec<u64> = (0..n).map(|v| g.csr.degree(v as VertexId)).collect();
+    let max_degree = degrees.iter().copied().max().unwrap_or(0);
+    let zeros = degrees.iter().filter(|&&d| d == 0).count();
+    degrees.sort_unstable();
+    // Gini = (2*sum(i*x_i)/(n*sum(x)) - (n+1)/n), i is 1-based over sorted x.
+    let total: u64 = degrees.iter().sum();
+    let gini = if total == 0 || n == 0 {
+        0.0
+    } else {
+        let weighted: f64 = degrees
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (i as f64 + 1.0) * d as f64)
+            .sum();
+        (2.0 * weighted) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+    };
+    GraphStats {
+        name: g.name.clone(),
+        vertices: n,
+        edges: g.num_edges(),
+        avg_degree: g.avg_degree(),
+        max_degree,
+        zero_degree_frac: zeros as f64 / n.max(1) as f64,
+        degree_gini: gini,
+    }
+}
+
+/// Sum of out-degrees of a vertex subset — the Graph500 "traversed edges"
+/// numerator for a completed BFS (each connected vertex's list counted
+/// once).
+pub fn traversed_edges(g: &Graph, visited: impl Iterator<Item = VertexId>) -> u64 {
+    visited.map(|v| g.csr.degree(v)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_on_known_graph() {
+        let g = generators::star(5); // 0<->{1,2,3,4}
+        let s = stats(&g);
+        assert_eq!(s.vertices, 5);
+        assert_eq!(s.edges, 8);
+        assert_eq!(s.max_degree, 4);
+        assert_eq!(s.zero_degree_frac, 0.0);
+        assert!(s.degree_gini > 0.3); // star is maximally skewed
+    }
+
+    #[test]
+    fn gini_detects_skew_difference() {
+        let er = generators::erdos_renyi(2048, 8 * 2048, 9);
+        let rm = generators::rmat_graph500(11, 8, 9);
+        let (se, sr) = (stats(&er), stats(&rm));
+        assert!(
+            sr.degree_gini > se.degree_gini + 0.15,
+            "rmat gini {} vs er {}",
+            sr.degree_gini,
+            se.degree_gini
+        );
+    }
+
+    #[test]
+    fn traversed_edges_counts_subset() {
+        let g = generators::chain(4); // 0->1->2->3
+        let t = traversed_edges(&g, [0u32, 1].into_iter());
+        assert_eq!(t, 2);
+        let all = traversed_edges(&g, (0..4u32).into_iter());
+        assert_eq!(all, 3);
+    }
+}

@@ -1,0 +1,101 @@
+//! AXI read-command accounting (paper §IV-D HBM Reader).
+//!
+//! The HBM reader converts neighbor-list requests into AXI commands: one
+//! burst for the offset pair, then bursts for the list itself. This
+//! module models command counts and burst beats so the cycle simulator
+//! can charge issue slots and the throughput simulator can align bytes.
+
+/// AXI bus parameters for one PG's port.
+#[derive(Clone, Copy, Debug)]
+pub struct AxiConfig {
+    /// Data width in bytes (DW of Eq 1).
+    pub data_width: u64,
+    /// Maximum burst length in beats (Xilinx HBM AXI: up to 64 beats
+    /// used by Shuhai's configuration).
+    pub max_burst: u64,
+    /// Outstanding read capability (requests in flight).
+    pub outstanding: usize,
+}
+
+impl AxiConfig {
+    /// Config from a PE count per Eq 1 (`DW = 2 * n_pe * S_v`).
+    pub fn for_pes(pes_per_pg: usize, sv_bytes: u64) -> Self {
+        Self {
+            data_width: 2 * pes_per_pg as u64 * sv_bytes,
+            max_burst: 64,
+            outstanding: 32,
+        }
+    }
+
+    /// Beats needed to move `bytes` (ceil by data width).
+    pub fn beats(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.data_width)
+    }
+
+    /// Number of AXI commands to move `bytes` (bursts capped at
+    /// `max_burst` beats).
+    pub fn commands(&self, bytes: u64) -> u64 {
+        self.beats(bytes).div_ceil(self.max_burst).max(u64::from(bytes > 0))
+    }
+
+    /// Bytes actually transferred for a `bytes` request (beat-aligned).
+    pub fn aligned_bytes(&self, bytes: u64) -> u64 {
+        self.beats(bytes) * self.data_width
+    }
+}
+
+/// A read request issued by `Read CSR`/`Read CSC` (P1) to the HBM reader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadRequest {
+    /// Kind of array being read.
+    pub kind: ReadKind,
+    /// Bytes requested (pre-alignment).
+    pub bytes: u64,
+    /// Issuing PE (local index within the PG).
+    pub pe: usize,
+}
+
+/// Which array a request touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadKind {
+    /// Offset-array fetch (per active vertex; paper assumes one DW).
+    Offset,
+    /// Edge-array (neighbor list) fetch.
+    Edges,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_data_width() {
+        let a = AxiConfig::for_pes(2, 4);
+        assert_eq!(a.data_width, 16);
+        let b = AxiConfig::for_pes(16, 4);
+        assert_eq!(b.data_width, 128);
+    }
+
+    #[test]
+    fn beats_and_alignment() {
+        let a = AxiConfig::for_pes(2, 4); // 16B wide
+        assert_eq!(a.beats(0), 0);
+        assert_eq!(a.beats(1), 1);
+        assert_eq!(a.beats(16), 1);
+        assert_eq!(a.beats(17), 2);
+        assert_eq!(a.aligned_bytes(17), 32);
+    }
+
+    #[test]
+    fn commands_respect_max_burst() {
+        let a = AxiConfig {
+            data_width: 16,
+            max_burst: 4,
+            outstanding: 8,
+        };
+        assert_eq!(a.commands(0), 0);
+        assert_eq!(a.commands(16), 1);
+        assert_eq!(a.commands(64), 1); // 4 beats
+        assert_eq!(a.commands(65), 2); // 5 beats -> 2 bursts
+    }
+}

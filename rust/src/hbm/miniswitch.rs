@@ -1,0 +1,139 @@
+//! Structural model of the U280's built-in switch network (Fig 1):
+//! 8 mini-switches of 4×4, each serving two memory channels (4 AXI
+//! ports, 4 PCs), with a lateral bus between adjacent mini-switches for
+//! global addressing.
+//!
+//! The analytic [`super::switch::SwitchModel`] captures the *throughput*
+//! penalty; this module captures the *topology* — hop counts, lateral-
+//! bus contention, and per-mini-switch port loads — used by the Fig 11
+//! baseline analysis and the failure-injection experiments.
+
+/// U280 switch-network topology constants.
+pub const NUM_MINI_SWITCHES: usize = 8;
+/// AXI ports (and PCs) per mini-switch.
+pub const PORTS_PER_SWITCH: usize = 4;
+
+/// The mini-switch network.
+#[derive(Clone, Debug)]
+pub struct MiniSwitchNetwork {
+    /// Lateral-bus bandwidth between adjacent switches, relative to one
+    /// port's bandwidth (the shared bus is the global-addressing
+    /// bottleneck).
+    pub lateral_capacity: f64,
+}
+
+impl Default for MiniSwitchNetwork {
+    fn default() -> Self {
+        Self {
+            lateral_capacity: 1.0,
+        }
+    }
+}
+
+impl MiniSwitchNetwork {
+    /// Mini-switch serving an AXI port / PC index (0..32).
+    pub fn switch_of(&self, pc: usize) -> usize {
+        assert!(pc < NUM_MINI_SWITCHES * PORTS_PER_SWITCH);
+        pc / PORTS_PER_SWITCH
+    }
+
+    /// Lateral hops between the switches of two PCs (linear bus).
+    pub fn hops(&self, from_pc: usize, to_pc: usize) -> usize {
+        let a = self.switch_of(from_pc);
+        let b = self.switch_of(to_pc);
+        a.abs_diff(b)
+    }
+
+    /// Whether an access is switch-local (no lateral traversal).
+    pub fn is_local(&self, from_pc: usize, to_pc: usize) -> bool {
+        self.hops(from_pc, to_pc) == 0
+    }
+
+    /// Aggregate lateral-bus load for an access matrix `traffic[i][j]`
+    /// (bytes from AXI port i to PC j): each byte crossing k switches
+    /// loads k bus segments. Returns per-segment loads (len 7).
+    pub fn segment_loads(&self, traffic: &[Vec<u64>]) -> Vec<u64> {
+        let mut seg = vec![0u64; NUM_MINI_SWITCHES - 1];
+        for (i, row) in traffic.iter().enumerate() {
+            for (j, &bytes) in row.iter().enumerate() {
+                if bytes == 0 {
+                    continue;
+                }
+                let (a, b) = (self.switch_of(i), self.switch_of(j));
+                let (lo, hi) = (a.min(b), a.max(b));
+                for s in seg.iter_mut().take(hi).skip(lo) {
+                    *s += bytes;
+                }
+            }
+        }
+        seg
+    }
+
+    /// Effective slowdown factor of a uniform all-to-all access pattern
+    /// over `active_pcs` PCs: the busiest lateral segment's load divided
+    /// by what a local pattern would put on a port. A structural
+    /// first-principles counterpart of the Fig 3 measurement.
+    pub fn all_to_all_slowdown(&self, active_pcs: usize) -> f64 {
+        assert!(active_pcs >= 1 && active_pcs <= 32);
+        let per_pair = 1u64; // unit bytes between every (port, pc) pair
+        let traffic: Vec<Vec<u64>> = (0..active_pcs)
+            .map(|_| vec![per_pair; active_pcs])
+            .collect();
+        let seg = self.segment_loads(&traffic);
+        let max_seg = seg.iter().copied().max().unwrap_or(0) as f64;
+        let local_per_port = active_pcs as f64; // bytes a port sinks locally
+        1.0 + max_seg / (self.lateral_capacity * local_per_port)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switch_assignment_groups_of_four() {
+        let n = MiniSwitchNetwork::default();
+        assert_eq!(n.switch_of(0), 0);
+        assert_eq!(n.switch_of(3), 0);
+        assert_eq!(n.switch_of(4), 1);
+        assert_eq!(n.switch_of(31), 7);
+    }
+
+    #[test]
+    fn hops_linear_in_switch_distance() {
+        let n = MiniSwitchNetwork::default();
+        assert_eq!(n.hops(0, 3), 0);
+        assert!(n.is_local(1, 2));
+        assert_eq!(n.hops(0, 4), 1);
+        assert_eq!(n.hops(0, 31), 7);
+        assert_eq!(n.hops(31, 0), 7);
+    }
+
+    #[test]
+    fn segment_loads_count_crossings() {
+        let n = MiniSwitchNetwork::default();
+        // 100 bytes from PC0's port to PC31: crosses all 7 segments.
+        let mut traffic = vec![vec![0u64; 32]; 32];
+        traffic[0][31] = 100;
+        let seg = n.segment_loads(&traffic);
+        assert_eq!(seg, vec![100; 7]);
+        // Local access loads nothing.
+        let mut traffic2 = vec![vec![0u64; 32]; 32];
+        traffic2[5][6] = 50;
+        assert_eq!(n.segment_loads(&traffic2), vec![0; 7]);
+    }
+
+    #[test]
+    fn all_to_all_slowdown_grows_with_span() {
+        let n = MiniSwitchNetwork::default();
+        let s4 = n.all_to_all_slowdown(4); // within one switch
+        let s8 = n.all_to_all_slowdown(8);
+        let s32 = n.all_to_all_slowdown(32);
+        assert!((s4 - 1.0).abs() < 1e-9, "local should not slow: {s4}");
+        assert!(s8 > s4);
+        assert!(s32 > s8);
+        // Crossing all 8 switches is an order-of-magnitude class event,
+        // consistent with Fig 3's >20x endpoint.
+        assert!(s32 > 8.0, "s32={s32}");
+    }
+}

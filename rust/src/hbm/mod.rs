@@ -1,0 +1,28 @@
+//! U280 HBM subsystem model (paper §II-B, Fig 1; Shuhai measurements).
+//!
+//! Two HBM2 stacks exposed as 32 pseudo channels (PCs) of 2 Gbit each,
+//! 16 memory channels, and a built-in switch network of 8 4x4
+//! mini-switches giving every AXI port global addressing — at a steep
+//! throughput cost when accesses cross PCs (Fig 3). ScalaBFS's whole
+//! placement strategy exists to avoid that crossing.
+
+pub mod pc;
+pub mod switch;
+pub mod miniswitch;
+pub mod axi;
+pub mod reader;
+
+pub use pc::{HbmConfig, PseudoChannel};
+pub use switch::SwitchModel;
+
+/// Number of HBM pseudo channels on the Alveo U280.
+pub const U280_NUM_PCS: usize = 32;
+
+/// Per-PC storage capacity in bytes (2 Gbit = 256 MiB).
+pub const U280_PC_CAPACITY: u64 = 2 * 1024 * 1024 * 1024 / 8;
+
+/// Max measured per-PC bandwidth (Shuhai [11]), bytes/second.
+pub const U280_PC_BW_MAX: f64 = 13.27e9;
+
+/// Aggregated theoretical bandwidth of the U280 HBM subsystem (B/s).
+pub const U280_AGG_BW: f64 = 460e9;

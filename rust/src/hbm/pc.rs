@@ -1,0 +1,136 @@
+//! Pseudo-channel bandwidth/latency model.
+//!
+//! Each PC is modeled with the quantities the paper's Section-V
+//! performance model uses: a physical bandwidth ceiling `BW_MAX`
+//! (13.27 GB/s per Shuhai), the AXI-width-derived demand bandwidth
+//! `DW * F` (Eq 2), and a random-access efficiency factor for short
+//! bursts (DRAM row misses dominate BFS's irregular reads — §VI-E reason
+//! 1 why achieved bandwidth < theoretical).
+
+use crate::util::units::MHZ;
+
+/// Static configuration of one HBM pseudo channel.
+#[derive(Clone, Copy, Debug)]
+pub struct HbmConfig {
+    /// Physical per-PC bandwidth ceiling, bytes/s (Shuhai: 13.27 GB/s).
+    pub bw_max: f64,
+    /// Storage capacity in bytes (U280: 256 MiB).
+    pub capacity: u64,
+    /// Read latency in accelerator-clock cycles (HBM is higher-latency
+    /// than DDR4; only matters for pipeline fill, BFS is throughput-bound).
+    pub latency_cycles: u64,
+    /// Random-access efficiency: fraction of `bw_max` achievable when
+    /// bursts are short/irregular. Calibrated so a 64-PE run on U280
+    /// reproduces the paper's ~46 GB/s aggregate (§VI-E).
+    pub random_efficiency: f64,
+}
+
+impl Default for HbmConfig {
+    fn default() -> Self {
+        Self {
+            bw_max: super::U280_PC_BW_MAX,
+            capacity: super::U280_PC_CAPACITY,
+            latency_cycles: 64,
+            random_efficiency: 1.0,
+        }
+    }
+}
+
+/// One pseudo channel: tracks stored bytes and converts byte demands into
+/// service cycles at a given accelerator frequency.
+#[derive(Clone, Debug)]
+pub struct PseudoChannel {
+    /// Configuration.
+    pub cfg: HbmConfig,
+    /// Bytes of graph data placed on this PC.
+    pub stored_bytes: u64,
+}
+
+impl PseudoChannel {
+    /// New PC with the given config.
+    pub fn new(cfg: HbmConfig) -> Self {
+        Self {
+            cfg,
+            stored_bytes: 0,
+        }
+    }
+
+    /// Place `bytes` of graph data; errors if capacity is exceeded
+    /// (paper §VI-D: a single PC's 2 Gbit limits the graph size).
+    pub fn store(&mut self, bytes: u64) -> Result<(), String> {
+        if self.stored_bytes + bytes > self.cfg.capacity {
+            return Err(format!(
+                "PC overflow: {} + {} > {}",
+                self.stored_bytes, bytes, self.cfg.capacity
+            ));
+        }
+        self.stored_bytes += bytes;
+        Ok(())
+    }
+
+    /// Effective bandwidth (bytes/s) the accelerator can pull from this PC
+    /// given an AXI data width of `dw_bytes` and core frequency `f_mhz`
+    /// (Eq 2: min(DW*F, BW_MAX)) degraded by the random-access factor.
+    pub fn effective_bw(&self, dw_bytes: u64, f_mhz: f64) -> f64 {
+        let demand = dw_bytes as f64 * f_mhz * MHZ;
+        demand.min(self.cfg.bw_max * self.cfg.random_efficiency)
+    }
+
+    /// Cycles (at `f_mhz`) to service `bytes` of reads through a
+    /// `dw_bytes`-wide AXI port.
+    pub fn service_cycles(&self, bytes: u64, dw_bytes: u64, f_mhz: f64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let bw = self.effective_bw(dw_bytes, f_mhz);
+        let seconds = bytes as f64 / bw;
+        (seconds * f_mhz * MHZ).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_respects_capacity() {
+        let mut pc = PseudoChannel::new(HbmConfig {
+            capacity: 100,
+            ..Default::default()
+        });
+        assert!(pc.store(60).is_ok());
+        assert!(pc.store(41).is_err());
+        assert!(pc.store(40).is_ok());
+        assert_eq!(pc.stored_bytes, 100);
+    }
+
+    #[test]
+    fn effective_bw_caps_at_bw_max() {
+        let pc = PseudoChannel::new(HbmConfig::default());
+        // Narrow bus at 90 MHz: demand-limited. DW=16B -> 1.44 GB/s.
+        let bw = pc.effective_bw(16, 90.0);
+        assert!((bw - 1.44e9).abs() < 1e6, "{bw}");
+        // Very wide bus: capped at BW_MAX.
+        let bw2 = pc.effective_bw(4096, 450.0);
+        assert!((bw2 - 13.27e9).abs() < 1e6, "{bw2}");
+    }
+
+    #[test]
+    fn service_cycles_inverse_of_bandwidth() {
+        let pc = PseudoChannel::new(HbmConfig::default());
+        // Demand-limited: DW bytes move per cycle.
+        let c = pc.service_cycles(1600, 16, 90.0);
+        assert_eq!(c, 100);
+        assert_eq!(pc.service_cycles(0, 16, 90.0), 0);
+    }
+
+    #[test]
+    fn random_efficiency_scales_ceiling() {
+        let pc = PseudoChannel::new(HbmConfig {
+            random_efficiency: 0.5,
+            ..Default::default()
+        });
+        let bw = pc.effective_bw(4096, 450.0);
+        assert!((bw - 13.27e9 * 0.5).abs() < 1e6);
+    }
+}

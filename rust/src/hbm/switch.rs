@@ -1,0 +1,92 @@
+//! Built-in switch-network crossing model (paper Fig 3).
+//!
+//! Shuhai-style measurement on the U280 shows that when an AXI channel's
+//! reads spread across 2^k neighboring PCs, its achievable throughput
+//! collapses — from 13.27 GB/s at k=0 to under 0.5 GB/s at k=5 (a >20x
+//! drop). The paper publishes the two endpoints; the intermediate points
+//! follow a contention-queueing shape which we model as
+//!
+//! `BW(k) = BW_MAX / (1 + alpha * (2^k - 1))`
+//!
+//! with `alpha` calibrated so BW(5) matches the <0.5 GB/s observation.
+//! This model only has to be right where the paper uses it: the Fig 11
+//! baseline (unpartitioned placement ⇒ global crossing) versus ScalaBFS
+//! (locality ⇒ k=0).
+
+/// Crossing-penalty model of the U280's mini-switch network.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchModel {
+    /// Per-PC bandwidth with no crossing (bytes/s).
+    pub bw_max: f64,
+    /// Contention coefficient; calibrated to Fig 3's k=5 endpoint.
+    pub alpha: f64,
+}
+
+impl Default for SwitchModel {
+    fn default() -> Self {
+        // alpha such that BW(32 channels) = 13.27/(1+alpha*31) ~ 0.49 GB/s
+        Self {
+            bw_max: super::U280_PC_BW_MAX,
+            alpha: 0.84,
+        }
+    }
+}
+
+impl SwitchModel {
+    /// Throughput (bytes/s) of one AXI channel whose accesses are spread
+    /// uniformly over `channels_crossed` PCs (1 = local only).
+    pub fn channel_bw(&self, channels_crossed: usize) -> f64 {
+        assert!(channels_crossed >= 1);
+        self.bw_max / (1.0 + self.alpha * (channels_crossed as f64 - 1.0))
+    }
+
+    /// The Fig 3 series: per-AXI-channel throughput for k = 0..=5
+    /// (crossing 2^k channels).
+    pub fn fig3_series(&self) -> Vec<(usize, f64)> {
+        (0..=5u32)
+            .map(|k| {
+                let c = 1usize << k;
+                (c, self.channel_bw(c))
+            })
+            .collect()
+    }
+
+    /// Derating factor in [0,1] applied to a PC's bandwidth when its
+    /// reader must reach `channels_crossed` PCs.
+    pub fn derate(&self, channels_crossed: usize) -> f64 {
+        self.channel_bw(channels_crossed) / self.bw_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_match_paper() {
+        let m = SwitchModel::default();
+        // k=0: full 13.27 GB/s.
+        assert!((m.channel_bw(1) - 13.27e9).abs() < 1e6);
+        // k=5: < 0.5 GB/s, > 20x worse than local.
+        let far = m.channel_bw(32);
+        assert!(far < 0.5e9, "far={far}");
+        assert!(m.channel_bw(1) / far > 20.0);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_crossing() {
+        let m = SwitchModel::default();
+        let series = m.fig3_series();
+        assert_eq!(series.len(), 6);
+        for w in series.windows(2) {
+            assert!(w[0].1 > w[1].1, "not monotone: {series:?}");
+        }
+    }
+
+    #[test]
+    fn derate_is_normalized() {
+        let m = SwitchModel::default();
+        assert!((m.derate(1) - 1.0).abs() < 1e-12);
+        assert!(m.derate(32) < 0.05);
+    }
+}

@@ -1,0 +1,36 @@
+//! # ScalaBFS reproduction
+//!
+//! A software reproduction of *ScalaBFS: A Scalable BFS Accelerator on
+//! HBM-Enhanced FPGAs* (cs.AR 2021) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: graph substrate, the
+//!   paper's Algorithm-2 bitmap BFS engines, the U280 HBM/PE/crossbar
+//!   timing simulators, the Section-V analytic models, and the experiment
+//!   drivers that regenerate every table and figure of the paper.
+//! * **Layer 2 (`python/compile/model.py`)** — the functional BFS step as
+//!   a JAX computation, lowered AOT to HLO text.
+//! * **Layer 1 (`python/compile/kernels/`)** — the frontier-expansion hot
+//!   spot as a Pallas kernel (MXU-style blocked boolean mat-vec).
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT and
+//! cross-validates the XLA functional path against the bit-exact Rust
+//! engines. Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod util;
+pub mod graph;
+pub mod bfs;
+pub mod sched;
+pub mod hbm;
+pub mod pe;
+pub mod dispatcher;
+pub mod sim;
+pub mod model;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,201 @@
+//! ScalaBFS reproduction CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands regenerate each paper table/figure, run datasets end to
+//! end, and exercise the XLA runtime path. Arg parsing is hand-rolled
+//! (the offline vendor set has no `clap`).
+
+use scalabfs::coordinator::driver::{self, DriverOptions};
+use scalabfs::coordinator::experiments::{self, ExpOptions};
+use scalabfs::graph::datasets;
+use scalabfs::runtime::XlaBfsEngine;
+use scalabfs::sim::config::SimConfig;
+
+const USAGE: &str = "scalabfs - ScalaBFS (HBM-FPGA BFS accelerator) reproduction
+
+USAGE: scalabfs <command> [--key=value ...]
+
+Experiment commands (regenerate paper tables/figures):
+  fig3            switch-network crossing throughput
+  fig7            Section-V theoretical performance model
+  fig8            push vs pull vs hybrid GTEPS
+  fig9            scaling with HBM PCs            [--graphs=PK,LJ,...]
+  fig10           scaling with PEs on a single PC
+  fig11           aggregated bandwidth vs unpartitioned baseline
+  fig12           single-DRAM-channel comparison
+  table1          dataset registry vs materialized analogs
+  table2          resource model vs published utilization
+  table3          Gunrock/V100 vs ScalaBFS/U280
+  edgecentric     edge-centric baseline context
+  ablation        pull early-exit reader ablation (extension)
+  straggler       degraded-PC straggler study (extension)
+  projection      future-card scaling projection (paper §VII)
+  sweep           config grid sweep --dataset=NAME
+
+System commands:
+  run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid]
+  datasets        list Table-I datasets
+  xla             run BFS through the AOT XLA artifact --dataset=RMAT18-8 [--scale=...]
+  all             run every experiment (paper evaluation sweep)
+
+Common options:
+  --scale=N       dataset shrink factor (default 8; 1 = published size)
+  --roots=N       BFS roots per dataset (default 2)
+  --seed=N        RNG seed (default 42)
+";
+
+fn parse_kv(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut m = std::collections::HashMap::new();
+    for a in args {
+        if let Some(rest) = a.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                m.insert(k.to_string(), v.to_string());
+            } else {
+                m.insert(rest.to_string(), "true".to_string());
+            }
+        }
+    }
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let kv = parse_kv(&args[1..]);
+    let get_u32 = |k: &str, d: u32| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let get_usize = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let get_u64 = |k: &str, d: u64| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+
+    let opts = ExpOptions {
+        scale_factor: get_u32("scale", 8),
+        num_roots: get_usize("roots", 2),
+        seed: get_u64("seed", 42),
+    };
+
+    match cmd.as_str() {
+        "fig3" => println!("{}", experiments::fig3().render()),
+        "fig7" => println!("{}", experiments::fig7().render()),
+        "fig8" => println!("{}", experiments::fig8(&opts)?.render()),
+        "fig9" => {
+            let graphs_owned: Vec<String> = kv
+                .get("graphs")
+                .map(|s| s.split(',').map(str::to_string).collect())
+                .unwrap_or_else(|| vec!["RMAT18-16".into(), "RMAT22-16".into(), "LJ".into()]);
+            let graphs: Vec<&str> = graphs_owned.iter().map(String::as_str).collect();
+            println!("{}", experiments::fig9(&opts, &graphs)?.render());
+        }
+        "fig10" => println!("{}", experiments::fig10(&opts)?.render()),
+        "fig11" => println!("{}", experiments::fig11(&opts)?.render()),
+        "fig12" => println!("{}", experiments::fig12(&opts)?.render()),
+        "table1" => println!("{}", experiments::table1(&opts)?.render()),
+        "table2" => println!("{}", experiments::table2().render()),
+        "table3" => println!("{}", experiments::table3(&opts)?.render()),
+        "edgecentric" => println!("{}", experiments::edge_centric_context(&opts)?.render()),
+        "ablation" => println!("{}", experiments::early_exit_ablation(&opts)?.render()),
+        "straggler" => println!("{}", experiments::straggler(&opts)?.render()),
+        "projection" => println!("{}", experiments::projection().render()),
+        "sweep" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-16".into());
+            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let spec = scalabfs::coordinator::sweep::SweepSpec::default();
+            let points = scalabfs::coordinator::sweep::sweep(&graph, &spec)?;
+            println!("sweep on {} ({} points):", graph.name, points.len());
+            for p in &points {
+                println!(
+                    "  {} PC x {} PE [{}] {:?}: {:.2} GTEPS, {:.1} GB/s",
+                    p.pcs,
+                    p.pes,
+                    p.policy,
+                    p.placement,
+                    p.gteps,
+                    p.aggregate_bw / 1e9
+                );
+            }
+            if let Some(b) = scalabfs::coordinator::sweep::best(&points) {
+                println!("best: {} PC x {} PE [{}] = {:.2} GTEPS", b.pcs, b.pes, b.policy, b.gteps);
+            }
+        }
+        "datasets" => println!("{}", experiments::datasets_table().render()),
+        "run" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-16".into());
+            let cfg = SimConfig::u280(get_usize("pcs", 32), get_usize("pes", 64));
+            let dopts = DriverOptions {
+                scale_factor: opts.scale_factor,
+                num_roots: opts.num_roots,
+                seed: opts.seed,
+                policy: kv.get("policy").cloned().unwrap_or_else(|| "hybrid".into()),
+            };
+            let run = driver::run_dataset(&dataset, &cfg, &dopts)?;
+            println!(
+                "{}: |V|={} |E|={} roots={} -> {:.3} GTEPS (harmonic mean), {:.2} GB/s agg",
+                run.name,
+                run.vertices,
+                run.edges,
+                run.per_root.len(),
+                run.gteps,
+                run.aggregate_bw / 1e9
+            );
+            for r in &run.per_root {
+                println!("  {}", r.summary());
+            }
+        }
+        "xla" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-8".into());
+            // The XLA dense path needs a small graph: shrink hard.
+            let scale = get_u32("scale", 512);
+            let graph = datasets::by_name(&dataset, scale, opts.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let mut engine = XlaBfsEngine::new()?;
+            let root = scalabfs::bfs::reference::sample_roots(&graph, 1, opts.seed)[0];
+            let res = engine.run(&graph, root)?;
+            let reference = scalabfs::bfs::reference::bfs(&graph, root);
+            let ok = res.levels == reference.levels;
+            println!(
+                "xla bfs on {} (|V|={}): {} iterations, {} reached, exec {:.3} ms, levels {} reference",
+                graph.name,
+                graph.num_vertices(),
+                res.iterations,
+                res.reached,
+                res.execute_seconds * 1e3,
+                if ok { "MATCH" } else { "MISMATCH vs" }
+            );
+            anyhow::ensure!(ok, "XLA levels diverge from reference");
+        }
+        "all" => {
+            println!("== Fig 3 ==\n{}", experiments::fig3().render());
+            println!("== Fig 7 ==\n{}", experiments::fig7().render());
+            println!("== Table I ==\n{}", experiments::table1(&opts)?.render());
+            println!("== Table II ==\n{}", experiments::table2().render());
+            println!("== Fig 8 ==\n{}", experiments::fig8(&opts)?.render());
+            let graphs = ["RMAT18-16", "RMAT22-16", "LJ"];
+            println!("== Fig 9 ==\n{}", experiments::fig9(&opts, &graphs)?.render());
+            println!("== Fig 10 ==\n{}", experiments::fig10(&opts)?.render());
+            println!("== Fig 11 ==\n{}", experiments::fig11(&opts)?.render());
+            println!("== Fig 12 ==\n{}", experiments::fig12(&opts)?.render());
+            println!("== Table III ==\n{}", experiments::table3(&opts)?.render());
+            println!(
+                "== Edge-centric context ==\n{}",
+                experiments::edge_centric_context(&opts)?.render()
+            );
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

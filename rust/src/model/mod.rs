@@ -1,0 +1,14 @@
+//! Analytic models from the paper.
+//!
+//! * [`perf`] — the Section-V performance model (Equations 1–6, Fig 7).
+//! * [`resource`] — the LUT/FF/BRAM cost model behind Table II and the
+//!   Eq-7 maximum-PE bound.
+//! * [`gpu`] — the Gunrock-on-V100 comparator of Table III.
+//! * [`published`] — published comparator numbers used by Fig 12.
+
+pub mod perf;
+pub mod resource;
+pub mod gpu;
+pub mod published;
+pub mod energy;
+pub mod scaling;

@@ -1,0 +1,176 @@
+//! Section-V performance model: Equations 1–6 and the Fig 7 study.
+//!
+//! Given `N_pe` PEs on one PC, the AXI width is `DW = 2·N_pe·S_v` (Eq 1),
+//! the PC delivers `min(DW·F, BW_MAX)` (Eq 2), of which a fraction
+//! `P_nl = Len_nl·S_v / (DW + Len_nl·S_v)` goes to neighbor lists (Eq 3–4;
+//! the rest is offset reads). Performance of a PG in TEPS is `BW_nl / S_v`
+//! (Eq 5), and the accelerator scales linearly in PCs (Eq 6). The model
+//! peaks at a break-point PE count and then *degrades* — the paper's
+//! counter-intuitive observation 2 (§V).
+
+/// Inputs of the Section-V model.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfModel {
+    /// Vertex size in bytes (`S_v`; paper uses 32 bits).
+    pub sv_bytes: f64,
+    /// PE/core frequency in Hz (`F`; Fig 7 uses 100 MHz).
+    pub f_hz: f64,
+    /// Physical per-PC bandwidth (`BW_MAX`, bytes/s; Shuhai: 13.27 GB/s).
+    pub bw_max: f64,
+}
+
+impl Default for PerfModel {
+    fn default() -> Self {
+        Self {
+            sv_bytes: 4.0,
+            f_hz: 100e6,
+            bw_max: 13.27e9,
+        }
+    }
+}
+
+impl PerfModel {
+    /// Eq 1: AXI data width in bytes for `n_pe` PEs per PG.
+    pub fn dw(&self, n_pe: u32) -> f64 {
+        2.0 * n_pe as f64 * self.sv_bytes
+    }
+
+    /// Eq 2: bandwidth of one PC given the data width.
+    pub fn bw(&self, n_pe: u32) -> f64 {
+        (self.dw(n_pe) * self.f_hz).min(self.bw_max)
+    }
+
+    /// Eq 3: fraction of bandwidth spent on neighbor lists (vs offsets).
+    pub fn p_nl(&self, n_pe: u32, len_nl: f64) -> f64 {
+        let dw = self.dw(n_pe);
+        len_nl * self.sv_bytes / (dw + len_nl * self.sv_bytes)
+    }
+
+    /// Eq 4: neighbor-list bandwidth of one PC.
+    pub fn bw_nl(&self, n_pe: u32, len_nl: f64) -> f64 {
+        self.bw(n_pe) * self.p_nl(n_pe, len_nl)
+    }
+
+    /// Eq 5: theoretical TEPS of a single PG.
+    pub fn perf_pg(&self, n_pe: u32, len_nl: f64) -> f64 {
+        self.bw_nl(n_pe, len_nl) / self.sv_bytes
+    }
+
+    /// Eq 6: theoretical TEPS of `n_pc` PGs.
+    pub fn perf(&self, n_pe: u32, len_nl: f64, n_pc: u32) -> f64 {
+        self.perf_pg(n_pe, len_nl) * n_pc as f64
+    }
+
+    /// Smallest PE count at which the PC saturates (`2·N_pe·S_v·F >=
+    /// BW_MAX`) — beyond this, Eq 5's second branch applies and adding
+    /// PEs *hurts* (Fig 7's break-point; 16 PEs with the default
+    /// constants).
+    pub fn saturation_pes(&self) -> u32 {
+        let mut n = 1u32;
+        while self.dw(n) * self.f_hz < self.bw_max {
+            n *= 2;
+        }
+        n
+    }
+
+    /// The PE count (power of two, up to `max_pe`) with the best Eq-5
+    /// performance for a given `len_nl`.
+    pub fn optimal_pes(&self, len_nl: f64, max_pe: u32) -> u32 {
+        let mut best = (1u32, 0.0f64);
+        let mut n = 1u32;
+        while n <= max_pe {
+            let p = self.perf_pg(n, len_nl);
+            if p > best.1 {
+                best = (n, p);
+            }
+            n *= 2;
+        }
+        best.0
+    }
+
+    /// The Fig 7 series: for each `len_nl`, TEPS at PE counts 1..=max.
+    pub fn fig7_series(&self, len_nls: &[f64], max_pe: u32) -> Vec<(f64, Vec<(u32, f64)>)> {
+        len_nls
+            .iter()
+            .map(|&l| {
+                let mut pts = Vec::new();
+                let mut n = 1u32;
+                while n <= max_pe {
+                    pts.push((n, self.perf_pg(n, l)));
+                    n *= 2;
+                }
+                (l, pts)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_eq2_basics() {
+        let m = PerfModel::default();
+        assert_eq!(m.dw(1), 8.0);
+        // 1 PE: 8B * 100MHz = 0.8 GB/s, demand-limited.
+        assert!((m.bw(1) - 0.8e9).abs() < 1.0);
+        // 64 PEs: 512B * 100MHz = 51.2 GB/s -> capped at 13.27.
+        assert!((m.bw(64) - 13.27e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn saturation_at_16_pes_with_paper_constants() {
+        // 2*16*4*100e6 = 12.8 GB/s < 13.27; 2*32*4*100e6 = 25.6 >= 13.27.
+        assert_eq!(PerfModel::default().saturation_pes(), 32);
+    }
+
+    #[test]
+    fn fig7_breakpoint_then_degradation() {
+        let m = PerfModel::default();
+        // Paper Fig 7: peak around 16 PEs, then performance decreases.
+        let peak = m.optimal_pes(64.0, 1024);
+        assert!(peak == 16 || peak == 32, "peak={peak}");
+        let p_peak = m.perf_pg(peak, 64.0);
+        let p_after = m.perf_pg(peak * 8, 64.0);
+        assert!(
+            p_after < p_peak,
+            "no degradation: {p_peak} -> {p_after}"
+        );
+    }
+
+    #[test]
+    fn larger_len_nl_higher_performance() {
+        let m = PerfModel::default();
+        // Fig 7 observation 1.
+        for n in [1u32, 4, 16, 64] {
+            assert!(m.perf_pg(n, 64.0) > m.perf_pg(n, 8.0));
+        }
+    }
+
+    #[test]
+    fn eq6_linear_in_pcs() {
+        let m = PerfModel::default();
+        let one = m.perf(4, 16.0, 1);
+        let thirty_two = m.perf(4, 16.0, 32);
+        assert!((thirty_two / one - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_nl_decreases_with_wider_bus() {
+        let m = PerfModel::default();
+        assert!(m.p_nl(32, 16.0) < m.p_nl(2, 16.0));
+    }
+
+    #[test]
+    fn headline_sanity_19_7_gteps_within_model_reach() {
+        // With 32 PCs, Len_nl ~ 61 (RMAT22-64), the model upper bound
+        // should comfortably exceed the measured 19.7 GTEPS.
+        let m = PerfModel {
+            f_hz: 90e6,
+            ..Default::default()
+        };
+        let teps = m.perf(2, 61.0, 32);
+        assert!(teps > 19.7e9 * 0.5, "model {teps}");
+    }
+}

@@ -1,0 +1,250 @@
+//! FPGA resource model behind Table II and Equation 7.
+//!
+//! `LUT(config) = N_pe·R_PE + FIFOs(dispatcher)·R_FIFO + R_fixed`, with
+//! the FIFO count supplied by the dispatcher design (N² for a full
+//! crossbar, Σ (N/Cᵢ)·Cᵢ² for a k-layer one). The unit costs are
+//! calibrated from the three published Table-II configurations of the
+//! U280 build; the model then predicts resource use for *any*
+//! configuration and evaluates the Eq-7 feasibility bound.
+
+use crate::sim::config::DispatcherKind;
+
+/// U280 budgets (paper §VI-A).
+pub const U280_LUTS: u64 = 1_304_000;
+/// U280 BRAM capacity in bytes (9.072 MB).
+pub const U280_BRAM_BYTES: u64 = 9_072_000;
+/// U280 URAM capacity in bytes (34.56 MB).
+pub const U280_URAM_BYTES: u64 = 34_560_000;
+
+/// Calibrated unit costs.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceModel {
+    /// LUTs per PE (P1/P2/P3 circuits; push/pull shared — §VI-B notes the
+    /// PEs are cheap because circuits are reused across modes).
+    pub r_pe: u64,
+    /// LUTs per dispatcher FIFO (incl. its switching mux share).
+    pub r_fifo: u64,
+    /// LUTs per HBM reader.
+    pub r_reader: u64,
+    /// Fixed LUTs (scheduler, vertex dispatcher control, AXI shims).
+    pub r_fixed: u64,
+    /// Total LUT budget.
+    pub lut_budget: u64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        // Exact fit to Table II: solving the three published totals
+        // (35.76%, 39.93%, 42.08% of 1304K LUTs) plus the published VD
+        // share of the 32-PC/32-PE row (16.66% over 1024 FIFOs) gives
+        // r_fifo = 212, r_reader = 3398, r_pe = 2572, r_fixed = 112559.
+        Self {
+            r_pe: 2572,
+            r_fifo: 212,
+            r_reader: 3398,
+            r_fixed: 112_559,
+            lut_budget: U280_LUTS,
+        }
+    }
+}
+
+/// A named accelerator configuration (a Table-II row).
+#[derive(Clone, Debug)]
+pub struct BuildConfig {
+    /// HBM PCs in use (== PGs == HBM readers).
+    pub num_pcs: usize,
+    /// Total PEs.
+    pub num_pes: usize,
+    /// Dispatcher design.
+    pub dispatcher: DispatcherKind,
+}
+
+impl BuildConfig {
+    /// Paper-default dispatcher for the PE count.
+    pub fn paper(num_pcs: usize, num_pes: usize) -> Self {
+        Self {
+            num_pcs,
+            num_pes,
+            dispatcher: DispatcherKind::paper_default(num_pes),
+        }
+    }
+}
+
+/// Resource estimate for a build.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceEstimate {
+    /// LUTs used by the PGs (PEs + readers).
+    pub pg_luts: u64,
+    /// LUTs used by the vertex dispatcher.
+    pub vd_luts: u64,
+    /// Total LUTs (PGs + VD + fixed).
+    pub total_luts: u64,
+    /// Fraction of the budget.
+    pub utilization: f64,
+    /// Dispatcher FIFO count.
+    pub fifos: u64,
+}
+
+impl ResourceModel {
+    /// Estimate a build's LUT consumption.
+    pub fn estimate(&self, cfg: &BuildConfig) -> ResourceEstimate {
+        let fifos = cfg.dispatcher.build(cfg.num_pes).fifo_count();
+        let pg_luts = cfg.num_pes as u64 * self.r_pe + cfg.num_pcs as u64 * self.r_reader;
+        let vd_luts = fifos * self.r_fifo;
+        let total = pg_luts + vd_luts + self.r_fixed;
+        ResourceEstimate {
+            pg_luts,
+            vd_luts,
+            total_luts: total,
+            utilization: total as f64 / self.lut_budget as f64,
+            fifos,
+        }
+    }
+
+    /// Eq 7 feasibility: does a k-layer (radix-c) build with `n_pe` PEs
+    /// fit the LUT budget?
+    pub fn feasible(&self, num_pcs: usize, n_pe: usize, radix: usize) -> bool {
+        if !n_pe.is_power_of_two() {
+            return false;
+        }
+        let disp = if n_pe <= radix {
+            DispatcherKind::Full
+        } else {
+            // Balanced factorization where possible; else full.
+            let mut rem = n_pe;
+            let mut factors = Vec::new();
+            while rem > 1 && rem % radix == 0 {
+                factors.push(radix);
+                rem /= radix;
+            }
+            if rem != 1 {
+                DispatcherKind::Full
+            } else {
+                DispatcherKind::MultiLayer(factors)
+            }
+        };
+        let est = self.estimate(&BuildConfig {
+            num_pcs,
+            num_pes: n_pe,
+            dispatcher: disp,
+        });
+        est.total_luts < self.lut_budget
+    }
+
+    /// Largest feasible power-of-two PE count (Eq 7; paper: 64 on U280 —
+    /// in the paper's case bounded by routing/timing closure, which we
+    /// mirror with a practical utilization ceiling of ~50%).
+    pub fn max_pes(&self, num_pcs: usize, radix: usize, util_ceiling: f64) -> usize {
+        let mut best = 1usize;
+        let mut n = 1usize;
+        while n <= 4096 {
+            if self.feasible(num_pcs, n, radix) {
+                let est = self.estimate(&BuildConfig {
+                    num_pcs,
+                    num_pes: n,
+                    dispatcher: DispatcherKind::paper_default(n),
+                });
+                if est.utilization <= util_ceiling {
+                    best = n;
+                }
+            }
+            n *= 2;
+        }
+        best
+    }
+
+    /// BRAM bytes needed for the three bitmaps of `n` vertices.
+    pub fn bitmap_bram_bytes(n_vertices: u64) -> u64 {
+        3 * n_vertices.div_ceil(8)
+    }
+
+    /// URAM bytes needed for the level array.
+    pub fn level_uram_bytes(n_vertices: u64, level_bytes: u64) -> u64 {
+        n_vertices * level_bytes
+    }
+
+    /// Largest vertex count whose vertex data fits on-chip (paper §IV-A
+    /// G1: *all* vertex data lives in BRAM/URAM).
+    pub fn max_vertices_on_chip() -> u64 {
+        // Bitmaps in BRAM, levels (4B) in URAM.
+        let by_bram = U280_BRAM_BYTES * 8 / 3;
+        let by_uram = U280_URAM_BYTES / 4;
+        by_bram.min(by_uram)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II (total column): 16PC/32PE = 35.76%, 32PC/32PE = 39.93%,
+    /// 32PC/64PE = 42.08%.
+    #[test]
+    fn calibration_matches_table2_totals() {
+        let m = ResourceModel::default();
+        let rows = [
+            (BuildConfig::paper(16, 32), 0.3576),
+            (BuildConfig::paper(32, 32), 0.3993),
+            (BuildConfig::paper(32, 64), 0.4208),
+        ];
+        for (cfg, published) in rows {
+            let est = m.estimate(&cfg);
+            let err = (est.utilization - published).abs() / published;
+            assert!(
+                err < 0.10,
+                "{}PC/{}PE: model {:.4} vs published {:.4}",
+                cfg.num_pcs,
+                cfg.num_pes,
+                est.utilization,
+                published
+            );
+        }
+    }
+
+    #[test]
+    fn vd_cheaper_for_64pe_multilayer_than_32pe_full() {
+        // Paper §VI-B: the 3-layer 64-PE dispatcher (768 FIFOs) consumes
+        // *less* than the 32-PE full crossbar (1024 FIFOs).
+        let m = ResourceModel::default();
+        let e32 = m.estimate(&BuildConfig::paper(32, 32));
+        let e64 = m.estimate(&BuildConfig::paper(32, 64));
+        assert_eq!(e32.fifos, 1024);
+        assert_eq!(e64.fifos, 768);
+        assert!(e64.vd_luts < e32.vd_luts);
+    }
+
+    #[test]
+    fn full_64_crossbar_would_blow_half_the_luts() {
+        // Paper §IV-D: a full 64x64 crossbar consumes more than half the
+        // U280's LUTs.
+        let m = ResourceModel::default();
+        let est = m.estimate(&BuildConfig {
+            num_pcs: 32,
+            num_pes: 64,
+            dispatcher: DispatcherKind::Full,
+        });
+        assert!(
+            est.vd_luts as f64 > 0.5 * U280_LUTS as f64,
+            "vd = {} luts",
+            est.vd_luts
+        );
+    }
+
+    #[test]
+    fn max_pes_is_64_with_practical_ceiling() {
+        let m = ResourceModel::default();
+        assert_eq!(m.max_pes(32, 4, 0.50), 64);
+    }
+
+    #[test]
+    fn on_chip_vertex_capacity_covers_table1() {
+        // All Table-I graphs (<= 8.39M vertices) must fit on-chip.
+        assert!(ResourceModel::max_vertices_on_chip() > 8_390_000);
+    }
+
+    #[test]
+    fn bitmap_and_level_sizing() {
+        assert_eq!(ResourceModel::bitmap_bram_bytes(64), 24);
+        assert_eq!(ResourceModel::level_uram_bytes(100, 4), 400);
+    }
+}

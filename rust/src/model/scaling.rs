@@ -1,0 +1,126 @@
+//! Forward-scaling projection (paper §VII): "ScalaBFS will continuously
+//! achieve higher performance on future FPGA cards that feature more
+//! HBM stacks and more logic resources, with its scalability."
+//!
+//! This module projects Eq 6 + the Eq 7 resource bound onto hypothetical
+//! cards (more PCs per stack, bigger LUT budgets) and onto real known
+//! parts, quantifying the paper's claim.
+
+use super::perf::PerfModel;
+use super::resource::ResourceModel;
+
+/// A (possibly hypothetical) FPGA-HBM card.
+#[derive(Clone, Debug)]
+pub struct Card {
+    /// Name for reports.
+    pub name: String,
+    /// HBM pseudo channels exposed.
+    pub num_pcs: usize,
+    /// Per-PC bandwidth (B/s).
+    pub pc_bw: f64,
+    /// LUT budget.
+    pub luts: u64,
+    /// Achievable core clock (Hz) — routing gets harder on bigger parts.
+    pub f_hz: f64,
+}
+
+impl Card {
+    /// The paper's U280.
+    pub fn u280() -> Self {
+        Self {
+            name: "U280".into(),
+            num_pcs: 32,
+            pc_bw: 13.27e9,
+            luts: 1_304_000,
+            f_hz: 90e6,
+        }
+    }
+
+    /// A V100-class HBM subsystem grafted onto an FPGA (64 PCs) — the
+    /// thought experiment behind Table III's conclusion.
+    pub fn hypothetical_64pc() -> Self {
+        Self {
+            name: "hypothetical 64-PC".into(),
+            num_pcs: 64,
+            pc_bw: 14.0e9,
+            luts: 2_600_000,
+            f_hz: 90e6,
+        }
+    }
+}
+
+/// Projection result for one card.
+#[derive(Clone, Debug)]
+pub struct Projection {
+    /// Card name.
+    pub card: String,
+    /// PEs per PG chosen by the Eq 5 optimum under the resource bound.
+    pub pes_per_pc: u32,
+    /// Total PEs.
+    pub total_pes: usize,
+    /// Projected GTEPS at the given average degree.
+    pub gteps: f64,
+    /// LUT utilization of the chosen build.
+    pub utilization: f64,
+}
+
+/// Project ScalaBFS performance onto a card for graphs of average
+/// degree `len_nl`, honoring both the Eq 5 PE optimum and the Eq 7
+/// resource bound at `util_ceiling`.
+pub fn project(card: &Card, len_nl: f64, util_ceiling: f64) -> Projection {
+    let perf = PerfModel {
+        sv_bytes: 4.0,
+        f_hz: card.f_hz,
+        bw_max: card.pc_bw,
+    };
+    let res = ResourceModel {
+        lut_budget: card.luts,
+        ..Default::default()
+    };
+    // Largest feasible total PE count on this card.
+    let max_total = res.max_pes(card.num_pcs, 4, util_ceiling).max(card.num_pcs);
+    let max_per_pc = (max_total / card.num_pcs).max(1) as u32;
+    // Eq-5 optimum per PC, clipped by feasibility.
+    let opt = perf.optimal_pes(len_nl, max_per_pc);
+    let total = opt as usize * card.num_pcs;
+    let est = res.estimate(&super::resource::BuildConfig::paper(
+        card.num_pcs,
+        total.max(1),
+    ));
+    Projection {
+        card: card.name.clone(),
+        pes_per_pc: opt,
+        total_pes: total,
+        gteps: perf.perf(opt, len_nl, card.num_pcs as u32) / 1e9,
+        utilization: est.utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_projection_is_self_consistent() {
+        let p = project(&Card::u280(), 32.0, 0.8);
+        assert_eq!(p.card, "U280");
+        assert!(p.pes_per_pc >= 1);
+        assert!(p.gteps > 5.0, "{}", p.gteps);
+        assert!(p.utilization < 0.85);
+    }
+
+    #[test]
+    fn doubling_pcs_roughly_doubles_projection() {
+        let a = project(&Card::u280(), 32.0, 0.8);
+        let b = project(&Card::hypothetical_64pc(), 32.0, 0.8);
+        let ratio = b.gteps / a.gteps;
+        assert!(ratio > 1.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn denser_graphs_project_higher() {
+        let sparse = project(&Card::u280(), 8.0, 0.8);
+        let dense = project(&Card::u280(), 64.0, 0.8);
+        assert!(dense.gteps > sparse.gteps);
+    }
+}

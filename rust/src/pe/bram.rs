@@ -1,0 +1,96 @@
+//! Double-pump BRAM model (paper §II-A, §V).
+//!
+//! The bitmaps live in BRAMs clocked at twice the PE frequency
+//! (`f_BRAM = 2 * f_PE`, Table II: 90/180 MHz), so each PE performs **two
+//! bitmap operations per PE cycle**. This constant (the `2·N_pe` factor of
+//! Eq 1/5) is the paper's justification for sizing the AXI width at two
+//! vertices per PE per cycle. The model tracks per-cycle op budgets and
+//! total port pressure.
+
+/// A double-pumped BRAM bank: 2 ops per core cycle.
+#[derive(Clone, Debug)]
+pub struct DoublePumpBram {
+    /// Ops available per core cycle (2 = double pump).
+    pub ops_per_cycle: u32,
+    ops_this_cycle: u32,
+    /// Total operations served.
+    pub total_ops: u64,
+    /// Total cycles where demand exceeded the budget (stall pressure).
+    pub stall_cycles: u64,
+}
+
+impl Default for DoublePumpBram {
+    fn default() -> Self {
+        Self::new(2)
+    }
+}
+
+impl DoublePumpBram {
+    /// Bank with `ops_per_cycle` budget (2 for the paper's double pump).
+    pub fn new(ops_per_cycle: u32) -> Self {
+        Self {
+            ops_per_cycle,
+            ops_this_cycle: 0,
+            total_ops: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Try to perform one bitmap op this cycle; false = port conflict.
+    pub fn try_op(&mut self) -> bool {
+        if self.ops_this_cycle < self.ops_per_cycle {
+            self.ops_this_cycle += 1;
+            self.total_ops += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Advance to the next core cycle.
+    pub fn next_cycle(&mut self) {
+        if self.ops_this_cycle >= self.ops_per_cycle {
+            self.stall_cycles += 1;
+        }
+        self.ops_this_cycle = 0;
+    }
+
+    /// Cycles needed to serve `ops` operations from an idle start.
+    pub fn cycles_for(&self, ops: u64) -> u64 {
+        ops.div_ceil(self.ops_per_cycle as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_ops_per_cycle_then_conflict() {
+        let mut b = DoublePumpBram::default();
+        assert!(b.try_op());
+        assert!(b.try_op());
+        assert!(!b.try_op());
+        b.next_cycle();
+        assert!(b.try_op());
+        assert_eq!(b.total_ops, 3);
+        assert_eq!(b.stall_cycles, 1);
+    }
+
+    #[test]
+    fn cycles_for_is_ceiling() {
+        let b = DoublePumpBram::default();
+        assert_eq!(b.cycles_for(0), 0);
+        assert_eq!(b.cycles_for(1), 1);
+        assert_eq!(b.cycles_for(2), 1);
+        assert_eq!(b.cycles_for(3), 2);
+    }
+
+    #[test]
+    fn single_pump_variant() {
+        let mut b = DoublePumpBram::new(1);
+        assert!(b.try_op());
+        assert!(!b.try_op());
+        assert_eq!(b.cycles_for(4), 4);
+    }
+}

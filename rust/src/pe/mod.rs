@@ -1,0 +1,16 @@
+//! Processing Element / Processing Group models (paper §IV-B, §IV-C).
+//!
+//! A PG owns one HBM PC (via its HBM reader) and one or more hybrid-mode
+//! PEs. Each PE pipelines three stages — P1 workload preparing, P2
+//! neighbor checking, P3 result writing — over the three BRAM bitmaps and
+//! the URAM level array. The same circuits serve push and pull with
+//! register-selected parameters (the paper's resource-saving trick), so
+//! one Rust model with a `Mode` knob is faithful.
+
+pub mod bram;
+pub mod pe;
+pub mod pg;
+
+pub use bram::DoublePumpBram;
+pub use pe::{PeConfig, PeStats, ProcessingElement};
+pub use pg::ProcessingGroup;

@@ -1,0 +1,149 @@
+//! Hybrid-mode Processing Element (paper §IV-C, Fig 5).
+//!
+//! The three pipeline stages of a PE:
+//!
+//! * **P1 — workload preparing**: scan the current frontier (push) or the
+//!   visited map (pull) for the PE's vertex interval, issue neighbor-list
+//!   reads via the PG's HBM reader.
+//! * **P2 — neighbor checking**: receive dispatched vertices, check the
+//!   visited map (push) or current frontier (pull) in the double-pump
+//!   BRAM.
+//! * **P3 — result writing**: set next-frontier/visited bits and write the
+//!   level value to the URAM level array.
+//!
+//! This module provides the *cycle-cost* model of those stages; the
+//! functional state lives in [`crate::bfs::bitmap::BitmapEngine`]. The
+//! cycle simulator composes both; the throughput simulator uses the
+//! per-stage cycle formulas.
+
+use super::bram::DoublePumpBram;
+use crate::bfs::Mode;
+
+/// Static PE parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PeConfig {
+    /// Bitmap ops per cycle (2 = double-pump BRAM).
+    pub bram_ops_per_cycle: u32,
+    /// Vertices the P1 scanner inspects per cycle (a BRAM word scan —
+    /// frontier bits are read out words-at-a-time; the paper's P1 streams
+    /// continuously so we charge one cycle per scanned word of 64 bits).
+    pub scan_bits_per_cycle: u32,
+    /// Messages P2 consumes per cycle (bounded by the BRAM budget: each
+    /// message costs one bitmap read; results cost a second op in P3).
+    pub p2_msgs_per_cycle: u32,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        Self {
+            bram_ops_per_cycle: 2,
+            scan_bits_per_cycle: 64,
+            p2_msgs_per_cycle: 2,
+        }
+    }
+}
+
+/// Per-iteration work counters for one PE (filled by the simulators).
+#[derive(Clone, Debug, Default)]
+pub struct PeStats {
+    /// Neighbor-list fetches issued in P1.
+    pub fetches: u64,
+    /// Messages received/checked in P2.
+    pub msgs_checked: u64,
+    /// Results written in P3 (bits set + level writes).
+    pub results_written: u64,
+    /// Cycles this PE was the pipeline bottleneck.
+    pub busy_cycles: u64,
+}
+
+/// Cycle-cost model of one PE.
+#[derive(Clone, Debug)]
+pub struct ProcessingElement {
+    /// Configuration.
+    pub cfg: PeConfig,
+    /// Bitmap bank (shared by P2 reads and P3 writes).
+    pub bram: DoublePumpBram,
+    /// Accumulated stats.
+    pub stats: PeStats,
+}
+
+impl ProcessingElement {
+    /// New PE.
+    pub fn new(cfg: PeConfig) -> Self {
+        Self {
+            cfg,
+            bram: DoublePumpBram::new(cfg.bram_ops_per_cycle),
+            stats: PeStats::default(),
+        }
+    }
+
+    /// Cycles for P1 to scan `bits` of frontier/visited bitmap for this
+    /// PE's interval.
+    pub fn p1_scan_cycles(&self, bits: u64) -> u64 {
+        bits.div_ceil(self.cfg.scan_bits_per_cycle as u64)
+    }
+
+    /// Cycles for P2+P3 to process `msgs` dispatched vertices of which
+    /// `hits` produce results. Each message is one BRAM read; each hit
+    /// adds one BRAM write (next frontier + visited are banked separately
+    /// in hardware, so one op covers the set) plus the URAM level write
+    /// (URAM port is dedicated — not a bitmap-op consumer).
+    pub fn p2_p3_cycles(&self, msgs: u64, hits: u64) -> u64 {
+        let ops = msgs + hits;
+        ops.div_ceil(self.cfg.bram_ops_per_cycle as u64)
+    }
+
+    /// Record an iteration's work (used by ThroughputSim).
+    pub fn record(&mut self, fetches: u64, msgs: u64, hits: u64) {
+        self.stats.fetches += fetches;
+        self.stats.msgs_checked += msgs;
+        self.stats.results_written += hits;
+    }
+
+    /// Iteration cycle bound for this PE given its share of work
+    /// (`scan_bits` in P1, `msgs`/`hits` through P2/P3). Stages are
+    /// pipelined, so the bound is the max, not the sum.
+    pub fn iteration_cycles(&self, scan_bits: u64, msgs: u64, hits: u64, _mode: Mode) -> u64 {
+        self.p1_scan_cycles(scan_bits).max(self.p2_p3_cycles(msgs, hits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p1_scan_is_word_granular() {
+        let pe = ProcessingElement::new(PeConfig::default());
+        assert_eq!(pe.p1_scan_cycles(0), 0);
+        assert_eq!(pe.p1_scan_cycles(64), 1);
+        assert_eq!(pe.p1_scan_cycles(65), 2);
+    }
+
+    #[test]
+    fn p2_p3_double_pump_rate() {
+        let pe = ProcessingElement::new(PeConfig::default());
+        // 10 messages, 4 hits -> 14 ops -> 7 cycles at 2 ops/cycle.
+        assert_eq!(pe.p2_p3_cycles(10, 4), 7);
+        assert_eq!(pe.p2_p3_cycles(0, 0), 0);
+    }
+
+    #[test]
+    fn iteration_bound_is_stage_max() {
+        let pe = ProcessingElement::new(PeConfig::default());
+        // Scan-dominated: 1280 bits = 20 cycles vs 2 ops = 1 cycle.
+        assert_eq!(pe.iteration_cycles(1280, 1, 1, Mode::Push), 20);
+        // Message-dominated.
+        assert_eq!(pe.iteration_cycles(64, 100, 50, Mode::Pull), 75);
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut pe = ProcessingElement::new(PeConfig::default());
+        pe.record(3, 10, 2);
+        pe.record(1, 5, 1);
+        assert_eq!(pe.stats.fetches, 4);
+        assert_eq!(pe.stats.msgs_checked, 15);
+        assert_eq!(pe.stats.results_written, 3);
+    }
+}

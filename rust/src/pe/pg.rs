@@ -1,0 +1,97 @@
+//! Processing Group: one HBM PC + its HBM reader + `N_pe` PEs
+//! (paper Fig 4). The PG is the unit of the first scaling direction
+//! (more PCs → more PGs → linear speedup, Fig 9).
+
+use super::pe::{PeConfig, ProcessingElement};
+use crate::hbm::axi::AxiConfig;
+use crate::hbm::pc::{HbmConfig, PseudoChannel};
+
+/// A processing group bound to one pseudo channel.
+pub struct ProcessingGroup {
+    /// Group index == PC index.
+    pub id: usize,
+    /// The PEs in this group.
+    pub pes: Vec<ProcessingElement>,
+    /// The pseudo channel this PG owns.
+    pub pc: PseudoChannel,
+    /// AXI port configuration (width from Eq 1).
+    pub axi: AxiConfig,
+}
+
+impl ProcessingGroup {
+    /// Build a PG with `n_pes` PEs over a PC.
+    pub fn new(id: usize, n_pes: usize, pe_cfg: PeConfig, hbm_cfg: HbmConfig, sv_bytes: u64) -> Self {
+        Self {
+            id,
+            pes: (0..n_pes).map(|_| ProcessingElement::new(pe_cfg)).collect(),
+            pc: PseudoChannel::new(hbm_cfg),
+            axi: AxiConfig::for_pes(n_pes, sv_bytes),
+        }
+    }
+
+    /// Number of PEs.
+    pub fn n_pes(&self) -> usize {
+        self.pes.len()
+    }
+
+    /// Memory-phase cycles to read `bytes` from this PG's PC at `f_mhz`.
+    pub fn memory_cycles(&self, bytes: u64, f_mhz: f64) -> u64 {
+        self.pc.service_cycles(bytes, self.axi.data_width, f_mhz)
+    }
+
+    /// Compute-phase cycles: the slowest PE bound over per-PE work
+    /// triples `(scan_bits, msgs, hits)`.
+    pub fn compute_cycles(
+        &self,
+        work: &[(u64, u64, u64)],
+        mode: crate::bfs::Mode,
+    ) -> u64 {
+        assert_eq!(work.len(), self.pes.len());
+        self.pes
+            .iter()
+            .zip(work)
+            .map(|(pe, &(scan, msgs, hits))| pe.iteration_cycles(scan, msgs, hits, mode))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::Mode;
+
+    fn pg(n: usize) -> ProcessingGroup {
+        ProcessingGroup::new(0, n, PeConfig::default(), HbmConfig::default(), 4)
+    }
+
+    #[test]
+    fn axi_width_follows_eq1() {
+        assert_eq!(pg(1).axi.data_width, 8);
+        assert_eq!(pg(2).axi.data_width, 16);
+        assert_eq!(pg(16).axi.data_width, 128);
+    }
+
+    #[test]
+    fn memory_cycles_scale_with_bytes() {
+        let g = pg(2); // DW=16B at 90MHz -> 1.44GB/s, demand-limited
+        let c1 = g.memory_cycles(16_000, 90.0);
+        let c2 = g.memory_cycles(32_000, 90.0);
+        assert_eq!(c1, 1000);
+        assert_eq!(c2, 2000);
+    }
+
+    #[test]
+    fn compute_cycles_take_slowest_pe() {
+        let g = pg(2);
+        let c = g.compute_cycles(&[(64, 10, 5), (64, 100, 50)], Mode::Push);
+        assert_eq!(c, 75); // PE1 dominates: (100+50)/2
+    }
+
+    #[test]
+    #[should_panic]
+    fn compute_cycles_requires_matching_arity() {
+        let g = pg(2);
+        g.compute_cycles(&[(0, 0, 0)], Mode::Push);
+    }
+}

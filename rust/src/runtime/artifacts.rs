@@ -1,0 +1,146 @@
+//! Artifact registry: maps model variants to the HLO-text files emitted
+//! by `python/compile/aot.py`, via the `artifacts/manifest.txt` it
+//! writes (one line per artifact: `name\tn\ttile\tfile`).
+
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    /// Logical name (e.g. `bfs_step`).
+    pub name: String,
+    /// Padded vertex-dimension N the variant was lowered at.
+    pub n: usize,
+    /// Pallas tile size used in the kernel.
+    pub tile: usize,
+    /// HLO text path.
+    pub path: PathBuf,
+}
+
+/// The set of artifacts produced by `make artifacts`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactStore {
+    /// All registered artifacts.
+    pub artifacts: Vec<Artifact>,
+    /// Directory the manifest lives in.
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Default artifacts directory: `$SCALABFS_ARTIFACTS` or
+    /// `<repo>/artifacts` relative to the current dir / crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SCALABFS_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // Walk up from cwd looking for artifacts/manifest.txt; fall back
+        // to the crate-root-relative path used by `make artifacts`.
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load the manifest from a directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        anyhow::ensure!(
+            manifest.exists(),
+            "no manifest at {} - run `make artifacts`",
+            manifest.display()
+        );
+        let mut artifacts = Vec::new();
+        for line in std::fs::read_to_string(&manifest)?.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(fields.len() == 4, "bad manifest line: {line}");
+            artifacts.push(Artifact {
+                name: fields[0].to_string(),
+                n: fields[1].parse()?,
+                tile: fields[2].parse()?,
+                path: dir.join(fields[3]),
+            });
+        }
+        Ok(Self {
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_dir())
+    }
+
+    /// The smallest variant of `name` whose N is >= `min_n`.
+    pub fn best_fit(&self, name: &str, min_n: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name == name && a.n >= min_n)
+            .min_by_key(|a| a.n)
+    }
+
+    /// All Ns available for a model name (sorted).
+    pub fn sizes(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.name == name)
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_fits() {
+        let dir = std::env::temp_dir().join("scalabfs_artifacts_test");
+        write_manifest(
+            &dir,
+            "# comment\nbfs_step\t256\t64\tbfs_step_n256.hlo.txt\nbfs_step\t1024\t256\tbfs_step_n1024.hlo.txt\n",
+        );
+        let store = ArtifactStore::load(&dir).unwrap();
+        assert_eq!(store.artifacts.len(), 2);
+        assert_eq!(store.sizes("bfs_step"), vec![256, 1024]);
+        assert_eq!(store.best_fit("bfs_step", 100).unwrap().n, 256);
+        assert_eq!(store.best_fit("bfs_step", 300).unwrap().n, 1024);
+        assert!(store.best_fit("bfs_step", 5000).is_none());
+        assert!(store.best_fit("other", 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactStore::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = std::env::temp_dir().join("scalabfs_artifacts_bad");
+        write_manifest(&dir, "only two\tfields\n");
+        assert!(ArtifactStore::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

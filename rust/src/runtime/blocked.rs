@@ -1,0 +1,123 @@
+//! CSR → padded dense-tile conversion for the XLA functional path.
+//!
+//! The Pallas kernel formulates frontier expansion as a blocked boolean
+//! mat-vec on 0/1 `f32` tiles (the MXU-shaped rethinking of the FPGA PE —
+//! DESIGN.md §2). This module builds the dense matrix the artifact
+//! expects: `adj[dst * N + src] = 1` for every edge `src → dst`, padded
+//! to the artifact's N, so `reached = adj @ frontier` propagates along
+//! outgoing edges.
+
+use crate::graph::{Graph, VertexId};
+use crate::Result;
+
+/// A graph densified and padded for an N-sized artifact.
+pub struct BlockedGraph {
+    /// Padded dimension (the artifact's N).
+    pub n: usize,
+    /// Real vertex count (<= n).
+    pub real_n: usize,
+    /// Row-major `n x n` 0/1 matrix, `adj[dst * n + src]`.
+    pub adj: Vec<f32>,
+}
+
+impl BlockedGraph {
+    /// Densify `graph` into an `n`-padded matrix. Errors when the graph
+    /// has more vertices than `n` (pick a bigger artifact) or when the
+    /// dense footprint would be absurd (> 1 GiB).
+    pub fn build(graph: &Graph, n: usize) -> Result<Self> {
+        let real_n = graph.num_vertices();
+        anyhow::ensure!(
+            real_n <= n,
+            "graph has {real_n} vertices but artifact is sized for {n}"
+        );
+        let bytes = n * n * 4;
+        anyhow::ensure!(
+            bytes <= 1 << 30,
+            "dense {n}x{n} f32 would be {bytes} bytes; the XLA path is for small graphs"
+        );
+        let mut adj = vec![0f32; n * n];
+        for src in 0..real_n {
+            for &dst in graph.out_neighbors(src as VertexId) {
+                adj[dst as usize * n + src] = 1.0;
+            }
+        }
+        Ok(Self { n, real_n, adj })
+    }
+
+    /// Initial frontier/visited/level vectors for a root, padded.
+    /// Levels use `f32` with `INF_LEVEL` for unreached (the artifact is
+    /// all-f32; the engine converts back).
+    pub fn initial_state(&self, root: VertexId) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut frontier = vec![0f32; self.n];
+        let mut visited = vec![0f32; self.n];
+        let mut level = vec![INF_LEVEL; self.n];
+        frontier[root as usize] = 1.0;
+        visited[root as usize] = 1.0;
+        level[root as usize] = 0.0;
+        // Padding vertices are marked visited so the kernel never
+        // activates them.
+        for v in self.real_n..self.n {
+            visited[v] = 1.0;
+        }
+        (frontier, visited, level)
+    }
+}
+
+/// The f32 encoding of "unreached" used by the artifacts.
+pub const INF_LEVEL: f32 = 1.0e9;
+
+/// Convert artifact levels back to the engine's u32 representation.
+pub fn levels_to_u32(levels_f32: &[f32], real_n: usize) -> Vec<u32> {
+    levels_f32[..real_n]
+        .iter()
+        .map(|&l| {
+            if l >= INF_LEVEL {
+                crate::bfs::INF
+            } else {
+                l as u32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn densify_places_edges_dst_major() {
+        let g = generators::chain(3); // 0->1->2
+        let b = BlockedGraph::build(&g, 4).unwrap();
+        assert_eq!(b.adj[1 * 4 + 0], 1.0); // 0->1
+        assert_eq!(b.adj[2 * 4 + 1], 1.0); // 1->2
+        assert_eq!(b.adj.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn padding_vertices_start_visited() {
+        let g = generators::chain(3);
+        let b = BlockedGraph::build(&g, 8).unwrap();
+        let (f, v, l) = b.initial_state(0);
+        assert_eq!(f[0], 1.0);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(l[0], 0.0);
+        for i in 3..8 {
+            assert_eq!(v[i], 1.0, "pad {i}");
+        }
+        assert_eq!(l[1], INF_LEVEL);
+    }
+
+    #[test]
+    fn rejects_oversized_graph() {
+        let g = generators::chain(10);
+        assert!(BlockedGraph::build(&g, 4).is_err());
+    }
+
+    #[test]
+    fn level_conversion_roundtrip() {
+        let l = vec![0.0, 2.0, INF_LEVEL, 5.0];
+        let u = levels_to_u32(&l, 3);
+        assert_eq!(u, vec![0, 2, crate::bfs::INF]);
+    }
+}

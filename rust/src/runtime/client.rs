@@ -1,0 +1,92 @@
+//! PJRT client wrapper: load HLO text, compile once, execute many times.
+
+use crate::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled executable plus its entry metadata.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path it was loaded from (diagnostics).
+    pub source: String,
+}
+
+impl LoadedExecutable {
+    /// Execute on literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT runtime: one CPU client, a cache of compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact, caching by path.
+    pub fn load(&mut self, path: &Path) -> Result<&LoadedExecutable> {
+        let key = path.display().to_string();
+        if !self.cache.contains_key(&key) {
+            anyhow::ensure!(
+                path.exists(),
+                "artifact {key} missing - run `make artifacts` first"
+            );
+            let proto = xla::HloModuleProto::from_text_file(&key)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(
+                key.clone(),
+                LoadedExecutable {
+                    exe,
+                    source: key.clone(),
+                },
+            );
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = XlaRuntime::cpu().expect("pjrt cpu client");
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        assert_eq!(rt.cached(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut rt = XlaRuntime::cpu().unwrap();
+        let err = match rt.load(Path::new("/nonexistent/foo.hlo.txt")) {
+            Ok(_) => panic!("expected load error"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,164 @@
+//! XLA-backed BFS engine: executes the AOT-compiled `bfs_step` artifact
+//! iteration-by-iteration from Rust. This proves the three-layer
+//! architecture end-to-end (Pallas kernel → JAX model → HLO text → PJRT
+//! execute) and is cross-validated against the bit-exact Rust engines.
+//!
+//! The artifact signature (see `python/compile/model.py`):
+//!
+//! ```text
+//! bfs_step(adj f32[N,N], frontier f32[N], visited f32[N],
+//!          level f32[N], bfs_level f32[1])
+//!   -> (next_frontier f32[N], visited f32[N], level f32[N], num_new f32[1])
+//! ```
+
+use super::artifacts::ArtifactStore;
+use super::blocked::{levels_to_u32, BlockedGraph};
+use super::client::XlaRuntime;
+use crate::graph::{Graph, VertexId};
+use crate::Result;
+
+/// Result of an XLA-path BFS.
+#[derive(Clone, Debug)]
+pub struct XlaBfsResult {
+    /// Levels in the engine's u32 convention.
+    pub levels: Vec<u32>,
+    /// Iterations executed.
+    pub iterations: u32,
+    /// Vertices reached.
+    pub reached: usize,
+    /// Wall-clock seconds spent inside PJRT execute calls.
+    pub execute_seconds: f64,
+}
+
+/// BFS engine running on the PJRT CPU client.
+pub struct XlaBfsEngine {
+    runtime: XlaRuntime,
+    store: ArtifactStore,
+}
+
+impl XlaBfsEngine {
+    /// Build from the default artifact directory.
+    pub fn new() -> Result<Self> {
+        Ok(Self {
+            runtime: XlaRuntime::cpu()?,
+            store: ArtifactStore::load_default()?,
+        })
+    }
+
+    /// Build from an explicit artifact store.
+    pub fn with_store(store: ArtifactStore) -> Result<Self> {
+        Ok(Self {
+            runtime: XlaRuntime::cpu()?,
+            store,
+        })
+    }
+
+    /// Artifact sizes available.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.store.sizes("bfs_step")
+    }
+
+    /// Run BFS from `root` in a **single** PJRT execute using the
+    /// `bfs_full` artifact (the whole level loop runs on-device under a
+    /// `lax.while_loop`; see EXPERIMENTS.md §Perf for the speedup over
+    /// per-iteration execution).
+    pub fn run_full(&mut self, graph: &Graph, root: VertexId) -> Result<XlaBfsResult> {
+        let n_real = graph.num_vertices();
+        let artifact = self
+            .store
+            .best_fit("bfs_full", n_real)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bfs_full artifact fits {n_real} vertices (have {:?})",
+                    self.store.sizes("bfs_full")
+                )
+            })?
+            .clone();
+        let blocked = BlockedGraph::build(graph, artifact.n)?;
+        let (frontier, visited, level) = blocked.initial_state(root);
+        let exe = self.runtime.load(&artifact.path)?;
+        let n = artifact.n as i64;
+        let inputs = [
+            xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?,
+            xla::Literal::vec1(&frontier),
+            xla::Literal::vec1(&visited),
+            xla::Literal::vec1(&level),
+        ];
+        let t0 = std::time::Instant::now();
+        let outs = exe.run(&inputs)?;
+        let execute_seconds = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        let level_out = outs[1].to_vec::<f32>()?;
+        let iterations = outs[2].to_vec::<f32>()?[0] as u32;
+        let levels = levels_to_u32(&level_out, n_real);
+        let reached = levels.iter().filter(|&&l| l != crate::bfs::INF).count();
+        Ok(XlaBfsResult {
+            levels,
+            iterations,
+            reached,
+            execute_seconds,
+        })
+    }
+
+    /// Run BFS from `root` using the smallest artifact that fits.
+    pub fn run(&mut self, graph: &Graph, root: VertexId) -> Result<XlaBfsResult> {
+        let n_real = graph.num_vertices();
+        let artifact = self
+            .store
+            .best_fit("bfs_step", n_real)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bfs_step artifact fits {n_real} vertices (have {:?})",
+                    self.sizes()
+                )
+            })?
+            .clone();
+        let blocked = BlockedGraph::build(graph, artifact.n)?;
+        let (frontier0, visited0, level0) = blocked.initial_state(root);
+
+        let exe = self.runtime.load(&artifact.path)?;
+        let n = artifact.n as i64;
+        let adj_lit = xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?;
+        let mut frontier = frontier0;
+        let mut visited = visited0;
+        let mut level = level0;
+
+        let mut iterations = 0u32;
+        let mut execute_seconds = 0.0f64;
+        loop {
+            let bfs_level = vec![iterations as f32];
+            let inputs = [
+                adj_lit.clone(),
+                xla::Literal::vec1(&frontier),
+                xla::Literal::vec1(&visited),
+                xla::Literal::vec1(&level),
+                xla::Literal::vec1(&bfs_level),
+            ];
+            let t0 = std::time::Instant::now();
+            let outs = exe.run(&inputs)?;
+            execute_seconds += t0.elapsed().as_secs_f64();
+            anyhow::ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
+            frontier = outs[0].to_vec::<f32>()?;
+            visited = outs[1].to_vec::<f32>()?;
+            level = outs[2].to_vec::<f32>()?;
+            let num_new = outs[3].to_vec::<f32>()?[0];
+            iterations += 1;
+            if num_new <= 0.0 {
+                break;
+            }
+            anyhow::ensure!(iterations < 100_000, "xla bfs did not terminate");
+        }
+
+        let levels = levels_to_u32(&level, n_real);
+        let reached = levels.iter().filter(|&&l| l != crate::bfs::INF).count();
+        Ok(XlaBfsResult {
+            levels,
+            iterations,
+            reached,
+            execute_seconds,
+        })
+    }
+}
+
+// Integration tests for this engine live in rust/tests/runtime_hlo.rs and
+// rust/tests/end_to_end.rs (they need `make artifacts` to have run).

@@ -1,0 +1,16 @@
+//! XLA/PJRT runtime: loads the AOT-compiled Layer-2 artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from the Rust request path. Python never runs here.
+//!
+//! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that the crate's XLA (0.5.1) rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod artifacts;
+pub mod blocked;
+pub mod engine;
+
+pub use artifacts::ArtifactStore;
+pub use client::XlaRuntime;
+pub use engine::XlaBfsEngine;

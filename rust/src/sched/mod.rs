@@ -1,0 +1,173 @@
+//! The Scheduler (paper Fig 4): decides push vs pull for each iteration
+//! and informs the PEs at iteration start.
+//!
+//! The paper uses push in the beginning/ending iterations and pull in the
+//! mid-term ones (§II-A, Algorithm 2). [`Hybrid`] implements the
+//! direction-optimizing heuristic of Beamer et al. [33] — the scheme the
+//! paper's scheduler (and Gunrock's) follows: switch push→pull when the
+//! frontier's outgoing edges exceed `1/alpha` of the unexplored edges, and
+//! pull→push when the frontier shrinks below `|V|/beta` vertices.
+
+pub mod policies;
+
+pub use policies::{DegreeAware, FrontierFraction, ModeTrace};
+
+use crate::bfs::Mode;
+
+/// Per-iteration mode decision.
+pub trait ModePolicy {
+    /// Decide the mode for the iteration about to run.
+    ///
+    /// * `bfs_level` — iteration index.
+    /// * `frontier_size` — vertices in the current frontier.
+    /// * `frontier_edges` — sum of out-degrees of the frontier.
+    /// * `visited` — vertices visited so far.
+    /// * `n`, `m` — |V|, |E| of the graph.
+    fn decide(
+        &mut self,
+        bfs_level: u32,
+        frontier_size: u64,
+        frontier_edges: u64,
+        visited: u64,
+        n: u64,
+        m: u64,
+    ) -> Mode;
+
+    /// Human-readable policy name for reports.
+    fn name(&self) -> String;
+}
+
+/// Always run the same mode (the Fig 8 push-only / pull-only baselines).
+pub struct Fixed(pub Mode);
+
+impl ModePolicy for Fixed {
+    fn decide(&mut self, _: u32, _: u64, _: u64, _: u64, _: u64, _: u64) -> Mode {
+        self.0
+    }
+
+    fn name(&self) -> String {
+        format!("{}-only", self.0)
+    }
+}
+
+/// Direction-optimizing hybrid scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct Hybrid {
+    /// push→pull when `frontier_edges > unexplored_edges / alpha`.
+    pub alpha: f64,
+    /// pull→push when `frontier_size < n / beta`.
+    pub beta: f64,
+    state: Mode,
+}
+
+impl Default for Hybrid {
+    fn default() -> Self {
+        // Beamer's published defaults.
+        Self {
+            alpha: 14.0,
+            beta: 24.0,
+            state: Mode::Push,
+        }
+    }
+}
+
+impl Hybrid {
+    /// Hybrid policy with explicit thresholds.
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        Self {
+            alpha,
+            beta,
+            state: Mode::Push,
+        }
+    }
+}
+
+impl ModePolicy for Hybrid {
+    fn decide(
+        &mut self,
+        _bfs_level: u32,
+        frontier_size: u64,
+        frontier_edges: u64,
+        visited: u64,
+        n: u64,
+        m: u64,
+    ) -> Mode {
+        match self.state {
+            Mode::Push => {
+                // Unexplored edges approximated as m minus edges of
+                // visited vertices ~ m * (1 - visited/n) (cheap signal the
+                // hardware scheduler can compute on the fly).
+                let unexplored =
+                    (m as f64 * (1.0 - visited as f64 / n.max(1) as f64)).max(1.0);
+                if frontier_edges as f64 > unexplored / self.alpha {
+                    self.state = Mode::Pull;
+                }
+            }
+            Mode::Pull => {
+                if (frontier_size as f64) < n as f64 / self.beta {
+                    self.state = Mode::Push;
+                }
+            }
+        }
+        self.state
+    }
+
+    fn name(&self) -> String {
+        format!("hybrid(a={},b={})", self.alpha, self.beta)
+    }
+}
+
+/// Scripted mode sequence (tests / ablations): iteration i runs `seq[i]`,
+/// clamped to the last entry.
+pub struct Scripted(pub Vec<Mode>);
+
+impl ModePolicy for Scripted {
+    fn decide(&mut self, bfs_level: u32, _: u64, _: u64, _: u64, _: u64, _: u64) -> Mode {
+        let i = (bfs_level as usize).min(self.0.len().saturating_sub(1));
+        self.0[i]
+    }
+
+    fn name(&self) -> String {
+        "scripted".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_switches() {
+        let mut p = Fixed(Mode::Pull);
+        for i in 0..5 {
+            assert_eq!(p.decide(i, 1, 1, 1, 100, 1000), Mode::Pull);
+        }
+    }
+
+    #[test]
+    fn hybrid_starts_push_switches_to_pull_and_back() {
+        let mut p = Hybrid::default();
+        // Tiny frontier: stays push.
+        assert_eq!(p.decide(0, 1, 2, 1, 1000, 10000), Mode::Push);
+        // Frontier edges explode past unexplored/alpha: go pull.
+        assert_eq!(p.decide(1, 400, 9000, 400, 1000, 10000), Mode::Pull);
+        // Large frontier: stays pull.
+        assert_eq!(p.decide(2, 500, 500, 900, 1000, 10000), Mode::Pull);
+        // Frontier collapses: back to push.
+        assert_eq!(p.decide(3, 5, 10, 990, 1000, 10000), Mode::Push);
+    }
+
+    #[test]
+    fn scripted_follows_sequence_and_clamps() {
+        let mut p = Scripted(vec![Mode::Push, Mode::Pull]);
+        assert_eq!(p.decide(0, 0, 0, 0, 1, 1), Mode::Push);
+        assert_eq!(p.decide(1, 0, 0, 0, 1, 1), Mode::Pull);
+        assert_eq!(p.decide(9, 0, 0, 0, 1, 1), Mode::Pull);
+    }
+
+    #[test]
+    fn names_are_descriptive() {
+        assert_eq!(Fixed(Mode::Push).name(), "push-only");
+        assert!(Hybrid::default().name().starts_with("hybrid"));
+    }
+}

@@ -1,0 +1,194 @@
+//! Additional scheduling policies beyond the paper's hybrid scheduler —
+//! design-exploration extensions referenced from DESIGN.md.
+//!
+//! * [`DegreeAware`] — the FPGA-HMC degree-aware heuristic of Zhang &
+//!   Li [9] (paper reference): switch on the *edge* fraction touched
+//!   rather than Beamer's two-threshold scheme.
+//! * [`FrontierFraction`] — the simple |frontier|/|V| rule several FPGA
+//!   BFS engines use (single threshold, cheap in hardware).
+//! * [`ModeTrace`] — wraps any policy and records its decisions (used
+//!   by reports and tests).
+
+use super::ModePolicy;
+use crate::bfs::Mode;
+
+/// Degree-aware switching: go pull once the frontier's outgoing edges
+/// exceed `theta` of all edges; return to push when the frontier
+/// shrinks below the same fraction of vertices.
+#[derive(Clone, Copy, Debug)]
+pub struct DegreeAware {
+    /// Edge-fraction threshold (typical: 0.03–0.10).
+    pub theta: f64,
+    state: Mode,
+}
+
+impl DegreeAware {
+    /// New policy with threshold `theta`.
+    pub fn new(theta: f64) -> Self {
+        Self {
+            theta,
+            state: Mode::Push,
+        }
+    }
+}
+
+impl Default for DegreeAware {
+    fn default() -> Self {
+        Self::new(0.05)
+    }
+}
+
+impl ModePolicy for DegreeAware {
+    fn decide(
+        &mut self,
+        _bfs_level: u32,
+        frontier_size: u64,
+        frontier_edges: u64,
+        _visited: u64,
+        n: u64,
+        m: u64,
+    ) -> Mode {
+        match self.state {
+            Mode::Push => {
+                if frontier_edges as f64 > self.theta * m as f64 {
+                    self.state = Mode::Pull;
+                }
+            }
+            Mode::Pull => {
+                if (frontier_size as f64) < self.theta * n as f64 {
+                    self.state = Mode::Push;
+                }
+            }
+        }
+        self.state
+    }
+
+    fn name(&self) -> String {
+        format!("degree-aware(theta={})", self.theta)
+    }
+}
+
+/// Single-threshold frontier-fraction rule: pull iff
+/// `frontier_size > n / divisor`.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierFraction {
+    /// Pull when the frontier exceeds |V| / divisor.
+    pub divisor: f64,
+}
+
+impl Default for FrontierFraction {
+    fn default() -> Self {
+        Self { divisor: 50.0 }
+    }
+}
+
+impl ModePolicy for FrontierFraction {
+    fn decide(&mut self, _: u32, frontier_size: u64, _: u64, _: u64, n: u64, _: u64) -> Mode {
+        if (frontier_size as f64) > n as f64 / self.divisor {
+            Mode::Pull
+        } else {
+            Mode::Push
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("frontier-fraction(1/{})", self.divisor)
+    }
+}
+
+/// Decision recorder: delegates to an inner policy and keeps the trace.
+pub struct ModeTrace<P: ModePolicy> {
+    /// Wrapped policy.
+    pub inner: P,
+    /// Decisions in iteration order.
+    pub trace: Vec<Mode>,
+}
+
+impl<P: ModePolicy> ModeTrace<P> {
+    /// Wrap a policy.
+    pub fn new(inner: P) -> Self {
+        Self {
+            inner,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Count of (push, pull) decisions so far.
+    pub fn counts(&self) -> (usize, usize) {
+        let push = self.trace.iter().filter(|m| **m == Mode::Push).count();
+        (push, self.trace.len() - push)
+    }
+}
+
+impl<P: ModePolicy> ModePolicy for ModeTrace<P> {
+    fn decide(
+        &mut self,
+        bfs_level: u32,
+        frontier_size: u64,
+        frontier_edges: u64,
+        visited: u64,
+        n: u64,
+        m: u64,
+    ) -> Mode {
+        let d = self
+            .inner
+            .decide(bfs_level, frontier_size, frontier_edges, visited, n, m);
+        self.trace.push(d);
+        d
+    }
+
+    fn name(&self) -> String {
+        format!("traced({})", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_aware_switches_on_edge_fraction() {
+        let mut p = DegreeAware::new(0.05);
+        // 3% of edges: stay push.
+        assert_eq!(p.decide(0, 10, 30, 10, 1000, 1000), Mode::Push);
+        // 10% of edges: switch to pull.
+        assert_eq!(p.decide(1, 50, 100, 60, 1000, 1000), Mode::Pull);
+        // Small frontier: back to push.
+        assert_eq!(p.decide(2, 10, 5, 900, 1000, 1000), Mode::Push);
+    }
+
+    #[test]
+    fn frontier_fraction_is_stateless() {
+        let mut p = FrontierFraction { divisor: 10.0 };
+        assert_eq!(p.decide(0, 5, 0, 0, 100, 0), Mode::Push);
+        assert_eq!(p.decide(1, 50, 0, 0, 100, 0), Mode::Pull);
+        assert_eq!(p.decide(2, 5, 0, 0, 100, 0), Mode::Push);
+    }
+
+    #[test]
+    fn trace_records_decisions() {
+        let mut p = ModeTrace::new(FrontierFraction { divisor: 10.0 });
+        p.decide(0, 5, 0, 0, 100, 0);
+        p.decide(1, 50, 0, 0, 100, 0);
+        assert_eq!(p.trace, vec![Mode::Push, Mode::Pull]);
+        assert_eq!(p.counts(), (1, 1));
+        assert!(p.name().starts_with("traced"));
+    }
+
+    #[test]
+    fn policies_produce_correct_bfs() {
+        use crate::bfs::bitmap::run_bfs;
+        use crate::bfs::reference;
+        use crate::graph::{generators, Partitioning};
+        let g = generators::rmat_graph500(9, 8, 17);
+        let root = reference::sample_roots(&g, 1, 17)[0];
+        let truth = reference::bfs(&g, root);
+        for policy in [
+            &mut DegreeAware::default() as &mut dyn ModePolicy,
+            &mut FrontierFraction::default(),
+        ] {
+            let run = run_bfs(&g, Partitioning::new(4, 2), root, policy);
+            assert_eq!(run.levels, truth.levels, "{}", policy.name());
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Simulator configuration: the published U280 / ScalaBFS constants with
+//! every knob the experiments sweep.
+
+use crate::dispatcher::{Dispatcher, FullCrossbar, MultiLayerCrossbar};
+use crate::graph::Partitioning;
+use crate::hbm::pc::HbmConfig;
+use crate::hbm::switch::SwitchModel;
+use crate::pe::pe::PeConfig;
+
+/// Which dispatcher design the build uses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DispatcherKind {
+    /// Full N×N crossbar (paper's configs with ≤32 PEs).
+    Full,
+    /// Multi-layer crossbar with these radices (paper's 64-PE config:
+    /// `[4, 4, 4]`).
+    MultiLayer(Vec<usize>),
+}
+
+impl DispatcherKind {
+    /// The paper's choice for a PE count: full crossbar up to 32 PEs,
+    /// multi-layer radix-4 (with a final radix-2 stage for odd powers of
+    /// two) beyond — the 64-PE config uses 3 layers of 4×4 (§VI-B).
+    pub fn paper_default(n_pes: usize) -> Self {
+        if n_pes > 32 && n_pes.is_power_of_two() {
+            let mut factors = vec![4usize; (n_pes.trailing_zeros() / 2) as usize];
+            if n_pes.trailing_zeros() % 2 == 1 {
+                factors.push(2);
+            }
+            DispatcherKind::MultiLayer(factors)
+        } else {
+            DispatcherKind::Full
+        }
+    }
+
+    /// Instantiate the dispatcher for `n_pes` ports.
+    pub fn build(&self, n_pes: usize) -> Box<dyn Dispatcher> {
+        match self {
+            DispatcherKind::Full => Box::new(FullCrossbar::new(n_pes)),
+            DispatcherKind::MultiLayer(factors) => {
+                let ml = MultiLayerCrossbar::new(factors.clone());
+                assert_eq!(ml.n(), n_pes, "factorization must multiply to N");
+                Box::new(ml)
+            }
+        }
+    }
+}
+
+/// Edge-data placement across HBM PCs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// ScalaBFS placement: subgraph `i` in PC `pg_of(i)`; every HBM
+    /// reader touches only its own PC (no switch crossing).
+    Partitioned,
+    /// Fig 11 baseline: unpartitioned edge data filled sequentially from
+    /// PC0; readers cross the switch to reach remote PCs.
+    Unpartitioned,
+}
+
+/// Full simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// PE/PG topology.
+    pub part: Partitioning,
+    /// Core clock in MHz (paper RTL: 90).
+    pub f_mhz: f64,
+    /// Vertex size in bytes (`S_v`).
+    pub sv_bytes: u64,
+    /// Per-PC HBM parameters.
+    pub hbm: HbmConfig,
+    /// Switch-network crossing model.
+    pub switch: SwitchModel,
+    /// PE stage parameters.
+    pub pe: PeConfig,
+    /// Dispatcher design.
+    pub dispatcher: DispatcherKind,
+    /// Edge-data placement.
+    pub placement: Placement,
+    /// Fixed per-iteration overhead (scheduler sync + frontier swap).
+    pub iter_sync_cycles: u64,
+    /// Chunked pull-mode early exit (ablation; the paper's reader
+    /// streams whole lists — see [`crate::bfs::bitmap::TrafficConfig`]).
+    pub pull_early_exit: bool,
+}
+
+impl SimConfig {
+    /// The paper's configuration for a given PC/PE count.
+    pub fn u280(num_pcs: usize, num_pes: usize) -> Self {
+        let part = Partitioning::new(num_pes, num_pcs);
+        Self {
+            part,
+            f_mhz: 90.0,
+            sv_bytes: 4,
+            hbm: HbmConfig::default(),
+            switch: SwitchModel::default(),
+            pe: PeConfig::default(),
+            dispatcher: DispatcherKind::paper_default(num_pes),
+            placement: Placement::Partitioned,
+            iter_sync_cycles: 32,
+            pull_early_exit: false,
+        }
+    }
+
+    /// The headline 32-PC / 64-PE configuration.
+    pub fn u280_full() -> Self {
+        Self::u280(32, 64)
+    }
+
+    /// AXI data width per Eq 1.
+    pub fn dw_bytes(&self) -> u64 {
+        2 * self.part.pes_per_pg() as u64 * self.sv_bytes
+    }
+
+    /// Pipeline-fill cycles per iteration: HBM latency + dispatcher hops.
+    pub fn fill_cycles(&self) -> u64 {
+        let hops = self.dispatcher.build(self.part.num_pes).hops() as u64;
+        self.hbm.latency_cycles + hops
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.f_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_dispatcher_selection() {
+        assert_eq!(DispatcherKind::paper_default(16), DispatcherKind::Full);
+        assert_eq!(DispatcherKind::paper_default(32), DispatcherKind::Full);
+        assert_eq!(
+            DispatcherKind::paper_default(64),
+            DispatcherKind::MultiLayer(vec![4, 4, 4])
+        );
+    }
+
+    #[test]
+    fn u280_full_matches_paper_constants() {
+        let c = SimConfig::u280_full();
+        assert_eq!(c.part.num_pgs, 32);
+        assert_eq!(c.part.num_pes, 64);
+        assert_eq!(c.f_mhz, 90.0);
+        // 2 PEs per PC -> DW = 16B = 128 bits (paper §VI-E burst maths).
+        assert_eq!(c.dw_bytes(), 16);
+    }
+
+    #[test]
+    fn dispatcher_build_checks_arity() {
+        let k = DispatcherKind::MultiLayer(vec![4, 4, 4]);
+        let d = k.build(64);
+        assert_eq!(d.hops(), 3);
+    }
+
+    #[test]
+    fn cycles_to_seconds_at_90mhz() {
+        let c = SimConfig::u280_full();
+        let s = c.cycles_to_seconds(90_000_000);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,389 @@
+//! Cycle-stepped, FIFO-accurate simulator.
+//!
+//! Models, cycle by cycle: per-PG HBM readers (outstanding requests,
+//! latency, one DW beat per cycle), the vertex dispatcher's output-port
+//! serialization with bounded FIFOs and hop latency, and PEs consuming
+//! messages at the double-pump rate. It re-derives the per-iteration
+//! work from the same Algorithm-2 semantics as the functional engine,
+//! so its visited/level results are cross-checked against it in tests.
+//!
+//! Intended for small graphs (RMAT18-class): it steps every cycle. The
+//! analytic [`super::throughput`] simulator covers the big datasets; the
+//! cycle simulator validates it (EXPERIMENTS.md reports the agreement).
+
+use super::config::SimConfig;
+use crate::bfs::{Mode, INF};
+use crate::graph::{Graph, VertexId};
+use crate::hbm::axi::{AxiConfig, ReadKind};
+use crate::hbm::reader::HbmReader;
+use crate::sched::ModePolicy;
+use crate::util::Bitset;
+use std::collections::VecDeque;
+
+/// Result of a cycle-accurate run.
+#[derive(Clone, Debug)]
+pub struct CycleResult {
+    /// Total simulated cycles.
+    pub cycles: u64,
+    /// Per-iteration cycles.
+    pub iter_cycles: Vec<u64>,
+    /// Seconds at the configured clock.
+    pub seconds: f64,
+    /// Final levels (must match the functional engine).
+    pub levels: Vec<u32>,
+    /// Graph500 traversed edges.
+    pub traversed_edges: u64,
+    /// GTEPS.
+    pub gteps: f64,
+    /// Dispatcher backpressure events observed.
+    pub backpressure: u64,
+}
+
+/// The cycle-stepped simulator.
+pub struct CycleSim<'g> {
+    graph: &'g Graph,
+    cfg: SimConfig,
+}
+
+/// A routed message: neighbor `vid` (push) or parent check (pull, with
+/// the child it may activate).
+#[derive(Clone, Copy, Debug)]
+struct Msg {
+    vid: VertexId,
+    child: VertexId, // == vid in push mode
+}
+
+impl<'g> CycleSim<'g> {
+    /// New simulator for a graph + config.
+    pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
+        Self { graph, cfg }
+    }
+
+    /// Run BFS from `root` cycle-accurately.
+    pub fn run(&self, root: VertexId, policy: &mut dyn ModePolicy) -> CycleResult {
+        let n = self.graph.num_vertices();
+        let part = self.cfg.part;
+        let npes = part.num_pes;
+        let npgs = part.num_pgs;
+        let dw = self.cfg.dw_bytes();
+        let sv = self.cfg.sv_bytes;
+        let verts_per_beat = (dw / sv).max(1) as usize;
+        let hops = self.cfg.dispatcher.build(npes).hops() as u64;
+
+        let mut current = Bitset::new(n);
+        let mut next = Bitset::new(n);
+        let mut visited = Bitset::new(n);
+        let mut levels = vec![INF; n];
+        levels[root as usize] = 0;
+        current.set(root as usize);
+        visited.set(root as usize);
+
+        let mut total_cycles = 0u64;
+        let mut iter_cycles = Vec::new();
+        let mut bfs_level = 0u32;
+        let mut frontier = 1u64;
+        let mut frontier_edges = self.graph.csr.degree(root);
+        let mut visited_count = 1u64;
+        let mut backpressure = 0u64;
+
+        while frontier > 0 {
+            let mode = policy.decide(
+                bfs_level,
+                frontier,
+                frontier_edges,
+                visited_count,
+                n as u64,
+                self.graph.num_edges(),
+            );
+            // ---- Build this iteration's fetch lists per PG. ----
+            // Each entry: (vertex, entries to stream). Pull mode applies
+            // the same chunked early exit as the functional engine: the
+            // HBM reader fetches DW-sized chunks and stops after the
+            // chunk containing the first active parent.
+            let mut fetches: Vec<VecDeque<(VertexId, usize)>> = vec![VecDeque::new(); npgs];
+            match mode {
+                Mode::Push => {
+                    for v in current.iter_ones() {
+                        let pg = part.pg_of(v as VertexId);
+                        let len = self.graph.out_neighbors(v as VertexId).len();
+                        fetches[pg].push_back((v as VertexId, len));
+                    }
+                }
+                Mode::Pull => {
+                    for v in visited.iter_zeros() {
+                        let list = self.graph.in_neighbors(v as VertexId);
+                        if list.is_empty() {
+                            continue;
+                        }
+                        let fetched = if self.cfg.pull_early_exit {
+                            match list.iter().position(|&u| current.get(u as usize)) {
+                                Some(i) => ((i + verts_per_beat) / verts_per_beat
+                                    * verts_per_beat)
+                                    .min(list.len()),
+                                None => list.len(),
+                            }
+                        } else {
+                            list.len()
+                        };
+                        let pg = part.pg_of(v as VertexId);
+                        fetches[pg].push_back((v as VertexId, fetched));
+                    }
+                }
+            }
+
+            // ---- Cycle loop for the iteration. ----
+            let mut readers: Vec<HbmReader> = (0..npgs)
+                .map(|_| {
+                    // Outstanding depth sized to hide the HBM latency at
+                    // one beat per cycle (Little's law: >= latency
+                    // requests in flight; Shuhai's measurement rig uses
+                    // an outstanding buffer of 256).
+                    HbmReader::new(
+                        AxiConfig {
+                            data_width: dw,
+                            max_burst: 64,
+                            outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
+                        },
+                        self.cfg.hbm.latency_cycles,
+                    )
+                })
+                .collect();
+            // Per-PG: stream cursors of lists currently being beaten out.
+            let mut list_queue: Vec<VecDeque<(VertexId, usize)>> =
+                vec![VecDeque::new(); npgs];
+            // Dispatcher input staging and per-PE output FIFOs.
+            let mut in_flight_msgs: VecDeque<(u64, usize, Msg)> = VecDeque::new();
+            let mut pe_fifo: Vec<VecDeque<Msg>> =
+                vec![VecDeque::new(); npes];
+            // Per-PG cursor into the neighbor list being streamed.
+            let mut stream_pos: Vec<usize> = vec![0; npgs];
+            let mut stream_vert: Vec<Option<(VertexId, usize)>> = vec![None; npgs];
+
+            // P1 scan prologue: each PE scans its interval (pipelined with
+            // fetch issue; charge the scan as a floor at the end).
+            let interval_bits = (n as u64).div_ceil(npes as u64);
+            let scan_floor = interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64);
+
+            // Seed the readers.
+            for pg in 0..npgs {
+                while let Some((v, fetch_len)) = fetches[pg].pop_front() {
+                    readers[pg]
+                        .request_list(part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
+                    list_queue[pg].push_back((v, fetch_len));
+                }
+            }
+
+            let mut cycle = 0u64;
+            let mut newly = 0u64;
+            let mut pe_budget = vec![0u32; npes];
+            loop {
+                cycle += 1;
+                // HBM readers: one beat per PG per cycle.
+                for pg in 0..npgs {
+                    // Pops list_queue until a stream with entries to send
+                    // is active (zero-fetch lists have no edge beats, so
+                    // they must never occupy the stream slot).
+                    let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
+                                       stream_pos: &mut usize,
+                                       queue: &mut VecDeque<(VertexId, usize)>| {
+                        while stream_vert.is_none() {
+                            let Some((v, fetch_len)) = queue.pop_front() else {
+                                break;
+                            };
+                            if fetch_len > 0 {
+                                *stream_vert = Some((v, fetch_len));
+                                *stream_pos = 0;
+                            }
+                        }
+                    };
+                    if let Some(beat) = readers[pg].tick() {
+                        match beat.kind {
+                            ReadKind::Offset => {
+                                // Offset beat: select the next list to stream.
+                                next_stream(
+                                    &mut stream_vert[pg],
+                                    &mut stream_pos[pg],
+                                    &mut list_queue[pg],
+                                );
+                            }
+                            ReadKind::Edges => {
+                                next_stream(
+                                    &mut stream_vert[pg],
+                                    &mut stream_pos[pg],
+                                    &mut list_queue[pg],
+                                );
+                                if let Some((v, fetch_len)) = stream_vert[pg] {
+                                    let list = match mode {
+                                        Mode::Push => self.graph.out_neighbors(v),
+                                        Mode::Pull => self.graph.in_neighbors(v),
+                                    };
+                                    let end =
+                                        (stream_pos[pg] + verts_per_beat).min(fetch_len);
+                                    for &u in &list[stream_pos[pg]..end] {
+                                        let msg = match mode {
+                                            Mode::Push => Msg { vid: u, child: u },
+                                            Mode::Pull => Msg { vid: u, child: v },
+                                        };
+                                        in_flight_msgs.push_back((
+                                            cycle + hops,
+                                            part.pe_of(msg.vid),
+                                            msg,
+                                        ));
+                                    }
+                                    stream_pos[pg] = end;
+                                    if end >= fetch_len {
+                                        stream_vert[pg] = None;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // Dispatcher delivery: after `hops` cycles, each output
+                // port delivers up to p2_msgs_per_cycle messages per
+                // cycle — the port width Eq 1 sizes the AXI bus for (two
+                // vertices per PE per cycle, absorbed by the double-pump
+                // BRAM).
+                let port_width = self.cfg.pe.p2_msgs_per_cycle;
+                let mut delivered = vec![0u32; npes];
+                let mut requeue: VecDeque<(u64, usize, Msg)> = VecDeque::new();
+                while let Some((t, pe, msg)) = in_flight_msgs.pop_front() {
+                    if t > cycle {
+                        requeue.push_back((t, pe, msg));
+                        continue;
+                    }
+                    if delivered[pe] >= port_width || pe_fifo[pe].len() >= 64 {
+                        backpressure += u64::from(pe_fifo[pe].len() >= 64);
+                        requeue.push_back((t, pe, msg));
+                        continue;
+                    }
+                    delivered[pe] += 1;
+                    pe_fifo[pe].push_back(msg);
+                }
+                in_flight_msgs = requeue;
+
+                // PEs: consume up to bram_ops_per_cycle messages.
+                for pe in 0..npes {
+                    pe_budget[pe] = self.cfg.pe.bram_ops_per_cycle;
+                    while pe_budget[pe] > 0 {
+                        let Some(msg) = pe_fifo[pe].pop_front() else {
+                            break;
+                        };
+                        pe_budget[pe] -= 1;
+                        match mode {
+                            Mode::Push => {
+                                let w = msg.vid as usize;
+                                if !visited.get(w) {
+                                    visited.set(w);
+                                    next.set(w);
+                                    levels[w] = bfs_level + 1;
+                                    newly += 1;
+                                }
+                            }
+                            Mode::Pull => {
+                                let u = msg.vid as usize;
+                                let c = msg.child as usize;
+                                if current.get(u) && !visited.get(c) {
+                                    visited.set(c);
+                                    next.set(c);
+                                    levels[c] = bfs_level + 1;
+                                    newly += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+
+                // Termination: all pipelines drained.
+                let readers_idle = readers.iter().all(|r| r.idle());
+                let streams_idle =
+                    stream_vert.iter().all(|s| s.is_none()) && list_queue.iter().all(|q| q.is_empty());
+                let dispatch_idle = in_flight_msgs.is_empty();
+                let pes_idle = pe_fifo.iter().all(|f| f.is_empty());
+                if readers_idle && streams_idle && dispatch_idle && pes_idle {
+                    break;
+                }
+                if cycle > 500_000_000 {
+                    panic!("cycle sim did not converge");
+                }
+            }
+            let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
+            total_cycles += it_cycles;
+            iter_cycles.push(it_cycles);
+
+            current.swap_with(&mut next);
+            next.clear_all();
+            frontier = newly;
+            visited_count += newly;
+            frontier_edges = current
+                .iter_ones()
+                .map(|v| self.graph.csr.degree(v as VertexId))
+                .sum();
+            bfs_level += 1;
+        }
+
+        let traversed_edges: u64 = visited
+            .iter_ones()
+            .map(|v| self.graph.csr.degree(v as VertexId))
+            .sum();
+        let seconds = self.cfg.cycles_to_seconds(total_cycles);
+        CycleResult {
+            cycles: total_cycles,
+            iter_cycles,
+            seconds,
+            levels,
+            traversed_edges,
+            gteps: if seconds > 0.0 {
+                traversed_edges as f64 / seconds / 1e9
+            } else {
+                0.0
+            },
+            backpressure,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::{Fixed, Hybrid};
+
+    #[test]
+    fn cycle_sim_levels_match_reference_push() {
+        let g = generators::rmat_graph500(8, 8, 21);
+        let root = reference::sample_roots(&g, 1, 21)[0];
+        let sim = CycleSim::new(&g, SimConfig::u280(4, 8));
+        let res = sim.run(root, &mut Fixed(Mode::Push));
+        let r = reference::bfs(&g, root);
+        assert_eq!(res.levels, r.levels);
+    }
+
+    #[test]
+    fn cycle_sim_levels_match_reference_hybrid() {
+        let g = generators::rmat_graph500(9, 8, 22);
+        let root = reference::sample_roots(&g, 1, 22)[0];
+        let sim = CycleSim::new(&g, SimConfig::u280(4, 8));
+        let res = sim.run(root, &mut Hybrid::default());
+        let r = reference::bfs(&g, root);
+        assert_eq!(res.levels, r.levels);
+        assert!(res.gteps > 0.0);
+    }
+
+    #[test]
+    fn more_pcs_fewer_cycles() {
+        let g = generators::rmat_graph500(9, 16, 23);
+        let root = reference::sample_roots(&g, 1, 23)[0];
+        let slow = CycleSim::new(&g, SimConfig::u280(1, 2)).run(root, &mut Fixed(Mode::Push));
+        let fast = CycleSim::new(&g, SimConfig::u280(8, 16)).run(root, &mut Fixed(Mode::Push));
+        // Fixed per-iteration costs (latency fill, sync) don't scale, so
+        // an RMAT9 graph sees ~3x rather than 8x from 8 PCs.
+        assert!(
+            fast.cycles * 5 < slow.cycles * 2,
+            "8PC {} vs 1PC {}",
+            fast.cycles,
+            slow.cycles
+        );
+    }
+}

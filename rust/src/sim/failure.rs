@@ -1,0 +1,175 @@
+//! Failure / degradation injection (robustness study, extension).
+//!
+//! HBM PCs do not fail outright on a healthy board, but effective
+//! per-PC bandwidth varies (temperature throttling, refresh storms,
+//! ECC). Because ScalaBFS statically binds one PG to one PC, a single
+//! slow PC stalls every level-synchronous iteration — a straggler
+//! effect this module quantifies. (An interleaved/unpartitioned design
+//! would smooth it, at the cost of Fig 3's crossing penalty: the
+//! trade-off behind the paper's placement choice.)
+
+use super::config::SimConfig;
+use super::results::{Bottleneck, IterBreakdown, SimResult};
+use crate::bfs::bitmap::BfsRun;
+use crate::bfs::traffic::IterTraffic;
+
+/// A bandwidth derate applied to specific PCs.
+#[derive(Clone, Debug, Default)]
+pub struct Degradation {
+    /// (pc index, multiplier in (0,1]) pairs; unlisted PCs run at 1.0.
+    pub derates: Vec<(usize, f64)>,
+}
+
+impl Degradation {
+    /// Degrade a single PC.
+    pub fn single(pc: usize, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor <= 1.0);
+        Self {
+            derates: vec![(pc, factor)],
+        }
+    }
+
+    /// Multiplier for a PC.
+    pub fn factor(&self, pc: usize) -> f64 {
+        self.derates
+            .iter()
+            .find(|(p, _)| *p == pc)
+            .map(|(_, f)| *f)
+            .unwrap_or(1.0)
+    }
+}
+
+/// Straggler-aware throughput simulation: identical to
+/// [`super::throughput::ThroughputSim`] but with per-PC bandwidth
+/// multipliers; the iteration's memory phase is bound by the *slowest*
+/// PC's service time (level-synchronous barrier).
+pub struct DegradedSim {
+    /// Base configuration.
+    pub cfg: SimConfig,
+    /// Injected degradation.
+    pub degradation: Degradation,
+}
+
+impl DegradedSim {
+    /// New degraded simulator.
+    pub fn new(cfg: SimConfig, degradation: Degradation) -> Self {
+        Self { cfg, degradation }
+    }
+
+    fn pc_bytes_per_cycle(&self, pc: usize) -> f64 {
+        let dw = self.cfg.dw_bytes() as f64;
+        let cap = self.cfg.hbm.bw_max * self.cfg.hbm.random_efficiency
+            / (self.cfg.f_mhz * 1e6);
+        dw.min(cap) * self.degradation.factor(pc)
+    }
+
+    fn memory_cycles(&self, it: &IterTraffic) -> u64 {
+        (0..self.cfg.part.num_pgs)
+            .map(|pg| {
+                let bytes = it.per_pg_offset_bytes[pg] + it.per_pg_edge_bytes[pg];
+                (bytes as f64 / self.pc_bytes_per_cycle(pg)).ceil() as u64
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Simulate a functional run under degradation.
+    pub fn simulate(&self, run: &BfsRun, graph_name: &str) -> SimResult {
+        let base = super::throughput::ThroughputSim::new(self.cfg.clone());
+        let n_vertices = run.levels.len() as u64;
+        let fill = self.cfg.fill_cycles();
+        let mut iters = Vec::with_capacity(run.traffic.iters.len());
+        let mut total_cycles = 0u64;
+        for it in &run.traffic.iters {
+            // Reuse the healthy sim's pe/dispatch formulas via a
+            // one-iteration probe, override only the memory phase.
+            let probe = base.probe_iteration(it, n_vertices);
+            let mem = self.memory_cycles(it);
+            let overhead = fill + self.cfg.iter_sync_cycles;
+            let body = mem.max(probe.pe_cycles).max(probe.dispatch_cycles);
+            let bottleneck = if body == mem {
+                Bottleneck::Memory
+            } else if body == probe.pe_cycles {
+                Bottleneck::Compute
+            } else {
+                Bottleneck::Dispatch
+            };
+            let total = body + overhead;
+            total_cycles += total;
+            iters.push(IterBreakdown {
+                iteration: it.iteration,
+                mode: it.mode,
+                mem_cycles: mem,
+                pe_cycles: probe.pe_cycles,
+                dispatch_cycles: probe.dispatch_cycles,
+                overhead_cycles: overhead,
+                total_cycles: total,
+                bottleneck,
+                bytes: it.total_bytes(),
+            });
+        }
+        let seconds = self.cfg.cycles_to_seconds(total_cycles);
+        let bytes: u64 = iters.iter().map(|i| i.bytes).sum();
+        SimResult {
+            graph: format!("{graph_name}(degraded)"),
+            iters,
+            total_cycles,
+            seconds,
+            traversed_edges: run.traversed_edges,
+            gteps: run.traversed_edges as f64 / seconds.max(1e-30) / 1e9,
+            aggregate_bw: bytes as f64 / seconds.max(1e-30),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::bitmap::run_bfs;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::Hybrid;
+    use crate::sim::throughput::ThroughputSim;
+
+    fn workload() -> (crate::graph::Graph, BfsRun, SimConfig) {
+        let g = generators::rmat_graph500(12, 16, 4);
+        let root = reference::sample_roots(&g, 1, 4)[0];
+        let cfg = SimConfig::u280(8, 16);
+        let run = run_bfs(&g, cfg.part, root, &mut Hybrid::default());
+        (g, run, cfg)
+    }
+
+    #[test]
+    fn no_degradation_matches_healthy_sim() {
+        let (g, run, cfg) = workload();
+        let healthy = ThroughputSim::new(cfg.clone()).simulate(&run, &g.name, 0);
+        let degraded = DegradedSim::new(cfg, Degradation::default()).simulate(&run, &g.name);
+        assert_eq!(healthy.total_cycles, degraded.total_cycles);
+    }
+
+    #[test]
+    fn single_slow_pc_stalls_everything() {
+        let (g, run, cfg) = workload();
+        let healthy = ThroughputSim::new(cfg.clone()).simulate(&run, &g.name, 0);
+        // PC 0 at 25% speed: the whole accelerator should slow far more
+        // than 1/8 of 75% (the straggler binds each barrier).
+        let degraded =
+            DegradedSim::new(cfg, Degradation::single(0, 0.25)).simulate(&run, &g.name);
+        let slowdown = degraded.seconds / healthy.seconds;
+        assert!(slowdown > 1.5, "slowdown only {slowdown:.2}");
+        assert!(degraded.gteps < healthy.gteps);
+    }
+
+    #[test]
+    fn mild_uniform_degradation_scales_proportionally() {
+        let (g, run, cfg) = workload();
+        let healthy = ThroughputSim::new(cfg.clone()).simulate(&run, &g.name, 0);
+        let deg = Degradation {
+            derates: (0..8).map(|pc| (pc, 0.5)).collect(),
+        };
+        let degraded = DegradedSim::new(cfg, deg).simulate(&run, &g.name);
+        let slowdown = degraded.seconds / healthy.seconds;
+        // Memory-bound iterations double; overhead doesn't: 1.3x - 2.0x.
+        assert!((1.2..=2.05).contains(&slowdown), "slowdown {slowdown:.2}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Timing simulators for the ScalaBFS accelerator on the U280.
+//!
+//! * [`throughput`] — per-iteration analytic simulator: converts the
+//!   functional engine's traffic counters into cycles using the paper's
+//!   Section-V bandwidth balance (Eq 1–6) plus measured load imbalance.
+//!   Scales to the full Table-I datasets.
+//! * [`cycle`] — cycle-stepped, FIFO-accurate simulator of the HBM
+//!   readers, dispatcher and PEs. Used on small graphs (RMAT18-*) to
+//!   validate the analytic model and for dispatcher ablations.
+//! * [`config`] / [`results`] — shared configuration and result types.
+
+pub mod config;
+pub mod throughput;
+pub mod cycle;
+pub mod results;
+pub mod failure;
+
+pub use config::{DispatcherKind, Placement, SimConfig};
+pub use results::{IterBreakdown, SimResult};
+pub use throughput::ThroughputSim;
+pub use cycle::CycleSim;

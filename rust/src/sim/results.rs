@@ -1,0 +1,139 @@
+//! Simulation result types: per-iteration cycle breakdowns and run-level
+//! aggregates (GTEPS, achieved aggregate bandwidth — the quantities the
+//! paper's figures plot).
+
+use crate::bfs::Mode;
+
+/// Which pipeline phase bounded an iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// HBM service time on the busiest PC.
+    Memory,
+    /// PE P1/P2/P3 processing on the slowest PE.
+    Compute,
+    /// Vertex dispatcher output-port serialization.
+    Dispatch,
+}
+
+impl std::fmt::Display for Bottleneck {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Bottleneck::Memory => write!(f, "mem"),
+            Bottleneck::Compute => write!(f, "pe"),
+            Bottleneck::Dispatch => write!(f, "xbar"),
+        }
+    }
+}
+
+/// Cycle breakdown for one iteration.
+#[derive(Clone, Debug)]
+pub struct IterBreakdown {
+    /// Iteration index.
+    pub iteration: u32,
+    /// Mode the iteration ran in.
+    pub mode: Mode,
+    /// Memory-phase cycles (busiest PC).
+    pub mem_cycles: u64,
+    /// PE-phase cycles (slowest PE).
+    pub pe_cycles: u64,
+    /// Dispatcher cycles (busiest output port).
+    pub dispatch_cycles: u64,
+    /// Fixed overhead (pipeline fill + sync).
+    pub overhead_cycles: u64,
+    /// Total charged for the iteration.
+    pub total_cycles: u64,
+    /// Binding phase.
+    pub bottleneck: Bottleneck,
+    /// HBM bytes moved.
+    pub bytes: u64,
+}
+
+/// Result of simulating one BFS run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Dataset name.
+    pub graph: String,
+    /// Per-iteration breakdowns.
+    pub iters: Vec<IterBreakdown>,
+    /// Total cycles.
+    pub total_cycles: u64,
+    /// Wall time implied by the clock.
+    pub seconds: f64,
+    /// Graph500 traversed edges of the run.
+    pub traversed_edges: u64,
+    /// GTEPS.
+    pub gteps: f64,
+    /// Achieved aggregate HBM bandwidth (bytes moved / time).
+    pub aggregate_bw: f64,
+}
+
+impl SimResult {
+    /// Total bytes moved.
+    pub fn total_bytes(&self) -> u64 {
+        self.iters.iter().map(|i| i.bytes).sum()
+    }
+
+    /// Iterations bound by each phase `(mem, pe, dispatch)`.
+    pub fn bottleneck_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for it in &self.iters {
+            match it.bottleneck {
+                Bottleneck::Memory => c.0 += 1,
+                Bottleneck::Compute => c.1 += 1,
+                Bottleneck::Dispatch => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let (m, p, d) = self.bottleneck_counts();
+        format!(
+            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}",
+            self.graph,
+            self.iters.len(),
+            self.seconds * 1e3,
+            self.gteps,
+            self.aggregate_bw / 1e9,
+            m,
+            p,
+            d
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(bott: Bottleneck) -> IterBreakdown {
+        IterBreakdown {
+            iteration: 0,
+            mode: Mode::Push,
+            mem_cycles: 10,
+            pe_cycles: 5,
+            dispatch_cycles: 2,
+            overhead_cycles: 1,
+            total_cycles: 11,
+            bottleneck: bott,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = SimResult {
+            graph: "t".into(),
+            iters: vec![mk(Bottleneck::Memory), mk(Bottleneck::Compute), mk(Bottleneck::Memory)],
+            total_cycles: 33,
+            seconds: 1e-3,
+            traversed_edges: 1000,
+            gteps: 1e-3,
+            aggregate_bw: 3e5,
+            };
+        assert_eq!(r.total_bytes(), 300);
+        assert_eq!(r.bottleneck_counts(), (2, 1, 0));
+        assert!(r.summary().contains("GTEPS"));
+    }
+}

@@ -1,0 +1,274 @@
+//! Packed 64-bit-word bitset.
+//!
+//! This is the software analog of the paper's double-pump BRAM bitmaps
+//! (current frontier / next frontier / visited map — Algorithm 2): one bit
+//! per vertex, scanned words-at-a-time. The hot BFS loops operate on whole
+//! words, which is what makes the Rust functional engine fast enough to
+//! drive the timing simulator over hundreds of millions of edges.
+
+/// A fixed-capacity bitset over `u64` words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitset {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    /// All-zeros bitset with capacity for `len` bits.
+    pub fn new(len: usize) -> Self {
+        Self {
+            bits: vec![0u64; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Number of addressable bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when `len() == 0`.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Underlying words (read-only).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Underlying words (mutable) — used by the engines for word-level ops.
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.bits
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.bits[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.bits[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Test-and-set; returns the previous value. This is the single-cycle
+    /// check+update the paper performs on the visited map in stage P2/P3.
+    #[inline]
+    pub fn test_and_set(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let w = i >> 6;
+        let m = 1u64 << (i & 63);
+        let prev = self.bits[w] & m != 0;
+        self.bits[w] |= m;
+        prev
+    }
+
+    /// Zero all bits.
+    pub fn clear_all(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Population count.
+    pub fn count_ones(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if no bit is set.
+    pub fn none(&self) -> bool {
+        self.bits.iter().all(|&w| w == 0)
+    }
+
+    /// Swap contents with another bitset of identical capacity
+    /// (the `swap(current_frontier, next_frontier)` of Algorithm 2).
+    pub fn swap_with(&mut self, other: &mut Bitset) {
+        debug_assert_eq!(self.len, other.len);
+        std::mem::swap(&mut self.bits, &mut other.bits);
+    }
+
+    /// Iterate over set bit indices (words-at-a-time scan).
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter {
+            bits: &self.bits,
+            len: self.len,
+            word_idx: 0,
+            cur: self.bits.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// Iterate over **clear** bit indices below `len` (pull-mode scans the
+    /// unvisited vertices, i.e. zeros of the visited map).
+    pub fn iter_zeros(&self) -> ZerosIter<'_> {
+        ZerosIter {
+            bits: &self.bits,
+            len: self.len,
+            word_idx: 0,
+            cur: !self.bits.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Iterator over set bits.
+pub struct OnesIter<'a> {
+    bits: &'a [u64],
+    len: usize,
+    word_idx: usize,
+    cur: u64,
+}
+
+impl<'a> Iterator for OnesIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let tz = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                let idx = (self.word_idx << 6) + tz;
+                if idx < self.len {
+                    return Some(idx);
+                }
+                return None;
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.bits.len() {
+                return None;
+            }
+            self.cur = self.bits[self.word_idx];
+        }
+    }
+}
+
+/// Iterator over clear bits.
+pub struct ZerosIter<'a> {
+    bits: &'a [u64],
+    len: usize,
+    word_idx: usize,
+    cur: u64,
+}
+
+impl<'a> Iterator for ZerosIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let tz = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                let idx = (self.word_idx << 6) + tz;
+                if idx < self.len {
+                    return Some(idx);
+                }
+                return None;
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.bits.len() {
+                return None;
+            }
+            self.cur = !self.bits[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear_roundtrip() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(63);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(63) && b.get(64) && b.get(129));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 3);
+    }
+
+    #[test]
+    fn test_and_set_reports_previous() {
+        let mut b = Bitset::new(10);
+        assert!(!b.test_and_set(5));
+        assert!(b.test_and_set(5));
+    }
+
+    #[test]
+    fn iter_ones_matches_naive() {
+        let mut b = Bitset::new(200);
+        let idxs = [0usize, 1, 63, 64, 65, 127, 128, 199];
+        for &i in &idxs {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, idxs.to_vec());
+    }
+
+    #[test]
+    fn iter_zeros_complement_of_ones() {
+        let mut b = Bitset::new(100);
+        for i in (0..100).step_by(3) {
+            b.set(i);
+        }
+        let zeros: Vec<usize> = b.iter_zeros().collect();
+        let expect: Vec<usize> = (0..100).filter(|i| i % 3 != 0).collect();
+        assert_eq!(zeros, expect);
+    }
+
+    #[test]
+    fn iter_handles_tail_word_bits() {
+        // Bits beyond `len` in the last word must never be yielded.
+        let mut b = Bitset::new(65);
+        b.set(64);
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![64]);
+        assert_eq!(b.iter_zeros().count(), 64);
+    }
+
+    #[test]
+    fn swap_with_exchanges_contents() {
+        let mut a = Bitset::new(64);
+        let mut b = Bitset::new(64);
+        a.set(1);
+        b.set(2);
+        a.swap_with(&mut b);
+        assert!(a.get(2) && !a.get(1));
+        assert!(b.get(1) && !b.get(2));
+    }
+
+    #[test]
+    fn clear_all_zeroes() {
+        let mut b = Bitset::new(100);
+        for i in 0..100 {
+            b.set(i);
+        }
+        b.clear_all();
+        assert!(b.none());
+    }
+
+    #[test]
+    fn empty_bitset_iterators() {
+        let b = Bitset::new(0);
+        assert!(b.is_empty());
+        assert_eq!(b.iter_ones().count(), 0);
+        assert_eq!(b.iter_zeros().count(), 0);
+    }
+}

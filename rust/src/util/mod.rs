@@ -1,0 +1,16 @@
+//! Self-contained utilities: deterministic PRNG, packed bitsets, ASCII
+//! table rendering and a miniature property-testing harness.
+//!
+//! The build is fully offline (vendored deps only), so we implement the
+//! small pieces that `rand`/`proptest`/`prettytable` would otherwise
+//! provide.
+
+pub mod rng;
+pub mod bitset;
+pub mod tables;
+pub mod prop;
+pub mod units;
+
+pub use bitset::Bitset;
+pub use rng::SplitMix64;
+pub use rng::Xoshiro256;

@@ -1,0 +1,115 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! Provides seeded case generation with shrinking-free but *reproducible*
+//! failure reporting: a failing case prints its seed and iteration so the
+//! exact input can be replayed. Coordinator invariants (routing, batching,
+//! partition state) are property-tested with this harness per the repo
+//! guidelines.
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0DE }
+    }
+}
+
+/// Run `prop` over `cases` seeded RNGs. `prop` returns `Err(msg)` to fail.
+/// Panics with the seed + case index on failure so the case is replayable.
+pub fn for_all<F>(cfg: PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Xoshiro256::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    for_all(PropConfig::default(), name, prop);
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert equality helper for properties.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        for_all(
+            PropConfig { cases: 10, seed: 1 },
+            "count",
+            |_rng| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fail' failed")]
+    fn failing_property_panics_with_seed() {
+        check("fail", |rng| {
+            let x = rng.next_below(10);
+            prop_assert!(x < 5, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn macros_compile_in_property() {
+        check("macros", |rng| {
+            let x = rng.next_below(4);
+            prop_assert_eq!(x, x);
+            prop_assert!(x < 4, "bound");
+            Ok(())
+        });
+    }
+}

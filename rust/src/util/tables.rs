@@ -1,0 +1,173 @@
+//! Minimal ASCII table renderer for experiment reports.
+//!
+//! Every bench/CLI experiment prints the same rows the paper's tables and
+//! figures report; this module keeps that output aligned and parseable.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table: header row + data rows, rendered with box-drawing-free
+/// ASCII so it can be pasted into EXPERIMENTS.md verbatim.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    aligns: Vec<Align>,
+}
+
+impl Table {
+    /// New table with the given column headers (right-aligned by default
+    /// except the first column).
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let aligns = header
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Self {
+            header,
+            rows: Vec::new(),
+            aligns,
+        }
+    }
+
+    /// Override alignments.
+    pub fn aligns(mut self, aligns: Vec<Align>) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns;
+        self
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity != header arity"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a markdown-style table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i].saturating_sub(cells[i].len());
+                match self.aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(&cells[i]);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(&cells[i]);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            match self.aligns[i] {
+                Align::Left => out.push_str(&format!("{:-<w$}|", ":", w = w + 2)),
+                Align::Right => out.push_str(&format!("{:->w$}|", ":", w = w + 2)),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with 3 significant-ish decimals, trimming wide values.
+pub fn fmt_f(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 100.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Format a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(vec!["name", "val"]);
+        t.row(vec!["a", "1"]);
+        t.row(vec!["bb", "22"]);
+        let s = t.render();
+        assert!(s.contains("| name | val |"), "{s}");
+        assert!(s.contains("| a    |   1 |"), "{s}");
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(0.1234), "0.123");
+        assert_eq!(fmt_f(12.345), "12.35");
+        assert_eq!(fmt_f(1234.5), "1234.5");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+        assert_eq!(fmt_count(12), "12");
+    }
+}

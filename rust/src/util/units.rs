@@ -1,0 +1,69 @@
+//! Unit helpers: bytes/bandwidth/time formatting and conversions used by
+//! the timing models and experiment reports.
+
+/// Bytes per gigabyte (decimal GB, matching the paper's GB/s figures).
+pub const GB: f64 = 1e9;
+/// Bytes per megabyte.
+pub const MB: f64 = 1e6;
+/// Hertz per megahertz.
+pub const MHZ: f64 = 1e6;
+/// Edges per GTEPS.
+pub const GTEPS: f64 = 1e9;
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= GB {
+        format!("{:.2} GB", b / GB)
+    } else if b >= MB {
+        format!("{:.2} MB", b / MB)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a bandwidth in GB/s.
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_s / GB)
+}
+
+/// Format seconds adaptively (s / ms / us).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Round `x` up to a multiple of `m` (burst/beat alignment).
+#[inline]
+pub fn round_up(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_alignment() {
+        assert_eq!(round_up(0, 64), 0);
+        assert_eq!(round_up(1, 64), 64);
+        assert_eq!(round_up(64, 64), 64);
+        assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2.5e9), "2.50 GB");
+        assert_eq!(fmt_bw(13.27e9), "13.27 GB/s");
+        assert!(fmt_time(0.5).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with(" s"));
+    }
+}

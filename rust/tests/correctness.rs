@@ -1,0 +1,146 @@
+//! Cross-engine correctness: the Algorithm-2 bitmap engine and the
+//! cycle simulator must produce reference-identical levels on every
+//! graph family, mode policy, and partition topology.
+
+use scalabfs::bfs::bitmap::run_bfs;
+use scalabfs::bfs::reference;
+use scalabfs::bfs::Mode;
+use scalabfs::graph::{generators, Graph, Partitioning};
+use scalabfs::sched::{Fixed, Hybrid, ModePolicy, Scripted};
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::cycle::CycleSim;
+use scalabfs::util::prop;
+use scalabfs::util::rng::Xoshiro256;
+
+fn graphs() -> Vec<Graph> {
+    vec![
+        generators::chain(64),
+        generators::star(65),
+        generators::complete(20),
+        generators::erdos_renyi(512, 4096, 1),
+        generators::rmat_graph500(10, 8, 2),
+        generators::rmat_graph500(11, 16, 3),
+    ]
+}
+
+fn policies() -> Vec<Box<dyn ModePolicy>> {
+    vec![
+        Box::new(Fixed(Mode::Push)),
+        Box::new(Fixed(Mode::Pull)),
+        Box::new(Hybrid::default()),
+        Box::new(Hybrid::new(4.0, 64.0)),
+        Box::new(Scripted(vec![Mode::Pull, Mode::Push, Mode::Pull])),
+    ]
+}
+
+#[test]
+fn bitmap_engine_matches_reference_everywhere() {
+    for g in &graphs() {
+        let roots = reference::sample_roots(g, 3, 7);
+        for &root in &roots {
+            let truth = reference::bfs(g, root);
+            for policy in policies().iter_mut() {
+                for part in [
+                    Partitioning::new(1, 1),
+                    Partitioning::new(4, 2),
+                    Partitioning::new(64, 32),
+                ] {
+                    let run = run_bfs(g, part, root, policy.as_mut());
+                    assert_eq!(
+                        run.levels,
+                        truth.levels,
+                        "graph={} root={root} policy={} part={:?}",
+                        g.name,
+                        policy.name(),
+                        part
+                    );
+                    assert_eq!(run.reached, truth.reached);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cycle_sim_matches_reference() {
+    for g in &graphs() {
+        let root = reference::sample_roots(g, 1, 5)[0];
+        let truth = reference::bfs(g, root);
+        for (pcs, pes) in [(1usize, 1usize), (2, 4), (8, 16)] {
+            let cfg = SimConfig::u280(pcs, pes);
+            for policy in [
+                &mut Fixed(Mode::Push) as &mut dyn ModePolicy,
+                &mut Hybrid::default(),
+            ] {
+                let res = CycleSim::new(g, cfg.clone()).run(root, policy);
+                assert_eq!(
+                    res.levels, truth.levels,
+                    "graph={} pcs={pcs} pes={pes}",
+                    g.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn traversed_edges_equal_across_engines() {
+    let g = generators::rmat_graph500(10, 8, 9);
+    let root = reference::sample_roots(&g, 1, 9)[0];
+    let part = Partitioning::new(8, 4);
+    let a = run_bfs(&g, part, root, &mut Fixed(Mode::Push));
+    let b = run_bfs(&g, part, root, &mut Fixed(Mode::Pull));
+    let c = run_bfs(&g, part, root, &mut Hybrid::default());
+    // GTEPS numerator is mode-independent (each edge once).
+    assert_eq!(a.traversed_edges, b.traversed_edges);
+    assert_eq!(a.traversed_edges, c.traversed_edges);
+    let cyc = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
+    assert_eq!(cyc.traversed_edges, a.traversed_edges);
+}
+
+#[test]
+fn property_random_graphs_random_policies() {
+    prop::check("levels match reference on random graphs", |rng: &mut Xoshiro256| {
+        let scale = 7 + (rng.next_below(3) as u32); // 128..512 vertices
+        let degree = 2 + rng.next_below(12);
+        let g = generators::rmat_graph500(scale, degree, rng.next_u64());
+        let roots = reference::sample_roots(&g, 1, rng.next_u64());
+        if roots.is_empty() {
+            return Ok(());
+        }
+        let root = roots[0];
+        let truth = reference::bfs(&g, root);
+        let pes = 1usize << rng.next_below(5);
+        let pgs = 1usize << rng.next_below(1 + pes.trailing_zeros() as u64);
+        let part = Partitioning::new(pes, pgs);
+        let mut policy = Hybrid::new(
+            2.0 + rng.next_f64() * 30.0,
+            2.0 + rng.next_f64() * 60.0,
+        );
+        let run = run_bfs(&g, part, root, &mut policy);
+        scalabfs::prop_assert!(
+            run.levels == truth.levels,
+            "levels diverged: scale={scale} degree={degree} pes={pes} pgs={pgs}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn disconnected_and_degenerate_graphs() {
+    // Isolated root: BFS of size 1.
+    let mut b = scalabfs::graph::GraphBuilder::new(10);
+    b.add_edge(1, 2);
+    let g = b.build("isolated-root");
+    let run = run_bfs(&g, Partitioning::new(2, 1), 0, &mut Hybrid::default());
+    assert_eq!(run.reached, 1);
+    assert_eq!(run.levels[0], 0);
+    assert!(run.levels[1..].iter().all(|&l| l == scalabfs::bfs::INF));
+
+    // Two components: only the root's is reached.
+    let mut b = scalabfs::graph::GraphBuilder::new(6);
+    b.extend([(0, 1), (1, 2), (3, 4), (4, 5)]);
+    let g = b.build("two-components");
+    let run = run_bfs(&g, Partitioning::new(4, 4), 0, &mut Hybrid::default());
+    assert_eq!(run.reached, 3);
+}

@@ -1,0 +1,108 @@
+//! Property tests for the vertex dispatcher: multi-layer routing must be
+//! extensionally identical to the full crossbar (VID % N) for every
+//! factorization, and the FIFO-count formula must match first-principles
+//! counting.
+
+use scalabfs::dispatcher::{Dispatcher, FullCrossbar, MultiLayerCrossbar};
+use scalabfs::util::prop::{self, PropConfig};
+use scalabfs::{prop_assert, prop_assert_eq};
+
+/// Random factorization of a random power-of-two N.
+fn random_factors(rng: &mut scalabfs::util::rng::Xoshiro256) -> Vec<usize> {
+    let log_n = 2 + rng.next_below(7) as u32; // N in 4..=512
+    let mut remaining = log_n;
+    let mut factors = Vec::new();
+    while remaining > 0 {
+        let take = 1 + rng.next_below(remaining.min(3) as u64) as u32;
+        factors.push(1usize << take);
+        remaining -= take;
+    }
+    factors
+}
+
+#[test]
+fn multilayer_routing_equals_full_crossbar() {
+    prop::for_all(
+        PropConfig { cases: 64, seed: 0x0DD },
+        "route(vid) == vid % N for any factorization",
+        |rng| {
+            let factors = random_factors(rng);
+            let ml = MultiLayerCrossbar::new(factors.clone());
+            let n = ml.n();
+            let full = FullCrossbar::new(n);
+            for _ in 0..256 {
+                let vid = rng.next_below(1 << 31) as u32;
+                prop_assert_eq!(ml.route(vid), full.route(vid));
+                prop_assert_eq!(ml.route(vid), (vid as usize) % n);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fifo_count_formula_matches_first_principles() {
+    prop::for_all(
+        PropConfig { cases: 64, seed: 0xF1F0 },
+        "fifos == sum over layers of (N/Ci)*Ci^2",
+        |rng| {
+            let factors = random_factors(rng);
+            let ml = MultiLayerCrossbar::new(factors.clone());
+            let n = ml.n() as u64;
+            let manual: u64 = factors
+                .iter()
+                .map(|&c| (n / c as u64) * (c as u64) * (c as u64))
+                .sum();
+            prop_assert_eq!(ml.fifo_count(), manual);
+            // Cost is N * sum(Ci) vs the full crossbar's N^2: strictly
+            // cheaper exactly when sum(Ci) < N (always true for k >= 2
+            // unless N == 4 == [2,2]).
+            let factor_sum: u64 = factors.iter().map(|&c| c as u64).sum();
+            prop_assert_eq!(ml.fifo_count(), n * factor_sum);
+            if factor_sum < n {
+                prop_assert!(ml.fifo_count() < n * n, "not cheaper: {factors:?}");
+            } else {
+                prop_assert!(ml.fifo_count() <= n * n, "worse than full: {factors:?}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn group_refinement_is_consistent_across_layers() {
+    prop::for_all(
+        PropConfig { cases: 32, seed: 5 },
+        "group_after_layer(i) == vid % prod(C1..Ci+1)",
+        |rng| {
+            let factors = random_factors(rng);
+            let ml = MultiLayerCrossbar::new(factors.clone());
+            for _ in 0..64 {
+                let vid = rng.next_below(1 << 20) as u32;
+                let mut modulus = 1usize;
+                for (i, &c) in factors.iter().enumerate() {
+                    modulus *= c;
+                    prop_assert_eq!(ml.group_after_layer(vid, i), (vid as usize) % modulus);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hops_equal_layer_count() {
+    let ml = MultiLayerCrossbar::new(vec![4, 4, 4]);
+    assert_eq!(ml.hops(), 3);
+    assert_eq!(FullCrossbar::new(64).hops(), 1);
+}
+
+#[test]
+fn paper_configurations_exact_numbers() {
+    // §IV-D / §VI-B numbers.
+    assert_eq!(FullCrossbar::new(16).fifo_count(), 256);
+    assert_eq!(MultiLayerCrossbar::new(vec![4, 4]).fifo_count(), 128);
+    assert_eq!(FullCrossbar::new(32).fifo_count(), 1024);
+    assert_eq!(MultiLayerCrossbar::new(vec![4, 4, 4]).fifo_count(), 768);
+    assert_eq!(FullCrossbar::new(64).fifo_count(), 4096);
+}

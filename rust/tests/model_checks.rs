@@ -1,0 +1,125 @@
+//! Analytic-model checks against the paper's published claims: the
+//! Section-V equations, the Table-II calibration, Fig 12 normalization
+//! and the Table-III efficiency arithmetic.
+
+use scalabfs::model::gpu;
+use scalabfs::model::perf::PerfModel;
+use scalabfs::model::published;
+use scalabfs::model::resource::{BuildConfig, ResourceModel};
+
+#[test]
+fn fig7_observation_1_larger_len_nl_wins() {
+    let m = PerfModel::default();
+    let mut n = 1u32;
+    while n <= 512 {
+        let series: Vec<f64> = [8.0, 16.0, 32.0, 64.0]
+            .iter()
+            .map(|&l| m.perf_pg(n, l))
+            .collect();
+        for w in series.windows(2) {
+            assert!(w[0] < w[1], "Len ordering violated at n={n}");
+        }
+        n *= 2;
+    }
+}
+
+#[test]
+fn fig7_observation_2_breakpoint_exists_and_degrades() {
+    let m = PerfModel::default();
+    for len in [8.0, 16.0, 32.0, 64.0] {
+        let peak = m.optimal_pes(len, 1024);
+        assert!(peak >= 8 && peak <= 32, "len={len} peak={peak}");
+        assert!(
+            m.perf_pg(peak * 16, len) < m.perf_pg(peak, len),
+            "no degradation past break-point at len={len}"
+        );
+    }
+}
+
+#[test]
+fn eq5_branches_are_continuous_at_saturation() {
+    // At the DW*F == BW_MAX boundary both branches must agree (within
+    // the fp resolution of the published constants).
+    let m = PerfModel {
+        sv_bytes: 4.0,
+        f_hz: 100e6,
+        bw_max: 2.0 * 16.0 * 4.0 * 100e6, // saturates exactly at n=16
+    };
+    let left = m.perf_pg(16, 32.0);
+    // Tiny epsilon above: capped branch.
+    let m2 = PerfModel {
+        bw_max: m.bw_max * 0.999999,
+        ..m
+    };
+    let right = m2.perf_pg(16, 32.0);
+    assert!((left - right).abs() / left < 1e-3);
+}
+
+#[test]
+fn table2_calibration_within_tolerance() {
+    let m = ResourceModel::default();
+    for (pcs, pes, published) in [(16, 32, 0.3576), (32, 32, 0.3993), (32, 64, 0.4208)] {
+        let est = m.estimate(&BuildConfig::paper(pcs, pes));
+        let err = (est.utilization - published).abs() / published;
+        assert!(err < 0.02, "{pcs}/{pes}: err {err:.3}");
+    }
+}
+
+#[test]
+fn eq7_bound_reproduces_paper_max() {
+    assert_eq!(ResourceModel::default().max_pes(32, 4, 0.50), 64);
+}
+
+#[test]
+fn bigger_configs_cost_more_luts() {
+    let m = ResourceModel::default();
+    let a = m.estimate(&BuildConfig::paper(16, 16));
+    let b = m.estimate(&BuildConfig::paper(32, 32));
+    assert!(b.total_luts > a.total_luts);
+}
+
+#[test]
+fn fig12_scalabfs_leads_per_channel() {
+    let ours = published::SCALABFS_PEAK.mteps_per_channel();
+    for s in published::FIG12_SYSTEMS {
+        assert!(ours > s.mteps_per_channel(), "{} beats us", s.name);
+    }
+    // And the HMC PIM theoretical bound remains above us, as the paper
+    // concedes.
+    assert!(published::HMC_PIM_THEORETICAL_GTEPS > published::SCALABFS_PEAK.gteps);
+}
+
+#[test]
+fn table3_power_arithmetic() {
+    for (s, g) in gpu::SCALABFS_U280_PUBLISHED.iter().zip(gpu::GUNROCK_V100) {
+        assert_eq!(s.dataset, g.dataset);
+        let ratio = s.gteps_per_watt / g.gteps_per_watt;
+        // Paper quotes 5.68-10.19x; from the published per-row numbers
+        // that range covers the sparse graphs (PK 10.1x, LJ 5.6x) while
+        // dense OR/HO land at 1.19x / 2.11x.
+        let expect = match s.dataset {
+            "PK" | "LJ" => 5.0..=10.7,
+            _ => 1.0..=2.5,
+        };
+        assert!(
+            expect.contains(&ratio),
+            "{}: efficiency ratio {ratio}",
+            s.dataset
+        );
+    }
+}
+
+#[test]
+fn sparse_parity_dense_deficit_shape() {
+    // The paper's qualitative Table III claim.
+    let pk = (gpu::gunrock("PK").unwrap(), 16.2);
+    let lj = (gpu::gunrock("LJ").unwrap(), 11.2);
+    for (g, ours) in [pk, lj] {
+        let r = ours / g.gteps;
+        assert!((0.5..=1.5).contains(&r), "sparse parity violated: {r}");
+    }
+    let or = gpu::gunrock("OR").unwrap();
+    let ho = gpu::gunrock("HO").unwrap();
+    assert!((19.1 / or.gteps) < 0.25);
+    assert!((16.4 / ho.gteps) < 0.25);
+}

@@ -1,0 +1,141 @@
+//! Property tests over the partitioning substrate (coordinator routing +
+//! state invariants): modulo ownership, edge conservation, footprint
+//! accounting, and the CSR/CSC transpose contract.
+
+use scalabfs::graph::partition::{partition, pg_footprints};
+use scalabfs::graph::{generators, Partitioning, VertexId};
+use scalabfs::util::prop::{self, PropConfig};
+use scalabfs::{prop_assert, prop_assert_eq};
+
+#[test]
+fn ownership_is_modulo_and_total() {
+    prop::check("vid%Q ownership covers all vertices once", |rng| {
+        let pes = 1usize << rng.next_below(7); // 1..64
+        let pgs = 1usize << rng.next_below(1 + pes.trailing_zeros() as u64);
+        let p = Partitioning::new(pes, pgs);
+        let n = 1 + rng.next_below(5000) as usize;
+        let mut counts = vec![0usize; pes];
+        for v in 0..n {
+            let pe = p.pe_of(v as VertexId);
+            prop_assert_eq!(pe, v % pes);
+            prop_assert!(p.pg_of_pe(pe) < pgs, "pg out of range");
+            counts[pe] += 1;
+        }
+        for pe in 0..pes {
+            prop_assert_eq!(counts[pe], p.interval_len(pe, n));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_conserves_edges_and_orders_lists() {
+    prop::for_all(
+        PropConfig { cases: 16, seed: 0xBEEF },
+        "subgraphs partition the edge multiset",
+        |rng| {
+            let g = generators::rmat_graph500(8 + rng.next_below(2) as u32, 4, rng.next_u64());
+            let pes = 1usize << (1 + rng.next_below(4));
+            let p = Partitioning::new(pes, pes.min(4));
+            let sgs = partition(&g, p);
+            let total_out: u64 = sgs.iter().map(|s| s.csr.num_edges()).sum();
+            let total_in: u64 = sgs.iter().map(|s| s.csc.num_edges()).sum();
+            prop_assert_eq!(total_out, g.num_edges());
+            prop_assert_eq!(total_in, g.num_edges());
+            // Every local list must equal the global list of its vertex.
+            for sg in &sgs {
+                for (local, &gid) in sg.global_ids.iter().enumerate() {
+                    prop_assert!(
+                        sg.csr.neighbors(local as VertexId) == g.out_neighbors(gid),
+                        "csr list mismatch pe={} gid={}",
+                        sg.pe,
+                        gid
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn transpose_is_involution_on_random_graphs() {
+    prop::for_all(
+        PropConfig { cases: 16, seed: 7 },
+        "csr.transpose().transpose() == csr (per-vertex multiset)",
+        |rng| {
+            let g = generators::erdos_renyi(
+                64 + rng.next_below(512) as usize,
+                1000 + rng.next_below(4000),
+                rng.next_u64(),
+            );
+            let tt = g.csr.transpose().transpose();
+            for v in 0..g.num_vertices() as VertexId {
+                let mut a = g.out_neighbors(v).to_vec();
+                let mut b = tt.neighbors(v).to_vec();
+                a.sort_unstable();
+                b.sort_unstable();
+                prop_assert!(a == b, "vertex {v}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn transpose_preserves_in_out_degree_sums() {
+    prop::for_all(
+        PropConfig { cases: 16, seed: 21 },
+        "sum(out-degree) == sum(in-degree)",
+        |rng| {
+            let g = generators::rmat_graph500(9, 8, rng.next_u64());
+            let out: u64 = (0..g.num_vertices()).map(|v| g.csr.degree(v as u32)).sum();
+            let inn: u64 = (0..g.num_vertices()).map(|v| g.csc.degree(v as u32)).sum();
+            prop_assert_eq!(out, inn);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pg_footprints_cover_whole_graph() {
+    prop::for_all(
+        PropConfig { cases: 8, seed: 3 },
+        "per-PG footprints sum to total subgraph bytes",
+        |rng| {
+            let g = generators::rmat_graph500(9, 6, rng.next_u64());
+            let p = Partitioning::new(16, 8);
+            let sgs = partition(&g, p);
+            let fps = pg_footprints(&sgs, p, 4);
+            let total: u64 = fps.iter().sum();
+            let expect: u64 = sgs.iter().map(|s| s.footprint_bytes(4)).sum();
+            prop_assert_eq!(total, expect);
+            // Interleaving keeps PG loads within 4x of each other.
+            let max = *fps.iter().max().unwrap() as f64;
+            let min = (*fps.iter().min().unwrap()).max(1) as f64;
+            prop_assert!(max / min < 4.0, "pg imbalance {max}/{min}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn graph_validate_holds_for_all_generators() {
+    prop::for_all(
+        PropConfig { cases: 12, seed: 99 },
+        "generated graphs satisfy structural invariants",
+        |rng| {
+            let seed = rng.next_u64();
+            let graphs = [
+                generators::rmat_graph500(8, 4, seed),
+                generators::erdos_renyi(256, 2048, seed),
+                generators::chain(1 + rng.next_below(100) as usize),
+                generators::star(2 + rng.next_below(100) as usize),
+            ];
+            for g in &graphs {
+                prop_assert!(g.validate().is_ok(), "{} invalid", g.name);
+            }
+            Ok(())
+        },
+    );
+}
