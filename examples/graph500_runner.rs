@@ -3,28 +3,27 @@
 //! stack on one workload:
 //!
 //! 1. materialize a Table-I dataset;
-//! 2. run the Algorithm-2 functional engine + U280 timing model over 16
-//!    sampled roots (harmonic-mean GTEPS, Graph500 aggregation);
+//! 2. run the Algorithm-2 engine + U280 timing model over 16 sampled
+//!    roots **sharded across host cores** by the `BatchDriver`
+//!    (harmonic-mean GTEPS, Graph500 aggregation);
 //! 3. cross-check one root on the cycle-accurate simulator;
 //! 4. cross-check a shrunk copy of the graph through the **XLA/PJRT
 //!    path** (Pallas kernel -> JAX model -> HLO text -> Rust execute),
-//!    proving the three-layer architecture composes.
+//!    proving the three-layer architecture composes (needs the `xla`
+//!    cargo feature + `make artifacts`).
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example graph500_runner [-- dataset scale]
+//! cargo run --release --example graph500_runner [-- dataset scale]
 //! ```
 
-use scalabfs::bfs::bitmap::run_bfs;
-use scalabfs::bfs::gteps::harmonic_mean;
+use scalabfs::bfs::batch::BatchDriver;
 use scalabfs::bfs::reference;
 use scalabfs::graph::datasets;
-use scalabfs::runtime::XlaBfsEngine;
 use scalabfs::sched::Hybrid;
 use scalabfs::sim::config::SimConfig;
 use scalabfs::sim::cycle::CycleSim;
-use scalabfs::sim::throughput::ThroughputSim;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,27 +44,28 @@ fn main() -> anyhow::Result<()> {
         graph.avg_degree()
     );
 
-    // ---- 2. multi-root functional + timing runs ----
+    // ---- 2. multi-root batch, sharded across host cores ----
     let cfg = SimConfig::u280_full();
     let roots = reference::sample_roots(&graph, 16, seed);
-    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
-    let sim = ThroughputSim::new(cfg.clone());
-    let mut gteps = Vec::new();
-    let mut checked = 0usize;
-    for &root in &roots {
-        let run = run_bfs(&graph, cfg.part, root, &mut Hybrid::default());
-        // Validate every root against the reference BFS.
+    let t0 = std::time::Instant::now();
+    let batch = BatchDriver::new(&graph, cfg.part).run_batch(&roots, &cfg, || {
+        Box::new(Hybrid::default())
+    });
+    let batch_secs = t0.elapsed().as_secs_f64();
+    // Validate every root against the reference BFS.
+    for (run, &root) in batch.runs.iter().zip(&roots) {
         let truth = reference::bfs(&graph, root);
         anyhow::ensure!(run.levels == truth.levels, "level mismatch at root {root}");
-        checked += 1;
-        let res = sim.simulate(&run, &graph.name, bytes);
-        gteps.push(res.gteps);
     }
-    let hm = harmonic_mean(&gteps);
-    let max = gteps.iter().cloned().fold(0.0f64, f64::max);
+    let max = batch.gteps.iter().cloned().fold(0.0f64, f64::max);
     println!(
-        "[2/4] {} roots validated; GTEPS harmonic mean {:.2}, max {:.2} (32PC/64PE hybrid)",
-        checked, hm, max
+        "[2/4] {} roots validated in {:.2}s host wall ({} workers); \
+         GTEPS harmonic mean {:.2}, max {:.2} (32PC/64PE hybrid)",
+        batch.runs.len(),
+        batch_secs,
+        rayon::current_num_threads(),
+        batch.harmonic_gteps,
+        max
     );
 
     // ---- 3. cycle-sim cross-check on one root ----
@@ -89,46 +89,52 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 4. XLA/PJRT path on a tiny copy ----
-    match XlaBfsEngine::new() {
-        Ok(mut engine) => {
-            // Shrink until the graph fits the largest dense artifact.
-            let mut shrink = 256u32;
-            let tiny = loop {
-                let g = datasets::by_name(dataset, shrink.max(scale), seed).unwrap();
-                if g.num_vertices() <= 2048 {
-                    break g;
-                }
-                shrink *= 2;
-            };
-            let troot = reference::sample_roots(&tiny, 1, seed)[0];
-            let res = engine.run(&tiny, troot)?;
-            let truth = reference::bfs(&tiny, troot);
-            anyhow::ensure!(
-                res.levels == truth.levels,
-                "XLA levels diverge from reference"
-            );
-            println!(
-                "[4/4] XLA path on {} (|V|={}): {} iterations, {} reached, exec {:.1} ms - levels MATCH",
-                tiny.name,
-                tiny.num_vertices(),
-                res.iterations,
-                res.reached,
-                res.execute_seconds * 1e3
-            );
-            // Whole-BFS-on-device variant (one PJRT call, lax.while_loop).
-            if let Ok(full) = engine.run_full(&tiny, troot) {
-                anyhow::ensure!(full.levels == truth.levels, "bfs_full diverges");
-                println!(
-                    "      bfs_full (single execute): exec {:.1} ms ({:.1}x vs per-step)",
-                    full.execute_seconds * 1e3,
-                    res.execute_seconds / full.execute_seconds.max(1e-12)
+    #[cfg(feature = "xla")]
+    {
+        use scalabfs::runtime::XlaBfsEngine;
+        // Shrink until the graph fits the largest dense artifact.
+        let mut shrink = 256u32;
+        let tiny = loop {
+            let g = datasets::by_name(dataset, shrink.max(scale), seed).unwrap();
+            if g.num_vertices() <= 2048 {
+                break g;
+            }
+            shrink *= 2;
+        };
+        match XlaBfsEngine::new() {
+            Ok(mut engine) => {
+                let troot = reference::sample_roots(&tiny, 1, seed)[0];
+                let res = engine.run(&tiny, troot)?;
+                let truth = reference::bfs(&tiny, troot);
+                anyhow::ensure!(
+                    res.levels == truth.levels,
+                    "XLA levels diverge from reference"
                 );
+                println!(
+                    "[4/4] XLA path on {} (|V|={}): {} iterations, {} reached, exec {:.1} ms - levels MATCH",
+                    tiny.name,
+                    tiny.num_vertices(),
+                    res.iterations,
+                    res.reached,
+                    res.execute_seconds * 1e3
+                );
+                // Whole-BFS-on-device variant (one PJRT call, lax.while_loop).
+                if let Ok(full) = engine.run_full(&tiny, troot) {
+                    anyhow::ensure!(full.levels == truth.levels, "bfs_full diverges");
+                    println!(
+                        "      bfs_full (single execute): exec {:.1} ms ({:.1}x vs per-step)",
+                        full.execute_seconds * 1e3,
+                        res.execute_seconds / full.execute_seconds.max(1e-12)
+                    );
+                }
+            }
+            Err(e) => {
+                println!("[4/4] SKIPPED XLA path ({e}); run `make artifacts` first");
             }
         }
-        Err(e) => {
-            println!("[4/4] SKIPPED XLA path ({e}); run `make artifacts` first");
-        }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("[4/4] SKIPPED XLA path (built without the `xla` cargo feature)");
 
     println!("\nend-to-end driver: ALL CHECKS PASSED");
     Ok(())

@@ -1,6 +1,7 @@
 //! Quickstart: generate a small RMAT graph, run ScalaBFS (simulated
 //! 32-PC/64-PE U280), check correctness against the reference BFS, and
-//! print the per-iteration breakdown plus GTEPS.
+//! print the per-iteration breakdown plus GTEPS — then run the same
+//! search through every other engine via the shared `exec` layer.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,6 +9,7 @@
 
 use scalabfs::bfs::bitmap::run_bfs;
 use scalabfs::bfs::reference;
+use scalabfs::exec::{make_engine, BfsEngine, ENGINE_NAMES};
 use scalabfs::graph::generators;
 use scalabfs::sched::Hybrid;
 use scalabfs::sim::config::SimConfig;
@@ -41,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // 5. Timing: the U280 model converts traffic into cycles.
     let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
-    let result = ThroughputSim::new(cfg).simulate(&run, &graph.name, bytes);
+    let result = ThroughputSim::new(cfg.clone()).simulate(&run, &graph.name, bytes);
     println!("\nper-iteration breakdown:");
     for it in &result.iters {
         println!(
@@ -55,5 +57,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n{}", result.summary());
+
+    // 6. The same search through every engine (one trait, one driver
+    //    loop — see rust/src/exec/). The cycle engine steps every cycle,
+    //    so use a smaller analog for it.
+    println!("\nengine sweep (all implement exec::BfsEngine):");
+    let small = generators::rmat_graph500(10, 8, 42);
+    let sroot = reference::sample_roots(&small, 1, 7)[0];
+    let struth = reference::bfs(&small, sroot);
+    let scfg = SimConfig::u280(4, 8);
+    for name in ENGINE_NAMES {
+        let mut engine = make_engine(name, &small, &scfg)?;
+        let erun = engine.run(sroot, &mut Hybrid::default());
+        anyhow::ensure!(erun.levels == struth.levels, "{name} diverged");
+        println!(
+            "  {:<13} {} iterations, {} reached - levels match",
+            name, erun.iterations, erun.reached
+        );
+    }
     Ok(())
 }

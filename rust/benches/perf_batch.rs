@@ -1,0 +1,85 @@
+//! Bench: multi-root batch throughput — the Graph500 64-root batch on
+//! an RMAT-18 graph, serial (1 rayon worker) vs parallel (all cores),
+//! demonstrating the `BatchDriver` sharding speedup with per-root
+//! levels validated against the reference BFS.
+//!
+//! ```bash
+//! cargo bench --bench perf_batch            # full RMAT-18, 64 roots
+//! SCALABFS_BENCH_SCALE=16 cargo bench --bench perf_batch   # quicker
+//! ```
+
+use scalabfs::bfs::batch::BatchDriver;
+use scalabfs::bfs::reference;
+use scalabfs::graph::generators;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::SimConfig;
+
+fn main() {
+    let scale = std::env::var("SCALABFS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(18u32);
+    let num_roots = std::env::var("SCALABFS_BENCH_ROOTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64usize);
+    println!("=== multi-root batch bench (Graph500-style) ===\n");
+    let g = generators::rmat_graph500(scale, 16, 1);
+    println!(
+        "workload: {} |V|={} |E|={}, {} roots, 32PC/64PE hybrid\n",
+        g.name,
+        g.num_vertices(),
+        g.num_edges(),
+        num_roots
+    );
+    let cfg = SimConfig::u280_full();
+    let roots = reference::sample_roots(&g, num_roots, 1);
+    let driver = BatchDriver::new(&g, cfg.part);
+
+    // Serial baseline: the same driver inside a one-thread pool.
+    let serial_pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(1)
+        .build()
+        .expect("pool");
+    let t0 = std::time::Instant::now();
+    let serial =
+        serial_pool.install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    // Parallel: the ambient pool (all cores).
+    let workers = rayon::current_num_threads();
+    let t0 = std::time::Instant::now();
+    let parallel = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+    let t_parallel = t0.elapsed().as_secs_f64();
+
+    // Bit-exactness: parallel == serial == reference on sampled roots.
+    assert_eq!(serial.gteps, parallel.gteps, "per-root GTEPS diverged");
+    for (i, &root) in roots.iter().enumerate().step_by((num_roots / 8).max(1)) {
+        let truth = reference::bfs(&g, root);
+        assert_eq!(parallel.runs[i].levels, truth.levels, "root {root}");
+    }
+
+    let total_edges: u64 = parallel.runs.iter().map(|r| r.traversed_edges).sum();
+    println!(
+        "serial   (1 worker):   {:>8.2} s   {:>8.1} M edges/s host",
+        t_serial,
+        total_edges as f64 / t_serial / 1e6
+    );
+    println!(
+        "parallel ({workers} workers):  {:>8.2} s   {:>8.1} M edges/s host",
+        t_parallel,
+        total_edges as f64 / t_parallel / 1e6
+    );
+    println!(
+        "\nspeedup: {:.2}x on {} roots ({} workers); harmonic-mean sim GTEPS {:.2}",
+        t_serial / t_parallel,
+        roots.len(),
+        workers,
+        parallel.harmonic_gteps
+    );
+    println!("per-root levels validated against bfs::reference (sampled)");
+    assert!(
+        workers == 1 || t_parallel < t_serial,
+        "parallel batch was not faster: {t_parallel:.2}s vs {t_serial:.2}s"
+    );
+}

@@ -1,5 +1,6 @@
 //! Micro-benchmarks of the repo's hot paths (the §Perf deliverable):
-//! the Algorithm-2 functional engine (push / pull / hybrid), the
+//! the Algorithm-2 functional engine (push / pull / hybrid) through the
+//! shared `exec` driver, the state-reuse win of `SearchState`, the
 //! throughput simulator's accounting, graph generation, and partition.
 //!
 //! Hand-rolled harness (no criterion offline): N timed repetitions with
@@ -7,9 +8,9 @@
 //! meaningful. Used to drive the optimization loop in EXPERIMENTS.md
 //! §Perf.
 
-use scalabfs::bfs::bitmap::run_bfs;
 use scalabfs::bfs::reference;
 use scalabfs::bfs::Mode;
+use scalabfs::exec::{BfsEngine, SearchState};
 use scalabfs::graph::{generators, partition, Partitioning};
 use scalabfs::sched::{Fixed, Hybrid};
 use scalabfs::sim::config::SimConfig;
@@ -68,22 +69,31 @@ fn main() {
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
 
-    let t = time("bitmap engine, push-only", 5, || {
-        let _ = run_bfs(&g, part, root, &mut Fixed(Mode::Push));
+    // The bitmap engine through the shared exec driver, one SearchState
+    // reused across repetitions (the production multi-root pattern).
+    let mut engine = scalabfs::bfs::bitmap::BitmapEngine::new(&g, part);
+    let mut state = SearchState::new(g.num_vertices());
+    let t = time("bitmap engine, push-only (state reused)", 5, || {
+        let _ = engine.run_with_state(&mut state, root, &mut Fixed(Mode::Push));
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
 
-    let t = time("bitmap engine, pull-only", 5, || {
-        let _ = run_bfs(&g, part, root, &mut Fixed(Mode::Pull));
+    let t = time("bitmap engine, pull-only (state reused)", 5, || {
+        let _ = engine.run_with_state(&mut state, root, &mut Fixed(Mode::Pull));
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
 
-    let t = time("bitmap engine, hybrid", 5, || {
-        let _ = run_bfs(&g, part, root, &mut Hybrid::default());
+    let t = time("bitmap engine, hybrid (state reused)", 5, || {
+        let _ = engine.run_with_state(&mut state, root, &mut Hybrid::default());
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
 
-    let run = run_bfs(&g, part, root, &mut Hybrid::default());
+    let t = time("bitmap engine, hybrid (fresh state)", 5, || {
+        let _ = engine.run(root, &mut Hybrid::default());
+    });
+    println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    let run = engine.run_with_state(&mut state, root, &mut Hybrid::default());
     let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
     let sim = ThroughputSim::new(SimConfig::u280_full());
     time("throughput simulator (accounting only)", 10, || {

@@ -6,9 +6,20 @@
 //! DDR4 channel. This module models that processing style so Fig 12's
 //! context (why vertex-centric + bitmaps wins per-channel) is
 //! reproducible, not just quoted.
+//!
+//! [`EdgeCentricEngine`] implements [`BfsEngine`]: each step scans the
+//! full edge list (the edge-centric scatter), updating the shared
+//! [`SearchState`] with push semantics, and charges the whole edge
+//! array's bytes to the single channel. [`estimate`] drives it through
+//! the shared level-synchronous loop and converts the streamed bytes
+//! into DDR4 seconds.
 
-use crate::bfs::reference;
-use crate::graph::{Graph, VertexId};
+use crate::bfs::traffic::IterTraffic;
+use crate::bfs::Mode;
+use crate::exec::{BfsEngine, SearchState, StepStats};
+use crate::graph::{Graph, Partitioning, VertexId};
+use crate::sched::Fixed;
+use crate::Result;
 
 /// Single-channel parameters for the edge-centric baseline.
 #[derive(Clone, Copy, Debug)]
@@ -46,32 +57,109 @@ pub struct EdgeCentricResult {
     pub gteps: f64,
 }
 
+/// The edge-centric baseline engine: every iteration streams the entire
+/// edge list through one memory channel, testing each edge against the
+/// current frontier. Direction-agnostic — there is no pull variant, so
+/// `step` ignores the requested mode.
+pub struct EdgeCentricEngine<'g> {
+    graph: &'g Graph,
+    part: Partitioning,
+    /// Channel parameters used by [`estimate`].
+    pub cfg: EdgeCentricConfig,
+}
+
+impl<'g> EdgeCentricEngine<'g> {
+    /// New baseline engine (single channel: the partitioning collapses
+    /// to one PE / one PG for traffic accounting).
+    pub fn new(graph: &'g Graph, cfg: EdgeCentricConfig) -> Self {
+        Self {
+            graph,
+            part: Partitioning::new(1, 1),
+            cfg,
+        }
+    }
+}
+
+impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
+    /// Rebinds the graph. The requested partitioning is ignored: the
+    /// edge-centric baseline is single-channel by definition, so its
+    /// traffic is always attributed to one PE / one PG regardless of
+    /// the sweep's PC/PE point (sweeps time that one channel with the
+    /// HBM model; the DDR4 Fig-12 number comes from [`estimate`]).
+    fn prepare(&mut self, graph: &'g Graph, _part: Partitioning) -> Result<()> {
+        self.graph = graph;
+        self.part = Partitioning::new(1, 1);
+        Ok(())
+    }
+
+    fn graph(&self) -> &'g Graph {
+        self.graph
+    }
+
+    fn partitioning(&self) -> Partitioning {
+        self.part
+    }
+
+    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> StepStats {
+        let graph = self.graph;
+        let mut it = IterTraffic::new(
+            state.bfs_level,
+            Mode::Push,
+            self.part.num_pes,
+            self.part.num_pgs,
+        );
+        it.frontier_size = state.frontier_size;
+        // Edge-centric scatter: the whole edge array streams through the
+        // channel regardless of frontier size.
+        it.neighbors_streamed = graph.num_edges();
+        it.per_pg_edge_bytes[0] = (graph.num_edges() as f64 * self.cfg.edge_bytes) as u64;
+        for u in 0..graph.num_vertices() {
+            if !state.current.get(u) {
+                continue;
+            }
+            for &w in graph.out_neighbors(u as VertexId) {
+                if !state.visited.test_and_set(w as usize) {
+                    state.next.set(w as usize);
+                    state.levels[w as usize] = state.bfs_level + 1;
+                    it.newly_visited += 1;
+                }
+            }
+        }
+        StepStats {
+            newly_visited: it.newly_visited,
+            next_frontier_edges: None,
+            traffic: Some(it),
+            cycles: 0,
+            backpressure: 0,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "edge-centric"
+    }
+}
+
 /// Estimate edge-centric BFS performance: every iteration streams the
 /// full edge list through the single channel.
 pub fn estimate(g: &Graph, root: VertexId, cfg: EdgeCentricConfig) -> EdgeCentricResult {
-    let r = reference::bfs(g, root);
-    let iterations = r.depth;
+    let mut engine = EdgeCentricEngine::new(g, cfg);
+    let run = engine.run(root, &mut Fixed(Mode::Push));
+    let iterations = run.iterations;
     let edges_streamed = g.num_edges() * iterations as u64;
     let bytes = edges_streamed as f64 * cfg.edge_bytes;
     let seconds = bytes / (cfg.channel_bw * cfg.efficiency);
-    let traversed: u64 = r
-        .levels
-        .iter()
-        .enumerate()
-        .filter(|(_, &l)| l != crate::bfs::INF)
-        .map(|(v, _)| g.csr.degree(v as VertexId))
-        .sum();
     EdgeCentricResult {
         iterations,
         edges_streamed,
         seconds,
-        gteps: traversed as f64 / seconds / 1e9,
+        gteps: run.traversed_edges as f64 / seconds / 1e9,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bfs::reference;
     use crate::graph::generators;
 
     #[test]
@@ -80,6 +168,15 @@ mod tests {
         let res = estimate(&g, 0, EdgeCentricConfig::default());
         assert_eq!(res.iterations, 10);
         assert_eq!(res.edges_streamed, 9 * 10);
+    }
+
+    #[test]
+    fn edge_centric_levels_match_reference() {
+        let g = generators::rmat_graph500(9, 8, 3);
+        let root = reference::sample_roots(&g, 1, 3)[0];
+        let run = EdgeCentricEngine::new(&g, EdgeCentricConfig::default())
+            .run(root, &mut Fixed(Mode::Push));
+        assert_eq!(run.levels, reference::bfs(&g, root).levels);
     }
 
     #[test]

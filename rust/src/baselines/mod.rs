@@ -1,9 +1,12 @@
 //! Baseline systems the paper compares against.
 //!
 //! * [`unpartitioned`] — the Fig 11 baseline: same PEs, but edge data
-//!   placed sequentially from PC0 so readers cross the HBM switch.
+//!   placed sequentially from PC0 so readers cross the HBM switch (a
+//!   *placement* variant timed by the throughput simulator, not a
+//!   separate functional engine).
 //! * [`edge_centric`] — a ForeGraph-style edge-centric single-channel
-//!   processor (the §II-D context for Fig 12's per-channel comparison).
+//!   processor (the §II-D context for Fig 12's per-channel comparison),
+//!   a full [`crate::exec::BfsEngine`] implementation.
 //! * Push-only / pull-only baselines are [`crate::sched::Fixed`] policies
 //!   over the main engine (Fig 8).
 

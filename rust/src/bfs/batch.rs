@@ -1,22 +1,31 @@
-//! Batched multi-root BFS (Graph500 runs 64 roots per benchmark).
+//! Batched multi-root BFS (Graph500 runs 64 roots per benchmark),
+//! sharded across host cores.
 //!
-//! [`BatchEngine`] owns the three bitmaps + level array once and resets
-//! them in place between roots — the allocation/zeroing pattern the
-//! hardware uses (bitmaps live in BRAM; a new search just clears them),
-//! and measurably cheaper than constructing a fresh
-//! [`BitmapEngine`](super::bitmap::BitmapEngine) per root.
+//! [`BatchDriver`] splits the root list over a rayon pool. Each worker
+//! owns one [`BitmapEngine`] and one [`SearchState`] for its whole
+//! shard, resetting the state **in place** between roots
+//! ([`SearchState::reset_for_root`], the hardware's BRAM-clear pattern)
+//! — no per-root allocation, and measurably cheaper than constructing a
+//! fresh engine per root. Roots are independent searches, so per-root
+//! results are bit-identical whatever the worker count; `collect`
+//! preserves root order.
+//!
+//! Serial behaviour (for A/B timing) is just the same driver run inside
+//! a one-thread rayon pool — see `benches/perf_batch.rs`.
 
 use super::bitmap::{BfsRun, BitmapEngine, TrafficConfig};
 use super::gteps::harmonic_mean;
+use crate::exec::{BfsEngine, SearchState};
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::sched::ModePolicy;
 use crate::sim::config::SimConfig;
 use crate::sim::throughput::ThroughputSim;
+use rayon::prelude::*;
 
 /// Result of a multi-root batch.
 #[derive(Clone, Debug)]
 pub struct BatchResult {
-    /// Per-root functional runs.
+    /// Per-root functional runs, in root order.
     pub runs: Vec<BfsRun>,
     /// Per-root simulated GTEPS.
     pub gteps: Vec<f64>,
@@ -24,15 +33,16 @@ pub struct BatchResult {
     pub harmonic_gteps: f64,
 }
 
-/// Multi-root driver with state reuse.
-pub struct BatchEngine<'g> {
+/// Multi-root driver: host-parallel across roots, state reused within
+/// each worker.
+pub struct BatchDriver<'g> {
     graph: &'g Graph,
     part: Partitioning,
     cfg: Option<TrafficConfig>,
 }
 
-impl<'g> BatchEngine<'g> {
-    /// New batch engine.
+impl<'g> BatchDriver<'g> {
+    /// New batch driver.
     pub fn new(graph: &'g Graph, part: Partitioning) -> Self {
         Self {
             graph,
@@ -47,30 +57,42 @@ impl<'g> BatchEngine<'g> {
         self
     }
 
-    /// Run BFS from every root, timing each with `sim_cfg`.
+    /// Run BFS from every root, timing each with `sim_cfg`. Roots are
+    /// sharded across the ambient rayon pool (wrap the call in
+    /// `ThreadPool::install` to control the worker count).
     /// `make_policy` constructs a fresh policy per root (policies are
-    /// stateful).
+    /// stateful), so it must be callable from any worker.
     pub fn run_batch(
         &self,
         roots: &[VertexId],
         sim_cfg: &SimConfig,
-        mut make_policy: impl FnMut() -> Box<dyn ModePolicy>,
+        make_policy: impl Fn() -> Box<dyn ModePolicy> + Sync,
     ) -> BatchResult {
         let bytes = self.graph.csr.footprint_bytes(sim_cfg.sv_bytes as usize)
             + self.graph.csc.footprint_bytes(sim_cfg.sv_bytes as usize);
         let sim = ThroughputSim::new(sim_cfg.clone());
-        let mut runs = Vec::with_capacity(roots.len());
-        let mut gteps = Vec::with_capacity(roots.len());
-        for &root in roots {
-            let mut engine = BitmapEngine::new(self.graph, self.part);
-            if let Some(cfg) = self.cfg {
-                engine = engine.with_config(cfg);
-            }
-            let mut policy = make_policy();
-            let run = engine.run(root, policy.as_mut());
-            gteps.push(sim.simulate(&run, &self.graph.name, bytes).gteps);
-            runs.push(run);
-        }
+        let n = self.graph.num_vertices();
+        let results: Vec<(BfsRun, f64)> = roots
+            .par_iter()
+            .map_init(
+                // One engine + one search state per worker shard,
+                // reused (reset in place) across that shard's roots.
+                || {
+                    let mut engine = BitmapEngine::new(self.graph, self.part);
+                    if let Some(cfg) = self.cfg {
+                        engine = engine.with_config(cfg);
+                    }
+                    (engine, SearchState::new(n))
+                },
+                |(engine, state), &root| {
+                    let mut policy = make_policy();
+                    let run = engine.run_with_state(state, root, policy.as_mut());
+                    let gteps = sim.simulate(&run, &self.graph.name, bytes).gteps;
+                    (run, gteps)
+                },
+            )
+            .collect();
+        let (runs, gteps): (Vec<BfsRun>, Vec<f64>) = results.into_iter().unzip();
         let harmonic_gteps = harmonic_mean(&gteps);
         BatchResult {
             runs,
@@ -92,7 +114,7 @@ mod tests {
         let g = generators::rmat_graph500(9, 8, 13);
         let cfg = SimConfig::u280(4, 8);
         let roots = reference::sample_roots(&g, 5, 13);
-        let batch = BatchEngine::new(&g, cfg.part).run_batch(&roots, &cfg, || {
+        let batch = BatchDriver::new(&g, cfg.part).run_batch(&roots, &cfg, || {
             Box::new(Hybrid::default())
         });
         assert_eq!(batch.runs.len(), 5);
@@ -106,11 +128,31 @@ mod tests {
     }
 
     #[test]
+    fn parallel_batch_matches_single_thread_pool() {
+        let g = generators::rmat_graph500(10, 8, 17);
+        let cfg = SimConfig::u280(4, 8);
+        let roots = reference::sample_roots(&g, 8, 17);
+        let driver = BatchDriver::new(&g, cfg.part);
+        let serial = rayon::ThreadPoolBuilder::new()
+            .num_threads(1)
+            .build()
+            .unwrap()
+            .install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+        let parallel = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        assert_eq!(serial.runs.len(), parallel.runs.len());
+        for (s, p) in serial.runs.iter().zip(&parallel.runs) {
+            assert_eq!(s.levels, p.levels);
+            assert_eq!(s.traversed_edges, p.traversed_edges);
+        }
+        assert_eq!(serial.gteps, parallel.gteps);
+    }
+
+    #[test]
     fn empty_batch_is_degenerate() {
         let g = generators::chain(8);
         let cfg = SimConfig::u280(1, 1);
         let batch =
-            BatchEngine::new(&g, cfg.part).run_batch(&[], &cfg, || Box::new(Hybrid::default()));
+            BatchDriver::new(&g, cfg.part).run_batch(&[], &cfg, || Box::new(Hybrid::default()));
         assert!(batch.runs.is_empty());
         assert_eq!(batch.harmonic_gteps, 0.0);
     }

@@ -13,13 +13,21 @@
 //!
 //! All HBM bytes and dispatcher messages are tallied into
 //! [`IterTraffic`](super::traffic::IterTraffic) for the timing simulators.
+//!
+//! The engine implements [`BfsEngine`]: it owns no search state and no
+//! driver loop — it processes one iteration over an externally owned
+//! [`SearchState`], and the level-synchronous loop lives in
+//! [`crate::exec::driver`].
 
-use super::traffic::{IterTraffic, RunTraffic};
-use super::{Mode, INF};
+use super::traffic::IterTraffic;
+use super::Mode;
+use crate::exec::{BfsEngine, SearchState, StepStats};
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::sched::ModePolicy;
-use crate::util::Bitset;
 use crate::util::units::round_up;
+use crate::Result;
+
+pub use crate::exec::BfsRun;
 
 /// Accelerator data-path parameters that affect *traffic* (not timing):
 /// burst alignment and pull-mode early-exit chunking.
@@ -57,44 +65,22 @@ impl TrafficConfig {
     }
 }
 
-/// Complete result of an Algorithm-2 BFS run.
-#[derive(Clone, Debug)]
-pub struct BfsRun {
-    /// Per-vertex levels (INF when unreachable).
-    pub levels: Vec<u32>,
-    /// Vertices reached, root included.
-    pub reached: usize,
-    /// Per-iteration traffic.
-    pub traffic: RunTraffic,
-    /// Graph500 traversed-edge count: sum of out-degrees of reached
-    /// vertices (each edge counted once).
-    pub traversed_edges: u64,
-}
-
-/// The Algorithm-2 engine. Holds the three bitmaps plus the level array
-/// (the state the paper keeps in double-pump BRAM / URAM).
+/// The Algorithm-2 engine. Search state (the three bitmaps + level
+/// array the paper keeps in double-pump BRAM / URAM) lives in the
+/// [`SearchState`] passed to each step.
 pub struct BitmapEngine<'g> {
     graph: &'g Graph,
     part: Partitioning,
     cfg: TrafficConfig,
-    current: Bitset,
-    next: Bitset,
-    visited: Bitset,
-    levels: Vec<u32>,
 }
 
 impl<'g> BitmapEngine<'g> {
     /// New engine over `graph` partitioned as `part`.
     pub fn new(graph: &'g Graph, part: Partitioning) -> Self {
-        let n = graph.num_vertices();
         Self {
             graph,
             part,
             cfg: TrafficConfig::for_partitioning(part),
-            current: Bitset::new(n),
-            next: Bitset::new(n),
-            visited: Bitset::new(n),
-            levels: vec![INF; n],
         }
     }
 
@@ -104,90 +90,26 @@ impl<'g> BitmapEngine<'g> {
         self
     }
 
-    /// Run BFS from `root` with the given mode policy.
-    pub fn run(mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
-        let n = self.graph.num_vertices();
-        self.levels[root as usize] = 0;
-        self.current.set(root as usize);
-        self.visited.set(root as usize);
-
-        let mut traffic = RunTraffic::default();
-        let mut bfs_level: u32 = 0;
-        let mut frontier_size: u64 = 1;
-        // Out-degree sum of the frontier: the scheduler's switching signal.
-        let mut frontier_edges: u64 = self.graph.csr.degree(root);
-        let mut visited_count: u64 = 1;
-
-        while frontier_size > 0 {
-            let mode = policy.decide(
-                bfs_level,
-                frontier_size,
-                frontier_edges,
-                visited_count,
-                n as u64,
-                self.graph.num_edges(),
-            );
-            let mut it = IterTraffic::new(
-                bfs_level,
-                mode,
-                self.part.num_pes,
-                self.part.num_pgs,
-            );
-            it.frontier_size = frontier_size;
-            // Pull accumulates the next frontier's out-degree sum inline
-            // (its scan order is ascending, so the lookups are cheap);
-            // push rescans the ordered next frontier afterwards — inline
-            // accumulation there touches offsets in neighbor order and
-            // measures ~35% slower.
-            let inline_edges = match mode {
-                Mode::Push => None,
-                Mode::Pull => Some(self.pull_iteration(&mut it)),
-            };
-            if inline_edges.is_none() {
-                self.push_iteration(&mut it);
-            }
-            // End of iteration: swap frontiers, recompute signals.
-            self.current.swap_with(&mut self.next);
-            self.next.clear_all();
-            frontier_edges = inline_edges.unwrap_or_else(|| {
-                self.current
-                    .iter_ones()
-                    .map(|v| self.graph.csr.degree(v as VertexId))
-                    .sum()
-            });
-            frontier_size = it.newly_visited;
-            visited_count += it.newly_visited;
-            traffic.iters.push(it);
-            bfs_level += 1;
-        }
-
-        let reached = self.visited.count_ones();
-        let traversed_edges = self
-            .visited
-            .iter_ones()
-            .map(|v| self.graph.csr.degree(v as VertexId))
-            .sum();
-        BfsRun {
-            levels: self.levels,
-            reached,
-            traffic,
-            traversed_edges,
-        }
+    /// Run BFS from `root` with a fresh state (see
+    /// [`BfsEngine::run_with_state`] for state reuse across roots).
+    pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
+        let mut state = SearchState::new(self.graph.num_vertices());
+        crate::exec::drive(self, &mut state, root, policy)
     }
 
     /// Push iteration (Algorithm 2 lines 6-14): scan current frontier,
     /// stream outgoing lists, check visited at the destination PE.
-    fn push_iteration(&mut self, it: &mut IterTraffic) {
+    fn push_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
         // P1 scans every frontier word once (double-pump BRAM).
-        it.scanned_bits = self.current.len() as u64;
+        it.scanned_bits = state.current.len() as u64;
         // Field-disjoint borrows: the scan reads `current`, P2/P3 write
         // `visited`/`next`/`levels` (push never mutates `current`, just
         // like the hardware, which snapshots the frontier at iteration
         // start).
         let graph = self.graph;
-        for v in self.current.iter_ones() {
+        for v in state.current.iter_ones() {
             let v = v as VertexId;
             let pe = part.pe_of(v);
             let pg = part.pg_of_pe(pe);
@@ -203,9 +125,9 @@ impl<'g> BitmapEngine<'g> {
                 // Vertex dispatcher: route w to its owning PE.
                 it.per_pe_recv[part.pe_of(w)] += 1;
                 // P2/P3 at the destination PE.
-                if !self.visited.test_and_set(w as usize) {
-                    self.next.set(w as usize);
-                    self.levels[w as usize] = it.iteration + 1;
+                if !state.visited.test_and_set(w as usize) {
+                    state.next.set(w as usize);
+                    state.levels[w as usize] = it.iteration + 1;
                     it.newly_visited += 1;
                 }
             }
@@ -215,10 +137,10 @@ impl<'g> BitmapEngine<'g> {
     /// Pull iteration (Algorithm 2 lines 15-22): scan unvisited vertices,
     /// stream incoming lists (chunked early exit), check the current
     /// frontier at the parent's PE, forward hits back to the child's PE.
-    fn pull_iteration(&mut self, it: &mut IterTraffic) -> u64 {
+    fn pull_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) -> u64 {
         let cfg = self.cfg;
         let part = self.part;
-        it.scanned_bits = self.visited.len() as u64;
+        it.scanned_bits = state.visited.len() as u64;
         let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
         let mut next_frontier_edges = 0u64;
         let graph = self.graph;
@@ -226,7 +148,7 @@ impl<'g> BitmapEngine<'g> {
         // visited map after the scan (each unvisited vertex is seen once
         // per iteration, so deferral is safe) — this lets the scan
         // iterate the visited map without snapshotting it.
-        for v in self.visited.iter_zeros() {
+        for v in state.visited.iter_zeros() {
             let v = v as VertexId;
             let pe = part.pe_of(v);
             let pg = part.pg_of_pe(pe);
@@ -241,7 +163,7 @@ impl<'g> BitmapEngine<'g> {
             // chunk containing the first active parent.
             let mut hit_at: Option<usize> = None;
             for (i, &u) in list.iter().enumerate() {
-                if self.current.get(u as usize) {
+                if state.current.get(u as usize) {
                     hit_at = Some(i);
                     break;
                 }
@@ -260,21 +182,73 @@ impl<'g> BitmapEngine<'g> {
             if hit_at.is_some() {
                 // Soft crossbar: the (child) result returns to v's PE.
                 it.crossbar_results += 1;
-                self.next.set(v as usize);
-                self.levels[v as usize] = it.iteration + 1;
+                state.next.set(v as usize);
+                state.levels[v as usize] = it.iteration + 1;
                 it.newly_visited += 1;
                 next_frontier_edges += graph.csr.degree(v);
             }
         }
-        for (vw, nw) in self
+        for (vw, nw) in state
             .visited
             .words_mut()
             .iter_mut()
-            .zip(self.next.words())
+            .zip(state.next.words())
         {
             *vw |= nw;
         }
         next_frontier_edges
+    }
+}
+
+impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
+    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
+        let early = self.cfg.pull_early_exit;
+        self.graph = graph;
+        self.part = part;
+        self.cfg = TrafficConfig::for_partitioning(part);
+        self.cfg.pull_early_exit = early;
+        Ok(())
+    }
+
+    fn graph(&self) -> &'g Graph {
+        self.graph
+    }
+
+    fn partitioning(&self) -> Partitioning {
+        self.part
+    }
+
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats {
+        let mut it = IterTraffic::new(
+            state.bfs_level,
+            mode,
+            self.part.num_pes,
+            self.part.num_pgs,
+        );
+        it.frontier_size = state.frontier_size;
+        // Pull accumulates the next frontier's out-degree sum inline
+        // (its scan order is ascending, so the lookups are cheap); push
+        // leaves it to the driver's rescan of the ordered next frontier
+        // — inline accumulation there touches offsets in neighbor order
+        // and measures ~35% slower.
+        let next_frontier_edges = match mode {
+            Mode::Push => {
+                self.push_iteration(state, &mut it);
+                None
+            }
+            Mode::Pull => Some(self.pull_iteration(state, &mut it)),
+        };
+        StepStats {
+            newly_visited: it.newly_visited,
+            next_frontier_edges,
+            traffic: Some(it),
+            cycles: 0,
+            backpressure: 0,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bitmap"
     }
 }
 
@@ -390,5 +364,18 @@ mod tests {
         // 36B rounds to 48B; offset adds 16B.
         assert_eq!(it0.per_pg_edge_bytes[0], 48);
         assert_eq!(it0.per_pg_offset_bytes[0], 16);
+    }
+
+    #[test]
+    fn prepare_rebinds_preserving_early_exit() {
+        let g1 = generators::chain(8);
+        let g2 = generators::star(16);
+        let mut e = BitmapEngine::new(&g1, Partitioning::new(2, 1))
+            .with_config(TrafficConfig::for_partitioning(Partitioning::new(2, 1)).with_early_exit());
+        e.prepare(&g2, Partitioning::new(4, 2)).unwrap();
+        assert_eq!(e.partitioning().num_pes, 4);
+        assert!(e.cfg.pull_early_exit);
+        let run = e.run(0, &mut Hybrid::default());
+        assert_eq!(run.reached, 16);
     }
 }

@@ -1,11 +1,16 @@
 //! BFS functional engines.
 //!
 //! * [`reference`] — textbook queue-based BFS: the ground truth every
-//!   other engine (bitmap, XLA) is validated against.
+//!   other engine (bitmap, cycle, edge-centric, XLA) is validated
+//!   against.
 //! * [`bitmap`] — the paper's Algorithm 2: three bitmaps (current
 //!   frontier, next frontier, visited map) with push / pull / hybrid
 //!   processing, partition-aware, emitting the per-iteration memory
-//!   traffic that drives the timing simulators.
+//!   traffic that drives the timing simulators. A
+//!   [`crate::exec::BfsEngine`]; its search state and driver loop live
+//!   in [`crate::exec`].
+//! * [`batch`] — the rayon-parallel multi-root driver (Graph500's 64
+//!   roots sharded across host cores, one search state per worker).
 //! * [`traffic`] — the per-iteration counters (active vertices, neighbor
 //!   bytes per PC, dispatcher routing loads).
 //! * [`gteps`] — the Graph500 performance metric the paper reports.

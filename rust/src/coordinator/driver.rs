@@ -1,15 +1,20 @@
 //! End-to-end dataset driver: materialize a Table-I dataset, run the
-//! functional engine over sampled roots, time it with the simulator, and
-//! aggregate GTEPS the Graph500 way.
+//! selected [`BfsEngine`](crate::exec::BfsEngine) over sampled roots,
+//! time it, and aggregate GTEPS the Graph500 way.
+//!
+//! The engine is a sweep dimension exactly like PC/PE counts: every
+//! engine name accepted by [`crate::exec::make_engine`] works here, and
+//! one engine + one search state are reused (reset in place) across the
+//! sampled roots.
 
-use crate::bfs::bitmap::run_bfs;
 use crate::bfs::gteps::harmonic_mean;
 use crate::bfs::reference;
+use crate::exec::{make_engine, BfsEngine, SearchState};
 use crate::graph::{datasets, Graph};
 use crate::sched::{Fixed, Hybrid, ModePolicy};
 use crate::sim::config::SimConfig;
 use crate::sim::results::SimResult;
-use crate::sim::throughput::ThroughputSim;
+use crate::sim::throughput::time_run;
 use crate::Result;
 
 /// Options for a dataset run.
@@ -23,6 +28,9 @@ pub struct DriverOptions {
     pub seed: u64,
     /// Scheduling policy: "hybrid", "push", "pull".
     pub policy: String,
+    /// Engine to run: any name [`make_engine`] accepts
+    /// ("bitmap", "throughput", "cycle", "edge-centric", "xla").
+    pub engine: String,
 }
 
 impl Default for DriverOptions {
@@ -32,6 +40,7 @@ impl Default for DriverOptions {
             num_roots: 4,
             seed: 42,
             policy: "hybrid".into(),
+            engine: "bitmap".into(),
         }
     }
 }
@@ -72,12 +81,13 @@ pub fn run_graph(
     anyhow::ensure!(!roots.is_empty(), "no valid roots in {}", graph.name);
     let bytes = graph.csr.footprint_bytes(cfg.sv_bytes as usize)
         + graph.csc.footprint_bytes(cfg.sv_bytes as usize);
-    let sim = ThroughputSim::new(cfg.clone());
+    let mut engine = make_engine(&opts.engine, graph, cfg)?;
+    let mut state = SearchState::new(graph.num_vertices());
     let mut per_root = Vec::with_capacity(roots.len());
     for &root in &roots {
         let mut policy = make_policy(&opts.policy);
-        let run = run_bfs(graph, cfg.part, root, policy.as_mut());
-        per_root.push(sim.simulate(&run, &graph.name, bytes));
+        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        per_root.push(time_run(&run, cfg, &graph.name, bytes)?);
     }
     let gteps = harmonic_mean(&per_root.iter().map(|r| r.gteps).collect::<Vec<_>>());
     let aggregate_bw =
@@ -129,6 +139,33 @@ mod tests {
         let run = run_dataset("RMAT18-8", &cfg, &opts).unwrap();
         assert!(run.gteps > 0.0);
         assert!(run_dataset("bogus", &cfg, &opts).is_err());
+    }
+
+    #[test]
+    fn engine_is_a_sweep_dimension() {
+        // Same dataset, every engine: all must produce positive GTEPS.
+        let g = generators::rmat_graph500(8, 8, 9);
+        let cfg = SimConfig::u280(2, 4);
+        for engine in crate::exec::ENGINE_NAMES {
+            let opts = DriverOptions {
+                num_roots: 1,
+                engine: engine.to_string(),
+                ..Default::default()
+            };
+            let run = run_graph(&g, &cfg, &opts).unwrap();
+            assert!(run.gteps > 0.0, "engine {engine}");
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_a_clean_error() {
+        let g = generators::chain(8);
+        let cfg = SimConfig::u280(1, 1);
+        let opts = DriverOptions {
+            engine: "warp-drive".into(),
+            ..Default::default()
+        };
+        assert!(run_graph(&g, &cfg, &opts).is_err());
     }
 
     #[test]

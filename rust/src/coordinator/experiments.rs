@@ -6,10 +6,12 @@
 //! listed in DESIGN.md §4.
 
 use crate::baselines::{edge_centric, unpartitioned};
+use crate::bfs::batch::BatchDriver;
 use crate::bfs::bitmap::run_bfs;
 use crate::bfs::gteps::harmonic_mean;
 use crate::bfs::reference;
 use crate::coordinator::driver::{self, DriverOptions};
+use crate::exec::{make_engine, BfsEngine, SearchState, ENGINE_NAMES};
 use crate::graph::{datasets, generators, Graph};
 use crate::hbm::switch::SwitchModel;
 use crate::model::gpu;
@@ -50,6 +52,7 @@ impl ExpOptions {
             num_roots: self.num_roots,
             seed: self.seed,
             policy: policy.into(),
+            engine: "bitmap".into(),
         }
     }
 }
@@ -254,15 +257,18 @@ pub fn fig11(opts: &ExpOptions) -> Result<Table> {
         let roots = reference::sample_roots(&graph, opts.num_roots, opts.seed);
         let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
         let sim = ThroughputSim::new(cfg.clone());
+        // Multi-root batch sharded across host cores; the same per-root
+        // functional runs then feed both placements' timing models.
+        let batch = BatchDriver::new(&graph, cfg.part).run_batch(&roots, &cfg, || {
+            driver::make_policy("hybrid")
+        });
         let mut sc_g = Vec::new();
         let mut sc_bw = Vec::new();
         let mut ba_g = Vec::new();
         let mut ba_bw = Vec::new();
-        for &root in &roots {
-            let mut policy = driver::make_policy("hybrid");
-            let run = run_bfs(&graph, cfg.part, root, policy.as_mut());
-            let scala = sim.simulate(&run, &graph.name, bytes);
-            let base = unpartitioned::simulate_baseline(&run, cfg.clone(), &graph.name, bytes);
+        for run in &batch.runs {
+            let scala = sim.simulate(run, &graph.name, bytes);
+            let base = unpartitioned::simulate_baseline(run, cfg.clone(), &graph.name, bytes);
             sc_g.push(scala.gteps);
             sc_bw.push(scala.aggregate_bw);
             ba_g.push(base.gteps);
@@ -469,6 +475,42 @@ pub fn projection() -> Table {
     t
 }
 
+/// Engine matrix (extension): every [`crate::exec::BfsEngine`] on one
+/// workload, with cross-engine level agreement checked against the
+/// reference BFS — the engines sweep exactly like PC/PE counts. The
+/// cycle engine steps every cycle, so the graph is kept RMAT18-class.
+pub fn engine_matrix(opts: &ExpOptions) -> Result<Table> {
+    let cfg = SimConfig::u280(8, 16);
+    let graph = datasets::by_name("RMAT18-8", opts.scale_factor.max(8), opts.seed)
+        .ok_or_else(|| anyhow::anyhow!("dataset"))?;
+    let root = reference::sample_roots(&graph, 1, opts.seed)[0];
+    let truth = reference::bfs(&graph, root);
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut t = Table::new(vec![
+        "engine", "iters", "GTEPS", "HBM bytes", "sim cycles", "levels",
+    ]);
+    let mut state = SearchState::new(graph.num_vertices());
+    for name in ENGINE_NAMES {
+        let mut engine = make_engine(name, &graph, &cfg)?;
+        let mut policy = driver::make_policy("hybrid");
+        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        let res = crate::sim::throughput::time_run(&run, &cfg, &graph.name, bytes)?;
+        t.row(vec![
+            name.to_string(),
+            run.iterations.to_string(),
+            fmt_f(res.gteps),
+            run.traffic.total_bytes().to_string(),
+            res.total_cycles.to_string(),
+            if run.levels == truth.levels {
+                "MATCH".into()
+            } else {
+                "MISMATCH".into()
+            },
+        ]);
+    }
+    Ok(t)
+}
+
 /// Quick dataset listing (CLI `datasets`).
 pub fn datasets_table() -> Table {
     let mut t = Table::new(vec!["name", "|V| (M)", "|E| (M)", "avg deg", "directed", "real-world"]);
@@ -538,5 +580,19 @@ mod tests {
     #[test]
     fn datasets_table_lists_all() {
         assert_eq!(datasets_table().len(), 14);
+    }
+
+    #[test]
+    fn engine_matrix_all_engines_match() {
+        let t = engine_matrix(&ExpOptions {
+            scale_factor: 256,
+            num_roots: 1,
+            seed: 3,
+        })
+        .unwrap();
+        assert_eq!(t.len(), ENGINE_NAMES.len());
+        let rendered = t.render();
+        assert!(rendered.contains("MATCH"));
+        assert!(!rendered.contains("MISMATCH"));
     }
 }

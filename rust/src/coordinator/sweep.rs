@@ -1,17 +1,23 @@
-//! Configuration sweeps: grid exploration over (PCs, PEs, policy,
-//! placement) for one graph, producing the data behind the scaling
-//! figures and the design-space discussion of §VI-D.
+//! Configuration sweeps: grid exploration over (engine, PCs, PEs,
+//! policy, placement) for one graph, producing the data behind the
+//! scaling figures and the design-space discussion of §VI-D.
+//!
+//! Engines are a first-class sweep dimension: any name accepted by
+//! [`crate::exec::make_engine`] can be gridded against the hardware
+//! knobs, exactly the way PC/PE counts are.
 
-use crate::bfs::bitmap::run_bfs;
 use crate::coordinator::driver::make_policy;
+use crate::exec::{make_engine, BfsEngine, SearchState};
 use crate::graph::Graph;
 use crate::sim::config::{Placement, SimConfig};
-use crate::sim::throughput::ThroughputSim;
+use crate::sim::throughput::time_run;
 use crate::Result;
 
 /// One point of a sweep.
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
+    /// Engine that ran ("bitmap", "cycle", ...).
+    pub engine: String,
     /// HBM PCs used.
     pub pcs: usize,
     /// Total PEs.
@@ -31,6 +37,8 @@ pub struct SweepPoint {
 /// Sweep specification.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
+    /// Engines to test (any [`crate::exec::make_engine`] name).
+    pub engines: Vec<String>,
     /// PC counts to test.
     pub pcs: Vec<usize>,
     /// PEs per PC to test.
@@ -46,6 +54,7 @@ pub struct SweepSpec {
 impl Default for SweepSpec {
     fn default() -> Self {
         Self {
+            engines: vec!["bitmap".into()],
             pcs: vec![1, 4, 16, 32],
             pes_per_pc: vec![1, 2],
             policies: vec!["hybrid".into()],
@@ -61,26 +70,31 @@ pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
     anyhow::ensure!(!roots.is_empty(), "no roots");
     let root = roots[0];
     let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut state = SearchState::new(graph.num_vertices());
     let mut out = Vec::new();
-    for &pcs in &spec.pcs {
-        for &ppc in &spec.pes_per_pc {
-            let pes = pcs * ppc;
-            for policy_name in &spec.policies {
-                for &placement in &spec.placements {
-                    let mut cfg = SimConfig::u280(pcs, pes);
-                    cfg.placement = placement;
-                    let mut policy = make_policy(policy_name);
-                    let run = run_bfs(graph, cfg.part, root, policy.as_mut());
-                    let res = ThroughputSim::new(cfg).simulate(&run, &graph.name, bytes);
-                    out.push(SweepPoint {
-                        pcs,
-                        pes,
-                        policy: policy_name.clone(),
-                        placement,
-                        gteps: res.gteps,
-                        aggregate_bw: res.aggregate_bw,
-                        cycles: res.total_cycles,
-                    });
+    for engine_name in &spec.engines {
+        for &pcs in &spec.pcs {
+            for &ppc in &spec.pes_per_pc {
+                let pes = pcs * ppc;
+                for policy_name in &spec.policies {
+                    for &placement in &spec.placements {
+                        let mut cfg = SimConfig::u280(pcs, pes);
+                        cfg.placement = placement;
+                        let mut engine = make_engine(engine_name, graph, &cfg)?;
+                        let mut policy = make_policy(policy_name);
+                        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+                        let res = time_run(&run, &cfg, &graph.name, bytes)?;
+                        out.push(SweepPoint {
+                            engine: engine_name.clone(),
+                            pcs,
+                            pes,
+                            policy: policy_name.clone(),
+                            placement,
+                            gteps: res.gteps,
+                            aggregate_bw: res.aggregate_bw,
+                            cycles: res.total_cycles,
+                        });
+                    }
                 }
             }
         }
@@ -109,6 +123,7 @@ mod tests {
             policies: vec!["push".into(), "hybrid".into()],
             placements: vec![Placement::Partitioned, Placement::Unpartitioned],
             seed: 3,
+            ..Default::default()
         };
         let pts = sweep(&g, &spec).unwrap();
         assert_eq!(pts.len(), 2 * 2 * 2 * 2);
@@ -116,6 +131,25 @@ mod tests {
         assert!(b.gteps > 0.0);
         // Best point should be partitioned (baseline placement loses).
         assert_eq!(b.placement, Placement::Partitioned);
+    }
+
+    #[test]
+    fn engines_sweep_like_hardware_knobs() {
+        let g = generators::rmat_graph500(8, 8, 11);
+        let spec = SweepSpec {
+            engines: vec!["bitmap".into(), "cycle".into(), "edge-centric".into()],
+            pcs: vec![2],
+            pes_per_pc: vec![2],
+            policies: vec!["hybrid".into()],
+            placements: vec![Placement::Partitioned],
+            seed: 11,
+        };
+        let pts = sweep(&g, &spec).unwrap();
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert!(p.gteps > 0.0, "engine {}", p.engine);
+            assert!(p.cycles > 0, "engine {}", p.engine);
+        }
     }
 
     #[test]
@@ -127,6 +161,7 @@ mod tests {
             policies: vec!["hybrid".into()],
             placements: vec![Placement::Partitioned],
             seed: 5,
+            ..Default::default()
         };
         let pts = sweep(&g, &spec).unwrap();
         assert!(pts[1].gteps > pts[0].gteps);

@@ -1,0 +1,122 @@
+//! The single level-synchronous BFS driver loop.
+//!
+//! Before this layer existed, every engine hand-rolled its own copy of
+//! the same loop (decide mode → process iteration → swap frontiers →
+//! recompute scheduler signals). It now lives here, once; engines only
+//! implement [`BfsEngine::step`].
+
+use super::engine::{BfsEngine, BfsRun};
+use super::state::SearchState;
+use crate::bfs::traffic::RunTraffic;
+use crate::graph::VertexId;
+use crate::sched::ModePolicy;
+
+/// Drive a full BFS from `root` over `state` with `engine`, letting
+/// `policy` pick each iteration's direction. `state` is reset in place
+/// for the root (no allocation), so callers may reuse one state across
+/// many roots.
+pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
+    engine: &mut E,
+    state: &mut SearchState,
+    root: VertexId,
+    policy: &mut dyn ModePolicy,
+) -> BfsRun {
+    let graph = engine.graph();
+    let n = graph.num_vertices();
+    assert_eq!(
+        state.num_vertices(),
+        n,
+        "search state sized for a different graph"
+    );
+    state.reset_for_root(root, graph.csr.degree(root));
+
+    let mut traffic = RunTraffic::default();
+    let mut iter_cycles = Vec::new();
+    let mut total_cycles = 0u64;
+    let mut backpressure = 0u64;
+
+    while state.frontier_size > 0 {
+        let mode = policy.decide(
+            state.bfs_level,
+            state.frontier_size,
+            state.frontier_edges,
+            state.visited_count,
+            n as u64,
+            graph.num_edges(),
+        );
+        let stats = engine.step(state, mode);
+        if let Some(it) = stats.traffic {
+            traffic.iters.push(it);
+        }
+        if stats.cycles > 0 {
+            iter_cycles.push(stats.cycles);
+            total_cycles += stats.cycles;
+        }
+        backpressure += stats.backpressure;
+        state.finish_iteration(stats.newly_visited);
+        state.frontier_edges = match stats.next_frontier_edges {
+            Some(e) => e,
+            None if state.frontier_size > 0 => state
+                .current
+                .iter_ones()
+                .map(|v| graph.csr.degree(v as VertexId))
+                .sum(),
+            None => 0,
+        };
+    }
+
+    let reached = state.visited.count_ones();
+    let traversed_edges = state
+        .visited
+        .iter_ones()
+        .map(|v| graph.csr.degree(v as VertexId))
+        .sum();
+    BfsRun {
+        levels: state.levels.clone(),
+        reached,
+        iterations: state.bfs_level,
+        traffic,
+        traversed_edges,
+        cycles: total_cycles,
+        iter_cycles,
+        backpressure,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::bitmap::BitmapEngine;
+    use crate::bfs::reference;
+    use crate::bfs::INF;
+    use crate::graph::{generators, Partitioning};
+    use crate::sched::Hybrid;
+
+    #[test]
+    fn state_reuse_across_roots_is_bit_exact() {
+        let g = generators::rmat_graph500(9, 8, 5);
+        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let mut state = SearchState::new(g.num_vertices());
+        for &root in &reference::sample_roots(&g, 4, 5) {
+            let run = drive(&mut engine, &mut state, root, &mut Hybrid::default());
+            let truth = reference::bfs(&g, root);
+            assert_eq!(run.levels, truth.levels, "root {root}");
+            assert_eq!(run.reached, truth.reached);
+        }
+    }
+
+    #[test]
+    fn iteration_count_matches_reference_depth() {
+        // The loop runs one step per level plus the final empty step.
+        let g = generators::chain(10);
+        let mut engine = BitmapEngine::new(&g, Partitioning::new(1, 1));
+        let run = drive(
+            &mut engine,
+            &mut SearchState::new(g.num_vertices()),
+            0,
+            &mut Hybrid::default(),
+        );
+        assert_eq!(run.iterations, reference::bfs(&g, 0).depth);
+        assert_eq!(run.levels.iter().filter(|&&l| l != INF).count(), 10);
+    }
+}

@@ -1,0 +1,182 @@
+//! The [`BfsEngine`] trait: one processing abstraction, many engines.
+
+use super::driver;
+use super::state::SearchState;
+use crate::bfs::traffic::{IterTraffic, RunTraffic};
+use crate::bfs::Mode;
+use crate::graph::{Graph, Partitioning, VertexId};
+use crate::sched::ModePolicy;
+use crate::sim::config::SimConfig;
+use crate::Result;
+
+/// What one [`BfsEngine::step`] call reports back to the shared driver.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    /// Vertices discovered (added to `state.next`) this iteration.
+    pub newly_visited: u64,
+    /// Out-degree sum of the newly discovered vertices, when the engine
+    /// accumulated it inline (pull scans in ascending order, so it can);
+    /// `None` makes the driver recompute it from the new frontier.
+    pub next_frontier_edges: Option<u64>,
+    /// Per-iteration HBM/dispatcher traffic, for engines that model it
+    /// (the functional engines); timing-only engines return `None`.
+    pub traffic: Option<IterTraffic>,
+    /// Simulated cycles charged for the iteration (cycle-accurate
+    /// engine); 0 for untimed engines.
+    pub cycles: u64,
+    /// Dispatcher backpressure events observed this iteration.
+    pub backpressure: u64,
+}
+
+/// Complete result of a BFS run through the shared driver. This is the
+/// one result type every engine produces (the former
+/// `bfs::bitmap::BfsRun`, extended with the cycle engine's timing).
+#[derive(Clone, Debug)]
+pub struct BfsRun {
+    /// Per-vertex levels (`INF` when unreachable).
+    pub levels: Vec<u32>,
+    /// Vertices reached, root included.
+    pub reached: usize,
+    /// Iterations executed — every `step` call, including the final one
+    /// that discovers nothing and terminates the loop.
+    pub iterations: u32,
+    /// Per-iteration traffic (empty for engines that do not model it).
+    pub traffic: RunTraffic,
+    /// Graph500 traversed-edge count: sum of out-degrees of reached
+    /// vertices (each edge counted once).
+    pub traversed_edges: u64,
+    /// Total simulated cycles (0 unless the engine times itself).
+    pub cycles: u64,
+    /// Per-iteration simulated cycles (empty unless the engine times
+    /// itself).
+    pub iter_cycles: Vec<u64>,
+    /// Dispatcher backpressure events across the run.
+    pub backpressure: u64,
+}
+
+/// A level-synchronous BFS engine over partitioned bitmap state.
+///
+/// The contract: [`prepare`](Self::prepare) binds the engine to a graph
+/// and partitioning (rebuilding any engine-private structures);
+/// [`step`](Self::step) processes exactly one iteration — reading
+/// `state.current`/`state.visited`, staging discoveries into
+/// `state.next`/`state.visited`/`state.levels` — and reports
+/// [`StepStats`]. The level-synchronous loop itself lives in ONE place,
+/// [`driver::drive`], which the provided [`run`](Self::run) /
+/// [`run_with_state`](Self::run_with_state) methods delegate to; no
+/// engine carries its own copy.
+///
+/// The `'g` parameter is the lifetime of the bound graph, so the driver
+/// can read the graph while holding the engine mutably.
+pub trait BfsEngine<'g> {
+    /// Bind (or re-bind) the engine to `graph` partitioned as `part`.
+    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()>;
+
+    /// The bound graph. Panics if `prepare` has not succeeded.
+    fn graph(&self) -> &'g Graph;
+
+    /// The bound partitioning.
+    fn partitioning(&self) -> Partitioning;
+
+    /// Process one level-synchronous iteration in `mode`.
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats;
+
+    /// Engine name for reports and sweeps.
+    fn name(&self) -> &'static str;
+
+    /// Run BFS from `root` reusing an externally owned `state`
+    /// (multi-root batches reset it in place between roots).
+    fn run_with_state(
+        &mut self,
+        state: &mut SearchState,
+        root: VertexId,
+        policy: &mut dyn ModePolicy,
+    ) -> BfsRun {
+        driver::drive(self, state, root, policy)
+    }
+
+    /// Run BFS from `root` with a fresh state.
+    fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
+        let mut state = SearchState::new(self.graph().num_vertices());
+        driver::drive(self, &mut state, root, policy)
+    }
+}
+
+/// The engine names [`make_engine`] accepts (the XLA engine additionally
+/// exists behind the `xla` cargo feature).
+pub const ENGINE_NAMES: &[&str] = &["bitmap", "throughput", "cycle", "edge-centric"];
+
+/// Build a prepared engine by name — the knob that lets every
+/// figure/table driver sweep *engines* the same way it sweeps PC/PE
+/// counts. `cfg` supplies the partitioning and the simulator knobs the
+/// timed engines need.
+pub fn make_engine<'g>(
+    name: &str,
+    graph: &'g Graph,
+    cfg: &SimConfig,
+) -> Result<Box<dyn BfsEngine<'g> + 'g>> {
+    use crate::baselines::edge_centric::{EdgeCentricConfig, EdgeCentricEngine};
+    use crate::bfs::bitmap::{BitmapEngine, TrafficConfig};
+    use crate::sim::cycle::CycleSim;
+    use crate::sim::throughput::ThroughputEngine;
+
+    let mut engine: Box<dyn BfsEngine<'g> + 'g> = match name {
+        "bitmap" => {
+            let mut tc = TrafficConfig::for_partitioning(cfg.part);
+            tc.pull_early_exit = cfg.pull_early_exit;
+            Box::new(BitmapEngine::new(graph, cfg.part).with_config(tc))
+        }
+        "throughput" => Box::new(ThroughputEngine::new(graph, cfg.clone())),
+        "cycle" => Box::new(CycleSim::new(graph, cfg.clone())),
+        "edge-centric" => Box::new(EdgeCentricEngine::new(graph, EdgeCentricConfig::default())),
+        #[cfg(feature = "xla")]
+        "xla" => Box::new(crate::runtime::XlaBfsEngine::new()?),
+        #[cfg(not(feature = "xla"))]
+        "xla" => anyhow::bail!(
+            "the XLA engine needs the `xla` cargo feature (vendored xla crate); \
+             rebuild with `--features xla`"
+        ),
+        other => anyhow::bail!(
+            "unknown engine '{other}' (expected one of {:?} or 'xla')",
+            ENGINE_NAMES
+        ),
+    };
+    engine.prepare(graph, cfg.part)?;
+    Ok(engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::Hybrid;
+
+    #[test]
+    fn factory_builds_every_named_engine() {
+        let g = generators::rmat_graph500(8, 4, 1);
+        let cfg = SimConfig::u280(2, 4);
+        let root = reference::sample_roots(&g, 1, 1)[0];
+        let truth = reference::bfs(&g, root);
+        for name in ENGINE_NAMES {
+            let mut e = make_engine(name, &g, &cfg).expect(name);
+            assert_eq!(e.name(), *name);
+            // The edge-centric baseline is single-channel by definition
+            // and ignores the requested partitioning.
+            if *name == "edge-centric" {
+                assert_eq!(e.partitioning().num_pes, 1);
+            } else {
+                assert_eq!(e.partitioning().num_pes, 4);
+            }
+            let run = e.run(root, &mut Hybrid::default());
+            assert_eq!(run.levels, truth.levels, "engine {name}");
+        }
+    }
+
+    #[test]
+    fn factory_rejects_unknown_names() {
+        let g = generators::chain(4);
+        let cfg = SimConfig::u280(1, 1);
+        assert!(make_engine("bogus", &g, &cfg).is_err());
+    }
+}

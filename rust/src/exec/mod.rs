@@ -1,0 +1,35 @@
+//! The shared BFS execution substrate.
+//!
+//! Every engine in this repo — the Algorithm-2 bitmap engine, the
+//! cycle-accurate simulator, the analytic throughput engine, the
+//! edge-centric baseline, and the XLA/PJRT runtime path — computes the
+//! *same* level-synchronous search over the *same* state: three bitmaps
+//! (current frontier, next frontier, visited map) plus a level array.
+//! What differs is only how one iteration is *processed* (and what it
+//! costs). This module factors that commonality out, mirroring how
+//! GraphScale-style FPGA frameworks put many algorithms on one
+//! partitioned processing abstraction:
+//!
+//! * [`SearchState`] — the BRAM-resident search state, owned once and
+//!   reset in place between roots (`reset_for_root`, the hardware's
+//!   bitmap-clear pattern).
+//! * [`BfsEngine`] — the engine trait: `prepare(graph, part)` binds a
+//!   graph, `step(state, mode)` runs one iteration, and the blanket
+//!   `run(root, policy)` is the *single* level-synchronous driver loop
+//!   shared by all engines (see [`driver::drive`]).
+//! * [`driver`] — that shared loop: mode decision via
+//!   [`crate::sched::ModePolicy`], frontier swap, signal bookkeeping.
+//! * [`make_engine`] — name-keyed factory so the experiment drivers can
+//!   sweep *engines* exactly the way they sweep PC/PE counts.
+//!
+//! Multi-root batches are driven host-parallel by
+//! [`crate::bfs::batch::BatchDriver`], which shards roots across rayon
+//! workers with one `SearchState` per worker.
+
+pub mod state;
+pub mod engine;
+pub mod driver;
+
+pub use driver::drive;
+pub use engine::{make_engine, BfsEngine, BfsRun, StepStats, ENGINE_NAMES};
+pub use state::SearchState;

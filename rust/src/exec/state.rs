@@ -1,0 +1,154 @@
+//! The search state every BFS engine operates on.
+//!
+//! On the U280 this state lives in double-pump BRAM/URAM: one bit per
+//! vertex for the current frontier, next frontier and visited map, plus
+//! the level array in the PEs' local memory. A new search does not
+//! reallocate any of it — the hardware simply clears the BRAMs — and
+//! the software engines mirror that: [`SearchState::reset_for_root`]
+//! zeroes the bitmaps and refills the level array in place, which is
+//! what makes multi-root batches cheap (see
+//! [`crate::bfs::batch::BatchDriver`]).
+
+use crate::bfs::INF;
+use crate::graph::VertexId;
+use crate::util::Bitset;
+
+/// Bitmaps + level array + the driver's per-iteration signals.
+///
+/// Engines read `current`/`visited` and stage discoveries into `next`,
+/// `visited` and `levels` during [`step`](super::BfsEngine::step); the
+/// shared driver swaps the frontiers and maintains the scheduler
+/// signals between iterations.
+#[derive(Clone, Debug)]
+pub struct SearchState {
+    /// Current-frontier bitmap (vertices discovered last iteration).
+    pub current: Bitset,
+    /// Next-frontier bitmap (vertices discovered this iteration).
+    pub next: Bitset,
+    /// Visited map.
+    pub visited: Bitset,
+    /// Per-vertex BFS level; `INF` when unreached.
+    pub levels: Vec<u32>,
+    /// Vertices in the current frontier.
+    pub frontier_size: u64,
+    /// Sum of out-degrees of the current frontier (the scheduler's
+    /// push→pull switching signal).
+    pub frontier_edges: u64,
+    /// Vertices visited so far (root included).
+    pub visited_count: u64,
+    /// Iteration index of the iteration about to run (0-based).
+    pub bfs_level: u32,
+}
+
+impl SearchState {
+    /// Fresh all-clear state for an `n`-vertex graph. Call
+    /// [`reset_for_root`](Self::reset_for_root) before driving a search.
+    pub fn new(n: usize) -> Self {
+        Self {
+            current: Bitset::new(n),
+            next: Bitset::new(n),
+            visited: Bitset::new(n),
+            levels: vec![INF; n],
+            frontier_size: 0,
+            frontier_edges: 0,
+            visited_count: 0,
+            bfs_level: 0,
+        }
+    }
+
+    /// Number of vertices this state is sized for.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// In-place reset for a new search from `root` — the BRAM-clear
+    /// pattern: no allocation, just zeroing. `root_degree` seeds the
+    /// scheduler's frontier-edges signal.
+    pub fn reset_for_root(&mut self, root: VertexId, root_degree: u64) {
+        assert!(
+            (root as usize) < self.num_vertices(),
+            "root {root} out of range for {}-vertex state",
+            self.num_vertices()
+        );
+        self.current.clear_all();
+        self.next.clear_all();
+        self.visited.clear_all();
+        self.levels.iter_mut().for_each(|l| *l = INF);
+        self.current.set(root as usize);
+        self.visited.set(root as usize);
+        self.levels[root as usize] = 0;
+        self.frontier_size = 1;
+        self.frontier_edges = root_degree;
+        self.visited_count = 1;
+        self.bfs_level = 0;
+    }
+
+    /// End-of-iteration bookkeeping shared by every engine: swap the
+    /// frontiers, clear the (new) next bitmap, and roll the driver
+    /// signals forward. `newly` is the number of vertices discovered by
+    /// the iteration that just ran. `frontier_edges` must be updated by
+    /// the caller afterwards (engines that scan in ascending order
+    /// accumulate it inline; others recompute from the new frontier).
+    pub fn finish_iteration(&mut self, newly: u64) {
+        self.current.swap_with(&mut self.next);
+        self.next.clear_all();
+        self.frontier_size = newly;
+        self.visited_count += newly;
+        self.bfs_level += 1;
+    }
+
+    /// Vertices reached so far (root included).
+    pub fn reached(&self) -> usize {
+        self.visited.count_ones()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_clears_previous_search_in_place() {
+        let mut s = SearchState::new(100);
+        s.reset_for_root(3, 7);
+        // Simulate some progress.
+        s.visited.set(10);
+        s.next.set(10);
+        s.levels[10] = 1;
+        s.finish_iteration(1);
+        assert_eq!(s.frontier_size, 1);
+        assert_eq!(s.visited_count, 2);
+        assert_eq!(s.bfs_level, 1);
+        // Reset for a different root: everything back to a fresh search.
+        s.reset_for_root(42, 5);
+        assert_eq!(s.visited.count_ones(), 1);
+        assert!(s.visited.get(42));
+        assert!(s.current.get(42) && !s.current.get(10));
+        assert!(s.next.none());
+        assert_eq!(s.levels[42], 0);
+        assert!(s.levels.iter().enumerate().all(|(v, &l)| v == 42 || l == INF));
+        assert_eq!(s.frontier_size, 1);
+        assert_eq!(s.frontier_edges, 5);
+        assert_eq!(s.visited_count, 1);
+        assert_eq!(s.bfs_level, 0);
+    }
+
+    #[test]
+    fn finish_iteration_swaps_and_clears_next() {
+        let mut s = SearchState::new(10);
+        s.reset_for_root(0, 2);
+        s.next.set(4);
+        s.finish_iteration(1);
+        assert!(s.current.get(4) && !s.current.get(0));
+        assert!(s.next.none());
+        assert_eq!(s.frontier_size, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_root_is_rejected() {
+        let mut s = SearchState::new(4);
+        s.reset_for_root(4, 0);
+    }
+}

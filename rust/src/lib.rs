@@ -13,14 +13,41 @@
 //! * **Layer 1 (`python/compile/kernels/`)** — the frontier-expansion hot
 //!   spot as a Pallas kernel (MXU-style blocked boolean mat-vec).
 //!
-//! The [`runtime`] module loads the AOT artifacts through PJRT and
-//! cross-validates the XLA functional path against the bit-exact Rust
-//! engines. Python never runs on the request path.
+//! ## Module map
+//!
+//! * [`util`] — PRNG, packed bitsets, tables, mini property harness.
+//! * [`graph`] — CSR/CSC storage, generators, `VID % Q` partitioning,
+//!   the Table-I dataset registry.
+//! * [`exec`] — **the shared execution substrate**: [`exec::SearchState`]
+//!   (bitmaps + levels, reset in place per root), the
+//!   [`exec::BfsEngine`] trait, and the single level-synchronous driver
+//!   loop every engine runs on.
+//! * [`bfs`] — the reference BFS, the Algorithm-2 bitmap engine, traffic
+//!   counters, GTEPS, and the rayon-parallel multi-root
+//!   [`bfs::batch::BatchDriver`].
+//! * [`sched`] — push/pull mode policies (Beamer hybrid et al.).
+//! * [`hbm`] / [`pe`] / [`dispatcher`] — the U280 component models.
+//! * [`sim`] — the analytic throughput simulator (+
+//!   [`sim::throughput::ThroughputEngine`]) and the cycle-accurate
+//!   simulator, both `BfsEngine`s.
+//! * [`model`] — Section-V performance/resource/energy models.
+//! * [`baselines`] — unpartitioned placement and the edge-centric
+//!   single-channel engine.
+//! * [`runtime`] — XLA/PJRT execution of the AOT artifacts (the PJRT
+//!   pieces sit behind the `xla` cargo feature).
+//! * [`coordinator`] — dataset drivers, experiment runners (one per
+//!   paper table/figure plus extensions), sweeps, reports.
+//!
+//! The five engines — bitmap, cycle-accurate, analytic-throughput,
+//! edge-centric, XLA — all implement [`exec::BfsEngine`] and are built
+//! by name through [`exec::make_engine`], so experiment drivers sweep
+//! engines the same way they sweep PC/PE counts.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
 pub mod util;
 pub mod graph;
+pub mod exec;
 pub mod bfs;
 pub mod sched;
 pub mod hbm;

@@ -7,7 +7,6 @@
 use scalabfs::coordinator::driver::{self, DriverOptions};
 use scalabfs::coordinator::experiments::{self, ExpOptions};
 use scalabfs::graph::datasets;
-use scalabfs::runtime::XlaBfsEngine;
 use scalabfs::sim::config::SimConfig;
 
 const USAGE: &str = "scalabfs - ScalaBFS (HBM-FPGA BFS accelerator) reproduction
@@ -29,12 +28,14 @@ Experiment commands (regenerate paper tables/figures):
   ablation        pull early-exit reader ablation (extension)
   straggler       degraded-PC straggler study (extension)
   projection      future-card scaling projection (paper §VII)
-  sweep           config grid sweep --dataset=NAME
+  engines         every BfsEngine on one workload, levels cross-checked
+  sweep           config grid sweep --dataset=NAME [--engines=bitmap,cycle,...]
 
 System commands:
-  run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid]
+  run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
   datasets        list Table-I datasets
   xla             run BFS through the AOT XLA artifact --dataset=RMAT18-8 [--scale=...]
+                  (needs a build with --features xla)
   all             run every experiment (paper evaluation sweep)
 
 Common options:
@@ -55,6 +56,52 @@ fn parse_kv(args: &[String]) -> std::collections::HashMap<String, String> {
         }
     }
     m
+}
+
+/// The `xla` subcommand: run BFS through the AOT artifact and
+/// cross-check against the reference engine.
+#[cfg(feature = "xla")]
+fn run_xla(
+    kv: &std::collections::HashMap<String, String>,
+    scale: u32,
+    seed: u64,
+) -> anyhow::Result<()> {
+    use scalabfs::runtime::XlaBfsEngine;
+    let dataset = kv
+        .get("dataset")
+        .cloned()
+        .unwrap_or_else(|| "RMAT18-8".into());
+    // The XLA dense path needs a small graph: shrink hard.
+    let graph = datasets::by_name(&dataset, scale, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let mut engine = XlaBfsEngine::new()?;
+    let root = scalabfs::bfs::reference::sample_roots(&graph, 1, seed)[0];
+    let res = engine.run(&graph, root)?;
+    let reference = scalabfs::bfs::reference::bfs(&graph, root);
+    let ok = res.levels == reference.levels;
+    println!(
+        "xla bfs on {} (|V|={}): {} iterations, {} reached, exec {:.3} ms, levels {} reference",
+        graph.name,
+        graph.num_vertices(),
+        res.iterations,
+        res.reached,
+        res.execute_seconds * 1e3,
+        if ok { "MATCH" } else { "MISMATCH vs" }
+    );
+    anyhow::ensure!(ok, "XLA levels diverge from reference");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_xla(
+    _kv: &std::collections::HashMap<String, String>,
+    _scale: u32,
+    _seed: u64,
+) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `xla` feature; \
+         rebuild with `cargo build --features xla` (needs the vendored xla crate)"
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -96,6 +143,7 @@ fn main() -> anyhow::Result<()> {
         "ablation" => println!("{}", experiments::early_exit_ablation(&opts)?.render()),
         "straggler" => println!("{}", experiments::straggler(&opts)?.render()),
         "projection" => println!("{}", experiments::projection().render()),
+        "engines" => println!("{}", experiments::engine_matrix(&opts)?.render()),
         "sweep" => {
             let dataset = kv
                 .get("dataset")
@@ -103,12 +151,16 @@ fn main() -> anyhow::Result<()> {
                 .unwrap_or_else(|| "RMAT18-16".into());
             let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
                 .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
-            let spec = scalabfs::coordinator::sweep::SweepSpec::default();
+            let mut spec = scalabfs::coordinator::sweep::SweepSpec::default();
+            if let Some(engines) = kv.get("engines") {
+                spec.engines = engines.split(',').map(str::to_string).collect();
+            }
             let points = scalabfs::coordinator::sweep::sweep(&graph, &spec)?;
             println!("sweep on {} ({} points):", graph.name, points.len());
             for p in &points {
                 println!(
-                    "  {} PC x {} PE [{}] {:?}: {:.2} GTEPS, {:.1} GB/s",
+                    "  [{}] {} PC x {} PE [{}] {:?}: {:.2} GTEPS, {:.1} GB/s",
+                    p.engine,
                     p.pcs,
                     p.pes,
                     p.policy,
@@ -118,7 +170,10 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             if let Some(b) = scalabfs::coordinator::sweep::best(&points) {
-                println!("best: {} PC x {} PE [{}] = {:.2} GTEPS", b.pcs, b.pes, b.policy, b.gteps);
+                println!(
+                    "best: [{}] {} PC x {} PE [{}] = {:.2} GTEPS",
+                    b.engine, b.pcs, b.pes, b.policy, b.gteps
+                );
             }
         }
         "datasets" => println!("{}", experiments::datasets_table().render()),
@@ -133,6 +188,7 @@ fn main() -> anyhow::Result<()> {
                 num_roots: opts.num_roots,
                 seed: opts.seed,
                 policy: kv.get("policy").cloned().unwrap_or_else(|| "hybrid".into()),
+                engine: kv.get("engine").cloned().unwrap_or_else(|| "bitmap".into()),
             };
             let run = driver::run_dataset(&dataset, &cfg, &dopts)?;
             println!(
@@ -148,31 +204,7 @@ fn main() -> anyhow::Result<()> {
                 println!("  {}", r.summary());
             }
         }
-        "xla" => {
-            let dataset = kv
-                .get("dataset")
-                .cloned()
-                .unwrap_or_else(|| "RMAT18-8".into());
-            // The XLA dense path needs a small graph: shrink hard.
-            let scale = get_u32("scale", 512);
-            let graph = datasets::by_name(&dataset, scale, opts.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
-            let mut engine = XlaBfsEngine::new()?;
-            let root = scalabfs::bfs::reference::sample_roots(&graph, 1, opts.seed)[0];
-            let res = engine.run(&graph, root)?;
-            let reference = scalabfs::bfs::reference::bfs(&graph, root);
-            let ok = res.levels == reference.levels;
-            println!(
-                "xla bfs on {} (|V|={}): {} iterations, {} reached, exec {:.3} ms, levels {} reference",
-                graph.name,
-                graph.num_vertices(),
-                res.iterations,
-                res.reached,
-                res.execute_seconds * 1e3,
-                if ok { "MATCH" } else { "MISMATCH vs" }
-            );
-            anyhow::ensure!(ok, "XLA levels diverge from reference");
-        }
+        "xla" => run_xla(&kv, get_u32("scale", 512), opts.seed)?,
         "all" => {
             println!("== Fig 3 ==\n{}", experiments::fig3().render());
             println!("== Fig 7 ==\n{}", experiments::fig7().render());

@@ -3,6 +3,15 @@
 //! architecture end-to-end (Pallas kernel → JAX model → HLO text → PJRT
 //! execute) and is cross-validated against the bit-exact Rust engines.
 //!
+//! The engine implements [`BfsEngine`]: `prepare` picks the best-fit
+//! artifact, densifies the graph and warm-compiles the executable;
+//! `step` uploads the shared [`SearchState`] as f32 vectors, runs one
+//! `bfs_step` execute, and writes the outputs back into the bitmaps.
+//! The level-synchronous loop is the shared one in
+//! [`crate::exec::driver`] — the old per-engine host loop is gone.
+//! [`XlaBfsEngine::run_full`] remains the on-device alternative (the
+//! whole level loop under a `lax.while_loop` in one PJRT execute).
+//!
 //! The artifact signature (see `python/compile/model.py`):
 //!
 //! ```text
@@ -11,10 +20,12 @@
 //!   -> (next_frontier f32[N], visited f32[N], level f32[N], num_new f32[1])
 //! ```
 
-use super::artifacts::ArtifactStore;
-use super::blocked::{levels_to_u32, BlockedGraph};
+use super::artifacts::{Artifact, ArtifactStore};
+use super::blocked::{levels_to_u32, BlockedGraph, INF_LEVEL};
 use super::client::XlaRuntime;
-use crate::graph::{Graph, VertexId};
+use crate::bfs::Mode;
+use crate::exec::{BfsEngine, SearchState, StepStats};
+use crate::graph::{Graph, Partitioning, VertexId};
 use crate::Result;
 
 /// Result of an XLA-path BFS.
@@ -31,17 +42,36 @@ pub struct XlaBfsResult {
 }
 
 /// BFS engine running on the PJRT CPU client.
-pub struct XlaBfsEngine {
+pub struct XlaBfsEngine<'g> {
     runtime: XlaRuntime,
     store: ArtifactStore,
+    graph: Option<&'g Graph>,
+    part: Partitioning,
+    artifact: Option<Artifact>,
+    blocked: Option<BlockedGraph>,
+    adj_lit: Option<xla::Literal>,
+    /// First PJRT failure observed by `step` (the trait method is
+    /// infallible, so the error is parked here and the search is ended
+    /// early; [`run`](Self::run) surfaces it).
+    step_error: Option<anyhow::Error>,
+    /// Wall-clock seconds spent inside PJRT execute calls since the
+    /// last `prepare`.
+    pub execute_seconds: f64,
 }
 
-impl XlaBfsEngine {
+impl<'g> XlaBfsEngine<'g> {
     /// Build from the default artifact directory.
     pub fn new() -> Result<Self> {
         Ok(Self {
             runtime: XlaRuntime::cpu()?,
             store: ArtifactStore::load_default()?,
+            graph: None,
+            part: Partitioning::new(1, 1),
+            artifact: None,
+            blocked: None,
+            adj_lit: None,
+            step_error: None,
+            execute_seconds: 0.0,
         })
     }
 
@@ -50,6 +80,13 @@ impl XlaBfsEngine {
         Ok(Self {
             runtime: XlaRuntime::cpu()?,
             store,
+            graph: None,
+            part: Partitioning::new(1, 1),
+            artifact: None,
+            blocked: None,
+            adj_lit: None,
+            step_error: None,
+            execute_seconds: 0.0,
         })
     }
 
@@ -100,8 +137,59 @@ impl XlaBfsEngine {
         })
     }
 
-    /// Run BFS from `root` using the smallest artifact that fits.
-    pub fn run(&mut self, graph: &Graph, root: VertexId) -> Result<XlaBfsResult> {
+    /// Run BFS from `root` through the shared driver, using the smallest
+    /// `bfs_step` artifact that fits.
+    pub fn run(&mut self, graph: &'g Graph, root: VertexId) -> Result<XlaBfsResult> {
+        self.prepare(graph, Partitioning::new(1, 1))?;
+        let mut state = SearchState::new(graph.num_vertices());
+        let run = crate::exec::drive(self, &mut state, root, &mut crate::sched::Fixed(Mode::Push));
+        if let Some(e) = self.step_error.take() {
+            return Err(e);
+        }
+        Ok(XlaBfsResult {
+            levels: run.levels,
+            iterations: run.iterations,
+            reached: run.reached,
+            execute_seconds: self.execute_seconds,
+        })
+    }
+
+    /// One `bfs_step` execute over the current state vectors; returns
+    /// `(next_frontier, visited, level, num_new)` and accumulates the
+    /// PJRT wall time into `execute_seconds`.
+    fn execute_step(
+        &mut self,
+        frontier: &[f32],
+        visited: &[f32],
+        level: &[f32],
+        bfs_level: u32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, u64)> {
+        let artifact = self.artifact.as_ref().expect("prepare not called");
+        let adj_lit = self.adj_lit.as_ref().expect("prepare not called").clone();
+        let exe = self.runtime.load(&artifact.path)?;
+        let inputs = [
+            adj_lit,
+            xla::Literal::vec1(frontier),
+            xla::Literal::vec1(visited),
+            xla::Literal::vec1(level),
+            xla::Literal::vec1(&[bfs_level as f32]),
+        ];
+        let t0 = std::time::Instant::now();
+        let outs = exe.run(&inputs)?;
+        self.execute_seconds += t0.elapsed().as_secs_f64();
+        anyhow::ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
+        let num_new = outs[3].to_vec::<f32>()?[0].max(0.0) as u64;
+        Ok((
+            outs[0].to_vec::<f32>()?,
+            outs[1].to_vec::<f32>()?,
+            outs[2].to_vec::<f32>()?,
+            num_new,
+        ))
+    }
+}
+
+impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
+    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
         let n_real = graph.num_vertices();
         let artifact = self
             .store
@@ -114,49 +202,86 @@ impl XlaBfsEngine {
             })?
             .clone();
         let blocked = BlockedGraph::build(graph, artifact.n)?;
-        let (frontier0, visited0, level0) = blocked.initial_state(root);
-
-        let exe = self.runtime.load(&artifact.path)?;
         let n = artifact.n as i64;
-        let adj_lit = xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?;
-        let mut frontier = frontier0;
-        let mut visited = visited0;
-        let mut level = level0;
+        self.adj_lit = Some(xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?);
+        // Warm-compile so step() never pays (or fails) compilation.
+        self.runtime.load(&artifact.path)?;
+        self.graph = Some(graph);
+        self.part = part;
+        self.artifact = Some(artifact);
+        self.blocked = Some(blocked);
+        self.step_error = None;
+        self.execute_seconds = 0.0;
+        Ok(())
+    }
 
-        let mut iterations = 0u32;
-        let mut execute_seconds = 0.0f64;
-        loop {
-            let bfs_level = vec![iterations as f32];
-            let inputs = [
-                adj_lit.clone(),
-                xla::Literal::vec1(&frontier),
-                xla::Literal::vec1(&visited),
-                xla::Literal::vec1(&level),
-                xla::Literal::vec1(&bfs_level),
-            ];
-            let t0 = std::time::Instant::now();
-            let outs = exe.run(&inputs)?;
-            execute_seconds += t0.elapsed().as_secs_f64();
-            anyhow::ensure!(outs.len() == 4, "expected 4 outputs, got {}", outs.len());
-            frontier = outs[0].to_vec::<f32>()?;
-            visited = outs[1].to_vec::<f32>()?;
-            level = outs[2].to_vec::<f32>()?;
-            let num_new = outs[3].to_vec::<f32>()?[0];
-            iterations += 1;
-            if num_new <= 0.0 {
-                break;
-            }
-            anyhow::ensure!(iterations < 100_000, "xla bfs did not terminate");
+    fn graph(&self) -> &'g Graph {
+        self.graph.expect("prepare not called")
+    }
+
+    fn partitioning(&self) -> Partitioning {
+        self.part
+    }
+
+    /// One `bfs_step` execute. The dense mat-vec formulation is
+    /// push-only, so the requested mode is ignored. A PJRT failure
+    /// mid-run ends the search early (newly_visited = 0) and is parked
+    /// in `step_error`; [`XlaBfsEngine::run`] returns it to the caller.
+    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> StepStats {
+        let blocked = self.blocked.as_ref().expect("prepare not called");
+        let n_pad = blocked.n;
+        let n_real = blocked.real_n;
+        // Upload: bitmaps -> padded f32 vectors (padding stays visited,
+        // as BlockedGraph::initial_state sets it, so the kernel never
+        // activates it).
+        let mut frontier = vec![0f32; n_pad];
+        let mut visited = vec![0f32; n_pad];
+        let mut level = vec![INF_LEVEL; n_pad];
+        for v in state.current.iter_ones() {
+            frontier[v] = 1.0;
         }
+        for v in state.visited.iter_ones() {
+            visited[v] = 1.0;
+        }
+        for v in n_real..n_pad {
+            visited[v] = 1.0;
+        }
+        for (v, &l) in state.levels.iter().enumerate() {
+            if l != crate::bfs::INF {
+                level[v] = l as f32;
+            }
+        }
+        let (next_f, visited_f, level_f, num_new) =
+            match self.execute_step(&frontier, &visited, &level, state.bfs_level) {
+                Ok(outs) => outs,
+                Err(e) => {
+                    self.step_error.get_or_insert(e);
+                    return StepStats::default();
+                }
+            };
+        // Download: write the outputs back into the shared state.
+        for v in 0..n_real {
+            if next_f[v] > 0.5 {
+                state.next.set(v);
+            }
+            if visited_f[v] > 0.5 {
+                state.visited.set(v);
+            }
+        }
+        for (v, l) in levels_to_u32(&level_f, n_real).into_iter().enumerate() {
+            state.levels[v] = l;
+        }
+        StepStats {
+            newly_visited: num_new,
+            next_frontier_edges: None,
+            traffic: None,
+            cycles: 0,
+            backpressure: 0,
+        }
+    }
 
-        let levels = levels_to_u32(&level, n_real);
-        let reached = levels.iter().filter(|&&l| l != crate::bfs::INF).count();
-        Ok(XlaBfsResult {
-            levels,
-            iterations,
-            reached,
-            execute_seconds,
-        })
+    fn name(&self) -> &'static str {
+        "xla"
     }
 }
 

@@ -5,12 +5,23 @@
 //! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos
 //! with 64-bit instruction ids that the crate's XLA (0.5.1) rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT-backed modules ([`client`], [`engine`]) sit behind the `xla`
+//! cargo feature because the `xla` crate is a vendored dependency not
+//! present in the offline registry; the artifact registry and the
+//! CSR→dense conversion build unconditionally. Without the feature,
+//! requesting the `xla` engine from
+//! [`make_engine`](crate::exec::make_engine) returns a clean error.
 
-pub mod client;
 pub mod artifacts;
 pub mod blocked;
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(feature = "xla")]
 pub mod engine;
 
 pub use artifacts::ArtifactStore;
+#[cfg(feature = "xla")]
 pub use client::XlaRuntime;
-pub use engine::XlaBfsEngine;
+#[cfg(feature = "xla")]
+pub use engine::{XlaBfsEngine, XlaBfsResult};

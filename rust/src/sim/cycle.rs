@@ -7,17 +7,27 @@
 //! work from the same Algorithm-2 semantics as the functional engine,
 //! so its visited/level results are cross-checked against it in tests.
 //!
+//! The engine implements [`BfsEngine`]: each [`step`](CycleSim::step)
+//! simulates one iteration over the shared [`SearchState`]; the
+//! level-synchronous loop lives in [`crate::exec::driver`]. The
+//! per-iteration fetch-list construction (the host-side analog of the
+//! P1 scan) is sharded across rayon workers by bitmap word range —
+//! per-PG queues come back in the same ascending vertex order the
+//! hardware's scan produces.
+//!
 //! Intended for small graphs (RMAT18-class): it steps every cycle. The
 //! analytic [`super::throughput`] simulator covers the big datasets; the
 //! cycle simulator validates it (EXPERIMENTS.md reports the agreement).
 
 use super::config::SimConfig;
-use crate::bfs::{Mode, INF};
-use crate::graph::{Graph, VertexId};
+use crate::bfs::Mode;
+use crate::exec::{BfsEngine, SearchState, StepStats};
+use crate::graph::{Graph, Partitioning, VertexId};
 use crate::hbm::axi::{AxiConfig, ReadKind};
 use crate::hbm::reader::HbmReader;
 use crate::sched::ModePolicy;
-use crate::util::Bitset;
+use crate::Result;
+use rayon::prelude::*;
 use std::collections::VecDeque;
 
 /// Result of a cycle-accurate run.
@@ -53,69 +63,79 @@ struct Msg {
     child: VertexId, // == vid in push mode
 }
 
+/// Words per rayon task in the sharded P1 scan. 4096 words = 256 Ki
+/// vertices per shard: small graphs stay single-task, big frontiers
+/// split across the pool.
+const SCAN_CHUNK_WORDS: usize = 4096;
+
 impl<'g> CycleSim<'g> {
     /// New simulator for a graph + config.
     pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
         Self { graph, cfg }
     }
 
-    /// Run BFS from `root` cycle-accurately.
-    pub fn run(&self, root: VertexId, policy: &mut dyn ModePolicy) -> CycleResult {
-        let n = self.graph.num_vertices();
+    /// Run BFS from `root` cycle-accurately (fresh state; the shared
+    /// driver loop does the level synchronization).
+    pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> CycleResult {
+        let mut state = SearchState::new(self.graph.num_vertices());
+        let run = crate::exec::drive(self, &mut state, root, policy);
+        let seconds = self.cfg.cycles_to_seconds(run.cycles);
+        CycleResult {
+            cycles: run.cycles,
+            iter_cycles: run.iter_cycles,
+            seconds,
+            levels: run.levels,
+            traversed_edges: run.traversed_edges,
+            gteps: if seconds > 0.0 {
+                run.traversed_edges as f64 / seconds / 1e9
+            } else {
+                0.0
+            },
+            backpressure: run.backpressure,
+        }
+    }
+
+    /// Build this iteration's per-PG fetch lists: `(vertex, entries to
+    /// stream)` in ascending vertex order. Pull mode applies the same
+    /// chunked early exit as the functional engine. The scan is sharded
+    /// across rayon workers by word range of the scanned bitmap; the
+    /// per-shard buckets concatenate back in vertex order.
+    fn build_fetch_lists(
+        &self,
+        state: &SearchState,
+        mode: Mode,
+        verts_per_beat: usize,
+    ) -> Vec<Vec<(VertexId, usize)>> {
         let part = self.cfg.part;
-        let npes = part.num_pes;
         let npgs = part.num_pgs;
-        let dw = self.cfg.dw_bytes();
-        let sv = self.cfg.sv_bytes;
-        let verts_per_beat = (dw / sv).max(1) as usize;
-        let hops = self.cfg.dispatcher.build(npes).hops() as u64;
-
-        let mut current = Bitset::new(n);
-        let mut next = Bitset::new(n);
-        let mut visited = Bitset::new(n);
-        let mut levels = vec![INF; n];
-        levels[root as usize] = 0;
-        current.set(root as usize);
-        visited.set(root as usize);
-
-        let mut total_cycles = 0u64;
-        let mut iter_cycles = Vec::new();
-        let mut bfs_level = 0u32;
-        let mut frontier = 1u64;
-        let mut frontier_edges = self.graph.csr.degree(root);
-        let mut visited_count = 1u64;
-        let mut backpressure = 0u64;
-
-        while frontier > 0 {
-            let mode = policy.decide(
-                bfs_level,
-                frontier,
-                frontier_edges,
-                visited_count,
-                n as u64,
-                self.graph.num_edges(),
-            );
-            // ---- Build this iteration's fetch lists per PG. ----
-            // Each entry: (vertex, entries to stream). Pull mode applies
-            // the same chunked early exit as the functional engine: the
-            // HBM reader fetches DW-sized chunks and stops after the
-            // chunk containing the first active parent.
-            let mut fetches: Vec<VecDeque<(VertexId, usize)>> = vec![VecDeque::new(); npgs];
-            match mode {
-                Mode::Push => {
-                    for v in current.iter_ones() {
-                        let pg = part.pg_of(v as VertexId);
-                        let len = self.graph.out_neighbors(v as VertexId).len();
-                        fetches[pg].push_back((v as VertexId, len));
-                    }
-                }
-                Mode::Pull => {
-                    for v in visited.iter_zeros() {
-                        let list = self.graph.in_neighbors(v as VertexId);
+        let graph = self.graph;
+        let early_exit = self.cfg.pull_early_exit;
+        let current = &state.current;
+        let visited = &state.visited;
+        let scanned_words = match mode {
+            Mode::Push => current.num_words(),
+            Mode::Pull => visited.num_words(),
+        };
+        let nchunks = scanned_words.div_ceil(SCAN_CHUNK_WORDS);
+        let buckets: Vec<Vec<Vec<(VertexId, usize)>>> = (0..nchunks)
+            .into_par_iter()
+            .map(|ci| {
+                let ws = ci * SCAN_CHUNK_WORDS;
+                let we = ws + SCAN_CHUNK_WORDS;
+                let mut local: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+                match mode {
+                    Mode::Push => current.for_ones_in_word_range(ws, we, |v| {
+                        let v = v as VertexId;
+                        let len = graph.out_neighbors(v).len();
+                        local[part.pg_of(v)].push((v, len));
+                    }),
+                    Mode::Pull => visited.for_zeros_in_word_range(ws, we, |v| {
+                        let v = v as VertexId;
+                        let list = graph.in_neighbors(v);
                         if list.is_empty() {
-                            continue;
+                            return;
                         }
-                        let fetched = if self.cfg.pull_early_exit {
+                        let fetched = if early_exit {
                             match list.iter().position(|&u| current.get(u as usize)) {
                                 Some(i) => ((i + verts_per_beat) / verts_per_beat
                                     * verts_per_beat)
@@ -125,221 +145,237 @@ impl<'g> CycleSim<'g> {
                         } else {
                             list.len()
                         };
-                        let pg = part.pg_of(v as VertexId);
-                        fetches[pg].push_back((v as VertexId, fetched));
-                    }
+                        local[part.pg_of(v)].push((v, fetched));
+                    }),
                 }
+                local
+            })
+            .collect();
+        let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+        for mut bucket in buckets {
+            for (pg, shard) in bucket.iter_mut().enumerate() {
+                fetches[pg].append(shard);
             }
+        }
+        fetches
+    }
+}
 
-            // ---- Cycle loop for the iteration. ----
-            let mut readers: Vec<HbmReader> = (0..npgs)
-                .map(|_| {
-                    // Outstanding depth sized to hide the HBM latency at
-                    // one beat per cycle (Little's law: >= latency
-                    // requests in flight; Shuhai's measurement rig uses
-                    // an outstanding buffer of 256).
-                    HbmReader::new(
-                        AxiConfig {
-                            data_width: dw,
-                            max_burst: 64,
-                            outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
-                        },
-                        self.cfg.hbm.latency_cycles,
-                    )
-                })
-                .collect();
-            // Per-PG: stream cursors of lists currently being beaten out.
-            let mut list_queue: Vec<VecDeque<(VertexId, usize)>> =
-                vec![VecDeque::new(); npgs];
-            // Dispatcher input staging and per-PE output FIFOs.
-            let mut in_flight_msgs: VecDeque<(u64, usize, Msg)> = VecDeque::new();
-            let mut pe_fifo: Vec<VecDeque<Msg>> =
-                vec![VecDeque::new(); npes];
-            // Per-PG cursor into the neighbor list being streamed.
-            let mut stream_pos: Vec<usize> = vec![0; npgs];
-            let mut stream_vert: Vec<Option<(VertexId, usize)>> = vec![None; npgs];
+impl<'g> BfsEngine<'g> for CycleSim<'g> {
+    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
+        self.graph = graph;
+        self.cfg.part = part;
+        Ok(())
+    }
 
-            // P1 scan prologue: each PE scans its interval (pipelined with
-            // fetch issue; charge the scan as a floor at the end).
-            let interval_bits = (n as u64).div_ceil(npes as u64);
-            let scan_floor = interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64);
+    fn graph(&self) -> &'g Graph {
+        self.graph
+    }
 
-            // Seed the readers.
+    fn partitioning(&self) -> Partitioning {
+        self.cfg.part
+    }
+
+    /// Simulate one iteration cycle-by-cycle.
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats {
+        let n = self.graph.num_vertices();
+        let part = self.cfg.part;
+        let npes = part.num_pes;
+        let npgs = part.num_pgs;
+        let dw = self.cfg.dw_bytes();
+        let sv = self.cfg.sv_bytes;
+        let verts_per_beat = (dw / sv).max(1) as usize;
+        let hops = self.cfg.dispatcher.build(npes).hops() as u64;
+        let graph = self.graph;
+        let mut backpressure = 0u64;
+
+        // ---- Build this iteration's fetch lists per PG (parallel). ----
+        let fetches = self.build_fetch_lists(state, mode, verts_per_beat);
+
+        // ---- Cycle loop for the iteration. ----
+        let mut readers: Vec<HbmReader> = (0..npgs)
+            .map(|_| {
+                // Outstanding depth sized to hide the HBM latency at
+                // one beat per cycle (Little's law: >= latency
+                // requests in flight; Shuhai's measurement rig uses
+                // an outstanding buffer of 256).
+                HbmReader::new(
+                    AxiConfig {
+                        data_width: dw,
+                        max_burst: 64,
+                        outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
+                    },
+                    self.cfg.hbm.latency_cycles,
+                )
+            })
+            .collect();
+        // Per-PG: stream cursors of lists currently being beaten out.
+        let mut list_queue: Vec<VecDeque<(VertexId, usize)>> = vec![VecDeque::new(); npgs];
+        // Dispatcher input staging and per-PE output FIFOs.
+        let mut in_flight_msgs: VecDeque<(u64, usize, Msg)> = VecDeque::new();
+        let mut pe_fifo: Vec<VecDeque<Msg>> = vec![VecDeque::new(); npes];
+        // Per-PG cursor into the neighbor list being streamed.
+        let mut stream_pos: Vec<usize> = vec![0; npgs];
+        let mut stream_vert: Vec<Option<(VertexId, usize)>> = vec![None; npgs];
+
+        // P1 scan prologue: each PE scans its interval (pipelined with
+        // fetch issue; charge the scan as a floor at the end).
+        let interval_bits = (n as u64).div_ceil(npes as u64);
+        let scan_floor = interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64);
+
+        // Seed the readers.
+        for (pg, pg_fetches) in fetches.iter().enumerate() {
+            for &(v, fetch_len) in pg_fetches {
+                readers[pg].request_list(part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
+                list_queue[pg].push_back((v, fetch_len));
+            }
+        }
+
+        let mut cycle = 0u64;
+        let mut newly = 0u64;
+        let mut pe_budget = vec![0u32; npes];
+        loop {
+            cycle += 1;
+            // HBM readers: one beat per PG per cycle.
             for pg in 0..npgs {
-                while let Some((v, fetch_len)) = fetches[pg].pop_front() {
-                    readers[pg]
-                        .request_list(part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
-                    list_queue[pg].push_back((v, fetch_len));
-                }
-            }
-
-            let mut cycle = 0u64;
-            let mut newly = 0u64;
-            let mut pe_budget = vec![0u32; npes];
-            loop {
-                cycle += 1;
-                // HBM readers: one beat per PG per cycle.
-                for pg in 0..npgs {
-                    // Pops list_queue until a stream with entries to send
-                    // is active (zero-fetch lists have no edge beats, so
-                    // they must never occupy the stream slot).
-                    let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
-                                       stream_pos: &mut usize,
-                                       queue: &mut VecDeque<(VertexId, usize)>| {
-                        while stream_vert.is_none() {
-                            let Some((v, fetch_len)) = queue.pop_front() else {
-                                break;
-                            };
-                            if fetch_len > 0 {
-                                *stream_vert = Some((v, fetch_len));
-                                *stream_pos = 0;
-                            }
-                        }
-                    };
-                    if let Some(beat) = readers[pg].tick() {
-                        match beat.kind {
-                            ReadKind::Offset => {
-                                // Offset beat: select the next list to stream.
-                                next_stream(
-                                    &mut stream_vert[pg],
-                                    &mut stream_pos[pg],
-                                    &mut list_queue[pg],
-                                );
-                            }
-                            ReadKind::Edges => {
-                                next_stream(
-                                    &mut stream_vert[pg],
-                                    &mut stream_pos[pg],
-                                    &mut list_queue[pg],
-                                );
-                                if let Some((v, fetch_len)) = stream_vert[pg] {
-                                    let list = match mode {
-                                        Mode::Push => self.graph.out_neighbors(v),
-                                        Mode::Pull => self.graph.in_neighbors(v),
-                                    };
-                                    let end =
-                                        (stream_pos[pg] + verts_per_beat).min(fetch_len);
-                                    for &u in &list[stream_pos[pg]..end] {
-                                        let msg = match mode {
-                                            Mode::Push => Msg { vid: u, child: u },
-                                            Mode::Pull => Msg { vid: u, child: v },
-                                        };
-                                        in_flight_msgs.push_back((
-                                            cycle + hops,
-                                            part.pe_of(msg.vid),
-                                            msg,
-                                        ));
-                                    }
-                                    stream_pos[pg] = end;
-                                    if end >= fetch_len {
-                                        stream_vert[pg] = None;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                // Dispatcher delivery: after `hops` cycles, each output
-                // port delivers up to p2_msgs_per_cycle messages per
-                // cycle — the port width Eq 1 sizes the AXI bus for (two
-                // vertices per PE per cycle, absorbed by the double-pump
-                // BRAM).
-                let port_width = self.cfg.pe.p2_msgs_per_cycle;
-                let mut delivered = vec![0u32; npes];
-                let mut requeue: VecDeque<(u64, usize, Msg)> = VecDeque::new();
-                while let Some((t, pe, msg)) = in_flight_msgs.pop_front() {
-                    if t > cycle {
-                        requeue.push_back((t, pe, msg));
-                        continue;
-                    }
-                    if delivered[pe] >= port_width || pe_fifo[pe].len() >= 64 {
-                        backpressure += u64::from(pe_fifo[pe].len() >= 64);
-                        requeue.push_back((t, pe, msg));
-                        continue;
-                    }
-                    delivered[pe] += 1;
-                    pe_fifo[pe].push_back(msg);
-                }
-                in_flight_msgs = requeue;
-
-                // PEs: consume up to bram_ops_per_cycle messages.
-                for pe in 0..npes {
-                    pe_budget[pe] = self.cfg.pe.bram_ops_per_cycle;
-                    while pe_budget[pe] > 0 {
-                        let Some(msg) = pe_fifo[pe].pop_front() else {
+                // Pops list_queue until a stream with entries to send
+                // is active (zero-fetch lists have no edge beats, so
+                // they must never occupy the stream slot).
+                let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
+                                   stream_pos: &mut usize,
+                                   queue: &mut VecDeque<(VertexId, usize)>| {
+                    while stream_vert.is_none() {
+                        let Some((v, fetch_len)) = queue.pop_front() else {
                             break;
                         };
-                        pe_budget[pe] -= 1;
-                        match mode {
-                            Mode::Push => {
-                                let w = msg.vid as usize;
-                                if !visited.get(w) {
-                                    visited.set(w);
-                                    next.set(w);
-                                    levels[w] = bfs_level + 1;
-                                    newly += 1;
+                        if fetch_len > 0 {
+                            *stream_vert = Some((v, fetch_len));
+                            *stream_pos = 0;
+                        }
+                    }
+                };
+                if let Some(beat) = readers[pg].tick() {
+                    match beat.kind {
+                        ReadKind::Offset => {
+                            // Offset beat: select the next list to stream.
+                            next_stream(
+                                &mut stream_vert[pg],
+                                &mut stream_pos[pg],
+                                &mut list_queue[pg],
+                            );
+                        }
+                        ReadKind::Edges => {
+                            next_stream(
+                                &mut stream_vert[pg],
+                                &mut stream_pos[pg],
+                                &mut list_queue[pg],
+                            );
+                            if let Some((v, fetch_len)) = stream_vert[pg] {
+                                let list = match mode {
+                                    Mode::Push => graph.out_neighbors(v),
+                                    Mode::Pull => graph.in_neighbors(v),
+                                };
+                                let end = (stream_pos[pg] + verts_per_beat).min(fetch_len);
+                                for &u in &list[stream_pos[pg]..end] {
+                                    let msg = match mode {
+                                        Mode::Push => Msg { vid: u, child: u },
+                                        Mode::Pull => Msg { vid: u, child: v },
+                                    };
+                                    in_flight_msgs.push_back((
+                                        cycle + hops,
+                                        part.pe_of(msg.vid),
+                                        msg,
+                                    ));
                                 }
-                            }
-                            Mode::Pull => {
-                                let u = msg.vid as usize;
-                                let c = msg.child as usize;
-                                if current.get(u) && !visited.get(c) {
-                                    visited.set(c);
-                                    next.set(c);
-                                    levels[c] = bfs_level + 1;
-                                    newly += 1;
+                                stream_pos[pg] = end;
+                                if end >= fetch_len {
+                                    stream_vert[pg] = None;
                                 }
                             }
                         }
                     }
                 }
-
-                // Termination: all pipelines drained.
-                let readers_idle = readers.iter().all(|r| r.idle());
-                let streams_idle =
-                    stream_vert.iter().all(|s| s.is_none()) && list_queue.iter().all(|q| q.is_empty());
-                let dispatch_idle = in_flight_msgs.is_empty();
-                let pes_idle = pe_fifo.iter().all(|f| f.is_empty());
-                if readers_idle && streams_idle && dispatch_idle && pes_idle {
-                    break;
+            }
+            // Dispatcher delivery: after `hops` cycles, each output
+            // port delivers up to p2_msgs_per_cycle messages per
+            // cycle — the port width Eq 1 sizes the AXI bus for (two
+            // vertices per PE per cycle, absorbed by the double-pump
+            // BRAM).
+            let port_width = self.cfg.pe.p2_msgs_per_cycle;
+            let mut delivered = vec![0u32; npes];
+            let mut requeue: VecDeque<(u64, usize, Msg)> = VecDeque::new();
+            while let Some((t, pe, msg)) = in_flight_msgs.pop_front() {
+                if t > cycle {
+                    requeue.push_back((t, pe, msg));
+                    continue;
                 }
-                if cycle > 500_000_000 {
-                    panic!("cycle sim did not converge");
+                if delivered[pe] >= port_width || pe_fifo[pe].len() >= 64 {
+                    backpressure += u64::from(pe_fifo[pe].len() >= 64);
+                    requeue.push_back((t, pe, msg));
+                    continue;
+                }
+                delivered[pe] += 1;
+                pe_fifo[pe].push_back(msg);
+            }
+            in_flight_msgs = requeue;
+
+            // PEs: consume up to bram_ops_per_cycle messages.
+            for pe in 0..npes {
+                pe_budget[pe] = self.cfg.pe.bram_ops_per_cycle;
+                while pe_budget[pe] > 0 {
+                    let Some(msg) = pe_fifo[pe].pop_front() else {
+                        break;
+                    };
+                    pe_budget[pe] -= 1;
+                    match mode {
+                        Mode::Push => {
+                            let w = msg.vid as usize;
+                            if !state.visited.get(w) {
+                                state.visited.set(w);
+                                state.next.set(w);
+                                state.levels[w] = state.bfs_level + 1;
+                                newly += 1;
+                            }
+                        }
+                        Mode::Pull => {
+                            let u = msg.vid as usize;
+                            let c = msg.child as usize;
+                            if state.current.get(u) && !state.visited.get(c) {
+                                state.visited.set(c);
+                                state.next.set(c);
+                                state.levels[c] = state.bfs_level + 1;
+                                newly += 1;
+                            }
+                        }
+                    }
                 }
             }
-            let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
-            total_cycles += it_cycles;
-            iter_cycles.push(it_cycles);
 
-            current.swap_with(&mut next);
-            next.clear_all();
-            frontier = newly;
-            visited_count += newly;
-            frontier_edges = current
-                .iter_ones()
-                .map(|v| self.graph.csr.degree(v as VertexId))
-                .sum();
-            bfs_level += 1;
+            // Termination: all pipelines drained.
+            let readers_idle = readers.iter().all(|r| r.idle());
+            let streams_idle = stream_vert.iter().all(|s| s.is_none())
+                && list_queue.iter().all(|q| q.is_empty());
+            let dispatch_idle = in_flight_msgs.is_empty();
+            let pes_idle = pe_fifo.iter().all(|f| f.is_empty());
+            if readers_idle && streams_idle && dispatch_idle && pes_idle {
+                break;
+            }
+            if cycle > 500_000_000 {
+                panic!("cycle sim did not converge");
+            }
         }
-
-        let traversed_edges: u64 = visited
-            .iter_ones()
-            .map(|v| self.graph.csr.degree(v as VertexId))
-            .sum();
-        let seconds = self.cfg.cycles_to_seconds(total_cycles);
-        CycleResult {
-            cycles: total_cycles,
-            iter_cycles,
-            seconds,
-            levels,
-            traversed_edges,
-            gteps: if seconds > 0.0 {
-                traversed_edges as f64 / seconds / 1e9
-            } else {
-                0.0
-            },
+        let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
+        StepStats {
+            newly_visited: newly,
+            next_frontier_edges: None,
+            traffic: None,
+            cycles: it_cycles,
             backpressure,
         }
+    }
+
+    fn name(&self) -> &'static str {
+        "cycle"
     }
 }
 
@@ -354,8 +390,7 @@ mod tests {
     fn cycle_sim_levels_match_reference_push() {
         let g = generators::rmat_graph500(8, 8, 21);
         let root = reference::sample_roots(&g, 1, 21)[0];
-        let sim = CycleSim::new(&g, SimConfig::u280(4, 8));
-        let res = sim.run(root, &mut Fixed(Mode::Push));
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Fixed(Mode::Push));
         let r = reference::bfs(&g, root);
         assert_eq!(res.levels, r.levels);
     }
@@ -364,8 +399,7 @@ mod tests {
     fn cycle_sim_levels_match_reference_hybrid() {
         let g = generators::rmat_graph500(9, 8, 22);
         let root = reference::sample_roots(&g, 1, 22)[0];
-        let sim = CycleSim::new(&g, SimConfig::u280(4, 8));
-        let res = sim.run(root, &mut Hybrid::default());
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
         let r = reference::bfs(&g, root);
         assert_eq!(res.levels, r.levels);
         assert!(res.gteps > 0.0);
@@ -385,5 +419,27 @@ mod tests {
             fast.cycles,
             slow.cycles
         );
+    }
+
+    #[test]
+    fn sharded_fetch_lists_preserve_vertex_order() {
+        let g = generators::rmat_graph500(10, 8, 24);
+        let cfg = SimConfig::u280(4, 8);
+        let sim = CycleSim::new(&g, cfg);
+        let mut state = SearchState::new(g.num_vertices());
+        // Mark a spread of frontier vertices.
+        for v in (0..g.num_vertices()).step_by(17) {
+            state.current.set(v);
+        }
+        let fetches = sim.build_fetch_lists(&state, Mode::Push, 4);
+        assert_eq!(fetches.len(), 4);
+        for pg_list in &fetches {
+            assert!(
+                pg_list.windows(2).all(|w| w[0].0 < w[1].0),
+                "per-PG fetch list not in ascending vertex order"
+            );
+        }
+        let total: usize = fetches.iter().map(Vec::len).sum();
+        assert_eq!(total, state.current.count_ones());
     }
 }

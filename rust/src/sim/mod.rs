@@ -4,8 +4,11 @@
 //!   functional engine's traffic counters into cycles using the paper's
 //!   Section-V bandwidth balance (Eq 1–6) plus measured load imbalance.
 //!   Scales to the full Table-I datasets.
+//!   [`throughput::ThroughputEngine`] packages it as a
+//!   [`crate::exec::BfsEngine`].
 //! * [`cycle`] — cycle-stepped, FIFO-accurate simulator of the HBM
-//!   readers, dispatcher and PEs. Used on small graphs (RMAT18-*) to
+//!   readers, dispatcher and PEs, also a
+//!   [`crate::exec::BfsEngine`]. Used on small graphs (RMAT18-*) to
 //!   validate the analytic model and for dispatcher ablations.
 //! * [`config`] / [`results`] — shared configuration and result types.
 
@@ -17,5 +20,5 @@ pub mod failure;
 
 pub use config::{DispatcherKind, Placement, SimConfig};
 pub use results::{IterBreakdown, SimResult};
-pub use throughput::ThroughputSim;
+pub use throughput::{ThroughputEngine, ThroughputSim};
 pub use cycle::CycleSim;

@@ -68,6 +68,24 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Result for an engine that times itself (the cycle-accurate
+    /// simulator): total cycles with no per-phase breakdown.
+    pub fn from_cycles(graph: &str, total_cycles: u64, seconds: f64, traversed_edges: u64) -> Self {
+        Self {
+            graph: graph.to_string(),
+            iters: Vec::new(),
+            total_cycles,
+            seconds,
+            traversed_edges,
+            gteps: if seconds > 0.0 {
+                traversed_edges as f64 / seconds / 1e9
+            } else {
+                0.0
+            },
+            aggregate_bw: 0.0,
+        }
+    }
+
     /// Total bytes moved.
     pub fn total_bytes(&self) -> u64 {
         self.iters.iter().map(|i| i.bytes).sum()

@@ -19,6 +19,8 @@ use super::config::{Placement, SimConfig};
 use super::results::{Bottleneck, IterBreakdown, SimResult};
 use crate::bfs::bitmap::BfsRun;
 use crate::bfs::traffic::IterTraffic;
+use crate::exec::{BfsEngine, SearchState, StepStats};
+use crate::graph::Graph;
 
 /// Compute-side cycle bounds of one iteration (see
 /// [`ThroughputSim::probe_iteration`]).
@@ -191,6 +193,107 @@ impl ThroughputSim {
     }
 }
 
+/// The analytic-throughput engine: the Algorithm-2 functional step timed
+/// by [`ThroughputSim`] — what the figure/table drivers sweep when they
+/// want GTEPS at dataset scale. Functionally it *is* the bitmap engine
+/// (its [`step`](crate::exec::BfsEngine::step) delegates there), packaged
+/// as a [`BfsEngine`](crate::exec::BfsEngine) with a
+/// [`run_timed`](Self::run_timed) that attaches the Section-V timing.
+pub struct ThroughputEngine<'g> {
+    inner: crate::bfs::bitmap::BitmapEngine<'g>,
+    cfg: SimConfig,
+    graph_name: String,
+    graph_bytes: u64,
+}
+
+impl<'g> ThroughputEngine<'g> {
+    /// New engine over `graph` with the full simulator config (the
+    /// partitioning and the pull-early-exit knob come from `cfg`).
+    pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
+        use crate::bfs::bitmap::{BitmapEngine, TrafficConfig};
+        let mut tc = TrafficConfig::for_partitioning(cfg.part);
+        tc.pull_early_exit = cfg.pull_early_exit;
+        Self {
+            inner: BitmapEngine::new(graph, cfg.part).with_config(tc),
+            graph_name: graph.name.clone(),
+            graph_bytes: graph.csr.footprint_bytes(cfg.sv_bytes as usize)
+                + graph.csc.footprint_bytes(cfg.sv_bytes as usize),
+            cfg,
+        }
+    }
+
+    /// Run BFS from `root` and time the resulting traffic.
+    pub fn run_timed(
+        &mut self,
+        root: crate::graph::VertexId,
+        policy: &mut dyn crate::sched::ModePolicy,
+    ) -> (BfsRun, SimResult) {
+        let run = self.run(root, policy);
+        let res = ThroughputSim::new(self.cfg.clone()).simulate(
+            &run,
+            &self.graph_name,
+            self.graph_bytes,
+        );
+        (run, res)
+    }
+}
+
+impl<'g> BfsEngine<'g> for ThroughputEngine<'g> {
+    fn prepare(&mut self, graph: &'g Graph, part: crate::graph::Partitioning) -> crate::Result<()> {
+        self.cfg.part = part;
+        self.graph_name = graph.name.clone();
+        self.graph_bytes = graph.csr.footprint_bytes(self.cfg.sv_bytes as usize)
+            + graph.csc.footprint_bytes(self.cfg.sv_bytes as usize);
+        self.inner.prepare(graph, part)
+    }
+
+    fn graph(&self) -> &'g Graph {
+        self.inner.graph()
+    }
+
+    fn partitioning(&self) -> crate::graph::Partitioning {
+        self.cfg.part
+    }
+
+    fn step(&mut self, state: &mut SearchState, mode: crate::bfs::Mode) -> StepStats {
+        self.inner.step(state, mode)
+    }
+
+    fn name(&self) -> &'static str {
+        "throughput"
+    }
+}
+
+/// Convert a finished [`BfsRun`] into a timing result, dispatching on
+/// what the engine reported: per-iteration traffic goes through the
+/// analytic model; self-reported cycles (the cycle-accurate engine)
+/// convert directly; an engine that reports neither (the XLA engine
+/// times host wall-clock only) is an error rather than a silent
+/// 0-GTEPS result. The one place the experiment drivers go through.
+pub fn time_run(
+    run: &BfsRun,
+    cfg: &SimConfig,
+    graph_name: &str,
+    graph_bytes: u64,
+) -> crate::Result<SimResult> {
+    if !run.traffic.iters.is_empty() {
+        Ok(ThroughputSim::new(cfg.clone()).simulate(run, graph_name, graph_bytes))
+    } else if run.cycles > 0 {
+        Ok(SimResult::from_cycles(
+            graph_name,
+            run.cycles,
+            cfg.cycles_to_seconds(run.cycles),
+            run.traversed_edges,
+        ))
+    } else {
+        anyhow::bail!(
+            "engine reported neither traffic nor cycles on {graph_name}; simulated GTEPS \
+             is unavailable (the xla engine measures host wall-clock only — use \
+             XlaBfsEngine::run directly)"
+        )
+    }
+}
+
 /// End-to-end helper: run the functional engine then time it.
 pub fn simulate_bfs(
     graph: &crate::graph::Graph,
@@ -198,12 +301,7 @@ pub fn simulate_bfs(
     root: crate::graph::VertexId,
     policy: &mut dyn crate::sched::ModePolicy,
 ) -> (BfsRun, SimResult) {
-    let run = crate::bfs::bitmap::run_bfs(graph, cfg.part, root, policy);
-    let graph_bytes =
-        graph.csr.footprint_bytes(cfg.sv_bytes as usize) + graph.csc.footprint_bytes(cfg.sv_bytes as usize);
-    let sim = ThroughputSim::new(cfg);
-    let result = sim.simulate(&run, &graph.name, graph_bytes);
-    (run, result)
+    ThroughputEngine::new(graph, cfg).run_timed(root, policy)
 }
 
 #[cfg(test)]

@@ -101,6 +101,57 @@ impl Bitset {
         std::mem::swap(&mut self.bits, &mut other.bits);
     }
 
+    /// Number of backing `u64` words.
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Visit every set bit whose index falls in words
+    /// `[word_start, word_end)` (clamped to the bit length), in ascending
+    /// order. This is the primitive behind sharded parallel scans: each
+    /// worker takes a disjoint word range and the per-range results
+    /// concatenate back in vertex order.
+    pub fn for_ones_in_word_range(
+        &self,
+        word_start: usize,
+        word_end: usize,
+        mut f: impl FnMut(usize),
+    ) {
+        for wi in word_start..word_end.min(self.bits.len()) {
+            let mut w = self.bits[wi];
+            while w != 0 {
+                let tz = w.trailing_zeros() as usize;
+                w &= w - 1;
+                let idx = (wi << 6) + tz;
+                if idx < self.len {
+                    f(idx);
+                }
+            }
+        }
+    }
+
+    /// Visit every **clear** bit in words `[word_start, word_end)`
+    /// (clamped to the bit length), in ascending order.
+    pub fn for_zeros_in_word_range(
+        &self,
+        word_start: usize,
+        word_end: usize,
+        mut f: impl FnMut(usize),
+    ) {
+        for wi in word_start..word_end.min(self.bits.len()) {
+            let mut w = !self.bits[wi];
+            while w != 0 {
+                let tz = w.trailing_zeros() as usize;
+                w &= w - 1;
+                let idx = (wi << 6) + tz;
+                if idx < self.len {
+                    f(idx);
+                }
+            }
+        }
+    }
+
     /// Iterate over set bit indices (words-at-a-time scan).
     pub fn iter_ones(&self) -> OnesIter<'_> {
         OnesIter {
@@ -262,6 +313,27 @@ mod tests {
         }
         b.clear_all();
         assert!(b.none());
+    }
+
+    #[test]
+    fn word_range_scans_match_full_iterators() {
+        let mut b = Bitset::new(200);
+        for i in (0..200).step_by(7) {
+            b.set(i);
+        }
+        // Sharded scan over word ranges concatenates to the full scan.
+        let mut ones = Vec::new();
+        let mut zeros = Vec::new();
+        for ws in (0..b.num_words()).step_by(2) {
+            b.for_ones_in_word_range(ws, ws + 2, |i| ones.push(i));
+            b.for_zeros_in_word_range(ws, ws + 2, |i| zeros.push(i));
+        }
+        assert_eq!(ones, b.iter_ones().collect::<Vec<_>>());
+        assert_eq!(zeros, b.iter_zeros().collect::<Vec<_>>());
+        // Out-of-range word bounds are clamped.
+        let mut extra = Vec::new();
+        b.for_ones_in_word_range(0, usize::MAX, |i| extra.push(i));
+        assert_eq!(extra, ones);
     }
 
     #[test]

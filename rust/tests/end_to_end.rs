@@ -1,13 +1,12 @@
 //! Full-stack end-to-end test: dataset -> partition -> functional engine
-//! -> timing sim -> metrics, plus the XLA path, mirroring the
-//! graph500_runner example in test form.
+//! -> timing sim -> metrics, plus the XLA path (behind the `xla` cargo
+//! feature), mirroring the graph500_runner example in test form.
 
 use scalabfs::bfs::bitmap::run_bfs;
 use scalabfs::bfs::gteps::harmonic_mean;
 use scalabfs::bfs::reference;
 use scalabfs::coordinator::driver::{run_dataset, DriverOptions};
 use scalabfs::graph::datasets;
-use scalabfs::runtime::{ArtifactStore, XlaBfsEngine};
 use scalabfs::sched::Hybrid;
 use scalabfs::sim::config::SimConfig;
 use scalabfs::sim::throughput::ThroughputSim;
@@ -20,6 +19,7 @@ fn dataset_driver_full_pipeline() {
         num_roots: 3,
         seed: 1,
         policy: "hybrid".into(),
+        ..Default::default()
     };
     let run = run_dataset("RMAT22-16", &cfg, &opts).expect("driver");
     assert_eq!(run.per_root.len(), 3);
@@ -41,6 +41,7 @@ fn headline_configuration_reaches_gteps_class_throughput() {
         num_roots: 2,
         seed: 42,
         policy: "hybrid".into(),
+        ..Default::default()
     };
     let run = run_dataset("RMAT22-64", &cfg, &opts).expect("driver");
     assert!(run.gteps > 10.0, "only {} GTEPS", run.gteps);
@@ -55,6 +56,7 @@ fn mode_ordering_hybrid_ge_push_ge_pull() {
         num_roots: 2,
         seed: 5,
         policy: policy.into(),
+        ..Default::default()
     };
     let hybrid = run_dataset("RMAT22-32", &cfg, &mk("hybrid")).unwrap().gteps;
     let push = run_dataset("RMAT22-32", &cfg, &mk("push")).unwrap().gteps;
@@ -82,7 +84,28 @@ fn multi_root_graph500_aggregation() {
 }
 
 #[test]
+fn batched_multi_root_matches_loop_of_single_runs() {
+    // The sharded BatchDriver is the production path for Graph500
+    // batches; it must agree bit-exactly with one-at-a-time runs.
+    use scalabfs::bfs::batch::BatchDriver;
+    let g = datasets::by_name("RMAT18-16", 16, 3).unwrap();
+    let cfg = SimConfig::u280(16, 32);
+    let roots = reference::sample_roots(&g, 8, 9);
+    let batch =
+        BatchDriver::new(&g, cfg.part).run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+    assert_eq!(batch.runs.len(), roots.len());
+    for (i, &root) in roots.iter().enumerate() {
+        let single = run_bfs(&g, cfg.part, root, &mut Hybrid::default());
+        assert_eq!(batch.runs[i].levels, single.levels, "root {root}");
+        assert_eq!(batch.runs[i].traversed_edges, single.traversed_edges);
+    }
+    assert!(batch.harmonic_gteps > 0.0);
+}
+
+#[cfg(feature = "xla")]
+#[test]
 fn xla_path_composes_with_dataset_pipeline() {
+    use scalabfs::runtime::{ArtifactStore, XlaBfsEngine};
     let Ok(store) = ArtifactStore::load_default() else {
         eprintln!("SKIP: no artifacts");
         return;
@@ -90,9 +113,9 @@ fn xla_path_composes_with_dataset_pipeline() {
     if store.artifacts.is_empty() {
         return;
     }
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
     // Tiny analog of a Table-I dataset through the XLA path.
     let tiny = datasets::by_name("RMAT18-8", 1024, 11).unwrap();
+    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
     let root = reference::sample_roots(&tiny, 1, 11)[0];
     let res = engine.run(&tiny, root).expect("xla");
     let truth = reference::bfs(&tiny, root);

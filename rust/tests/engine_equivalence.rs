@@ -1,0 +1,151 @@
+//! Cross-engine differential property tests: every [`BfsEngine`]
+//! implementation must produce levels identical to `bfs::reference`
+//! across random RMAT scales, modes (push / pull / hybrid), and PC/PE
+//! configurations — and the sharded multi-root `BatchDriver` must be
+//! bit-exact with any worker count.
+
+use scalabfs::bfs::batch::BatchDriver;
+use scalabfs::bfs::reference;
+use scalabfs::bfs::Mode;
+use scalabfs::exec::{drive, make_engine, BfsEngine, SearchState, ENGINE_NAMES};
+use scalabfs::graph::{generators, Graph};
+use scalabfs::sched::{Fixed, Hybrid, ModePolicy};
+use scalabfs::sim::config::SimConfig;
+use scalabfs::util::rng::Xoshiro256;
+
+fn policies() -> Vec<Box<dyn ModePolicy>> {
+    vec![
+        Box::new(Fixed(Mode::Push)),
+        Box::new(Fixed(Mode::Pull)),
+        Box::new(Hybrid::default()),
+    ]
+}
+
+fn random_graph(rng: &mut Xoshiro256) -> Graph {
+    let scale = 7 + rng.next_below(3) as u32; // 128..512 vertices
+    let degree = 2 + rng.next_below(10);
+    generators::rmat_graph500(scale, degree, rng.next_u64())
+}
+
+/// Every engine × mode policy × PC/PE config on random RMAT graphs.
+#[test]
+fn all_engines_match_reference_across_random_graphs() {
+    let mut rng = Xoshiro256::seed_from(0xE9617E);
+    for case in 0..6 {
+        let g = random_graph(&mut rng);
+        let roots = reference::sample_roots(&g, 1, rng.next_u64());
+        let Some(&root) = roots.first() else { continue };
+        let truth = reference::bfs(&g, root);
+        for (pcs, pes) in [(1usize, 1usize), (2, 4), (8, 16)] {
+            let cfg = SimConfig::u280(pcs, pes);
+            for engine_name in ENGINE_NAMES {
+                for policy in policies().iter_mut() {
+                    let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+                    let run = engine.run(root, policy.as_mut());
+                    assert_eq!(
+                        run.levels,
+                        truth.levels,
+                        "case={case} engine={engine_name} graph={} root={root} \
+                         policy={} pcs={pcs} pes={pes}",
+                        g.name,
+                        policy.name(),
+                    );
+                    assert_eq!(run.reached, truth.reached);
+                    assert_eq!(
+                        run.traversed_edges,
+                        truth
+                            .levels
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &l)| l != scalabfs::bfs::INF)
+                            .map(|(v, _)| g.csr.degree(v as u32))
+                            .sum::<u64>(),
+                        "traversed edges diverge for {engine_name}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One SearchState driven across many roots and *engines* sequentially:
+/// `reset_for_root` must leave no residue from the previous search.
+#[test]
+fn shared_state_reused_across_roots_and_engines_is_clean() {
+    let g = generators::rmat_graph500(9, 8, 42);
+    let cfg = SimConfig::u280(4, 8);
+    let mut state = SearchState::new(g.num_vertices());
+    for &root in &reference::sample_roots(&g, 4, 42) {
+        let truth = reference::bfs(&g, root);
+        for engine_name in ENGINE_NAMES {
+            let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+            let run = drive(engine.as_mut(), &mut state, root, &mut Hybrid::default());
+            assert_eq!(run.levels, truth.levels, "engine={engine_name} root={root}");
+        }
+    }
+}
+
+/// The rayon batch driver is bit-exact against the reference for every
+/// root, at 1 worker and at the ambient pool width.
+#[test]
+fn batch_driver_bit_exact_at_any_worker_count() {
+    let g = generators::rmat_graph500(10, 8, 7);
+    let cfg = SimConfig::u280(4, 8);
+    let roots = reference::sample_roots(&g, 8, 7);
+    let driver = BatchDriver::new(&g, cfg.part);
+    let wide = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+    let narrow = rayon::ThreadPoolBuilder::new()
+        .num_threads(1)
+        .build()
+        .unwrap()
+        .install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+    for (i, &root) in roots.iter().enumerate() {
+        let truth = reference::bfs(&g, root);
+        assert_eq!(wide.runs[i].levels, truth.levels, "root {root} (wide)");
+        assert_eq!(narrow.runs[i].levels, truth.levels, "root {root} (narrow)");
+    }
+    assert_eq!(wide.gteps, narrow.gteps);
+    assert_eq!(wide.harmonic_gteps, narrow.harmonic_gteps);
+}
+
+/// Degenerate shapes through every engine.
+#[test]
+fn engines_agree_on_degenerate_graphs() {
+    let cfg = SimConfig::u280(2, 2);
+    for g in [
+        generators::chain(33),
+        generators::star(17),
+        generators::complete(9),
+    ] {
+        let truth = reference::bfs(&g, 0);
+        for engine_name in ENGINE_NAMES {
+            let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+            let run = engine.run(0, &mut Hybrid::default());
+            assert_eq!(run.levels, truth.levels, "engine={engine_name} graph={}", g.name);
+        }
+    }
+}
+
+/// The XLA engine joins the differential test when its feature (and the
+/// AOT artifacts) are present.
+#[cfg(feature = "xla")]
+#[test]
+fn xla_engine_matches_reference_when_available() {
+    use scalabfs::runtime::XlaBfsEngine;
+    let graphs = [
+        generators::rmat_graph500(7, 6, 15),
+        generators::chain(50),
+    ];
+    let Ok(mut engine) = XlaBfsEngine::new() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    for g in &graphs {
+        let root = reference::sample_roots(g, 1, 5)[0];
+        let Ok(res) = engine.run(g, root) else {
+            eprintln!("SKIP: no fitting artifact for {}", g.name);
+            continue;
+        };
+        assert_eq!(res.levels, reference::bfs(g, root).levels, "graph {}", g.name);
+    }
+}

@@ -2,10 +2,10 @@
 //! from Rust, and cross-validate against the Rust engines.
 //!
 //! Requires `make artifacts` (skips cleanly with a message otherwise).
+//! The PJRT-backed tests additionally need the `xla` cargo feature;
+//! the manifest checks run either way.
 
-use scalabfs::bfs::reference;
-use scalabfs::graph::generators;
-use scalabfs::runtime::{ArtifactStore, XlaBfsEngine};
+use scalabfs::runtime::ArtifactStore;
 
 fn store() -> Option<ArtifactStore> {
     match ArtifactStore::load_default() {
@@ -30,67 +30,77 @@ fn manifest_lists_expected_variants() {
     }
 }
 
-#[test]
-fn xla_bfs_matches_reference_on_families() {
-    let Some(store) = store() else { return };
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-    for g in [
-        generators::chain(60),
-        generators::star(50),
-        generators::complete(16),
-        generators::rmat_graph500(7, 6, 5),
-        generators::erdos_renyi(200, 1500, 6),
-    ] {
-        let root = reference::sample_roots(&g, 1, 3)[0];
-        let res = engine.run(&g, root).expect("xla run");
-        let truth = reference::bfs(&g, root);
-        assert_eq!(res.levels, truth.levels, "graph {}", g.name);
-        assert_eq!(res.reached, truth.reached);
-    }
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::store;
+    use scalabfs::bfs::reference;
+    use scalabfs::graph::generators;
+    use scalabfs::runtime::XlaBfsEngine;
 
-#[test]
-fn xla_bfs_multiple_roots_reuse_executable() {
-    let Some(store) = store() else { return };
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-    let g = generators::rmat_graph500(7, 8, 9);
-    for &root in &reference::sample_roots(&g, 4, 1) {
-        let res = engine.run(&g, root).expect("xla run");
-        let truth = reference::bfs(&g, root);
-        assert_eq!(res.levels, truth.levels, "root {root}");
+    #[test]
+    fn xla_bfs_matches_reference_on_families() {
+        let Some(store) = store() else { return };
+        let graphs = [
+            generators::chain(60),
+            generators::star(50),
+            generators::complete(16),
+            generators::rmat_graph500(7, 6, 5),
+            generators::erdos_renyi(200, 1500, 6),
+        ];
+        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+        for g in &graphs {
+            let root = reference::sample_roots(g, 1, 3)[0];
+            let res = engine.run(g, root).expect("xla run");
+            let truth = reference::bfs(g, root);
+            assert_eq!(res.levels, truth.levels, "graph {}", g.name);
+            assert_eq!(res.reached, truth.reached);
+        }
     }
-}
 
-#[test]
-fn whole_bfs_artifact_matches_per_step_path() {
-    let Some(store) = store() else { return };
-    if store.sizes("bfs_full").is_empty() {
-        eprintln!("SKIP: no bfs_full artifacts");
-        return;
+    #[test]
+    fn xla_bfs_multiple_roots_reuse_executable() {
+        let Some(store) = store() else { return };
+        let g = generators::rmat_graph500(7, 8, 9);
+        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+        for &root in &reference::sample_roots(&g, 4, 1) {
+            let res = engine.run(&g, root).expect("xla run");
+            let truth = reference::bfs(&g, root);
+            assert_eq!(res.levels, truth.levels, "root {root}");
+        }
     }
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-    for g in [
-        generators::rmat_graph500(7, 8, 31),
-        generators::chain(40),
-        generators::star(30),
-    ] {
-        let root = reference::sample_roots(&g, 1, 5)[0];
-        let step = engine.run(&g, root).expect("per-step");
-        let full = engine.run_full(&g, root).expect("while-loop");
-        assert_eq!(full.levels, step.levels, "graph {}", g.name);
-        let truth = reference::bfs(&g, root);
-        assert_eq!(full.levels, truth.levels);
-        // while_loop runs one extra empty-frontier check iteration.
-        assert!(full.iterations >= step.iterations.saturating_sub(1));
-    }
-}
 
-#[test]
-fn oversized_graph_is_a_clean_error() {
-    let Some(store) = store() else { return };
-    let max = store.sizes("bfs_step").into_iter().max().unwrap();
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-    let g = generators::chain(max + 1);
-    let err = engine.run(&g, 0).err().expect("should not fit");
-    assert!(err.to_string().contains("fits"), "{err}");
+    #[test]
+    fn whole_bfs_artifact_matches_per_step_path() {
+        let Some(store) = store() else { return };
+        if store.sizes("bfs_full").is_empty() {
+            eprintln!("SKIP: no bfs_full artifacts");
+            return;
+        }
+        let graphs = [
+            generators::rmat_graph500(7, 8, 31),
+            generators::chain(40),
+            generators::star(30),
+        ];
+        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+        for g in &graphs {
+            let root = reference::sample_roots(g, 1, 5)[0];
+            let step = engine.run(g, root).expect("per-step");
+            let full = engine.run_full(g, root).expect("while-loop");
+            assert_eq!(full.levels, step.levels, "graph {}", g.name);
+            let truth = reference::bfs(g, root);
+            assert_eq!(full.levels, truth.levels);
+            // while_loop runs one extra empty-frontier check iteration.
+            assert!(full.iterations >= step.iterations.saturating_sub(1));
+        }
+    }
+
+    #[test]
+    fn oversized_graph_is_a_clean_error() {
+        let Some(store) = store() else { return };
+        let max = store.sizes("bfs_step").into_iter().max().unwrap();
+        let g = generators::chain(max + 1);
+        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+        let err = engine.run(&g, 0).err().expect("should not fit");
+        assert!(err.to_string().contains("fits"), "{err}");
+    }
 }
