@@ -109,17 +109,18 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
             self.part.num_pgs,
         );
         it.frontier_size = state.frontier_size;
-        // Edge-centric scatter: the whole edge array streams through the
-        // channel regardless of frontier size.
+        // Edge-centric scatter: the *modeled* channel streams the whole
+        // edge array regardless of frontier size (the byte/neighbor
+        // counters below are set from |E| directly). The host-side
+        // discovery computation walks only the frontier — results are
+        // identical (visited test-and-set dedups, order-independent)
+        // and small-frontier iterations stay O(frontier) on the host.
         it.neighbors_streamed = graph.num_edges();
         it.per_pg_edge_bytes[0] = (graph.num_edges() as f64 * self.cfg.edge_bytes) as u64;
-        for u in 0..graph.num_vertices() {
-            if !state.current.get(u) {
-                continue;
-            }
+        for u in state.current.iter() {
             for &w in graph.out_neighbors(u as VertexId) {
                 if !state.visited.test_and_set(w as usize) {
-                    state.next.set(w as usize);
+                    state.next.insert(w, graph.csr.degree(w));
                     state.levels[w as usize] = state.bfs_level + 1;
                     it.newly_visited += 1;
                 }
@@ -127,7 +128,6 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
         }
         StepStats {
             newly_visited: it.newly_visited,
-            next_frontier_edges: None,
             traffic: Some(it),
             cycles: 0,
             backpressure: 0,

@@ -6,9 +6,13 @@
 //! shard, resetting the state **in place** between roots
 //! ([`SearchState::reset_for_root`], the hardware's BRAM-clear pattern)
 //! — no per-root allocation, and measurably cheaper than constructing a
-//! fresh engine per root. Roots are independent searches, so per-root
-//! results are bit-identical whatever the worker count; `collect`
-//! preserves root order.
+//! fresh engine per root. The state's frontiers keep **both**
+//! representations' storage across roots: the sparse vertex lists and
+//! word-scratch buffers retain their capacity through `clear()`, and
+//! sparse clears zero only the bitmap words the previous search
+//! touched. Roots are independent searches, so per-root results are
+//! bit-identical whatever the worker count; `collect` preserves root
+//! order.
 //!
 //! Serial behaviour (for A/B timing) is just the same driver run inside
 //! a one-thread rayon pool — see `benches/perf_batch.rs`.
@@ -145,6 +149,29 @@ mod tests {
             assert_eq!(s.traversed_edges, p.traversed_edges);
         }
         assert_eq!(serial.gteps, parallel.gteps);
+    }
+
+    #[test]
+    fn batch_is_bit_exact_across_frontier_representations() {
+        use crate::sched::{ReprPolicy, WithRepr};
+        let g = generators::rmat_graph500(9, 8, 23);
+        let cfg = SimConfig::u280(4, 8);
+        let roots = reference::sample_roots(&g, 6, 23);
+        let driver = BatchDriver::new(&g, cfg.part);
+        let baseline = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        for repr in [ReprPolicy::Sparse, ReprPolicy::Dense] {
+            let forced = driver.run_batch(&roots, &cfg, move || {
+                Box::new(WithRepr {
+                    inner: Hybrid::default(),
+                    repr,
+                })
+            });
+            for (b, f) in baseline.runs.iter().zip(&forced.runs) {
+                assert_eq!(b.levels, f.levels, "repr {}", repr.label());
+                assert_eq!(b.traversed_edges, f.traversed_edges);
+                assert_eq!(b.reached, f.reached);
+            }
+        }
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! This is the bit-exact functional model of what the 64 PEs on the U280
 //! compute. Per iteration it:
 //!
-//! * (P1) scans the current frontier (push) or visited map (pull) to find
-//!   work, issuing neighbor-list fetches to the owning PG's HBM PC;
+//! * (P1) finds work — popping a sparse frontier's FIFO or scanning the
+//!   dense frontier bitmap (push) / the visited map (pull) — issuing
+//!   neighbor-list fetches to the owning PG's HBM PC;
 //! * (P2) routes streamed neighbors through the vertex dispatcher to the
 //!   PE owning the neighbor's bitmap bit, where the visited map (push) or
 //!   current frontier (pull) is checked;
@@ -97,19 +98,27 @@ impl<'g> BitmapEngine<'g> {
         crate::exec::drive(self, &mut state, root, policy)
     }
 
-    /// Push iteration (Algorithm 2 lines 6-14): scan current frontier,
-    /// stream outgoing lists, check visited at the destination PE.
+    /// Push iteration (Algorithm 2 lines 6-14): consume the current
+    /// frontier, stream outgoing lists, check visited at the
+    /// destination PE. A sparse frontier is popped from the frontier
+    /// FIFO (O(frontier) P1 work); a dense one is the classic
+    /// words-at-a-time bitmap scan (O(|V|/64)).
     fn push_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
-        // P1 scans every frontier word once (double-pump BRAM).
-        it.scanned_bits = state.current.len() as u64;
-        // Field-disjoint borrows: the scan reads `current`, P2/P3 write
+        // P1 datapath accounting: FIFO pops for a sparse frontier,
+        // double-pump BRAM word scan for a dense one.
+        if state.current.is_sparse() {
+            it.frontier_fifo_pops = state.current.len();
+        } else {
+            it.scanned_bits = state.current.num_vertices() as u64;
+        }
+        // Field-disjoint borrows: the walk reads `current`, P2/P3 write
         // `visited`/`next`/`levels` (push never mutates `current`, just
         // like the hardware, which snapshots the frontier at iteration
         // start).
         let graph = self.graph;
-        for v in state.current.iter_ones() {
+        for v in state.current.iter() {
             let v = v as VertexId;
             let pe = part.pe_of(v);
             let pg = part.pg_of_pe(pe);
@@ -126,7 +135,7 @@ impl<'g> BitmapEngine<'g> {
                 it.per_pe_recv[part.pe_of(w)] += 1;
                 // P2/P3 at the destination PE.
                 if !state.visited.test_and_set(w as usize) {
-                    state.next.set(w as usize);
+                    state.next.insert(w, graph.csr.degree(w));
                     state.levels[w as usize] = it.iteration + 1;
                     it.newly_visited += 1;
                 }
@@ -137,12 +146,14 @@ impl<'g> BitmapEngine<'g> {
     /// Pull iteration (Algorithm 2 lines 15-22): scan unvisited vertices,
     /// stream incoming lists (chunked early exit), check the current
     /// frontier at the parent's PE, forward hits back to the child's PE.
-    fn pull_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) -> u64 {
+    /// The P1 scan is always dense here (it walks the visited map's
+    /// zeros, not the frontier); the frontier only needs its O(1)
+    /// membership test, which both representations provide.
+    fn pull_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
         it.scanned_bits = state.visited.len() as u64;
         let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
-        let mut next_frontier_edges = 0u64;
         let graph = self.graph;
         // Visited updates are staged in `next` and OR-ed into the
         // visited map after the scan (each unvisited vertex is seen once
@@ -163,7 +174,7 @@ impl<'g> BitmapEngine<'g> {
             // chunk containing the first active parent.
             let mut hit_at: Option<usize> = None;
             for (i, &u) in list.iter().enumerate() {
-                if state.current.get(u as usize) {
+                if state.current.contains(u as usize) {
                     hit_at = Some(i);
                     break;
                 }
@@ -182,21 +193,19 @@ impl<'g> BitmapEngine<'g> {
             if hit_at.is_some() {
                 // Soft crossbar: the (child) result returns to v's PE.
                 it.crossbar_results += 1;
-                state.next.set(v as usize);
+                state.next.insert(v, graph.csr.degree(v));
                 state.levels[v as usize] = it.iteration + 1;
                 it.newly_visited += 1;
-                next_frontier_edges += graph.csr.degree(v);
             }
         }
         for (vw, nw) in state
             .visited
             .words_mut()
             .iter_mut()
-            .zip(state.next.words())
+            .zip(state.next.bits().words())
         {
             *vw |= nw;
         }
-        next_frontier_edges
     }
 }
 
@@ -226,21 +235,15 @@ impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
             self.part.num_pgs,
         );
         it.frontier_size = state.frontier_size;
-        // Pull accumulates the next frontier's out-degree sum inline
-        // (its scan order is ascending, so the lookups are cheap); push
-        // leaves it to the driver's rescan of the ordered next frontier
-        // — inline accumulation there touches offsets in neighbor order
-        // and measures ~35% slower.
-        let next_frontier_edges = match mode {
-            Mode::Push => {
-                self.push_iteration(state, &mut it);
-                None
-            }
-            Mode::Pull => Some(self.pull_iteration(state, &mut it)),
-        };
+        // Both directions stage discoveries through `Frontier::insert`,
+        // which accumulates the next frontier's out-degree sum at
+        // insert time — the driver never rescans a frontier.
+        match mode {
+            Mode::Push => self.push_iteration(state, &mut it),
+            Mode::Pull => self.pull_iteration(state, &mut it),
+        }
         StepStats {
             newly_visited: it.newly_visited,
-            next_frontier_edges,
             traffic: Some(it),
             cycles: 0,
             backpressure: 0,
@@ -364,6 +367,36 @@ mod tests {
         // 36B rounds to 48B; offset adds 16B.
         assert_eq!(it0.per_pg_edge_bytes[0], 48);
         assert_eq!(it0.per_pg_offset_bytes[0], 16);
+    }
+
+    #[test]
+    fn p1_accounting_distinguishes_fifo_from_bitmap_scan() {
+        use crate::sched::{ReprPolicy, WithRepr};
+        // Chain frontiers have size 1: sparse runs pop the frontier
+        // FIFO in P1; forcing dense pays the full word scan.
+        let g = generators::chain(512);
+        let part = Partitioning::new(1, 1);
+        let mut sparse_policy = WithRepr {
+            inner: Fixed(Mode::Push),
+            repr: ReprPolicy::Sparse,
+        };
+        let sparse = BitmapEngine::new(&g, part).run(0, &mut sparse_policy);
+        for it in &sparse.traffic.iters {
+            assert_eq!(it.frontier_fifo_pops, it.frontier_size, "iter {}", it.iteration);
+            assert_eq!(it.scanned_bits, 0, "iter {}", it.iteration);
+        }
+        let mut dense_policy = WithRepr {
+            inner: Fixed(Mode::Push),
+            repr: ReprPolicy::Dense,
+        };
+        let dense = BitmapEngine::new(&g, part).run(0, &mut dense_policy);
+        for it in &dense.traffic.iters {
+            assert_eq!(it.frontier_fifo_pops, 0, "iter {}", it.iteration);
+            assert_eq!(it.scanned_bits, 512, "iter {}", it.iteration);
+        }
+        // Same search either way.
+        assert_eq!(sparse.levels, dense.levels);
+        assert_eq!(sparse.traversed_edges, dense.traversed_edges);
     }
 
     #[test]

@@ -24,8 +24,17 @@ pub struct IterTraffic {
     pub newly_visited: u64,
     /// Frontier size at the start of this iteration.
     pub frontier_size: u64,
-    /// Bits scanned in P1 (frontier words in push, visited words in pull).
+    /// Bits scanned in P1 when the iteration walked a dense bitmap
+    /// (frontier words in push, visited words in pull); 0 when the
+    /// frontier was sparse and P1 popped the frontier FIFO instead.
     pub scanned_bits: u64,
+    /// Frontier-FIFO pops in P1 when a push iteration consumed a
+    /// *sparse* frontier (the hardware's queue datapath); 0 when P1
+    /// scanned a bitmap. For the Algorithm-2 (bitmap/throughput)
+    /// engines exactly one of `scanned_bits` / `frontier_fifo_pops` is
+    /// non-zero per non-empty iteration; the edge-centric baseline has
+    /// no P1 stage and leaves both 0.
+    pub frontier_fifo_pops: u64,
     /// Per-PE count of neighbor-list fetch requests issued (P1 load).
     pub per_pe_fetches: Vec<u64>,
     /// Per-PE count of messages routed *to* that PE by the vertex
@@ -51,6 +60,7 @@ impl IterTraffic {
             newly_visited: 0,
             frontier_size: 0,
             scanned_bits: 0,
+            frontier_fifo_pops: 0,
             per_pe_fetches: vec![0; num_pes],
             per_pe_recv: vec![0; num_pes],
             per_pg_offset_bytes: vec![0; num_pgs],

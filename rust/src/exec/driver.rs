@@ -4,6 +4,12 @@
 //! the same loop (decide mode → process iteration → swap frontiers →
 //! recompute scheduler signals). It now lives here, once; engines only
 //! implement [`BfsEngine::step`].
+//!
+//! The scheduler signals are never recomputed by scanning: frontier
+//! size and out-degree sum are accumulated at [`Frontier
+//! insert`](super::frontier::Frontier::insert) time, and the Graph500
+//! traversed-edge total and reached count retire out of the same
+//! tracking — small-frontier iterations cost O(frontier), not O(|V|).
 
 use super::engine::{BfsEngine, BfsRun};
 use super::state::SearchState;
@@ -12,9 +18,11 @@ use crate::graph::VertexId;
 use crate::sched::ModePolicy;
 
 /// Drive a full BFS from `root` over `state` with `engine`, letting
-/// `policy` pick each iteration's direction. `state` is reset in place
-/// for the root (no allocation), so callers may reuse one state across
-/// many roots.
+/// `policy` pick each iteration's direction *and* the representation
+/// of the frontier it stages (sparse list vs dense bitmap — see
+/// [`crate::sched::ReprPolicy`]). `state` is reset in place for the
+/// root (no allocation), so callers may reuse one state across many
+/// roots.
 pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
     engine: &mut E,
     state: &mut SearchState,
@@ -28,6 +36,13 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         n,
         "search state sized for a different graph"
     );
+    // Apply the representation policy before seeding the root: the
+    // caps govern how `reset_for_root` stages it (a forced-dense run
+    // must scan bitmaps from iteration 0, a forced-sparse one must not
+    // inherit a stale dense cap from the state's previous search).
+    let cap = policy.repr().sparse_cap(n);
+    state.current.set_sparse_cap(cap);
+    state.next.set_sparse_cap(cap);
     state.reset_for_root(root, graph.csr.degree(root));
 
     let mut traffic = RunTraffic::default();
@@ -44,6 +59,10 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
             n as u64,
             graph.num_edges(),
         );
+        // Representation switch rides along with the direction switch:
+        // the frontier staged by this iteration overflows to dense
+        // exactly when it outgrows the scheduler's threshold.
+        state.next.set_sparse_cap(policy.repr().sparse_cap(n));
         let stats = engine.step(state, mode);
         if let Some(it) = stats.traffic {
             traffic.iters.push(it);
@@ -54,29 +73,14 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         }
         backpressure += stats.backpressure;
         state.finish_iteration(stats.newly_visited);
-        state.frontier_edges = match stats.next_frontier_edges {
-            Some(e) => e,
-            None if state.frontier_size > 0 => state
-                .current
-                .iter_ones()
-                .map(|v| graph.csr.degree(v as VertexId))
-                .sum(),
-            None => 0,
-        };
     }
 
-    let reached = state.visited.count_ones();
-    let traversed_edges = state
-        .visited
-        .iter_ones()
-        .map(|v| graph.csr.degree(v as VertexId))
-        .sum();
     BfsRun {
         levels: state.levels.clone(),
-        reached,
+        reached: state.reached(),
         iterations: state.bfs_level,
         traffic,
-        traversed_edges,
+        traversed_edges: state.traversed_edges,
         cycles: total_cycles,
         iter_cycles,
         backpressure,
@@ -90,7 +94,7 @@ mod tests {
     use crate::bfs::reference;
     use crate::bfs::INF;
     use crate::graph::{generators, Partitioning};
-    use crate::sched::Hybrid;
+    use crate::sched::{Hybrid, ReprPolicy, WithRepr};
 
     #[test]
     fn state_reuse_across_roots_is_bit_exact() {
@@ -118,5 +122,41 @@ mod tests {
         );
         assert_eq!(run.iterations, reference::bfs(&g, 0).depth);
         assert_eq!(run.levels.iter().filter(|&&l| l != INF).count(), 10);
+    }
+
+    #[test]
+    fn tracked_totals_match_rescans() {
+        // `reached` and `traversed_edges` are tracked during the search;
+        // they must equal what a full end-of-run rescan would produce.
+        let g = generators::rmat_graph500(9, 8, 33);
+        let root = reference::sample_roots(&g, 1, 33)[0];
+        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let mut state = SearchState::new(g.num_vertices());
+        let run = drive(&mut engine, &mut state, root, &mut Hybrid::default());
+        assert_eq!(run.reached, state.visited.count_ones());
+        let rescanned: u64 = state
+            .visited
+            .iter_ones()
+            .map(|v| g.csr.degree(v as VertexId))
+            .sum();
+        assert_eq!(run.traversed_edges, rescanned);
+    }
+
+    #[test]
+    fn forced_representations_agree_with_adaptive() {
+        let g = generators::rmat_graph500(9, 8, 5);
+        let root = reference::sample_roots(&g, 1, 5)[0];
+        let truth = reference::bfs(&g, root);
+        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let mut state = SearchState::new(g.num_vertices());
+        for repr in [ReprPolicy::Sparse, ReprPolicy::Dense, ReprPolicy::default()] {
+            let mut policy = WithRepr {
+                inner: Hybrid::default(),
+                repr,
+            };
+            let run = drive(&mut engine, &mut state, root, &mut policy);
+            assert_eq!(run.levels, truth.levels, "repr {}", repr.label());
+            assert_eq!(run.reached, truth.reached);
+        }
     }
 }

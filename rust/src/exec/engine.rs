@@ -10,14 +10,16 @@ use crate::sim::config::SimConfig;
 use crate::Result;
 
 /// What one [`BfsEngine::step`] call reports back to the shared driver.
+///
+/// The next frontier's out-degree sum is *not* reported here: engines
+/// stage discoveries through [`Frontier::insert`]
+/// (see [`super::frontier::Frontier`]), which accumulates the
+/// scheduler's frontier-edges signal at insert time, so the driver
+/// never rescans a frontier.
 #[derive(Clone, Debug, Default)]
 pub struct StepStats {
-    /// Vertices discovered (added to `state.next`) this iteration.
+    /// Vertices discovered (inserted into `state.next`) this iteration.
     pub newly_visited: u64,
-    /// Out-degree sum of the newly discovered vertices, when the engine
-    /// accumulated it inline (pull scans in ascending order, so it can);
-    /// `None` makes the driver recompute it from the new frontier.
-    pub next_frontier_edges: Option<u64>,
     /// Per-iteration HBM/dispatcher traffic, for engines that model it
     /// (the functional engines); timing-only engines return `None`.
     pub traffic: Option<IterTraffic>,
@@ -60,7 +62,9 @@ pub struct BfsRun {
 /// and partitioning (rebuilding any engine-private structures);
 /// [`step`](Self::step) processes exactly one iteration — reading
 /// `state.current`/`state.visited`, staging discoveries into
-/// `state.next`/`state.visited`/`state.levels` — and reports
+/// `state.next` (via [`Frontier::insert`](super::frontier::Frontier),
+/// passing the discovered vertex's out-degree so the scheduler signals
+/// accumulate for free) plus `state.visited`/`state.levels` — and reports
 /// [`StepStats`]. The level-synchronous loop itself lives in ONE place,
 /// [`driver::drive`], which the provided [`run`](Self::run) /
 /// [`run_with_state`](Self::run_with_state) methods delegate to; no

@@ -1,0 +1,400 @@
+//! Adaptive sparse/dense frontier representation.
+//!
+//! The paper's hybrid scheduler switches push/pull per iteration
+//! (Algorithm 2, Fig 8); Beamer-style direction optimization pairs that
+//! direction switch with a *representation* switch: a small frontier is
+//! a queue the hardware pops from a FIFO (O(frontier) P1 work), a large
+//! one is the dense BRAM bitmap it scans words-at-a-time (O(|V|/64)).
+//! [`Frontier`] gives every engine both representations behind one type:
+//!
+//! * **Dense view** — the [`Bitset`] is *always* maintained, so O(1)
+//!   membership tests (pull's parent check, the edge-centric scatter)
+//!   work in either representation.
+//! * **Sparse view** — while the frontier stays below its
+//!   `sparse_cap`, inserts also append to a vertex list in discovery
+//!   order (the hardware's next-frontier FIFO). Overflowing the cap
+//!   drops the list and the frontier stays dense for its lifetime —
+//!   this is how the adaptive policy "decides" the representation: the
+//!   cap is set per iteration by the scheduler
+//!   ([`crate::sched::ReprPolicy`], owned by the same `ModePolicy`
+//!   that picks push vs pull), and the staged frontier lands sparse
+//!   exactly when its size ends up under the threshold.
+//! * **Insert-time signals** — every insert accumulates the vertex's
+//!   out-degree, so the scheduler's `frontier_edges` signal (and the
+//!   Graph500 `traversed_edges` total) come for free; the driver no
+//!   longer rescans the new frontier between iterations.
+//!
+//! Clearing a sparse frontier only zeroes the bitmap words it touched
+//! ([`Bitset::clear_words_touched`]), keeping per-iteration reset cost
+//! O(frontier) instead of O(|V|/64) — the BRAM-clear analog of the
+//! targeted invalidate GraphScale-style frameworks use to scale.
+
+use crate::graph::VertexId;
+use crate::util::Bitset;
+
+/// Default adaptive threshold divisor: a frontier is kept sparse while
+/// it holds fewer than `|V| / DEFAULT_SPARSE_DIVISOR` vertices. The
+/// value mirrors Beamer's pull→push `beta`-style fraction; sweeps can
+/// override it through [`crate::sched::ReprPolicy::Adaptive`].
+pub const DEFAULT_SPARSE_DIVISOR: u32 = 32;
+
+/// Floor on the sparse capacity so tiny graphs never ping-pong
+/// representations.
+const SPARSE_CAP_FLOOR: usize = 64;
+
+/// Sparse capacity for an `n`-vertex frontier under threshold
+/// `|V| / divisor`, with the small-graph floor applied.
+pub fn adaptive_sparse_cap(n: usize, divisor: u32) -> usize {
+    (n / (divisor.max(1) as usize)).max(SPARSE_CAP_FLOOR)
+}
+
+/// Default sparse capacity for an `n`-vertex frontier.
+pub fn default_sparse_cap(n: usize) -> usize {
+    adaptive_sparse_cap(n, DEFAULT_SPARSE_DIVISOR)
+}
+
+/// Which representation a [`Frontier`] currently holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontierRepr {
+    /// Vertex list (discovery order) + bitmap — the frontier-FIFO path.
+    Sparse,
+    /// Bitmap only — the BRAM-scan path.
+    Dense,
+}
+
+/// A BFS frontier with an adaptive sparse/dense representation.
+///
+/// All storage is retained across [`clear`](Self::clear) calls (the
+/// BRAM-clear pattern of [`super::SearchState::reset_for_root`]): no
+/// allocation on the steady-state path once list and scratch buffers
+/// have grown to their working size.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// Dense bitmap — authoritative membership in both representations.
+    bits: Bitset,
+    /// Sparse vertex list in insertion (discovery) order; valid only
+    /// while `sparse` is true.
+    verts: Vec<VertexId>,
+    /// Whether `verts` mirrors the bitmap.
+    sparse: bool,
+    /// Inserts beyond this many vertices overflow the list to dense.
+    sparse_cap: usize,
+    /// Scratch buffer of touched word indices for targeted clears.
+    word_scratch: Vec<usize>,
+    /// Vertices in the frontier.
+    len: u64,
+    /// Sum of out-degrees of the frontier (the scheduler's
+    /// push→pull switching signal), accumulated at insert time.
+    edges: u64,
+}
+
+impl Frontier {
+    /// Empty sparse frontier for an `n`-vertex graph with the default
+    /// adaptive capacity.
+    pub fn new(n: usize) -> Self {
+        Self::with_sparse_cap(n, default_sparse_cap(n))
+    }
+
+    /// Empty sparse frontier with an explicit sparse capacity (0 means
+    /// the first insert already lands dense).
+    pub fn with_sparse_cap(n: usize, sparse_cap: usize) -> Self {
+        Self {
+            bits: Bitset::new(n),
+            verts: Vec::new(),
+            sparse: true,
+            sparse_cap,
+            word_scratch: Vec::new(),
+            len: 0,
+            edges: 0,
+        }
+    }
+
+    /// Number of vertices the frontier is sized for (graph |V|, not the
+    /// frontier population — see [`len`](Self::len)).
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Vertices currently in the frontier.
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// True when no vertex is in the frontier.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Sum of out-degrees of the frontier's vertices, as accumulated by
+    /// [`insert`](Self::insert).
+    #[inline]
+    pub fn edges(&self) -> u64 {
+        self.edges
+    }
+
+    /// Current representation.
+    #[inline]
+    pub fn repr(&self) -> FrontierRepr {
+        if self.sparse {
+            FrontierRepr::Sparse
+        } else {
+            FrontierRepr::Dense
+        }
+    }
+
+    /// True while the sparse vertex list is valid.
+    #[inline]
+    pub fn is_sparse(&self) -> bool {
+        self.sparse
+    }
+
+    /// The sparse capacity in effect.
+    #[inline]
+    pub fn sparse_cap(&self) -> usize {
+        self.sparse_cap
+    }
+
+    /// Set the sparse capacity for the vertices staged next (the
+    /// driver calls this with the scheduler's per-iteration threshold).
+    /// If the list already exceeds the new cap the frontier converts to
+    /// dense in place; an existing dense frontier is left dense.
+    pub fn set_sparse_cap(&mut self, cap: usize) {
+        self.sparse_cap = cap;
+        if self.sparse && self.verts.len() > cap {
+            self.to_dense();
+        }
+    }
+
+    /// O(1) membership test (valid in both representations).
+    #[inline]
+    pub fn contains(&self, v: usize) -> bool {
+        self.bits.get(v)
+    }
+
+    /// Insert `v` with its out-degree. Duplicate inserts are no-ops
+    /// (the bitmap deduplicates), so pull-mode engines may stage the
+    /// same discovery defensively without double-counting `len`/`edges`.
+    /// Returns true when `v` was newly inserted.
+    pub fn insert(&mut self, v: VertexId, degree: u64) -> bool {
+        if self.bits.test_and_set(v as usize) {
+            return false;
+        }
+        self.len += 1;
+        self.edges += degree;
+        if self.sparse {
+            if self.verts.len() >= self.sparse_cap {
+                // Overflow: this frontier is dense from here on. The
+                // bitmap already holds every inserted vertex, so the
+                // list is simply dropped (capacity retained).
+                self.sparse = false;
+                self.verts.clear();
+            } else {
+                self.verts.push(v);
+            }
+        }
+        true
+    }
+
+    /// The dense bitmap view (always valid, either representation).
+    #[inline]
+    pub fn bits(&self) -> &Bitset {
+        &self.bits
+    }
+
+    /// The sparse vertex list in discovery order, when the frontier is
+    /// sparse.
+    #[inline]
+    pub fn sparse_verts(&self) -> Option<&[VertexId]> {
+        if self.sparse {
+            Some(&self.verts)
+        } else {
+            None
+        }
+    }
+
+    /// Iterate the frontier's vertices: list order when sparse (the
+    /// frontier FIFO), ascending bit order when dense (the BRAM scan).
+    pub fn iter(&self) -> FrontierIter<'_> {
+        if self.sparse {
+            FrontierIter::Sparse(self.verts.iter())
+        } else {
+            FrontierIter::Dense(self.bits.iter_ones())
+        }
+    }
+
+    /// In-place dense→sparse conversion: rebuild the vertex list from
+    /// the bitmap (ascending order). `len`/`edges` are unchanged — they
+    /// are representation-independent. No-op when already sparse.
+    pub fn to_sparse(&mut self) {
+        if self.sparse {
+            return;
+        }
+        self.verts.clear();
+        for v in self.bits.iter_ones() {
+            self.verts.push(v as VertexId);
+        }
+        self.sparse = true;
+    }
+
+    /// In-place sparse→dense conversion: drop the list (the bitmap is
+    /// already authoritative). No-op when already dense.
+    pub fn to_dense(&mut self) {
+        self.sparse = false;
+        self.verts.clear();
+    }
+
+    /// Empty the frontier in place, retaining every buffer's capacity.
+    /// A sparse frontier clears only the bitmap words it touched
+    /// ([`Bitset::clear_words_touched`], O(frontier)); a dense one pays
+    /// the full word sweep. The cleared frontier is sparse (an empty
+    /// list is trivially valid).
+    pub fn clear(&mut self) {
+        if self.sparse {
+            self.word_scratch.clear();
+            self.word_scratch
+                .extend(self.verts.iter().map(|&v| (v as usize) >> 6));
+            self.bits.clear_words_touched(&self.word_scratch);
+        } else {
+            self.bits.clear_all();
+        }
+        self.verts.clear();
+        self.sparse = true;
+        self.len = 0;
+        self.edges = 0;
+    }
+}
+
+/// Iterator over a [`Frontier`]'s vertices (see [`Frontier::iter`]).
+pub enum FrontierIter<'a> {
+    /// Discovery-order walk of the sparse list.
+    Sparse(std::slice::Iter<'a, VertexId>),
+    /// Ascending-order scan of the dense bitmap.
+    Dense(crate::util::bitset::OnesIter<'a>),
+}
+
+impl<'a> Iterator for FrontierIter<'a> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            FrontierIter::Sparse(it) => it.next().map(|&v| v as usize),
+            FrontierIter::Dense(it) => it.next(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_tracks_len_edges_and_membership() {
+        let mut f = Frontier::new(256);
+        assert!(f.is_empty());
+        assert!(f.insert(3, 5));
+        assert!(f.insert(200, 7));
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.edges(), 12);
+        assert!(f.contains(3) && f.contains(200) && !f.contains(4));
+        assert_eq!(f.repr(), FrontierRepr::Sparse);
+        assert_eq!(f.sparse_verts(), Some(&[3u32, 200][..]));
+        assert_eq!(f.iter().collect::<Vec<_>>(), vec![3, 200]);
+    }
+
+    #[test]
+    fn duplicate_insert_is_a_noop() {
+        // Pull-mode semantics: staging the same child twice must not
+        // double-count the scheduler signals in either representation.
+        let mut f = Frontier::with_sparse_cap(128, 128);
+        assert!(f.insert(9, 4));
+        assert!(!f.insert(9, 4));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.edges(), 4);
+        assert_eq!(f.sparse_verts().unwrap().len(), 1);
+        f.to_dense();
+        assert!(!f.insert(9, 4));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.edges(), 4);
+    }
+
+    #[test]
+    fn overflow_converts_to_dense_and_keeps_counters() {
+        let mut f = Frontier::with_sparse_cap(1024, 4);
+        for v in 0..4u32 {
+            f.insert(v * 10, 2);
+        }
+        assert!(f.is_sparse());
+        // Fifth insert overflows the cap: list dropped, bitmap kept.
+        f.insert(999, 2);
+        assert_eq!(f.repr(), FrontierRepr::Dense);
+        assert!(f.sparse_verts().is_none());
+        assert_eq!(f.len(), 5);
+        assert_eq!(f.edges(), 10);
+        for v in [0usize, 10, 20, 30, 999] {
+            assert!(f.contains(v));
+        }
+        // Dense iteration is ascending.
+        assert_eq!(f.iter().collect::<Vec<_>>(), vec![0, 10, 20, 30, 999]);
+    }
+
+    #[test]
+    fn round_trip_sparse_dense_sparse_preserves_contents() {
+        let mut f = Frontier::with_sparse_cap(512, 512);
+        // Insert out of order: sparse list keeps discovery order.
+        for &v in &[64u32, 3, 500, 65] {
+            f.insert(v, 1);
+        }
+        assert_eq!(f.sparse_verts(), Some(&[64u32, 3, 500, 65][..]));
+        f.to_dense();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.edges(), 4);
+        assert_eq!(f.iter().collect::<Vec<_>>(), vec![3, 64, 65, 500]);
+        // Dense→sparse rebuilds the list in ascending order.
+        f.to_sparse();
+        assert_eq!(f.sparse_verts(), Some(&[3u32, 64, 65, 500][..]));
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.edges(), 4);
+    }
+
+    #[test]
+    fn clear_is_targeted_when_sparse_and_full_when_dense() {
+        let mut f = Frontier::with_sparse_cap(4096, 8);
+        f.insert(0, 1);
+        f.insert(4000, 1);
+        f.clear();
+        assert!(f.is_empty());
+        assert_eq!(f.edges(), 0);
+        assert!(f.bits().none());
+        assert!(f.is_sparse());
+        // Dense clear also fully resets.
+        f.set_sparse_cap(0);
+        f.insert(17, 3);
+        assert_eq!(f.repr(), FrontierRepr::Dense);
+        f.clear();
+        assert!(f.bits().none());
+        assert!(f.is_sparse());
+        assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn lowering_the_cap_converts_in_place() {
+        let mut f = Frontier::with_sparse_cap(256, 256);
+        for v in 0..10u32 {
+            f.insert(v, 1);
+        }
+        assert!(f.is_sparse());
+        f.set_sparse_cap(4);
+        assert_eq!(f.repr(), FrontierRepr::Dense);
+        assert_eq!(f.len(), 10);
+        // Raising it back does not resurrect the list implicitly...
+        f.set_sparse_cap(256);
+        assert_eq!(f.repr(), FrontierRepr::Dense);
+        // ...but an explicit conversion does.
+        f.to_sparse();
+        assert_eq!(f.sparse_verts().unwrap().len(), 10);
+    }
+}

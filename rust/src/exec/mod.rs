@@ -10,15 +10,20 @@
 //! GraphScale-style FPGA frameworks put many algorithms on one
 //! partitioned processing abstraction:
 //!
+//! * [`Frontier`] — the adaptive sparse/dense frontier: a vertex list
+//!   (the hardware's frontier FIFO) below the scheduler's threshold, the
+//!   dense BRAM bitmap above it, with insert-time accumulation of the
+//!   scheduler's size/degree signals (see [`frontier`]).
 //! * [`SearchState`] — the BRAM-resident search state, owned once and
 //!   reset in place between roots (`reset_for_root`, the hardware's
-//!   bitmap-clear pattern).
+//!   bitmap-clear pattern; sparse frontiers clear only touched words).
 //! * [`BfsEngine`] — the engine trait: `prepare(graph, part)` binds a
 //!   graph, `step(state, mode)` runs one iteration, and the blanket
 //!   `run(root, policy)` is the *single* level-synchronous driver loop
 //!   shared by all engines (see [`driver::drive`]).
 //! * [`driver`] — that shared loop: mode decision via
-//!   [`crate::sched::ModePolicy`], frontier swap, signal bookkeeping.
+//!   [`crate::sched::ModePolicy`] (direction *and* representation),
+//!   frontier swap, signal bookkeeping — no per-iteration rescans.
 //! * [`make_engine`] — name-keyed factory so the experiment drivers can
 //!   sweep *engines* exactly the way they sweep PC/PE counts.
 //!
@@ -26,10 +31,12 @@
 //! [`crate::bfs::batch::BatchDriver`], which shards roots across rayon
 //! workers with one `SearchState` per worker.
 
+pub mod frontier;
 pub mod state;
 pub mod engine;
 pub mod driver;
 
 pub use driver::drive;
 pub use engine::{make_engine, BfsEngine, BfsRun, StepStats, ENGINE_NAMES};
+pub use frontier::{Frontier, FrontierRepr};
 pub use state::SearchState;

@@ -1,41 +1,51 @@
 //! The search state every BFS engine operates on.
 //!
-//! On the U280 this state lives in double-pump BRAM/URAM: one bit per
-//! vertex for the current frontier, next frontier and visited map, plus
-//! the level array in the PEs' local memory. A new search does not
+//! On the U280 this state lives in double-pump BRAM/URAM: the current
+//! and next frontiers (bitmap + frontier FIFO, see
+//! [`Frontier`]), one bit per vertex for the visited map, plus the
+//! level array in the PEs' local memory. A new search does not
 //! reallocate any of it — the hardware simply clears the BRAMs — and
 //! the software engines mirror that: [`SearchState::reset_for_root`]
-//! zeroes the bitmaps and refills the level array in place, which is
-//! what makes multi-root batches cheap (see
-//! [`crate::bfs::batch::BatchDriver`]).
+//! zeroes the bitmaps and refills the level array in place (sparse
+//! frontiers clear only the words they touched, via
+//! [`crate::util::Bitset::clear_words_touched`]), which is what makes
+//! multi-root batches cheap (see [`crate::bfs::batch::BatchDriver`]).
 
+use super::frontier::Frontier;
 use crate::bfs::INF;
 use crate::graph::VertexId;
 use crate::util::Bitset;
 
-/// Bitmaps + level array + the driver's per-iteration signals.
+/// Frontiers + visited map + level array + the driver's per-iteration
+/// signals.
 ///
-/// Engines read `current`/`visited` and stage discoveries into `next`,
-/// `visited` and `levels` during [`step`](super::BfsEngine::step); the
-/// shared driver swaps the frontiers and maintains the scheduler
-/// signals between iterations.
+/// Engines read `current`/`visited` and stage discoveries into `next`
+/// (via [`Frontier::insert`], which accumulates the scheduler's
+/// frontier-edges signal at insert time), `visited` and `levels` during
+/// [`step`](super::BfsEngine::step); the shared driver swaps the
+/// frontiers and rolls the scheduler signals forward between
+/// iterations — no rescans.
 #[derive(Clone, Debug)]
 pub struct SearchState {
-    /// Current-frontier bitmap (vertices discovered last iteration).
-    pub current: Bitset,
-    /// Next-frontier bitmap (vertices discovered this iteration).
-    pub next: Bitset,
+    /// Current frontier (vertices discovered last iteration).
+    pub current: Frontier,
+    /// Next frontier (vertices discovered this iteration).
+    pub next: Frontier,
     /// Visited map.
     pub visited: Bitset,
     /// Per-vertex BFS level; `INF` when unreached.
     pub levels: Vec<u32>,
-    /// Vertices in the current frontier.
+    /// Vertices in the current frontier (mirror of `current.len()`).
     pub frontier_size: u64,
     /// Sum of out-degrees of the current frontier (the scheduler's
-    /// push→pull switching signal).
+    /// push→pull switching signal; mirror of `current.edges()`).
     pub frontier_edges: u64,
     /// Vertices visited so far (root included).
     pub visited_count: u64,
+    /// Graph500 traversed-edge count so far: sum of out-degrees of the
+    /// visited vertices, accumulated as frontiers retire (free with
+    /// insert-time degree tracking — no end-of-run degree rescan).
+    pub traversed_edges: u64,
     /// Iteration index of the iteration about to run (0-based).
     pub bfs_level: u32,
 }
@@ -45,13 +55,14 @@ impl SearchState {
     /// [`reset_for_root`](Self::reset_for_root) before driving a search.
     pub fn new(n: usize) -> Self {
         Self {
-            current: Bitset::new(n),
-            next: Bitset::new(n),
+            current: Frontier::new(n),
+            next: Frontier::new(n),
             visited: Bitset::new(n),
             levels: vec![INF; n],
             frontier_size: 0,
             frontier_edges: 0,
             visited_count: 0,
+            traversed_edges: 0,
             bfs_level: 0,
         }
     }
@@ -63,44 +74,61 @@ impl SearchState {
     }
 
     /// In-place reset for a new search from `root` — the BRAM-clear
-    /// pattern: no allocation, just zeroing. `root_degree` seeds the
-    /// scheduler's frontier-edges signal.
+    /// pattern: no allocation, just zeroing (targeted word clears for
+    /// frontiers that stayed sparse). `root_degree` seeds the
+    /// scheduler's frontier-edges signal and the traversed-edge total.
     pub fn reset_for_root(&mut self, root: VertexId, root_degree: u64) {
         assert!(
             (root as usize) < self.num_vertices(),
             "root {root} out of range for {}-vertex state",
             self.num_vertices()
         );
-        self.current.clear_all();
-        self.next.clear_all();
+        self.current.clear();
+        self.next.clear();
         self.visited.clear_all();
         self.levels.iter_mut().for_each(|l| *l = INF);
-        self.current.set(root as usize);
+        self.current.insert(root, root_degree);
         self.visited.set(root as usize);
         self.levels[root as usize] = 0;
         self.frontier_size = 1;
         self.frontier_edges = root_degree;
         self.visited_count = 1;
+        self.traversed_edges = root_degree;
         self.bfs_level = 0;
     }
 
-    /// End-of-iteration bookkeeping shared by every engine: swap the
-    /// frontiers, clear the (new) next bitmap, and roll the driver
+    /// End-of-iteration bookkeeping shared by every engine: retire the
+    /// finished frontier into the traversed-edge total, swap the
+    /// frontiers, clear the (new) next frontier, and roll the driver
     /// signals forward. `newly` is the number of vertices discovered by
-    /// the iteration that just ran. `frontier_edges` must be updated by
-    /// the caller afterwards (engines that scan in ascending order
-    /// accumulate it inline; others recompute from the new frontier).
+    /// the iteration that just ran (engines count their own inserts;
+    /// it must equal the staged frontier's population). The
+    /// frontier-edges signal comes straight from the staged frontier's
+    /// insert-time degree sum — nothing is rescanned.
     pub fn finish_iteration(&mut self, newly: u64) {
-        self.current.swap_with(&mut self.next);
-        self.next.clear_all();
-        self.frontier_size = newly;
-        self.visited_count += newly;
+        debug_assert_eq!(
+            newly,
+            self.next.len(),
+            "engine-reported discovery count diverges from staged frontier"
+        );
+        // The staged frontier is authoritative for the driver signals;
+        // `newly` is cross-checked above but an engine whose self-count
+        // drifts (e.g. a device kernel's reduction) cannot corrupt the
+        // loop or the tracked totals.
+        let staged = self.next.len();
+        self.traversed_edges += self.next.edges();
+        std::mem::swap(&mut self.current, &mut self.next);
+        self.next.clear();
+        self.frontier_size = staged;
+        self.frontier_edges = self.current.edges();
+        self.visited_count += staged;
         self.bfs_level += 1;
     }
 
-    /// Vertices reached so far (root included).
+    /// Vertices reached so far (root included) — tracked, not
+    /// re-popcounted.
     pub fn reached(&self) -> usize {
-        self.visited.count_ones()
+        self.visited_count as usize
     }
 }
 
@@ -114,23 +142,26 @@ mod tests {
         s.reset_for_root(3, 7);
         // Simulate some progress.
         s.visited.set(10);
-        s.next.set(10);
+        s.next.insert(10, 4);
         s.levels[10] = 1;
         s.finish_iteration(1);
         assert_eq!(s.frontier_size, 1);
+        assert_eq!(s.frontier_edges, 4);
         assert_eq!(s.visited_count, 2);
+        assert_eq!(s.traversed_edges, 11);
         assert_eq!(s.bfs_level, 1);
         // Reset for a different root: everything back to a fresh search.
         s.reset_for_root(42, 5);
         assert_eq!(s.visited.count_ones(), 1);
         assert!(s.visited.get(42));
-        assert!(s.current.get(42) && !s.current.get(10));
-        assert!(s.next.none());
+        assert!(s.current.contains(42) && !s.current.contains(10));
+        assert!(s.next.is_empty() && s.next.bits().none());
         assert_eq!(s.levels[42], 0);
         assert!(s.levels.iter().enumerate().all(|(v, &l)| v == 42 || l == INF));
         assert_eq!(s.frontier_size, 1);
         assert_eq!(s.frontier_edges, 5);
         assert_eq!(s.visited_count, 1);
+        assert_eq!(s.traversed_edges, 5);
         assert_eq!(s.bfs_level, 0);
     }
 
@@ -138,11 +169,28 @@ mod tests {
     fn finish_iteration_swaps_and_clears_next() {
         let mut s = SearchState::new(10);
         s.reset_for_root(0, 2);
-        s.next.set(4);
+        s.next.insert(4, 3);
         s.finish_iteration(1);
-        assert!(s.current.get(4) && !s.current.get(0));
-        assert!(s.next.none());
+        assert!(s.current.contains(4) && !s.current.contains(0));
+        assert!(s.next.is_empty() && s.next.bits().none());
         assert_eq!(s.frontier_size, 1);
+        assert_eq!(s.frontier_edges, 3);
+        // Root degree + retired frontier degree.
+        assert_eq!(s.traversed_edges, 5);
+    }
+
+    #[test]
+    fn traversed_edges_accumulates_over_retired_frontiers() {
+        let mut s = SearchState::new(16);
+        s.reset_for_root(0, 2);
+        s.next.insert(1, 3);
+        s.next.insert(2, 4);
+        s.finish_iteration(2);
+        s.next.insert(3, 5);
+        s.finish_iteration(1);
+        s.finish_iteration(0);
+        assert_eq!(s.traversed_edges, 2 + 3 + 4 + 5);
+        assert_eq!(s.reached(), 4);
     }
 
     #[test]

@@ -18,14 +18,16 @@
 //! * [`util`] — PRNG, packed bitsets, tables, mini property harness.
 //! * [`graph`] — CSR/CSC storage, generators, `VID % Q` partitioning,
 //!   the Table-I dataset registry.
-//! * [`exec`] — **the shared execution substrate**: [`exec::SearchState`]
-//!   (bitmaps + levels, reset in place per root), the
+//! * [`exec`] — **the shared execution substrate**: the adaptive
+//!   sparse/dense [`exec::Frontier`], [`exec::SearchState`] (frontiers +
+//!   visited + levels, reset in place per root), the
 //!   [`exec::BfsEngine`] trait, and the single level-synchronous driver
 //!   loop every engine runs on.
 //! * [`bfs`] — the reference BFS, the Algorithm-2 bitmap engine, traffic
 //!   counters, GTEPS, and the rayon-parallel multi-root
 //!   [`bfs::batch::BatchDriver`].
-//! * [`sched`] — push/pull mode policies (Beamer hybrid et al.).
+//! * [`sched`] — push/pull mode policies (Beamer hybrid et al.) and the
+//!   paired frontier-representation policy ([`sched::ReprPolicy`]).
 //! * [`hbm`] / [`pe`] / [`dispatcher`] — the U280 component models.
 //! * [`sim`] — the analytic throughput simulator (+
 //!   [`sim::throughput::ThroughputEngine`]) and the cycle-accurate

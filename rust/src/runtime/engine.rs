@@ -237,7 +237,7 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
         let mut frontier = vec![0f32; n_pad];
         let mut visited = vec![0f32; n_pad];
         let mut level = vec![INF_LEVEL; n_pad];
-        for v in state.current.iter_ones() {
+        for v in state.current.iter() {
             frontier[v] = 1.0;
         }
         for v in state.visited.iter_ones() {
@@ -259,10 +259,13 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
                     return StepStats::default();
                 }
             };
-        // Download: write the outputs back into the shared state.
+        // Download: write the outputs back into the shared state. New
+        // frontier vertices are staged with their out-degree so the
+        // shared driver's insert-time signals stay exact.
+        let graph = self.graph.expect("prepare not called");
         for v in 0..n_real {
             if next_f[v] > 0.5 {
-                state.next.set(v);
+                state.next.insert(v as VertexId, graph.csr.degree(v as VertexId));
             }
             if visited_f[v] > 0.5 {
                 state.visited.set(v);
@@ -273,7 +276,6 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
         }
         StepStats {
             newly_visited: num_new,
-            next_frontier_edges: None,
             traffic: None,
             cycles: 0,
             backpressure: 0,

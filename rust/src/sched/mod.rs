@@ -13,6 +13,54 @@ pub mod policies;
 pub use policies::{DegreeAware, FrontierFraction, ModeTrace};
 
 use crate::bfs::Mode;
+use crate::exec::frontier::{adaptive_sparse_cap, DEFAULT_SPARSE_DIVISOR};
+
+/// How the scheduler represents each staged frontier — the second half
+/// of its per-iteration decision. Beamer-style direction optimization
+/// pairs the push/pull switch with a sparse-queue ↔ dense-bitmap
+/// representation switch, so the threshold lives here, next to
+/// `alpha`/`beta`, and the shared driver applies it to the next
+/// frontier before every [`ModePolicy::decide`]d iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReprPolicy {
+    /// Always the dense bitmap (the pre-refactor behaviour; the
+    /// forced-dense axis of the differential tests and the dense-only
+    /// baseline of `benches/perf_frontier.rs`).
+    Dense,
+    /// Always the sparse vertex list, whatever the frontier size.
+    Sparse,
+    /// Sparse while the frontier holds fewer than `|V| / divisor`
+    /// vertices, dense beyond (the default; divisor
+    /// [`DEFAULT_SPARSE_DIVISOR`]).
+    Adaptive(u32),
+}
+
+impl Default for ReprPolicy {
+    fn default() -> Self {
+        ReprPolicy::Adaptive(DEFAULT_SPARSE_DIVISOR)
+    }
+}
+
+impl ReprPolicy {
+    /// Sparse-list capacity for an `n`-vertex graph: the staged
+    /// frontier overflows to dense beyond this many vertices.
+    pub fn sparse_cap(self, n: usize) -> usize {
+        match self {
+            ReprPolicy::Dense => 0,
+            ReprPolicy::Sparse => n.max(1),
+            ReprPolicy::Adaptive(divisor) => adaptive_sparse_cap(n, divisor),
+        }
+    }
+
+    /// Short label for test/report names.
+    pub fn label(self) -> String {
+        match self {
+            ReprPolicy::Dense => "dense".into(),
+            ReprPolicy::Sparse => "sparse".into(),
+            ReprPolicy::Adaptive(d) => format!("adaptive(1/{d})"),
+        }
+    }
+}
 
 /// Per-iteration mode decision.
 pub trait ModePolicy {
@@ -35,6 +83,49 @@ pub trait ModePolicy {
 
     /// Human-readable policy name for reports.
     fn name(&self) -> String;
+
+    /// Representation policy for the frontiers this scheduler stages —
+    /// direction and representation switch together. Defaults to the
+    /// adaptive sparse/dense threshold; override to force an axis (see
+    /// [`WithRepr`]).
+    fn repr(&self) -> ReprPolicy {
+        ReprPolicy::default()
+    }
+}
+
+/// Wrap any policy with an explicit frontier-representation choice —
+/// the forced-sparse / forced-dense axes of the differential tests and
+/// benches. Mode decisions delegate unchanged; the wrapper's `repr`
+/// *overrides* whatever the inner policy (e.g. [`Hybrid::repr`])
+/// would report.
+pub struct WithRepr<P: ModePolicy> {
+    /// The wrapped direction policy.
+    pub inner: P,
+    /// The representation to force.
+    pub repr: ReprPolicy,
+}
+
+impl<P: ModePolicy> ModePolicy for WithRepr<P> {
+    fn decide(
+        &mut self,
+        bfs_level: u32,
+        frontier_size: u64,
+        frontier_edges: u64,
+        visited: u64,
+        n: u64,
+        m: u64,
+    ) -> Mode {
+        self.inner
+            .decide(bfs_level, frontier_size, frontier_edges, visited, n, m)
+    }
+
+    fn name(&self) -> String {
+        format!("{}+{}", self.inner.name(), self.repr.label())
+    }
+
+    fn repr(&self) -> ReprPolicy {
+        self.repr
+    }
 }
 
 /// Always run the same mode (the Fig 8 push-only / pull-only baselines).
@@ -57,6 +148,9 @@ pub struct Hybrid {
     pub alpha: f64,
     /// pull→push when `frontier_size < n / beta`.
     pub beta: f64,
+    /// Representation threshold for staged frontiers (the scheduler
+    /// owns both halves of the per-iteration switch).
+    pub repr: ReprPolicy,
     state: Mode,
 }
 
@@ -66,6 +160,7 @@ impl Default for Hybrid {
         Self {
             alpha: 14.0,
             beta: 24.0,
+            repr: ReprPolicy::default(),
             state: Mode::Push,
         }
     }
@@ -77,8 +172,15 @@ impl Hybrid {
         Self {
             alpha,
             beta,
+            repr: ReprPolicy::default(),
             state: Mode::Push,
         }
+    }
+
+    /// Override the frontier-representation policy.
+    pub fn with_repr(mut self, repr: ReprPolicy) -> Self {
+        self.repr = repr;
+        self
     }
 }
 
@@ -114,6 +216,10 @@ impl ModePolicy for Hybrid {
 
     fn name(&self) -> String {
         format!("hybrid(a={},b={})", self.alpha, self.beta)
+    }
+
+    fn repr(&self) -> ReprPolicy {
+        self.repr
     }
 }
 
@@ -169,5 +275,35 @@ mod tests {
     fn names_are_descriptive() {
         assert_eq!(Fixed(Mode::Push).name(), "push-only");
         assert!(Hybrid::default().name().starts_with("hybrid"));
+        let forced = WithRepr {
+            inner: Fixed(Mode::Push),
+            repr: ReprPolicy::Sparse,
+        };
+        assert_eq!(forced.name(), "push-only+sparse");
+    }
+
+    #[test]
+    fn repr_policy_caps_scale_with_n() {
+        assert_eq!(ReprPolicy::Dense.sparse_cap(1 << 20), 0);
+        assert_eq!(ReprPolicy::Sparse.sparse_cap(1 << 20), 1 << 20);
+        // Default divisor: |V|/32 (with the small-graph floor).
+        assert_eq!(ReprPolicy::default().sparse_cap(1 << 20), 1 << 15);
+        assert_eq!(ReprPolicy::Adaptive(4).sparse_cap(1 << 20), 1 << 18);
+        // Tiny graphs never get a zero adaptive cap.
+        assert!(ReprPolicy::default().sparse_cap(10) >= 10);
+    }
+
+    #[test]
+    fn with_repr_delegates_decisions_and_forces_repr() {
+        let mut p = WithRepr {
+            inner: Fixed(Mode::Pull),
+            repr: ReprPolicy::Dense,
+        };
+        assert_eq!(p.decide(0, 1, 1, 1, 100, 1000), Mode::Pull);
+        assert_eq!(p.repr(), ReprPolicy::Dense);
+        // Hybrid carries its own representation knob.
+        let h = Hybrid::default().with_repr(ReprPolicy::Sparse);
+        assert_eq!(h.repr(), ReprPolicy::Sparse);
+        assert_eq!(Hybrid::default().repr(), ReprPolicy::default());
     }
 }

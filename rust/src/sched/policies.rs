@@ -140,6 +140,10 @@ impl<P: ModePolicy> ModePolicy for ModeTrace<P> {
     fn name(&self) -> String {
         format!("traced({})", self.inner.name())
     }
+
+    fn repr(&self) -> super::ReprPolicy {
+        self.inner.repr()
+    }
 }
 
 #[cfg(test)]

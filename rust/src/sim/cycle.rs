@@ -11,9 +11,11 @@
 //! simulates one iteration over the shared [`SearchState`]; the
 //! level-synchronous loop lives in [`crate::exec::driver`]. The
 //! per-iteration fetch-list construction (the host-side analog of the
-//! P1 scan) is sharded across rayon workers by bitmap word range —
-//! per-PG queues come back in the same ascending vertex order the
-//! hardware's scan produces.
+//! P1 scan) consumes a sparse frontier's vertex list directly (the
+//! frontier-FIFO datapath — no bitmap scan at all) and falls back to a
+//! rayon-sharded word-range scan for dense frontiers — per-PG queues
+//! come back in the same ascending vertex order the hardware's scan
+//! produces either way.
 //!
 //! Intended for small graphs (RMAT18-class): it steps every cycle. The
 //! analytic [`super::throughput`] simulator covers the big datasets; the
@@ -97,9 +99,15 @@ impl<'g> CycleSim<'g> {
 
     /// Build this iteration's per-PG fetch lists: `(vertex, entries to
     /// stream)` in ascending vertex order. Pull mode applies the same
-    /// chunked early exit as the functional engine. The scan is sharded
-    /// across rayon workers by word range of the scanned bitmap; the
-    /// per-shard buckets concatenate back in vertex order.
+    /// chunked early exit as the functional engine.
+    ///
+    /// A sparse push frontier skips the bitmap scan entirely: the
+    /// hardware pops the frontier FIFO, so the per-PG lists are
+    /// bucketed straight from the vertex list (then sorted per PG to
+    /// the ascending order the in-order HBM readers consume). A dense
+    /// frontier keeps the sharded scan: rayon workers take disjoint
+    /// word ranges and the per-range buckets concatenate back in
+    /// vertex order.
     fn build_fetch_lists(
         &self,
         state: &SearchState,
@@ -110,7 +118,19 @@ impl<'g> CycleSim<'g> {
         let npgs = part.num_pgs;
         let graph = self.graph;
         let early_exit = self.cfg.pull_early_exit;
-        let current = &state.current;
+        if mode == Mode::Push {
+            if let Some(verts) = state.current.sparse_verts() {
+                let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+                for &v in verts {
+                    fetches[part.pg_of(v)].push((v, graph.out_neighbors(v).len()));
+                }
+                for pg_list in &mut fetches {
+                    pg_list.sort_unstable_by_key(|&(v, _)| v);
+                }
+                return fetches;
+            }
+        }
+        let current = state.current.bits();
         let visited = &state.visited;
         let scanned_words = match mode {
             Mode::Push => current.num_words(),
@@ -218,10 +238,18 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
         let mut stream_pos: Vec<usize> = vec![0; npgs];
         let mut stream_vert: Vec<Option<(VertexId, usize)>> = vec![None; npgs];
 
-        // P1 scan prologue: each PE scans its interval (pipelined with
-        // fetch issue; charge the scan as a floor at the end).
-        let interval_bits = (n as u64).div_ceil(npes as u64);
-        let scan_floor = interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64);
+        // P1 prologue floor: a sparse push frontier is popped from the
+        // frontier FIFO at one pop per PE per cycle — no bitmap scan —
+        // while a dense frontier (and pull's visited-map walk) has each
+        // PE scan its bitmap interval (pipelined with fetch issue;
+        // charged as a floor at the end). Matches the analytic model's
+        // P1 pricing so the two fidelity levels stay in agreement.
+        let scan_floor = if mode == Mode::Push && state.current.is_sparse() {
+            state.current.len().div_ceil(npes as u64)
+        } else {
+            let interval_bits = (n as u64).div_ceil(npes as u64);
+            interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64)
+        };
 
         // Seed the readers.
         for (pg, pg_fetches) in fetches.iter().enumerate() {
@@ -332,7 +360,7 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
                             let w = msg.vid as usize;
                             if !state.visited.get(w) {
                                 state.visited.set(w);
-                                state.next.set(w);
+                                state.next.insert(msg.vid, graph.csr.degree(msg.vid));
                                 state.levels[w] = state.bfs_level + 1;
                                 newly += 1;
                             }
@@ -340,9 +368,9 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
                         Mode::Pull => {
                             let u = msg.vid as usize;
                             let c = msg.child as usize;
-                            if state.current.get(u) && !state.visited.get(c) {
+                            if state.current.contains(u) && !state.visited.get(c) {
                                 state.visited.set(c);
-                                state.next.set(c);
+                                state.next.insert(msg.child, graph.csr.degree(msg.child));
                                 state.levels[c] = state.bfs_level + 1;
                                 newly += 1;
                             }
@@ -367,7 +395,6 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
         let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
         StepStats {
             newly_visited: newly,
-            next_frontier_edges: None,
             traffic: None,
             cycles: it_cycles,
             backpressure,
@@ -427,19 +454,27 @@ mod tests {
         let cfg = SimConfig::u280(4, 8);
         let sim = CycleSim::new(&g, cfg);
         let mut state = SearchState::new(g.num_vertices());
-        // Mark a spread of frontier vertices.
+        // Mark a spread of frontier vertices; a |V|-sized cap keeps the
+        // frontier in sparse (FIFO) form.
+        state.current.set_sparse_cap(g.num_vertices());
         for v in (0..g.num_vertices()).step_by(17) {
-            state.current.set(v);
+            state.current.insert(v as VertexId, 0);
         }
-        let fetches = sim.build_fetch_lists(&state, Mode::Push, 4);
-        assert_eq!(fetches.len(), 4);
-        for pg_list in &fetches {
+        assert!(state.current.is_sparse());
+        let sparse = sim.build_fetch_lists(&state, Mode::Push, 4);
+        // The dense (sharded bitmap scan) path over the same membership
+        // must produce identical lists.
+        state.current.to_dense();
+        let dense = sim.build_fetch_lists(&state, Mode::Push, 4);
+        assert_eq!(sparse, dense);
+        assert_eq!(sparse.len(), 4);
+        for pg_list in &sparse {
             assert!(
                 pg_list.windows(2).all(|w| w[0].0 < w[1].0),
                 "per-PG fetch list not in ascending vertex order"
             );
         }
-        let total: usize = fetches.iter().map(Vec::len).sum();
-        assert_eq!(total, state.current.count_ones());
+        let total: usize = sparse.iter().map(Vec::len).sum();
+        assert_eq!(total, state.current.len() as usize);
     }
 }

@@ -96,11 +96,29 @@ impl ThroughputSim {
         }
     }
 
-    /// Compute-phase cycles: slowest PE over (P1 scan, P2/P3 ops).
+    /// Compute-phase cycles: slowest PE over (P1 work, P2/P3 ops).
+    ///
+    /// P1 is priced by the datapath the iteration actually used:
+    /// frontier-FIFO pops (sparse push, one pop per PE per cycle) or
+    /// the dense bitmap scan at `scan_bits_per_cycle` per PE. Dense
+    /// iterations record `scanned_bits == |V|`, reproducing the old
+    /// fixed interval floor exactly; traffic with neither counter set
+    /// (the edge-centric baseline) falls back to the full-interval
+    /// scan as before.
     fn pe_cycles(&self, it: &IterTraffic, n_vertices: u64) -> u64 {
         let cfg = &self.cfg;
-        let interval_bits = n_vertices.div_ceil(cfg.part.num_pes as u64);
-        let scan = interval_bits.div_ceil(cfg.pe.scan_bits_per_cycle as u64);
+        let npes = cfg.part.num_pes as u64;
+        let scan = if it.frontier_fifo_pops > 0 {
+            it.frontier_fifo_pops.div_ceil(npes)
+        } else {
+            let bits = if it.scanned_bits > 0 {
+                it.scanned_bits
+            } else {
+                n_vertices
+            };
+            bits.div_ceil(npes)
+                .div_ceil(cfg.pe.scan_bits_per_cycle as u64)
+        };
         // Hits are attributed proportionally to received messages.
         let total_recv: u64 = it.per_pe_recv.iter().sum();
         let max_pe = it
@@ -199,6 +217,12 @@ impl ThroughputSim {
 /// (its [`step`](crate::exec::BfsEngine::step) delegates there), packaged
 /// as a [`BfsEngine`](crate::exec::BfsEngine) with a
 /// [`run_timed`](Self::run_timed) that attaches the Section-V timing.
+/// Adaptive frontier representations flow through end to end: the
+/// delegated step consumes sparse frontiers via the FIFO path and
+/// reports `frontier_fifo_pops` instead of `scanned_bits`, which
+/// [`ThroughputSim::probe_iteration`]'s P1 pricing consumes — sparse
+/// iterations are charged O(frontier) pops, dense ones the full BRAM
+/// scan, mirroring the cycle simulator's floor.
 pub struct ThroughputEngine<'g> {
     inner: crate::bfs::bitmap::BitmapEngine<'g>,
     cfg: SimConfig,

@@ -84,6 +84,22 @@ impl Bitset {
         self.bits.iter_mut().for_each(|w| *w = 0);
     }
 
+    /// Zero only the listed backing words (targeted clear). When a
+    /// prior pass recorded which words it wrote — e.g. a sparse
+    /// frontier's vertex list maps straight to word indices — this
+    /// resets the bitmap in O(touched) instead of O(len/64), the
+    /// difference between a full BRAM sweep and invalidating a few
+    /// lines on huge graphs. Duplicate and out-of-range indices are
+    /// tolerated (clearing twice is idempotent; out-of-range is a
+    /// no-op).
+    pub fn clear_words_touched(&mut self, words: &[usize]) {
+        for &w in words {
+            if let Some(word) = self.bits.get_mut(w) {
+                *word = 0;
+            }
+        }
+    }
+
     /// Population count.
     pub fn count_ones(&self) -> usize {
         self.bits.iter().map(|w| w.count_ones() as usize).sum()
@@ -303,6 +319,21 @@ mod tests {
         a.swap_with(&mut b);
         assert!(a.get(2) && !a.get(1));
         assert!(b.get(1) && !b.get(2));
+    }
+
+    #[test]
+    fn clear_words_touched_is_targeted() {
+        let mut b = Bitset::new(256);
+        b.set(1); // word 0
+        b.set(70); // word 1
+        b.set(130); // word 2
+        b.set(200); // word 3
+        // Clear words 0 and 2 only; duplicates and out-of-range indices
+        // are tolerated.
+        b.clear_words_touched(&[0, 2, 2, 99]);
+        assert!(!b.get(1) && !b.get(130));
+        assert!(b.get(70) && b.get(200));
+        assert_eq!(b.count_ones(), 2);
     }
 
     #[test]

@@ -1,24 +1,44 @@
 //! Cross-engine differential property tests: every [`BfsEngine`]
 //! implementation must produce levels identical to `bfs::reference`
-//! across random RMAT scales, modes (push / pull / hybrid), and PC/PE
-//! configurations — and the sharded multi-root `BatchDriver` must be
-//! bit-exact with any worker count.
+//! across random RMAT scales, modes (push / pull / hybrid), frontier
+//! representations (forced-sparse / forced-dense / adaptive), and
+//! PC/PE configurations — and the sharded multi-root `BatchDriver`
+//! must be bit-exact with any worker count.
 
 use scalabfs::bfs::batch::BatchDriver;
 use scalabfs::bfs::reference;
 use scalabfs::bfs::Mode;
 use scalabfs::exec::{drive, make_engine, BfsEngine, SearchState, ENGINE_NAMES};
 use scalabfs::graph::{generators, Graph};
-use scalabfs::sched::{Fixed, Hybrid, ModePolicy};
+use scalabfs::sched::{Fixed, Hybrid, ModePolicy, ReprPolicy, WithRepr};
 use scalabfs::sim::config::SimConfig;
 use scalabfs::util::rng::Xoshiro256;
 
+/// The representation axis every differential case sweeps.
+const REPRS: [ReprPolicy; 3] = [
+    ReprPolicy::Sparse,
+    ReprPolicy::Dense,
+    ReprPolicy::Adaptive(32),
+];
+
+/// Mode policies × frontier representations.
 fn policies() -> Vec<Box<dyn ModePolicy>> {
-    vec![
-        Box::new(Fixed(Mode::Push)),
-        Box::new(Fixed(Mode::Pull)),
-        Box::new(Hybrid::default()),
-    ]
+    let mut all: Vec<Box<dyn ModePolicy>> = Vec::new();
+    for repr in REPRS {
+        all.push(Box::new(WithRepr {
+            inner: Fixed(Mode::Push),
+            repr,
+        }));
+        all.push(Box::new(WithRepr {
+            inner: Fixed(Mode::Pull),
+            repr,
+        }));
+        all.push(Box::new(WithRepr {
+            inner: Hybrid::default(),
+            repr,
+        }));
+    }
+    all
 }
 
 fn random_graph(rng: &mut Xoshiro256) -> Graph {
@@ -82,6 +102,30 @@ fn shared_state_reused_across_roots_and_engines_is_clean() {
             let run = drive(engine.as_mut(), &mut state, root, &mut Hybrid::default());
             assert_eq!(run.levels, truth.levels, "engine={engine_name} root={root}");
         }
+    }
+}
+
+/// One SearchState alternating forced representations between roots:
+/// the targeted (sparse) clears and full (dense) clears must both
+/// leave a pristine state behind — sparse→dense→sparse round-trips
+/// across searches can't leak bits, counters, or stale list entries.
+#[test]
+fn shared_state_survives_representation_round_trips() {
+    let g = generators::rmat_graph500(9, 8, 91);
+    let cfg = SimConfig::u280(2, 4);
+    let mut state = SearchState::new(g.num_vertices());
+    let roots = reference::sample_roots(&g, 6, 91);
+    for (i, &root) in roots.iter().enumerate() {
+        let truth = reference::bfs(&g, root);
+        let repr = REPRS[i % REPRS.len()];
+        let mut engine = make_engine("bitmap", &g, &cfg).expect("bitmap");
+        let mut policy = WithRepr {
+            inner: Hybrid::default(),
+            repr,
+        };
+        let run = drive(engine.as_mut(), &mut state, root, &mut policy);
+        assert_eq!(run.levels, truth.levels, "root={root} repr={}", repr.label());
+        assert_eq!(run.reached, truth.reached);
     }
 }
 
