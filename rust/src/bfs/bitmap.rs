@@ -245,8 +245,7 @@ impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
         StepStats {
             newly_visited: it.newly_visited,
             traffic: Some(it),
-            cycles: 0,
-            backpressure: 0,
+            ..StepStats::default()
         }
     }
 

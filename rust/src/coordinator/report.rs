@@ -74,7 +74,8 @@ impl Json {
     }
 }
 
-/// Serialize a [`SimResult`] (summary + per-iteration breakdown).
+/// Serialize a [`SimResult`] (summary + per-iteration breakdown +
+/// per-PC utilization).
 pub fn sim_result_json(r: &SimResult) -> Json {
     Json::obj(vec![
         ("graph", Json::Str(r.graph.clone())),
@@ -83,6 +84,24 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         ("gteps", Json::Num(r.gteps)),
         ("aggregate_bw", Json::Num(r.aggregate_bw)),
         ("traversed_edges", Json::Num(r.traversed_edges as f64)),
+        (
+            "pcs",
+            Json::Arr(
+                r.pc_stats
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("pc", Json::Num(s.pc as f64)),
+                            ("beats", Json::Num(s.beats as f64)),
+                            ("utilization", Json::Num(s.utilization())),
+                            ("avg_queue_depth", Json::Num(s.avg_queue_depth())),
+                            ("max_queue_depth", Json::Num(s.max_queue_depth as f64)),
+                            ("stalls", Json::Num(s.stall_cycles as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "iterations",
             Json::Arr(
@@ -98,6 +117,41 @@ pub fn sim_result_json(r: &SimResult) -> Json {
                             ("total", Json::Num(it.total_cycles as f64)),
                             ("bytes", Json::Num(it.bytes as f64)),
                             ("bound", Json::Str(it.bottleneck.to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize a [`PcScalingCurve`](crate::coordinator::sweep::PcScalingCurve)
+/// — the GTEPS-vs-PC experiment record, knee included.
+pub fn pc_scaling_json(c: &crate::coordinator::sweep::PcScalingCurve) -> Json {
+    Json::obj(vec![
+        ("engine", Json::Str(c.engine.clone())),
+        ("graph", Json::Str(c.graph.clone())),
+        (
+            "knee_pcs",
+            match c.knee() {
+                Some(k) => Json::Num(k as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "points",
+            Json::Arr(
+                c.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("pcs", Json::Num(p.pcs as f64)),
+                            ("pgs", Json::Num(p.pgs as f64)),
+                            ("gteps", Json::Num(p.gteps)),
+                            ("speedup", Json::Num(p.speedup)),
+                            ("avg_pc_util", Json::Num(p.avg_pc_util)),
+                            ("max_pc_util", Json::Num(p.max_pc_util)),
+                            ("max_pc_queue", Json::Num(p.max_pc_queue as f64)),
                         ])
                     })
                     .collect(),
@@ -156,11 +210,36 @@ mod tests {
         let json = sim_result_json(&res).render();
         assert!(json.contains("\"graph\""));
         assert!(json.contains("\"iterations\":["));
+        assert!(json.contains("\"pcs\":["));
+        assert!(json.contains("\"utilization\""));
         // Must be parseable by python's json module (checked in CI via
         // the integration test), structurally balanced here:
         assert_eq!(
             json.matches('{').count(),
             json.matches('}').count()
         );
+    }
+
+    #[test]
+    fn pc_scaling_curve_serializes_with_knee() {
+        use crate::coordinator::sweep::{PcScalingCurve, PcScalingPoint};
+        let mk = |pcs: usize, gteps: f64| PcScalingPoint {
+            pcs,
+            pgs: pcs,
+            gteps,
+            speedup: gteps,
+            avg_pc_util: 0.4,
+            max_pc_util: 0.9,
+            max_pc_queue: 7,
+        };
+        let c = PcScalingCurve {
+            engine: "cycle".into(),
+            graph: "RMAT18-16".into(),
+            points: vec![mk(8, 1.0), mk(16, 1.9), mk(32, 2.1)],
+        };
+        let json = pc_scaling_json(&c).render();
+        assert!(json.contains("\"knee_pcs\":32"));
+        assert!(json.contains("\"max_pc_queue\":7"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 }

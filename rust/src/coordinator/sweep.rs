@@ -5,6 +5,14 @@
 //! Engines are a first-class sweep dimension: any name accepted by
 //! [`crate::exec::make_engine`] can be gridded against the hardware
 //! knobs, exactly the way PC/PE counts are.
+//!
+//! Two PC-axis experiments ride on the shared HBM contention model:
+//! [`pc_scaling`] grows PGs *with* PCs (the paper's Fig 9 axis — GTEPS
+//! should climb until another phase binds, the knee
+//! [`PcScalingCurve::knee`] reports), while [`pc_contention`] pins the
+//! PG count and *folds* them onto ever fewer PCs — sub-linear by
+//! construction, the shape that private-reader simulators cannot
+//! produce.
 
 use crate::coordinator::driver::make_policy;
 use crate::exec::{make_engine, BfsEngine, SearchState};
@@ -32,6 +40,10 @@ pub struct SweepPoint {
     pub aggregate_bw: f64,
     /// Total cycles.
     pub cycles: u64,
+    /// Mean per-PC utilization (0 when the engine reports no PC stats).
+    pub pc_util: f64,
+    /// Deepest per-PC request-queue backlog (cycle engine only).
+    pub max_pc_queue: usize,
 }
 
 /// Sweep specification.
@@ -93,6 +105,8 @@ pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
                             gteps: res.gteps,
                             aggregate_bw: res.aggregate_bw,
                             cycles: res.total_cycles,
+                            pc_util: res.avg_pc_utilization(),
+                            max_pc_queue: res.max_pc_queue_depth(),
                         });
                     }
                 }
@@ -107,6 +121,156 @@ pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
     points
         .iter()
         .max_by(|a, b| a.gteps.partial_cmp(&b.gteps).unwrap())
+}
+
+/// One point of a PC-axis curve.
+#[derive(Clone, Debug)]
+pub struct PcScalingPoint {
+    /// HBM PCs in service.
+    pub pcs: usize,
+    /// PGs issuing into them.
+    pub pgs: usize,
+    /// Measured GTEPS.
+    pub gteps: f64,
+    /// Speedup over the curve's first point.
+    pub speedup: f64,
+    /// Mean per-PC utilization.
+    pub avg_pc_util: f64,
+    /// Busiest PC's utilization.
+    pub max_pc_util: f64,
+    /// Deepest per-PC queue backlog observed (cycle engine only).
+    pub max_pc_queue: usize,
+}
+
+/// A GTEPS-vs-PC curve with enough per-PC telemetry to explain its
+/// shape.
+#[derive(Clone, Debug)]
+pub struct PcScalingCurve {
+    /// Engine that produced the curve.
+    pub engine: String,
+    /// Graph it ran on.
+    pub graph: String,
+    /// Points in ascending PC order.
+    pub points: Vec<PcScalingPoint>,
+}
+
+impl PcScalingCurve {
+    /// The saturation knee: the first PC count whose *parallel
+    /// efficiency* (speedup / PC ratio, both vs the first point) drops
+    /// below `threshold`. `None` while scaling stays near-linear
+    /// through the last point.
+    pub fn knee_at(&self, threshold: f64) -> Option<usize> {
+        let first = self.points.first()?;
+        for p in &self.points[1..] {
+            let ratio = p.pcs as f64 / first.pcs as f64;
+            if p.speedup / ratio < threshold {
+                return Some(p.pcs);
+            }
+        }
+        None
+    }
+
+    /// [`knee_at`](Self::knee_at) with the 0.7 efficiency bar the
+    /// experiment tables use.
+    pub fn knee(&self) -> Option<usize> {
+        self.knee_at(0.7)
+    }
+
+    /// Render the curve as report lines (one per point, plus the knee).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "PC scaling [{}] on {} (PGs x PCs -> GTEPS, speedup, PC util avg/max, queue):\n",
+            self.engine, self.graph
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "  {:>3} PG x {:>3} PC: {:>7.3} GTEPS  x{:<5.2} util {:>3.0}%/{:>3.0}%  queue<= {}\n",
+                p.pgs,
+                p.pcs,
+                p.gteps,
+                p.speedup,
+                p.avg_pc_util * 100.0,
+                p.max_pc_util * 100.0,
+                p.max_pc_queue
+            ));
+        }
+        match self.knee() {
+            Some(k) => out.push_str(&format!("  knee: efficiency < 70% at {k} PCs\n")),
+            None => out.push_str("  knee: none (near-linear through the last point)\n"),
+        }
+        out
+    }
+}
+
+/// Fig-9 axis: PGs grow *with* PCs (1 PE per PG times `pes_per_pc`),
+/// one PC private to each PG. GTEPS should grow near-linearly until a
+/// non-memory phase binds.
+pub fn pc_scaling(
+    graph: &Graph,
+    engine_name: &str,
+    pcs_list: &[usize],
+    pes_per_pc: usize,
+    seed: u64,
+) -> Result<PcScalingCurve> {
+    pc_curve(graph, engine_name, pcs_list, seed, |pcs| {
+        (pcs, SimConfig::u280(pcs, pcs * pes_per_pc))
+    })
+}
+
+/// Contention axis: the PG/PE topology stays fixed at `num_pgs` while
+/// the PCs in service shrink/grow through `pcs_list` — PGs fold onto
+/// shared PCs per [`crate::graph::Partitioning::pc_of_pg`]. Scaling is
+/// sub-linear whenever PCs < PGs: the queues, not the ports, bind.
+pub fn pc_contention(
+    graph: &Graph,
+    engine_name: &str,
+    num_pgs: usize,
+    pcs_list: &[usize],
+    seed: u64,
+) -> Result<PcScalingCurve> {
+    pc_curve(graph, engine_name, pcs_list, seed, |pcs| {
+        (num_pgs, SimConfig::u280(num_pgs, num_pgs).with_hbm_pcs(pcs))
+    })
+}
+
+/// Shared curve builder: one hybrid-policy run per PC count, timed
+/// through [`time_run`], with `mk_cfg` mapping each PC count to its
+/// `(num_pgs, SimConfig)`.
+fn pc_curve(
+    graph: &Graph,
+    engine_name: &str,
+    pcs_list: &[usize],
+    seed: u64,
+    mk_cfg: impl Fn(usize) -> (usize, SimConfig),
+) -> Result<PcScalingCurve> {
+    let roots = crate::bfs::reference::sample_roots(graph, 1, seed);
+    anyhow::ensure!(!roots.is_empty(), "no roots");
+    let root = roots[0];
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut state = SearchState::new(graph.num_vertices());
+    let mut points: Vec<PcScalingPoint> = Vec::new();
+    for &pcs in pcs_list {
+        let (pgs, cfg) = mk_cfg(pcs);
+        let mut engine = make_engine(engine_name, graph, &cfg)?;
+        let mut policy = make_policy("hybrid");
+        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        let res = time_run(&run, &cfg, &graph.name, bytes)?;
+        let base = points.first().map(|p| p.gteps).unwrap_or(res.gteps);
+        points.push(PcScalingPoint {
+            pcs,
+            pgs,
+            gteps: res.gteps,
+            speedup: if base > 0.0 { res.gteps / base } else { 1.0 },
+            avg_pc_util: res.avg_pc_utilization(),
+            max_pc_util: res.max_pc_utilization(),
+            max_pc_queue: res.max_pc_queue_depth(),
+        });
+    }
+    Ok(PcScalingCurve {
+        engine: engine_name.to_string(),
+        graph: graph.name.clone(),
+        points,
+    })
 }
 
 #[cfg(test)]
@@ -150,6 +314,89 @@ mod tests {
             assert!(p.gteps > 0.0, "engine {}", p.engine);
             assert!(p.cycles > 0, "engine {}", p.engine);
         }
+    }
+
+    #[test]
+    fn pc_scaling_curve_is_monotone_with_utilization() {
+        // The Fig-9 axis on the analytic engine: GTEPS grows with PCs
+        // and every point carries measured per-PC utilization.
+        let g = generators::rmat_graph500(12, 16, 8);
+        let curve = pc_scaling(&g, "throughput", &[2, 4, 8], 1, 8).unwrap();
+        assert_eq!(curve.points.len(), 3);
+        for w in curve.points.windows(2) {
+            assert!(
+                w[1].gteps > w[0].gteps,
+                "not monotone: {} PCs {} vs {} PCs {}",
+                w[0].pcs,
+                w[0].gteps,
+                w[1].pcs,
+                w[1].gteps
+            );
+        }
+        for p in &curve.points {
+            assert!(p.avg_pc_util > 0.0, "{} PCs: no utilization", p.pcs);
+            assert!(p.max_pc_util <= 1.0 + 1e-9);
+        }
+        assert!(curve.render().contains("GTEPS"));
+    }
+
+    #[test]
+    fn pc_contention_folding_is_sublinear() {
+        // 16 PGs folded onto 1..16 PCs: going from 1 to 16 PCs helps,
+        // but the contention-saturated end (few PCs, many PGs) is
+        // clearly sub-linear — the knee the shared queues create.
+        let g = generators::rmat_graph500(11, 16, 9);
+        let curve = pc_contention(&g, "throughput", 16, &[1, 4, 16], 9).unwrap();
+        assert_eq!(curve.points.len(), 3);
+        let p1 = &curve.points[0];
+        let p16 = &curve.points[2];
+        assert!(p16.gteps > p1.gteps, "more PCs must help");
+        // 16x the channels buys well under 16x: the fold is contended.
+        assert!(
+            p16.speedup < 16.0 * 0.9,
+            "speedup {} looks impossibly linear",
+            p16.speedup
+        );
+        // The single shared PC runs hotter than each of the 16.
+        assert!(p1.max_pc_util >= p16.max_pc_util * 0.9);
+    }
+
+    #[test]
+    fn cycle_engine_reports_queue_depths_in_curves() {
+        let g = generators::rmat_graph500(9, 8, 13);
+        let curve = pc_contention(&g, "cycle", 4, &[1, 4], 13).unwrap();
+        assert_eq!(curve.points.len(), 2);
+        assert!(curve.points[0].gteps > 0.0);
+        // The folded point queues requests; the private point may too,
+        // but the contended one must see at least as deep a backlog.
+        assert!(curve.points[0].max_pc_queue >= curve.points[1].max_pc_queue.min(1));
+        assert!(curve.points[1].gteps > curve.points[0].gteps);
+    }
+
+    #[test]
+    fn knee_detection_flags_saturation() {
+        let mk = |pcs: usize, gteps: f64, base: f64| PcScalingPoint {
+            pcs,
+            pgs: pcs,
+            gteps,
+            speedup: gteps / base,
+            avg_pc_util: 0.5,
+            max_pc_util: 0.6,
+            max_pc_queue: 0,
+        };
+        let linear = PcScalingCurve {
+            engine: "x".into(),
+            graph: "g".into(),
+            points: vec![mk(1, 1.0, 1.0), mk(2, 1.9, 1.0), mk(4, 3.8, 1.0)],
+        };
+        assert_eq!(linear.knee(), None);
+        let saturating = PcScalingCurve {
+            engine: "x".into(),
+            graph: "g".into(),
+            points: vec![mk(1, 1.0, 1.0), mk(2, 1.8, 1.0), mk(4, 2.0, 1.0)],
+        };
+        assert_eq!(saturating.knee(), Some(4));
+        assert!(saturating.render().contains("knee"));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use super::engine::{BfsEngine, BfsRun};
 use super::state::SearchState;
 use crate::bfs::traffic::RunTraffic;
 use crate::graph::VertexId;
+use crate::hbm::pc::merge_pc_stats;
 use crate::sched::ModePolicy;
 
 /// Drive a full BFS from `root` over `state` with `engine`, letting
@@ -49,6 +50,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
     let mut iter_cycles = Vec::new();
     let mut total_cycles = 0u64;
     let mut backpressure = 0u64;
+    let mut pc_stats = Vec::new();
 
     while state.frontier_size > 0 {
         let mode = policy.decide(
@@ -72,6 +74,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
             total_cycles += stats.cycles;
         }
         backpressure += stats.backpressure;
+        merge_pc_stats(&mut pc_stats, &stats.pc_stats);
         state.finish_iteration(stats.newly_visited);
     }
 
@@ -84,6 +87,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         cycles: total_cycles,
         iter_cycles,
         backpressure,
+        pc_stats,
     }
 }
 

@@ -5,6 +5,7 @@ use super::state::SearchState;
 use crate::bfs::traffic::{IterTraffic, RunTraffic};
 use crate::bfs::Mode;
 use crate::graph::{Graph, Partitioning, VertexId};
+use crate::hbm::pc::PcStats;
 use crate::sched::ModePolicy;
 use crate::sim::config::SimConfig;
 use crate::Result;
@@ -28,6 +29,11 @@ pub struct StepStats {
     pub cycles: u64,
     /// Dispatcher backpressure events observed this iteration.
     pub backpressure: u64,
+    /// Per-PC HBM service stats for engines that model the shared
+    /// memory subsystem (the cycle engine); empty otherwise. The
+    /// driver merges these across iterations into
+    /// [`BfsRun::pc_stats`].
+    pub pc_stats: Vec<PcStats>,
 }
 
 /// Complete result of a BFS run through the shared driver. This is the
@@ -54,6 +60,9 @@ pub struct BfsRun {
     pub iter_cycles: Vec<u64>,
     /// Dispatcher backpressure events across the run.
     pub backpressure: u64,
+    /// Per-PC HBM utilization/queue stats merged over the run (empty
+    /// unless the engine models the shared memory subsystem).
+    pub pc_stats: Vec<PcStats>,
 }
 
 /// A level-synchronous BFS engine over partitioned bitmap state.
@@ -131,7 +140,7 @@ pub fn make_engine<'g>(
             Box::new(BitmapEngine::new(graph, cfg.part).with_config(tc))
         }
         "throughput" => Box::new(ThroughputEngine::new(graph, cfg.clone())),
-        "cycle" => Box::new(CycleSim::new(graph, cfg.clone())),
+        "cycle" => Box::new(CycleSim::try_new(graph, cfg.clone())?),
         "edge-centric" => Box::new(EdgeCentricEngine::new(graph, EdgeCentricConfig::default())),
         #[cfg(feature = "xla")]
         "xla" => Box::new(crate::runtime::XlaBfsEngine::new()?),

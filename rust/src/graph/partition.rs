@@ -77,6 +77,37 @@ impl Partitioning {
         (v as usize) / self.num_pes
     }
 
+    /// HBM pseudo channel serving a PG's CSR shard when `num_pcs` PCs
+    /// are in service — the partition-aware address map.
+    ///
+    /// With as many PCs as PGs this is the identity (the paper's
+    /// placement: one private PC per PG, no contention). With *fewer*
+    /// PCs, **contiguous** runs of PGs fold onto one PC (`pg / fold`),
+    /// keeping neighbors under the same mini-switch so the fold costs
+    /// queueing, not gratuitous lateral crossing. With *more* PCs than
+    /// PGs each PG still gets exactly one PC, spread evenly
+    /// (`pg * spread`) so the ports stay switch-local.
+    #[inline]
+    pub fn pc_of_pg(&self, pg: usize, num_pcs: usize) -> usize {
+        debug_assert!(pg < self.num_pgs);
+        assert!(
+            num_pcs > 0 && num_pcs.is_power_of_two(),
+            "PC count must be a power of two ({num_pcs})"
+        );
+        if num_pcs >= self.num_pgs {
+            pg * (num_pcs / self.num_pgs)
+        } else {
+            pg / (self.num_pgs / num_pcs)
+        }
+    }
+
+    /// PC serving a vertex's neighbor lists under an `num_pcs`-channel
+    /// subsystem: the PC of the PG that owns the vertex.
+    #[inline]
+    pub fn pc_of(&self, v: VertexId, num_pcs: usize) -> usize {
+        self.pc_of_pg(self.pg_of(v), num_pcs)
+    }
+
     /// Number of vertices a PE owns out of `n` total.
     #[inline]
     pub fn interval_len(&self, pe: usize, n: usize) -> usize {
@@ -151,6 +182,22 @@ pub fn pg_footprints(subgraphs: &[Subgraph], p: Partitioning, sv_bytes: usize) -
     per_pg
 }
 
+/// Per-PG shard sizes computed straight from the graph's degree arrays,
+/// without materializing [`Subgraph`]s — what the HBM address map uses
+/// to pack shards into PCs by capacity. Matches
+/// [`pg_footprints`]-over-[`partition`] on the edge bytes; the per-list
+/// offset-pair bytes are charged per owned vertex.
+pub fn pg_footprint_bytes(graph: &Graph, p: Partitioning, sv_bytes: usize) -> Vec<u64> {
+    let mut per_pg = vec![0u64; p.num_pgs];
+    for v in 0..graph.num_vertices() {
+        let vid = v as VertexId;
+        let lists = graph.out_neighbors(vid).len() + graph.in_neighbors(vid).len();
+        // Each vertex owns one CSR and one CSC offset entry (8 B each).
+        per_pg[p.pg_of(vid)] += (lists * sv_bytes + 16) as u64;
+    }
+    per_pg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +257,46 @@ mod tests {
     #[should_panic]
     fn pes_must_divide_into_pgs() {
         let _ = Partitioning::new(6, 4);
+    }
+
+    #[test]
+    fn pc_fold_is_identity_spread_or_contiguous() {
+        let p = Partitioning::new(8, 8);
+        // Identity at equal counts.
+        for pg in 0..8 {
+            assert_eq!(p.pc_of_pg(pg, 8), pg);
+        }
+        // Fewer PCs: contiguous fold.
+        assert_eq!(p.pc_of_pg(0, 2), 0);
+        assert_eq!(p.pc_of_pg(3, 2), 0);
+        assert_eq!(p.pc_of_pg(4, 2), 1);
+        assert_eq!(p.pc_of_pg(7, 2), 1);
+        // More PCs: even spread, one PC per PG.
+        assert_eq!(p.pc_of_pg(0, 32), 0);
+        assert_eq!(p.pc_of_pg(1, 32), 4);
+        assert_eq!(p.pc_of_pg(7, 32), 28);
+        // Vertex-level map goes through the owning PG.
+        assert_eq!(p.pc_of(9, 2), p.pc_of_pg(p.pg_of(9), 2));
+    }
+
+    #[test]
+    fn cheap_footprints_match_subgraph_edge_bytes() {
+        let g = generators::rmat_graph500(8, 4, 7);
+        let p = Partitioning::new(8, 4);
+        let cheap = pg_footprint_bytes(&g, p, 4);
+        let exact = pg_footprints(&partition(&g, p), p, 4);
+        assert_eq!(cheap.len(), exact.len());
+        // The cheap variant charges 16 B of offsets per vertex; the
+        // subgraph CSRs carry one extra sentinel offset pair per PE.
+        // Edge bytes dominate and must agree exactly once offsets are
+        // stripped from both.
+        let n = g.num_vertices() as u64;
+        let cheap_edges: u64 = cheap.iter().sum::<u64>() - 16 * n;
+        let pes_per_pg = p.pes_per_pg() as u64;
+        let exact_edges: u64 = exact.iter().sum::<u64>()
+            - exact.len() as u64 * pes_per_pg * 16 // sentinel pairs
+            - 16 * n;
+        assert_eq!(cheap_edges, exact_edges);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! AXI read-command accounting (paper §IV-D HBM Reader).
 //!
-//! The HBM reader converts neighbor-list requests into AXI commands: one
-//! burst for the offset pair, then bursts for the list itself. This
-//! module models command counts and burst beats so the cycle simulator
-//! can charge issue slots and the throughput simulator can align bytes.
+//! The HBM access path converts neighbor-list requests into AXI
+//! commands: one burst for the offset pair, then bursts for the list
+//! itself (issued through the shared
+//! [`crate::hbm::subsystem::HbmSubsystem`]). This module models command
+//! counts and burst beats so the cycle simulator can charge issue slots
+//! and the throughput simulator can align bytes.
 
 /// AXI bus parameters for one PG's port.
 #[derive(Clone, Copy, Debug)]
@@ -44,18 +46,10 @@ impl AxiConfig {
     }
 }
 
-/// A read request issued by `Read CSR`/`Read CSC` (P1) to the HBM reader.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ReadRequest {
-    /// Kind of array being read.
-    pub kind: ReadKind,
-    /// Bytes requested (pre-alignment).
-    pub bytes: u64,
-    /// Issuing PE (local index within the PG).
-    pub pe: usize,
-}
-
-/// Which array a request touches.
+/// Which array a request touches. Carried on every
+/// [`crate::hbm::pc::PcRequest`]/[`crate::hbm::pc::PcBeat`] so the
+/// cycle simulator can tell offset beats (select the next list to
+/// stream) from edge beats (stream neighbor entries).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReadKind {
     /// Offset-array fetch (per active vertex; paper assumes one DW).

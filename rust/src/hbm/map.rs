@@ -1,0 +1,207 @@
+//! Partition-aware HBM address map: which pseudo channel serves each
+//! PG's CSR shard, and where each PG's AXI port sits on the U280's
+//! 32-slot switch fabric.
+//!
+//! The map is what turns [`crate::graph::Partitioning`] into physical
+//! placement. Two constructions mirror the two placements the paper
+//! evaluates:
+//!
+//! * [`AddressMap::partitioned`] — the ScalaBFS placement: PG `i`'s
+//!   shard on the PC `Partitioning::pc_of_pg` assigns it. With one PC
+//!   per PG every access is switch-local; with fewer PCs than PGs,
+//!   contiguous PG runs share a PC (queueing contention, minimal
+//!   crossing).
+//! * [`AddressMap::packed`] — the Fig 11 baseline: shards packed
+//!   sequentially from PC0 by capacity, so most ports read a remote PC
+//!   through the lateral bus *and* the data-holding PCs serve every
+//!   port's traffic.
+//!
+//! Slot geometry: `count` entities spread over the 32 switch slots at
+//! stride `32 / count` (identity past 32), so mini-switch grouping —
+//! and therefore [`crate::hbm::switch::SwitchTiming`] crossing costs —
+//! stay physical for any power-of-two PC/PG count.
+
+use super::pc::{HbmConfig, HbmError, PseudoChannel};
+use crate::graph::Partitioning;
+
+/// Switch slots on the U280 (AXI ports == PCs == 32).
+pub const NUM_SLOTS: usize = 32;
+
+/// Physical slot of entity `i` out of `count` equals spread over the
+/// 32-slot fabric.
+fn slot_of(i: usize, count: usize) -> usize {
+    debug_assert!(i < count);
+    if count >= NUM_SLOTS {
+        i % NUM_SLOTS
+    } else {
+        i * (NUM_SLOTS / count)
+    }
+}
+
+/// The PG-shard → PC placement plus the switch-slot geometry needed to
+/// price each port's crossing.
+#[derive(Clone, Debug)]
+pub struct AddressMap {
+    /// PCs in service.
+    pub num_pcs: usize,
+    /// Serving PC (queue index, `0..num_pcs`) per PG.
+    pc_of_pg: Vec<usize>,
+    /// Switch slot of each PG's AXI port.
+    home_slot: Vec<usize>,
+    /// Switch slot of each PC.
+    pc_slot: Vec<usize>,
+}
+
+impl AddressMap {
+    fn slots(num_pgs: usize, num_pcs: usize, pc_of_pg: Vec<usize>) -> Self {
+        Self {
+            num_pcs,
+            pc_of_pg,
+            home_slot: (0..num_pgs).map(|pg| slot_of(pg, num_pgs)).collect(),
+            pc_slot: (0..num_pcs).map(|pc| slot_of(pc, num_pcs)).collect(),
+        }
+    }
+
+    /// The ScalaBFS placement: PG shards on the PCs
+    /// [`Partitioning::pc_of_pg`] assigns — private PCs at equal
+    /// counts, contiguous folding when PCs are scarce.
+    pub fn partitioned(part: Partitioning, num_pcs: usize) -> Self {
+        let pc_of_pg = (0..part.num_pgs)
+            .map(|pg| part.pc_of_pg(pg, num_pcs))
+            .collect();
+        Self::slots(part.num_pgs, num_pcs, pc_of_pg)
+    }
+
+    /// The Fig 11 baseline placement: shards packed sequentially from
+    /// PC0 by capacity. `footprints[pg]` is each shard's size in bytes
+    /// (see [`crate::graph::partition::pg_footprint_bytes`]); the
+    /// error propagates when the graph outgrows `num_pcs` channels.
+    pub fn packed(
+        part: Partitioning,
+        footprints: &[u64],
+        hbm: HbmConfig,
+        num_pcs: usize,
+    ) -> Result<Self, HbmError> {
+        assert_eq!(footprints.len(), part.num_pgs);
+        let mut pcs: Vec<PseudoChannel> =
+            (0..num_pcs).map(|_| PseudoChannel::new(hbm)).collect();
+        let mut pc_of_pg = Vec::with_capacity(part.num_pgs);
+        let mut cur = 0usize;
+        for &bytes in footprints {
+            loop {
+                match pcs[cur].store(bytes) {
+                    Ok(()) => {
+                        pc_of_pg.push(cur);
+                        break;
+                    }
+                    Err(e) => {
+                        cur += 1;
+                        if cur >= num_pcs {
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self::slots(part.num_pgs, num_pcs, pc_of_pg))
+    }
+
+    /// Number of PGs (AXI ports) the map routes.
+    pub fn num_ports(&self) -> usize {
+        self.pc_of_pg.len()
+    }
+
+    /// The PC serving PG `pg`'s shard.
+    pub fn pc_of_pg(&self, pg: usize) -> usize {
+        self.pc_of_pg[pg]
+    }
+
+    /// Switch slot of PG `pg`'s AXI port.
+    pub fn home_slot(&self, pg: usize) -> usize {
+        self.home_slot[pg]
+    }
+
+    /// Switch slot of PC `pc`.
+    pub fn pc_slot(&self, pc: usize) -> usize {
+        self.pc_slot[pc]
+    }
+
+    /// Ports whose serving PC sits outside their own mini-switch group
+    /// — each pays lateral-crossing latency on every request.
+    pub fn crossing_ports(&self) -> usize {
+        let net = super::miniswitch::MiniSwitchNetwork::default();
+        (0..self.num_ports())
+            .filter(|&pg| {
+                !net.is_local(self.home_slot(pg), self.pc_slot(self.pc_of_pg(pg)))
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioned_equal_counts_is_local_everywhere() {
+        let m = AddressMap::partitioned(Partitioning::new(16, 8), 8);
+        assert_eq!(m.num_ports(), 8);
+        for pg in 0..8 {
+            assert_eq!(m.pc_of_pg(pg), pg);
+            assert_eq!(m.home_slot(pg), m.pc_slot(pg));
+        }
+        assert_eq!(m.crossing_ports(), 0);
+    }
+
+    #[test]
+    fn folded_map_shares_pcs_contiguously() {
+        let m = AddressMap::partitioned(Partitioning::new(8, 8), 2);
+        assert_eq!(m.num_pcs, 2);
+        assert_eq!(
+            (0..8).map(|pg| m.pc_of_pg(pg)).collect::<Vec<_>>(),
+            vec![0, 0, 0, 0, 1, 1, 1, 1]
+        );
+        // Folding 8 ports onto 2 PCs forces some ports off their
+        // mini-switch group.
+        assert!(m.crossing_ports() > 0);
+    }
+
+    #[test]
+    fn packed_map_fills_from_pc0_and_propagates_overflow() {
+        let part = Partitioning::new(4, 4);
+        let hbm = HbmConfig {
+            capacity: 100,
+            ..Default::default()
+        };
+        let m = AddressMap::packed(part, &[60, 60, 60, 60], hbm, 4).unwrap();
+        // 60+60 > 100: one shard per PC here.
+        assert_eq!(
+            (0..4).map(|pg| m.pc_of_pg(pg)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        let m2 = AddressMap::packed(part, &[40, 40, 40, 40], hbm, 4).unwrap();
+        // Two 40-byte shards fit per 100-byte PC.
+        assert_eq!(
+            (0..4).map(|pg| m2.pc_of_pg(pg)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        // Overflow surfaces the typed capacity error.
+        let err = AddressMap::packed(part, &[90, 90, 90, 90], hbm, 2);
+        assert!(matches!(
+            err,
+            Err(HbmError::CapacityExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn slots_stay_physical_for_any_power_of_two() {
+        for count in [1usize, 2, 4, 8, 16, 32, 64] {
+            for i in 0..count {
+                assert!(slot_of(i, count) < NUM_SLOTS, "{i}/{count}");
+            }
+        }
+        // 4 entities sit one per stack quadrant.
+        assert_eq!(slot_of(0, 4), 0);
+        assert_eq!(slot_of(3, 4), 24);
+    }
+}

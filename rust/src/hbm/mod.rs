@@ -5,15 +5,34 @@
 //! mini-switches giving every AXI port global addressing — at a steep
 //! throughput cost when accesses cross PCs (Fig 3). ScalaBFS's whole
 //! placement strategy exists to avoid that crossing.
+//!
+//! Module map:
+//!
+//! * [`pc`] — one pseudo channel: capacity/bandwidth constants, the
+//!   typed [`HbmError`], and the cycle-level bounded [`pc::PcQueue`]
+//!   with its [`pc::PcStats`] utilization counters.
+//! * [`axi`] — AXI burst/beat accounting (Eq 1 data widths).
+//! * [`switch`] — the crossing penalty, in both throughput
+//!   ([`SwitchModel`]) and latency ([`switch::SwitchTiming`]) form.
+//! * [`miniswitch`] — the 8x mini-switch topology behind both.
+//! * [`map`] — the partition-aware [`map::AddressMap`]: which PC serves
+//!   each PG's CSR shard, for both the ScalaBFS and the Fig 11
+//!   baseline placement.
+//! * [`subsystem`] — the shared, contended
+//!   [`subsystem::HbmSubsystem`] the cycle simulator issues into:
+//!   bounded per-PC queues, per-port issue, lateral-crossing latency.
 
 pub mod pc;
 pub mod switch;
 pub mod miniswitch;
 pub mod axi;
-pub mod reader;
+pub mod map;
+pub mod subsystem;
 
-pub use pc::{HbmConfig, PseudoChannel};
-pub use switch::SwitchModel;
+pub use map::AddressMap;
+pub use pc::{HbmConfig, HbmError, PcStats, PseudoChannel};
+pub use subsystem::{HbmSubsystem, HbmSubsystemConfig};
+pub use switch::{SwitchModel, SwitchTiming};
 
 /// Number of HBM pseudo channels on the Alveo U280.
 pub const U280_NUM_PCS: usize = 32;

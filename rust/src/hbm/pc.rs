@@ -1,4 +1,5 @@
-//! Pseudo-channel bandwidth/latency model.
+//! Pseudo-channel bandwidth/latency model and the cycle-level per-PC
+//! request queue.
 //!
 //! Each PC is modeled with the quantities the paper's Section-V
 //! performance model uses: a physical bandwidth ceiling `BW_MAX`
@@ -6,8 +7,59 @@
 //! `DW * F` (Eq 2), and a random-access efficiency factor for short
 //! bursts (DRAM row misses dominate BFS's irregular reads — §VI-E reason
 //! 1 why achieved bandwidth < theoretical).
+//!
+//! [`PcQueue`] is the *contended* face of a PC that the shared
+//! [`super::subsystem::HbmSubsystem`] ticks: a bounded request queue in
+//! front of a bounded set of in-flight transactions, streaming at most
+//! one data beat per cycle. A full queue **back-pressures** the issuing
+//! port ([`HbmError::QueueFull`]); it never drops a request.
 
+use super::axi::ReadKind;
 use crate::util::units::MHZ;
+use std::collections::VecDeque;
+
+/// Typed error for HBM placement and queueing operations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HbmError {
+    /// Placing more graph bytes than the PC's capacity allows
+    /// (paper §VI-D: a single PC's 2 Gbit limits the graph size).
+    CapacityExceeded {
+        /// Bytes the caller tried to place.
+        requested: u64,
+        /// Bytes already stored on the PC.
+        stored: u64,
+        /// The PC's capacity in bytes.
+        capacity: u64,
+    },
+    /// A bounded PC request queue refused a push — back-pressure, the
+    /// issuer must retry next cycle (the request is *not* dropped).
+    QueueFull {
+        /// Index of the PC whose queue is full.
+        pc: usize,
+        /// The queue's capacity in requests.
+        capacity: usize,
+    },
+}
+
+impl std::fmt::Display for HbmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HbmError::CapacityExceeded {
+                requested,
+                stored,
+                capacity,
+            } => write!(
+                f,
+                "PC overflow: {stored} + {requested} > {capacity} bytes"
+            ),
+            HbmError::QueueFull { pc, capacity } => {
+                write!(f, "PC {pc} request queue full ({capacity} entries)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HbmError {}
 
 /// Static configuration of one HBM pseudo channel.
 #[derive(Clone, Copy, Debug)]
@@ -55,14 +107,15 @@ impl PseudoChannel {
         }
     }
 
-    /// Place `bytes` of graph data; errors if capacity is exceeded
-    /// (paper §VI-D: a single PC's 2 Gbit limits the graph size).
-    pub fn store(&mut self, bytes: u64) -> Result<(), String> {
+    /// Place `bytes` of graph data; fails with
+    /// [`HbmError::CapacityExceeded`] if capacity would be exceeded.
+    pub fn store(&mut self, bytes: u64) -> Result<(), HbmError> {
         if self.stored_bytes + bytes > self.cfg.capacity {
-            return Err(format!(
-                "PC overflow: {} + {} > {}",
-                self.stored_bytes, bytes, self.cfg.capacity
-            ));
+            return Err(HbmError::CapacityExceeded {
+                requested: bytes,
+                stored: self.stored_bytes,
+                capacity: self.cfg.capacity,
+            });
         }
         self.stored_bytes += bytes;
         Ok(())
@@ -88,6 +141,235 @@ impl PseudoChannel {
     }
 }
 
+/// Per-PC service statistics: what the experiment reports chart when
+/// they ask whether a PC count is under- or over-provisioned.
+///
+/// Two producers fill these: the cycle simulator's [`PcQueue`] measures
+/// them per cycle, and the analytic
+/// [`crate::sim::throughput::ThroughputSim`] derives the byte/busy
+/// fields from its per-iteration traffic (queue-depth fields stay 0
+/// there — the analytic model has no queues).
+#[derive(Clone, Debug, Default)]
+pub struct PcStats {
+    /// PC index within the subsystem.
+    pub pc: usize,
+    /// Data beats streamed out of this PC.
+    pub beats: u64,
+    /// Cycles the PC spent streaming a beat (its busy time).
+    pub busy_cycles: u64,
+    /// Cycles the PC was observed for (utilization denominator).
+    pub cycles: u64,
+    /// Sum of request-queue depth over all observed cycles.
+    pub queue_depth_sum: u64,
+    /// Largest request-queue depth observed.
+    pub max_queue_depth: usize,
+    /// Issue attempts rejected because the queue was full
+    /// (back-pressure events charged to the issuing port).
+    pub stall_cycles: u64,
+}
+
+impl PcStats {
+    /// Fraction of observed cycles the PC streamed data.
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean request-queue depth over the observed cycles.
+    pub fn avg_queue_depth(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fold another observation window of the *same* PC into this one.
+    pub fn merge(&mut self, other: &PcStats) {
+        self.beats += other.beats;
+        self.busy_cycles += other.busy_cycles;
+        self.cycles += other.cycles;
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.stall_cycles += other.stall_cycles;
+    }
+}
+
+/// Merge a step's per-PC stats into a run-level accumulator (growing it
+/// on first use). Indices are PC indices; both slices are dense.
+pub fn merge_pc_stats(acc: &mut Vec<PcStats>, step: &[PcStats]) {
+    if acc.len() < step.len() {
+        for pc in acc.len()..step.len() {
+            acc.push(PcStats {
+                pc,
+                ..PcStats::default()
+            });
+        }
+    }
+    for s in step {
+        acc[s.pc].merge(s);
+    }
+}
+
+/// One queued HBM transaction: a read burst of `beats` data beats bound
+/// for `(port, pe)`.
+#[derive(Clone, Copy, Debug)]
+pub struct PcRequest {
+    /// Issuing AXI port (PG index).
+    pub port: usize,
+    /// Destination PE (local index within the PG).
+    pub pe: usize,
+    /// Which array the burst reads.
+    pub kind: ReadKind,
+    /// Data beats in the burst (≥ 1).
+    pub beats: u64,
+    /// For offset reads: bytes of the edge fetch to spawn on completion
+    /// (0 = none).
+    pub follow_up_bytes: u64,
+    /// Extra latency charged on top of the HBM base latency — the
+    /// lateral switch-crossing cost of reaching this PC from `port`.
+    pub extra_latency: u64,
+}
+
+/// An in-flight transaction inside a PC.
+#[derive(Clone, Copy, Debug)]
+struct InflightTx {
+    ready_at: u64,
+    beats: u64,
+    port: usize,
+    pe: usize,
+    kind: ReadKind,
+    follow_up_bytes: u64,
+}
+
+/// A beat of returned data, tagged with its destination port/PE.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PcBeat {
+    /// Destination AXI port (PG).
+    pub port: usize,
+    /// Destination PE (local).
+    pub pe: usize,
+    /// Kind of data in the beat.
+    pub kind: ReadKind,
+    /// Non-zero only on the beat that *completes* an offset read which
+    /// must spawn an edge fetch of this many bytes.
+    pub follow_up_bytes: u64,
+}
+
+/// Cycle-level pseudo channel: a bounded request queue feeding a bounded
+/// in-flight window, streaming at most one data beat per cycle. This is
+/// the shared resource the PGs contend for — when several ports map to
+/// one PC, its single beat-per-cycle output is split between them.
+#[derive(Clone, Debug)]
+pub struct PcQueue {
+    /// Request-queue capacity; [`try_push`](Self::try_push)
+    /// back-pressures beyond it.
+    pub queue_capacity: usize,
+    /// Maximum transactions in flight (the AXI outstanding window).
+    pub max_outstanding: usize,
+    latency: u64,
+    queue: VecDeque<PcRequest>,
+    inflight: Vec<InflightTx>,
+    /// Measured service statistics.
+    pub stats: PcStats,
+}
+
+impl PcQueue {
+    /// New queue for PC `pc` with the given bounds and base read latency.
+    pub fn new(pc: usize, queue_capacity: usize, max_outstanding: usize, latency: u64) -> Self {
+        assert!(queue_capacity >= 1 && max_outstanding >= 1);
+        Self {
+            queue_capacity,
+            max_outstanding,
+            latency,
+            queue: VecDeque::new(),
+            inflight: Vec::new(),
+            stats: PcStats {
+                pc,
+                ..PcStats::default()
+            },
+        }
+    }
+
+    /// Current request-queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Transactions currently in flight.
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Enqueue a request, or back-pressure with [`HbmError::QueueFull`]
+    /// when the queue is at capacity (the stall is recorded in
+    /// [`PcStats::stall_cycles`]; the caller retries next cycle —
+    /// nothing is dropped).
+    pub fn try_push(&mut self, req: PcRequest) -> Result<(), HbmError> {
+        if self.queue.len() >= self.queue_capacity {
+            self.stats.stall_cycles += 1;
+            return Err(HbmError::QueueFull {
+                pc: self.stats.pc,
+                capacity: self.queue_capacity,
+            });
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Advance one cycle at time `now`: admit queued requests into the
+    /// in-flight window while slots are free, then stream one beat from
+    /// the oldest ready transaction, if any.
+    pub fn tick(&mut self, now: u64) -> Option<PcBeat> {
+        self.stats.cycles += 1;
+        self.stats.queue_depth_sum += self.queue.len() as u64;
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
+        while self.inflight.len() < self.max_outstanding && !self.queue.is_empty() {
+            let req = self.queue.pop_front().unwrap();
+            self.inflight.push(InflightTx {
+                ready_at: now + self.latency + req.extra_latency,
+                beats: req.beats.max(1),
+                port: req.port,
+                pe: req.pe,
+                kind: req.kind,
+                follow_up_bytes: req.follow_up_bytes,
+            });
+        }
+        let idx = self
+            .inflight
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.ready_at <= now)
+            .min_by_key(|(_, t)| t.ready_at)
+            .map(|(i, _)| i)?;
+        let finished = {
+            let t = &mut self.inflight[idx];
+            t.beats -= 1;
+            self.stats.beats += 1;
+            self.stats.busy_cycles += 1;
+            t.beats == 0
+        };
+        let t = self.inflight[idx];
+        if finished {
+            self.inflight.swap_remove(idx);
+        }
+        Some(PcBeat {
+            port: t.port,
+            pe: t.pe,
+            kind: t.kind,
+            follow_up_bytes: if finished { t.follow_up_bytes } else { 0 },
+        })
+    }
+
+    /// True when no work remains in the queue or in flight.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.inflight.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,9 +381,28 @@ mod tests {
             ..Default::default()
         });
         assert!(pc.store(60).is_ok());
-        assert!(pc.store(41).is_err());
+        assert_eq!(
+            pc.store(41),
+            Err(HbmError::CapacityExceeded {
+                requested: 41,
+                stored: 60,
+                capacity: 100,
+            })
+        );
         assert!(pc.store(40).is_ok());
         assert_eq!(pc.stored_bytes, 100);
+    }
+
+    #[test]
+    fn hbm_error_displays() {
+        let e = HbmError::QueueFull { pc: 3, capacity: 8 };
+        assert!(e.to_string().contains("PC 3"));
+        let e2 = HbmError::CapacityExceeded {
+            requested: 2,
+            stored: 9,
+            capacity: 10,
+        };
+        assert!(e2.to_string().contains("overflow"));
     }
 
     #[test]
@@ -132,5 +433,135 @@ mod tests {
         });
         let bw = pc.effective_bw(4096, 450.0);
         assert!((bw - 13.27e9 * 0.5).abs() < 1e6);
+    }
+
+    fn req(port: usize, beats: u64) -> PcRequest {
+        PcRequest {
+            port,
+            pe: 0,
+            kind: ReadKind::Edges,
+            beats,
+            follow_up_bytes: 0,
+            extra_latency: 0,
+        }
+    }
+
+    #[test]
+    fn full_queue_backpressures_without_dropping() {
+        // Capacity 2, long latency so nothing is admitted past the
+        // in-flight window of 1 and the queue genuinely fills.
+        let mut q = PcQueue::new(0, 2, 1, 1000);
+        assert!(q.try_push(req(0, 4)).is_ok());
+        // One tick admits the head into flight, freeing a queue slot.
+        assert!(q.tick(1).is_none());
+        assert!(q.try_push(req(1, 4)).is_ok());
+        assert!(q.try_push(req(2, 4)).is_ok());
+        // Queue now holds 2 with 1 in flight: the next push must
+        // back-pressure, not drop.
+        let err = q.try_push(req(3, 4));
+        assert_eq!(
+            err,
+            Err(HbmError::QueueFull { pc: 0, capacity: 2 })
+        );
+        assert_eq!(q.queue_depth(), 2);
+        assert_eq!(q.stats.stall_cycles, 1);
+        // Every accepted request is eventually served in full.
+        let mut beats = 0u64;
+        for now in 2..5000 {
+            if q.tick(now).is_some() {
+                beats += 1;
+            }
+            if q.idle() {
+                break;
+            }
+        }
+        assert!(q.idle());
+        assert_eq!(beats, 12, "3 accepted requests x 4 beats each");
+    }
+
+    #[test]
+    fn one_beat_per_cycle_and_latency() {
+        let mut q = PcQueue::new(0, 64, 64, 8);
+        assert!(q.try_push(req(0, 3)).is_ok());
+        let mut first = None;
+        let mut beats = 0;
+        for now in 1..100u64 {
+            if q.tick(now).is_some() {
+                first.get_or_insert(now);
+                beats += 1;
+            }
+            if q.idle() {
+                break;
+            }
+        }
+        // Admitted at tick 1, ready at 1 + 8.
+        assert_eq!(first, Some(9));
+        assert_eq!(beats, 3);
+        assert_eq!(q.stats.beats, 3);
+        assert_eq!(q.stats.busy_cycles, 3);
+    }
+
+    #[test]
+    fn crossing_latency_delays_readiness() {
+        let mut local = PcQueue::new(0, 8, 8, 8);
+        let mut remote = PcQueue::new(1, 8, 8, 8);
+        assert!(local.try_push(req(0, 1)).is_ok());
+        let mut far = req(0, 1);
+        far.extra_latency = 16;
+        assert!(remote.try_push(far).is_ok());
+        let mut t_local = None;
+        let mut t_remote = None;
+        for now in 1..100u64 {
+            if local.tick(now).is_some() {
+                t_local.get_or_insert(now);
+            }
+            if remote.tick(now).is_some() {
+                t_remote.get_or_insert(now);
+            }
+        }
+        assert_eq!(t_local, Some(9));
+        assert_eq!(t_remote, Some(25), "lateral crossing adds 16 cycles");
+    }
+
+    #[test]
+    fn queue_depth_stats_are_sampled() {
+        let mut q = PcQueue::new(2, 8, 1, 1000);
+        for p in 0..4 {
+            assert!(q.try_push(req(p, 1)).is_ok());
+        }
+        q.tick(1); // admits one, samples depth 4 before admission
+        assert_eq!(q.stats.max_queue_depth, 4);
+        assert!(q.stats.avg_queue_depth() > 0.0);
+        assert_eq!(q.stats.pc, 2);
+    }
+
+    #[test]
+    fn merge_accumulates_windows() {
+        let mut acc = Vec::new();
+        let a = PcStats {
+            pc: 0,
+            beats: 5,
+            busy_cycles: 5,
+            cycles: 10,
+            queue_depth_sum: 7,
+            max_queue_depth: 3,
+            stall_cycles: 1,
+        };
+        let b = PcStats {
+            pc: 0,
+            beats: 3,
+            busy_cycles: 3,
+            cycles: 6,
+            queue_depth_sum: 2,
+            max_queue_depth: 5,
+            stall_cycles: 0,
+        };
+        merge_pc_stats(&mut acc, std::slice::from_ref(&a));
+        merge_pc_stats(&mut acc, std::slice::from_ref(&b));
+        assert_eq!(acc.len(), 1);
+        assert_eq!(acc[0].beats, 8);
+        assert_eq!(acc[0].cycles, 16);
+        assert_eq!(acc[0].max_queue_depth, 5);
+        assert!((acc[0].utilization() - 0.5).abs() < 1e-12);
     }
 }

@@ -1,0 +1,280 @@
+//! The shared, contended HBM subsystem the cycle simulator issues into.
+//!
+//! Before this module, each PG owned a private reader and PC count was a
+//! pure bandwidth multiplier — PC-count sweeps could not reproduce the
+//! paper's Fig-10-style scaling-then-saturation shape. Here the PCs are
+//! one shared resource:
+//!
+//! * every PG (AXI port) holds a software-side pending list (the P1
+//!   fetch list) and issues **at most one request per cycle** into the
+//!   bounded [`PcQueue`] of the PC the [`AddressMap`] assigns it;
+//! * a full PC queue **back-pressures** the port (the request stays
+//!   pending and retries next cycle — never dropped);
+//! * each PC admits queued requests into its bounded in-flight window
+//!   and streams **at most one data beat per cycle** — when several PGs
+//!   fold onto one PC, that single beat is what they contend for;
+//! * a request whose port sits outside the serving PC's mini-switch
+//!   group pays [`SwitchTiming`] lateral-crossing latency on top of the
+//!   HBM base latency;
+//! * offset reads spawn their edge fetch on completion (the paper's
+//!   §IV-D two-phase access pattern), re-arbitrating through the same
+//!   bounded queues.
+//!
+//! Per-PC utilization, queue depth, and stall counts come back as
+//! [`PcStats`] for the experiment reports.
+
+use super::axi::{AxiConfig, ReadKind};
+use super::map::AddressMap;
+use super::pc::{PcBeat, PcQueue, PcRequest, PcStats};
+use super::switch::SwitchTiming;
+use std::collections::VecDeque;
+
+/// Knobs of the shared subsystem (see [`crate::sim::config::SimConfig`]
+/// for the experiment-facing defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct HbmSubsystemConfig {
+    /// AXI bus parameters shared by every port (width = Eq 1; the
+    /// outstanding field bounds each PC's in-flight window).
+    pub axi: AxiConfig,
+    /// HBM base read latency in core cycles.
+    pub latency_cycles: u64,
+    /// Lateral switch-crossing timing.
+    pub switch: SwitchTiming,
+    /// Per-PC request-queue capacity (back-pressure bound).
+    pub queue_capacity: usize,
+}
+
+/// The shared HBM subsystem: `num_pcs` contended [`PcQueue`]s behind an
+/// [`AddressMap`], fed by per-port pending lists.
+pub struct HbmSubsystem {
+    map: AddressMap,
+    axi: AxiConfig,
+    /// Per-port crossing latency (fixed per port: a PG's whole shard
+    /// lives on one PC).
+    extra_latency: Vec<u64>,
+    pcs: Vec<PcQueue>,
+    pending: Vec<VecDeque<PcRequest>>,
+    now: u64,
+}
+
+impl HbmSubsystem {
+    /// New subsystem over `map` (one pending list per mapped port).
+    pub fn new(map: AddressMap, cfg: HbmSubsystemConfig) -> Self {
+        let num_ports = map.num_ports();
+        let extra_latency: Vec<u64> = (0..num_ports)
+            .map(|pg| {
+                cfg.switch
+                    .crossing_cycles(map.home_slot(pg), map.pc_slot(map.pc_of_pg(pg)))
+            })
+            .collect();
+        let pcs = (0..map.num_pcs)
+            .map(|pc| {
+                PcQueue::new(
+                    pc,
+                    cfg.queue_capacity,
+                    cfg.axi.outstanding,
+                    cfg.latency_cycles,
+                )
+            })
+            .collect();
+        Self {
+            map,
+            axi: cfg.axi,
+            extra_latency,
+            pcs,
+            pending: vec![VecDeque::new(); num_ports],
+            now: 0,
+        }
+    }
+
+    /// Lateral-crossing latency charged to `port`'s requests.
+    pub fn port_crossing_latency(&self, port: usize) -> u64 {
+        self.extra_latency[port]
+    }
+
+    /// Enqueue a neighbor-list request from `port` for local PE `pe`:
+    /// an offset fetch (one beat) whose completion spawns the edge
+    /// fetch of `list_bytes`.
+    pub fn request_list(&mut self, port: usize, pe: usize, list_bytes: u64) {
+        self.pending[port].push_back(PcRequest {
+            port,
+            pe,
+            kind: ReadKind::Offset,
+            beats: 1, // paper: offset read = one DW
+            follow_up_bytes: list_bytes,
+            extra_latency: self.extra_latency[port],
+        });
+    }
+
+    /// Advance one cycle: each port issues at most one pending request
+    /// into its PC's bounded queue (stalling on back-pressure), each PC
+    /// streams at most one beat, and completed offset reads spawn their
+    /// edge fetches. Returns this cycle's beats (at most one per PC).
+    pub fn tick(&mut self) -> Vec<PcBeat> {
+        self.now += 1;
+        for (port, pending) in self.pending.iter_mut().enumerate() {
+            let Some(&req) = pending.front() else {
+                continue;
+            };
+            let pc = self.map.pc_of_pg(port);
+            // On back-pressure (QueueFull) the request stays pending
+            // and retries next cycle; the queue records the stall.
+            if self.pcs[pc].try_push(req).is_ok() {
+                pending.pop_front();
+            }
+        }
+        let mut beats = Vec::new();
+        for pc in self.pcs.iter_mut() {
+            if let Some(beat) = pc.tick(self.now) {
+                beats.push(beat);
+            }
+        }
+        for b in &beats {
+            if b.kind == ReadKind::Offset && b.follow_up_bytes > 0 {
+                let n_beats = self.axi.beats(b.follow_up_bytes).max(1);
+                self.pending[b.port].push_back(PcRequest {
+                    port: b.port,
+                    pe: b.pe,
+                    kind: ReadKind::Edges,
+                    beats: n_beats,
+                    follow_up_bytes: 0,
+                    extra_latency: self.extra_latency[b.port],
+                });
+            }
+        }
+        beats
+    }
+
+    /// True when no work remains anywhere: pending lists, PC queues,
+    /// and in-flight windows all drained.
+    pub fn idle(&self) -> bool {
+        self.pending.iter().all(VecDeque::is_empty) && self.pcs.iter().all(PcQueue::idle)
+    }
+
+    /// Snapshot of the per-PC service statistics.
+    pub fn stats(&self) -> Vec<PcStats> {
+        self.pcs.iter().map(|pc| pc.stats.clone()).collect()
+    }
+
+    /// Back-pressure stalls summed over the PCs.
+    pub fn total_stalls(&self) -> u64 {
+        self.pcs.iter().map(|pc| pc.stats.stall_cycles).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Partitioning;
+
+    fn cfg(outstanding: usize, latency: u64, queue: usize) -> HbmSubsystemConfig {
+        HbmSubsystemConfig {
+            axi: AxiConfig {
+                data_width: 16,
+                max_burst: 64,
+                outstanding,
+            },
+            latency_cycles: latency,
+            switch: SwitchTiming { hop_cycles: 8 },
+            queue_capacity: queue,
+        }
+    }
+
+    fn drain(h: &mut HbmSubsystem, limit: u64) -> (u64, u64, u64) {
+        let (mut offsets, mut edges, mut cycles) = (0u64, 0u64, 0u64);
+        while !h.idle() && cycles < limit {
+            cycles += 1;
+            for b in h.tick() {
+                match b.kind {
+                    ReadKind::Offset => offsets += 1,
+                    ReadKind::Edges => edges += 1,
+                }
+            }
+        }
+        (offsets, edges, cycles)
+    }
+
+    #[test]
+    fn two_phase_offset_then_edges() {
+        let map = AddressMap::partitioned(Partitioning::new(4, 4), 4);
+        let mut h = HbmSubsystem::new(map, cfg(8, 8, 16));
+        h.request_list(0, 0, 64); // 64 B = 4 edge beats at DW 16
+        let (offsets, edges, _) = drain(&mut h, 1000);
+        assert_eq!(offsets, 1);
+        assert_eq!(edges, 4);
+        assert!(h.idle());
+    }
+
+    #[test]
+    fn private_pcs_serve_ports_independently() {
+        // 4 ports, 4 PCs: aggregate beat rate is one per PC per cycle,
+        // so 4 equal loads finish in ~the time of one.
+        let map = AddressMap::partitioned(Partitioning::new(4, 4), 4);
+        let mut h = HbmSubsystem::new(map, cfg(64, 8, 64));
+        for port in 0..4 {
+            h.request_list(port, 0, 160);
+        }
+        let (offsets, edges, cycles) = drain(&mut h, 10_000);
+        assert_eq!(offsets, 4);
+        assert_eq!(edges, 4 * 10);
+        // 1 offset + 10 edge beats per port, pipelined after ~2
+        // latency round trips.
+        assert!(cycles < 60, "{cycles}");
+    }
+
+    #[test]
+    fn shared_pc_serializes_contending_ports() {
+        // Same 4-port load folded onto ONE PC: the single
+        // beat-per-cycle output serializes the ports.
+        let map = AddressMap::partitioned(Partitioning::new(4, 4), 1);
+        let mut h = HbmSubsystem::new(map, cfg(64, 8, 64));
+        for port in 0..4 {
+            h.request_list(port, 0, 1600);
+        }
+        let (offsets, edges, cycles) = drain(&mut h, 10_000);
+        assert_eq!(offsets, 4);
+        assert_eq!(edges, 400);
+        // 404 beats through one PC: the single beat-per-cycle output is
+        // the floor, vs 4 beats per cycle aggregate with private PCs.
+        assert!(cycles >= 404, "{cycles}");
+        let stats = h.stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].beats, 404);
+        assert!(stats[0].utilization() > 0.5, "{}", stats[0].utilization());
+    }
+
+    #[test]
+    fn crossing_ports_pay_lateral_latency() {
+        // 8 PGs folded onto 2 PCs: PGs whose home slot is outside the
+        // serving PC's mini-switch group get a non-zero surcharge.
+        let map = AddressMap::partitioned(Partitioning::new(8, 8), 2);
+        let h = HbmSubsystem::new(map, cfg(8, 8, 16));
+        assert_eq!(h.port_crossing_latency(0), 0, "PG0 is local to PC0");
+        assert!(
+            h.port_crossing_latency(3) > 0,
+            "PG3 (slot 12) must cross to PC0 (slot 0)"
+        );
+    }
+
+    #[test]
+    fn bounded_queue_backpressures_issue() {
+        // Tiny queue + long latency: ports stall rather than overrun.
+        let map = AddressMap::partitioned(Partitioning::new(4, 4), 1);
+        let mut h = HbmSubsystem::new(map, cfg(1, 500, 2));
+        for port in 0..4 {
+            for _ in 0..4 {
+                h.request_list(port, 0, 16);
+            }
+        }
+        for _ in 0..40 {
+            h.tick();
+        }
+        assert!(h.total_stalls() > 0, "full queue must back-pressure");
+        // Nothing was dropped: everything still drains eventually.
+        let (offsets, edges, _) = drain(&mut h, 100_000);
+        let stats = h.stats();
+        assert_eq!(stats[0].stall_cycles, h.total_stalls());
+        assert_eq!(offsets + edges, 32, "16 lists x (1 offset + 1 edge beat)");
+        assert!(h.idle());
+    }
+}

@@ -12,6 +12,15 @@
 //! This model only has to be right where the paper uses it: the Fig 11
 //! baseline (unpartitioned placement ⇒ global crossing) versus ScalaBFS
 //! (locality ⇒ k=0).
+//!
+//! Two faces of the same switch: [`SwitchModel`] is the *throughput*
+//! derate the analytic simulator applies, [`SwitchTiming`] is the
+//! per-request *latency* the cycle simulator's shared
+//! [`super::subsystem::HbmSubsystem`] charges when a PG's AXI port
+//! reads a PC outside its own mini-switch group (the lateral-bus
+//! traversal of [`super::miniswitch::MiniSwitchNetwork`]).
+
+use super::miniswitch::MiniSwitchNetwork;
 
 /// Crossing-penalty model of the U280's mini-switch network.
 #[derive(Clone, Copy, Debug)]
@@ -58,6 +67,34 @@ impl SwitchModel {
     }
 }
 
+/// Latency face of the switch network: the cycle cost a request pays to
+/// traverse the lateral bus between mini-switches. Switch-local accesses
+/// (same 4-port group) pay nothing — the whole point of the ScalaBFS
+/// placement.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchTiming {
+    /// Extra cycles charged per lateral mini-switch hop.
+    pub hop_cycles: u64,
+}
+
+impl Default for SwitchTiming {
+    fn default() -> Self {
+        // One registered bus stage per mini-switch boundary; 8 cycles is
+        // the order Shuhai measures for a neighboring-stack detour.
+        Self { hop_cycles: 8 }
+    }
+}
+
+impl SwitchTiming {
+    /// Lateral-crossing latency (cycles) for an access issued from AXI
+    /// slot `from_slot` to the PC at slot `to_slot` (slots 0..32 on the
+    /// U280). Zero when both live under the same mini-switch.
+    pub fn crossing_cycles(&self, from_slot: usize, to_slot: usize) -> u64 {
+        let net = MiniSwitchNetwork::default();
+        self.hop_cycles * net.hops(from_slot, to_slot) as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +125,33 @@ mod tests {
         let m = SwitchModel::default();
         assert!((m.derate(1) - 1.0).abs() < 1e-12);
         assert!(m.derate(32) < 0.05);
+    }
+
+    #[test]
+    fn local_access_pays_no_crossing_latency() {
+        let t = SwitchTiming::default();
+        // Slots 0..4 share mini-switch 0: all pairs are free.
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(t.crossing_cycles(a, b), 0, "{a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossing_latency_scales_with_hop_distance() {
+        let t = SwitchTiming { hop_cycles: 8 };
+        // One group over: one hop.
+        assert_eq!(t.crossing_cycles(0, 4), 8);
+        // Far corner: 7 lateral hops, symmetric.
+        assert_eq!(t.crossing_cycles(0, 31), 56);
+        assert_eq!(t.crossing_cycles(31, 0), 56);
+        // Monotone in distance.
+        let mut prev = 0;
+        for pc in [3usize, 4, 8, 16, 31] {
+            let c = t.crossing_cycles(0, pc);
+            assert!(c >= prev, "slot {pc}: {c} < {prev}");
+            prev = c;
+        }
     }
 }

@@ -28,7 +28,10 @@
 //!   [`bfs::batch::BatchDriver`].
 //! * [`sched`] — push/pull mode policies (Beamer hybrid et al.) and the
 //!   paired frontier-representation policy ([`sched::ReprPolicy`]).
-//! * [`hbm`] / [`pe`] / [`dispatcher`] — the U280 component models.
+//! * [`hbm`] / [`pe`] / [`dispatcher`] — the U280 component models;
+//!   [`hbm`] includes the shared, contended pseudo-channel subsystem
+//!   (bounded per-PC queues, switch-crossing latency, partition-aware
+//!   address map) the cycle simulator issues into.
 //! * [`sim`] — the analytic throughput simulator (+
 //!   [`sim::throughput::ThroughputEngine`]) and the cycle-accurate
 //!   simulator, both `BfsEngine`s.

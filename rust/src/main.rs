@@ -29,7 +29,11 @@ Experiment commands (regenerate paper tables/figures):
   straggler       degraded-PC straggler study (extension)
   projection      future-card scaling projection (paper §VII)
   engines         every BfsEngine on one workload, levels cross-checked
-  sweep           config grid sweep --dataset=NAME [--engines=bitmap,cycle,...]
+  sweep           config grid sweep --dataset=NAME [--engines=bitmap,cycle,...] [--pcs=1,4,16,32]
+  pcsweep         GTEPS-vs-PC curve on the shared HBM contention model
+                  --dataset=NAME [--pcs=8,16,32 --engine=cycle --pes-per-pc=1 --json=FILE]
+                  (--pgs=N pins the PG count and folds it onto each PC count:
+                   the contention-saturated axis)
 
 System commands:
   run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
@@ -155,18 +159,26 @@ fn main() -> anyhow::Result<()> {
             if let Some(engines) = kv.get("engines") {
                 spec.engines = engines.split(',').map(str::to_string).collect();
             }
+            if let Some(pcs) = kv.get("pcs") {
+                spec.pcs = pcs.split(',').filter_map(|s| s.parse().ok()).collect();
+                anyhow::ensure!(
+                    !spec.pcs.is_empty(),
+                    "--pcs={pcs} parsed to an empty list (expected e.g. --pcs=1,4,16,32)"
+                );
+            }
             let points = scalabfs::coordinator::sweep::sweep(&graph, &spec)?;
             println!("sweep on {} ({} points):", graph.name, points.len());
             for p in &points {
                 println!(
-                    "  [{}] {} PC x {} PE [{}] {:?}: {:.2} GTEPS, {:.1} GB/s",
+                    "  [{}] {} PC x {} PE [{}] {:?}: {:.2} GTEPS, {:.1} GB/s, PC util {:.0}%",
                     p.engine,
                     p.pcs,
                     p.pes,
                     p.policy,
                     p.placement,
                     p.gteps,
-                    p.aggregate_bw / 1e9
+                    p.aggregate_bw / 1e9,
+                    p.pc_util * 100.0
                 );
             }
             if let Some(b) = scalabfs::coordinator::sweep::best(&points) {
@@ -174,6 +186,39 @@ fn main() -> anyhow::Result<()> {
                     "best: [{}] {} PC x {} PE [{}] = {:.2} GTEPS",
                     b.engine, b.pcs, b.pes, b.policy, b.gteps
                 );
+            }
+        }
+        "pcsweep" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-16".into());
+            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let engine = kv.get("engine").cloned().unwrap_or_else(|| "cycle".into());
+            let pcs: Vec<usize> = kv
+                .get("pcs")
+                .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+                .unwrap_or_else(|| vec![8, 16, 32]);
+            anyhow::ensure!(!pcs.is_empty(), "--pcs parsed to an empty list");
+            let curve = if let Some(pgs) = kv.get("pgs").and_then(|v| v.parse().ok()) {
+                scalabfs::coordinator::sweep::pc_contention(
+                    &graph, &engine, pgs, &pcs, opts.seed,
+                )?
+            } else {
+                scalabfs::coordinator::sweep::pc_scaling(
+                    &graph,
+                    &engine,
+                    &pcs,
+                    get_usize("pes-per-pc", 1),
+                    opts.seed,
+                )?
+            };
+            print!("{}", curve.render());
+            if let Some(path) = kv.get("json") {
+                let json = scalabfs::coordinator::report::pc_scaling_json(&curve);
+                scalabfs::coordinator::report::write_json(std::path::Path::new(path), &json)?;
+                println!("wrote {path}");
             }
         }
         "datasets" => println!("{}", experiments::datasets_table().render()),

@@ -61,6 +61,20 @@ impl PerfModel {
         self.perf_pg(n_pe, len_nl) * n_pc as f64
     }
 
+    /// Shared-PC extension of Eq 6: `n_pg` PGs served by only `n_pc`
+    /// in-service channels. Eq 6 assumes a private PC per PG; when PGs
+    /// fold onto fewer PCs, the aggregate *channel* ceiling
+    /// (`n_pc · BW_MAX`, split by the Eq-3 neighbor-list fraction)
+    /// caps the demand side — the analytic twin of the cycle
+    /// simulator's queue contention, and exactly Eq 6 again whenever
+    /// `n_pc >= n_pg`.
+    pub fn perf_shared(&self, n_pe: u32, len_nl: f64, n_pc: u32, n_pg: u32) -> f64 {
+        let demand_bound = self.perf(n_pe, len_nl, n_pg);
+        let channel_bound =
+            n_pc as f64 * self.bw_max * self.p_nl(n_pe, len_nl) / self.sv_bytes;
+        demand_bound.min(channel_bound)
+    }
+
     /// Smallest PE count at which the PC saturates (`2·N_pe·S_v·F >=
     /// BW_MAX`) — beyond this, Eq 5's second branch applies and adding
     /// PEs *hurts* (Fig 7's break-point; 16 PEs with the default
@@ -160,6 +174,27 @@ mod tests {
     fn p_nl_decreases_with_wider_bus() {
         let m = PerfModel::default();
         assert!(m.p_nl(32, 16.0) < m.p_nl(2, 16.0));
+    }
+
+    #[test]
+    fn shared_pcs_reduce_to_eq6_or_saturate() {
+        let m = PerfModel::default();
+        // Private PCs: exactly Eq 6.
+        assert_eq!(m.perf_shared(4, 16.0, 8, 8), m.perf(4, 16.0, 8));
+        assert_eq!(m.perf_shared(4, 16.0, 32, 8), m.perf(4, 16.0, 8));
+        // Folding 32 PGs onto 1 PC: the channel ceiling binds and the
+        // curve saturates well below linear.
+        let folded = m.perf_shared(4, 16.0, 1, 32);
+        assert!(folded < m.perf(4, 16.0, 32));
+        let ceiling = m.bw_max * m.p_nl(4, 16.0) / m.sv_bytes;
+        assert!((folded - ceiling).abs() < 1.0, "{folded} vs {ceiling}");
+        // Monotone in PCs at fixed PGs.
+        let mut prev = 0.0;
+        for pcs in [1u32, 2, 4, 8, 16, 32] {
+            let p = m.perf_shared(4, 16.0, pcs, 32);
+            assert!(p >= prev);
+            prev = p;
+        }
     }
 
     #[test]

@@ -96,6 +96,26 @@ pub fn project(card: &Card, len_nl: f64, util_ceiling: f64) -> Projection {
     }
 }
 
+/// Analytic GTEPS when `num_pgs` PGs share only `num_pcs` in-service
+/// channels of `card` — the Section-V twin of the simulator's
+/// `pc_contention` sweep (see
+/// [`PerfModel::perf_shared`]): exactly Eq 6 with
+/// private channels, channel-ceiling-bound when folded.
+pub fn contended_gteps(
+    card: &Card,
+    len_nl: f64,
+    pes_per_pg: u32,
+    num_pgs: u32,
+    num_pcs: u32,
+) -> f64 {
+    let perf = PerfModel {
+        sv_bytes: 4.0,
+        f_hz: card.f_hz,
+        bw_max: card.pc_bw,
+    };
+    perf.perf_shared(pes_per_pg, len_nl, num_pcs, num_pgs) / 1e9
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +142,18 @@ mod tests {
         let sparse = project(&Card::u280(), 8.0, 0.8);
         let dense = project(&Card::u280(), 64.0, 0.8);
         assert!(dense.gteps > sparse.gteps);
+    }
+
+    #[test]
+    fn contended_projection_saturates_below_linear() {
+        // 32 PGs at 2 PEs each demand ~46 GB/s; 2 in-service PCs supply
+        // ~26.5, one supplies ~13.3 — the channel ceiling binds.
+        let card = Card::u280();
+        let private = contended_gteps(&card, 32.0, 2, 32, 32);
+        let two = contended_gteps(&card, 32.0, 2, 32, 2);
+        let one = contended_gteps(&card, 32.0, 2, 32, 1);
+        assert!(two < private, "{two} !< {private}");
+        assert!(one < private * 0.5, "{one} vs {private}");
+        assert!(one < two);
     }
 }

@@ -276,9 +276,7 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
         }
         StepStats {
             newly_visited: num_new,
-            traffic: None,
-            cycles: 0,
-            backpressure: 0,
+            ..StepStats::default()
         }
     }
 

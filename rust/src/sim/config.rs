@@ -2,9 +2,11 @@
 //! every knob the experiments sweep.
 
 use crate::dispatcher::{Dispatcher, FullCrossbar, MultiLayerCrossbar};
-use crate::graph::Partitioning;
+use crate::graph::partition::pg_footprint_bytes;
+use crate::graph::{Graph, Partitioning};
+use crate::hbm::map::AddressMap;
 use crate::hbm::pc::HbmConfig;
-use crate::hbm::switch::SwitchModel;
+use crate::hbm::switch::{SwitchModel, SwitchTiming};
 use crate::pe::pe::PeConfig;
 
 /// Which dispatcher design the build uses.
@@ -68,8 +70,19 @@ pub struct SimConfig {
     pub sv_bytes: u64,
     /// Per-PC HBM parameters.
     pub hbm: HbmConfig,
+    /// Pseudo channels in service. Equal to `part.num_pgs` in the
+    /// paper's configs (one private PC per PG); set it *below* the PG
+    /// count to study contention — multiple PGs then share each PC's
+    /// single beat-per-cycle output through the bounded queues of
+    /// [`crate::hbm::HbmSubsystem`].
+    pub num_hbm_pcs: usize,
     /// Switch-network crossing model.
     pub switch: SwitchModel,
+    /// Lateral switch-crossing latency charged by the cycle simulator.
+    pub switch_timing: SwitchTiming,
+    /// Per-PC request-queue capacity (cycle simulator back-pressure
+    /// bound).
+    pub pc_queue_capacity: usize,
     /// PE stage parameters.
     pub pe: PeConfig,
     /// Dispatcher design.
@@ -92,7 +105,10 @@ impl SimConfig {
             f_mhz: 90.0,
             sv_bytes: 4,
             hbm: HbmConfig::default(),
+            num_hbm_pcs: num_pcs,
             switch: SwitchModel::default(),
+            switch_timing: SwitchTiming::default(),
+            pc_queue_capacity: 64,
             pe: PeConfig::default(),
             dispatcher: DispatcherKind::paper_default(num_pes),
             placement: Placement::Partitioned,
@@ -104,6 +120,36 @@ impl SimConfig {
     /// The headline 32-PC / 64-PE configuration.
     pub fn u280_full() -> Self {
         Self::u280(32, 64)
+    }
+
+    /// Same topology, but only `n` HBM PCs in service — the contention
+    /// study knob (PGs fold onto PCs per
+    /// [`Partitioning::pc_of_pg`]).
+    pub fn with_hbm_pcs(mut self, n: usize) -> Self {
+        assert!(n >= 1 && n.is_power_of_two());
+        self.num_hbm_pcs = n;
+        self
+    }
+
+    /// Build the PG-shard → PC address map this config implies:
+    /// partition-aware placement normally, capacity-packed from PC0 for
+    /// the Fig 11 [`Placement::Unpartitioned`] baseline (which needs
+    /// the graph's shard footprints).
+    pub fn address_map(&self, graph: &Graph) -> crate::Result<AddressMap> {
+        match self.placement {
+            Placement::Partitioned => {
+                Ok(AddressMap::partitioned(self.part, self.num_hbm_pcs))
+            }
+            Placement::Unpartitioned => {
+                let fp = pg_footprint_bytes(graph, self.part, self.sv_bytes as usize);
+                Ok(AddressMap::packed(
+                    self.part,
+                    &fp,
+                    self.hbm,
+                    self.num_hbm_pcs,
+                )?)
+            }
+        }
     }
 
     /// AXI data width per Eq 1.
@@ -159,5 +205,30 @@ mod tests {
         let c = SimConfig::u280_full();
         let s = c.cycles_to_seconds(90_000_000);
         assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn address_map_follows_placement() {
+        use crate::graph::generators;
+        let g = generators::rmat_graph500(8, 4, 9);
+        let cfg = SimConfig::u280(4, 8);
+        assert_eq!(cfg.num_hbm_pcs, 4);
+        let m = cfg.address_map(&g).unwrap();
+        assert_eq!(m.num_pcs, 4);
+        for pg in 0..4 {
+            assert_eq!(m.pc_of_pg(pg), pg, "partitioned = private PCs");
+        }
+        // Contention knob folds PGs onto fewer PCs.
+        let folded = SimConfig::u280(4, 8).with_hbm_pcs(2).address_map(&g).unwrap();
+        assert_eq!(folded.num_pcs, 2);
+        assert_eq!(folded.pc_of_pg(3), 1);
+        // The unpartitioned baseline packs everything into PC0 for a
+        // graph this small.
+        let mut base = SimConfig::u280(4, 8);
+        base.placement = Placement::Unpartitioned;
+        let packed = base.address_map(&g).unwrap();
+        for pg in 0..4 {
+            assert_eq!(packed.pc_of_pg(pg), 0);
+        }
     }
 }

@@ -1,11 +1,17 @@
 //! Cycle-stepped, FIFO-accurate simulator.
 //!
-//! Models, cycle by cycle: per-PG HBM readers (outstanding requests,
-//! latency, one DW beat per cycle), the vertex dispatcher's output-port
+//! Models, cycle by cycle: the **shared** HBM subsystem (bounded per-PC
+//! request queues, bounded in-flight windows, one data beat per PC per
+//! cycle, lateral switch-crossing latency — see
+//! [`crate::hbm::HbmSubsystem`]), the vertex dispatcher's output-port
 //! serialization with bounded FIFOs and hop latency, and PEs consuming
-//! messages at the double-pump rate. It re-derives the per-iteration
-//! work from the same Algorithm-2 semantics as the functional engine,
-//! so its visited/level results are cross-checked against it in tests.
+//! messages at the double-pump rate. PC count is a genuinely contended
+//! resource: with fewer PCs than PGs (`SimConfig::with_hbm_pcs`) or the
+//! unpartitioned Fig-11 placement, several PGs queue into one PC and
+//! its single beat-per-cycle output is what they fight over. It
+//! re-derives the per-iteration work from the same Algorithm-2
+//! semantics as the functional engine, so its visited/level results are
+//! cross-checked against it in tests.
 //!
 //! The engine implements [`BfsEngine`]: each [`step`](CycleSim::step)
 //! simulates one iteration over the shared [`SearchState`]; the
@@ -26,7 +32,9 @@ use crate::bfs::Mode;
 use crate::exec::{BfsEngine, SearchState, StepStats};
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::hbm::axi::{AxiConfig, ReadKind};
-use crate::hbm::reader::HbmReader;
+use crate::hbm::map::AddressMap;
+use crate::hbm::pc::PcStats;
+use crate::hbm::subsystem::{HbmSubsystem, HbmSubsystemConfig};
 use crate::sched::ModePolicy;
 use crate::Result;
 use rayon::prelude::*;
@@ -49,12 +57,15 @@ pub struct CycleResult {
     pub gteps: f64,
     /// Dispatcher backpressure events observed.
     pub backpressure: u64,
+    /// Per-PC utilization/queue statistics measured over the run.
+    pub pc_stats: Vec<PcStats>,
 }
 
 /// The cycle-stepped simulator.
 pub struct CycleSim<'g> {
     graph: &'g Graph,
     cfg: SimConfig,
+    map: AddressMap,
 }
 
 /// A routed message: neighbor `vid` (push) or parent check (pull, with
@@ -71,9 +82,22 @@ struct Msg {
 const SCAN_CHUNK_WORDS: usize = 4096;
 
 impl<'g> CycleSim<'g> {
-    /// New simulator for a graph + config.
+    /// New simulator for a graph + config. The HBM address map (which
+    /// PC serves each PG's shard) is fixed here; an unpartitioned
+    /// placement that does not fit the configured PCs panics — use
+    /// [`CycleSim::try_new`] (what [`crate::exec::make_engine`] goes
+    /// through) to propagate the typed
+    /// [`HbmError`](crate::hbm::HbmError) instead.
     pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
-        Self { graph, cfg }
+        Self::try_new(graph, cfg).expect("graph does not fit the configured HBM PCs")
+    }
+
+    /// Fallible constructor: surfaces the address map's
+    /// [`HbmError::CapacityExceeded`](crate::hbm::HbmError) when a
+    /// packed (unpartitioned) placement overflows the in-service PCs.
+    pub fn try_new(graph: &'g Graph, cfg: SimConfig) -> Result<Self> {
+        let map = cfg.address_map(graph)?;
+        Ok(Self { graph, cfg, map })
     }
 
     /// Run BFS from `root` cycle-accurately (fresh state; the shared
@@ -94,6 +118,7 @@ impl<'g> CycleSim<'g> {
                 0.0
             },
             backpressure: run.backpressure,
+            pc_stats: run.pc_stats,
         }
     }
 
@@ -185,6 +210,7 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
     fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
         self.graph = graph;
         self.cfg.part = part;
+        self.map = self.cfg.address_map(graph)?;
         Ok(())
     }
 
@@ -213,22 +239,24 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
         let fetches = self.build_fetch_lists(state, mode, verts_per_beat);
 
         // ---- Cycle loop for the iteration. ----
-        let mut readers: Vec<HbmReader> = (0..npgs)
-            .map(|_| {
-                // Outstanding depth sized to hide the HBM latency at
-                // one beat per cycle (Little's law: >= latency
-                // requests in flight; Shuhai's measurement rig uses
-                // an outstanding buffer of 256).
-                HbmReader::new(
-                    AxiConfig {
-                        data_width: dw,
-                        max_burst: 64,
-                        outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
-                    },
-                    self.cfg.hbm.latency_cycles,
-                )
-            })
-            .collect();
+        // One *shared* HBM subsystem: per-PC bounded queues behind the
+        // partition-aware address map. Outstanding depth sized to hide
+        // the HBM latency at one beat per cycle (Little's law: >=
+        // latency requests in flight; Shuhai's measurement rig uses an
+        // outstanding buffer of 256).
+        let mut hbm = HbmSubsystem::new(
+            self.map.clone(),
+            HbmSubsystemConfig {
+                axi: AxiConfig {
+                    data_width: dw,
+                    max_burst: 64,
+                    outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
+                },
+                latency_cycles: self.cfg.hbm.latency_cycles,
+                switch: self.cfg.switch_timing,
+                queue_capacity: self.cfg.pc_queue_capacity,
+            },
+        );
         // Per-PG: stream cursors of lists currently being beaten out.
         let mut list_queue: Vec<VecDeque<(VertexId, usize)>> = vec![VecDeque::new(); npgs];
         // Dispatcher input staging and per-PE output FIFOs.
@@ -251,74 +279,75 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
             interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64)
         };
 
-        // Seed the readers.
+        // Seed the per-port request lists.
         for (pg, pg_fetches) in fetches.iter().enumerate() {
             for &(v, fetch_len) in pg_fetches {
-                readers[pg].request_list(part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
+                hbm.request_list(pg, part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
                 list_queue[pg].push_back((v, fetch_len));
             }
         }
+
+        // Pops list_queue until a stream with entries to send is
+        // active (zero-fetch lists have no edge beats, so they must
+        // never occupy the stream slot).
+        let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
+                           stream_pos: &mut usize,
+                           queue: &mut VecDeque<(VertexId, usize)>| {
+            while stream_vert.is_none() {
+                let Some((v, fetch_len)) = queue.pop_front() else {
+                    break;
+                };
+                if fetch_len > 0 {
+                    *stream_vert = Some((v, fetch_len));
+                    *stream_pos = 0;
+                }
+            }
+        };
 
         let mut cycle = 0u64;
         let mut newly = 0u64;
         let mut pe_budget = vec![0u32; npes];
         loop {
             cycle += 1;
-            // HBM readers: one beat per PG per cycle.
-            for pg in 0..npgs {
-                // Pops list_queue until a stream with entries to send
-                // is active (zero-fetch lists have no edge beats, so
-                // they must never occupy the stream slot).
-                let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
-                                   stream_pos: &mut usize,
-                                   queue: &mut VecDeque<(VertexId, usize)>| {
-                    while stream_vert.is_none() {
-                        let Some((v, fetch_len)) = queue.pop_front() else {
-                            break;
-                        };
-                        if fetch_len > 0 {
-                            *stream_vert = Some((v, fetch_len));
-                            *stream_pos = 0;
-                        }
+            // Shared HBM subsystem: at most one beat per *PC* per
+            // cycle, routed back to the issuing PG's stream slot.
+            for beat in hbm.tick() {
+                let pg = beat.port;
+                match beat.kind {
+                    ReadKind::Offset => {
+                        // Offset beat: select the next list to stream.
+                        next_stream(
+                            &mut stream_vert[pg],
+                            &mut stream_pos[pg],
+                            &mut list_queue[pg],
+                        );
                     }
-                };
-                if let Some(beat) = readers[pg].tick() {
-                    match beat.kind {
-                        ReadKind::Offset => {
-                            // Offset beat: select the next list to stream.
-                            next_stream(
-                                &mut stream_vert[pg],
-                                &mut stream_pos[pg],
-                                &mut list_queue[pg],
-                            );
-                        }
-                        ReadKind::Edges => {
-                            next_stream(
-                                &mut stream_vert[pg],
-                                &mut stream_pos[pg],
-                                &mut list_queue[pg],
-                            );
-                            if let Some((v, fetch_len)) = stream_vert[pg] {
-                                let list = match mode {
-                                    Mode::Push => graph.out_neighbors(v),
-                                    Mode::Pull => graph.in_neighbors(v),
+                    ReadKind::Edges => {
+                        next_stream(
+                            &mut stream_vert[pg],
+                            &mut stream_pos[pg],
+                            &mut list_queue[pg],
+                        );
+                        if let Some((v, fetch_len)) = stream_vert[pg] {
+                            let list = match mode {
+                                Mode::Push => graph.out_neighbors(v),
+                                Mode::Pull => graph.in_neighbors(v),
+                            };
+                            let end = (stream_pos[pg] + verts_per_beat).min(fetch_len);
+                            for &u in &list[stream_pos[pg]..end] {
+                                let msg = match mode {
+                                    Mode::Push => Msg { vid: u, child: u },
+                                    Mode::Pull => Msg { vid: u, child: v },
                                 };
-                                let end = (stream_pos[pg] + verts_per_beat).min(fetch_len);
-                                for &u in &list[stream_pos[pg]..end] {
-                                    let msg = match mode {
-                                        Mode::Push => Msg { vid: u, child: u },
-                                        Mode::Pull => Msg { vid: u, child: v },
-                                    };
-                                    in_flight_msgs.push_back((
-                                        cycle + hops,
-                                        part.pe_of(msg.vid),
-                                        msg,
-                                    ));
-                                }
-                                stream_pos[pg] = end;
-                                if end >= fetch_len {
-                                    stream_vert[pg] = None;
-                                }
+                                in_flight_msgs.push_back((
+                                    cycle + hops,
+                                    part.pe_of(msg.vid),
+                                    msg,
+                                ));
+                            }
+                            stream_pos[pg] = end;
+                            if end >= fetch_len {
+                                stream_vert[pg] = None;
                             }
                         }
                     }
@@ -380,12 +409,12 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
             }
 
             // Termination: all pipelines drained.
-            let readers_idle = readers.iter().all(|r| r.idle());
+            let hbm_idle = hbm.idle();
             let streams_idle = stream_vert.iter().all(|s| s.is_none())
                 && list_queue.iter().all(|q| q.is_empty());
             let dispatch_idle = in_flight_msgs.is_empty();
             let pes_idle = pe_fifo.iter().all(|f| f.is_empty());
-            if readers_idle && streams_idle && dispatch_idle && pes_idle {
+            if hbm_idle && streams_idle && dispatch_idle && pes_idle {
                 break;
             }
             if cycle > 500_000_000 {
@@ -398,6 +427,7 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
             traffic: None,
             cycles: it_cycles,
             backpressure,
+            pc_stats: hbm.stats(),
         }
     }
 
@@ -445,6 +475,67 @@ mod tests {
             "8PC {} vs 1PC {}",
             fast.cycles,
             slow.cycles
+        );
+    }
+
+    #[test]
+    fn folded_pcs_contend_and_levels_stay_exact() {
+        // Same PG/PE topology, but all eight PGs share ONE PC: the
+        // shared beat-per-cycle output must cost cycles, and the
+        // functional result must not change at all.
+        let g = generators::rmat_graph500(9, 8, 31);
+        let root = reference::sample_roots(&g, 1, 31)[0];
+        let truth = reference::bfs(&g, root);
+        let free = CycleSim::new(&g, SimConfig::u280(8, 8)).run(root, &mut Fixed(Mode::Push));
+        let contended = CycleSim::new(&g, SimConfig::u280(8, 8).with_hbm_pcs(1))
+            .run(root, &mut Fixed(Mode::Push));
+        assert_eq!(free.levels, truth.levels);
+        assert_eq!(contended.levels, truth.levels);
+        assert!(
+            contended.cycles > free.cycles,
+            "1 shared PC {} !> 8 private PCs {}",
+            contended.cycles,
+            free.cycles
+        );
+        // The contended run concentrates all beats on PC 0.
+        assert_eq!(contended.pc_stats.len(), 1);
+        assert_eq!(free.pc_stats.len(), 8);
+        let total_beats: u64 = free.pc_stats.iter().map(|s| s.beats).sum();
+        assert_eq!(contended.pc_stats[0].beats, total_beats);
+        assert!(contended.pc_stats[0].utilization() > free.pc_stats[0].utilization());
+    }
+
+    #[test]
+    fn pc_stats_are_measured_and_sane() {
+        let g = generators::rmat_graph500(9, 8, 22);
+        let root = reference::sample_roots(&g, 1, 22)[0];
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
+        assert_eq!(res.pc_stats.len(), 4);
+        assert!(res.pc_stats.iter().any(|s| s.beats > 0));
+        for s in &res.pc_stats {
+            assert!(s.utilization() >= 0.0 && s.utilization() <= 1.0);
+            assert!(s.busy_cycles <= s.cycles);
+            assert_eq!(s.busy_cycles, s.beats);
+        }
+    }
+
+    #[test]
+    fn unpartitioned_placement_loses_in_the_cycle_sim() {
+        // Fig 11, cycle-accurate: packing every shard into PC0 funnels
+        // all eight PGs' traffic through one queue plus the lateral
+        // switch, and must cost real cycles.
+        let g = generators::rmat_graph500(9, 8, 17);
+        let root = reference::sample_roots(&g, 1, 17)[0];
+        let part = CycleSim::new(&g, SimConfig::u280(8, 8)).run(root, &mut Fixed(Mode::Push));
+        let mut base_cfg = SimConfig::u280(8, 8);
+        base_cfg.placement = crate::sim::config::Placement::Unpartitioned;
+        let base = CycleSim::new(&g, base_cfg).run(root, &mut Fixed(Mode::Push));
+        assert_eq!(part.levels, base.levels, "placement must not change results");
+        assert!(
+            base.cycles > part.cycles,
+            "baseline {} !> partitioned {}",
+            base.cycles,
+            part.cycles
         );
     }
 

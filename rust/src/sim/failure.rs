@@ -118,6 +118,7 @@ impl DegradedSim {
             traversed_edges: run.traversed_edges,
             gteps: run.traversed_edges as f64 / seconds.max(1e-30) / 1e9,
             aggregate_bw: bytes as f64 / seconds.max(1e-30),
+            pc_stats: Vec::new(),
         }
     }
 }

@@ -6,11 +6,14 @@
 //!   Scales to the full Table-I datasets.
 //!   [`throughput::ThroughputEngine`] packages it as a
 //!   [`crate::exec::BfsEngine`].
-//! * [`cycle`] — cycle-stepped, FIFO-accurate simulator of the HBM
-//!   readers, dispatcher and PEs, also a
-//!   [`crate::exec::BfsEngine`]. Used on small graphs (RMAT18-*) to
-//!   validate the analytic model and for dispatcher ablations.
-//! * [`config`] / [`results`] — shared configuration and result types.
+//! * [`cycle`] — cycle-stepped, FIFO-accurate simulator of the shared
+//!   HBM subsystem ([`crate::hbm::HbmSubsystem`]: bounded per-PC
+//!   queues, switch-crossing latency, a partition-aware address map),
+//!   dispatcher and PEs, also a [`crate::exec::BfsEngine`]. Used on
+//!   small graphs (RMAT18-*) to validate the analytic model and for
+//!   dispatcher/contention ablations.
+//! * [`config`] / [`results`] — shared configuration and result types,
+//!   including the per-PC utilization stats both simulators report.
 
 pub mod config;
 pub mod throughput;

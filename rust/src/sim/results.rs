@@ -1,8 +1,10 @@
-//! Simulation result types: per-iteration cycle breakdowns and run-level
+//! Simulation result types: per-iteration cycle breakdowns, run-level
 //! aggregates (GTEPS, achieved aggregate bandwidth — the quantities the
-//! paper's figures plot).
+//! paper's figures plot), and per-PC HBM service statistics
+//! ([`PcStats`], re-exported from [`crate::hbm`]).
 
 use crate::bfs::Mode;
+use crate::hbm::pc::PcStats;
 
 /// Which pipeline phase bounded an iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,12 +67,23 @@ pub struct SimResult {
     pub gteps: f64,
     /// Achieved aggregate HBM bandwidth (bytes moved / time).
     pub aggregate_bw: f64,
+    /// Per-PC utilization/queue-depth stats: measured by the cycle
+    /// engine's shared subsystem, derived from per-iteration traffic by
+    /// the analytic model (whose queue-depth fields stay 0).
+    pub pc_stats: Vec<PcStats>,
 }
 
 impl SimResult {
     /// Result for an engine that times itself (the cycle-accurate
-    /// simulator): total cycles with no per-phase breakdown.
-    pub fn from_cycles(graph: &str, total_cycles: u64, seconds: f64, traversed_edges: u64) -> Self {
+    /// simulator): total cycles with no per-phase breakdown, carrying
+    /// the engine's measured per-PC stats.
+    pub fn from_cycles(
+        graph: &str,
+        total_cycles: u64,
+        seconds: f64,
+        traversed_edges: u64,
+        pc_stats: Vec<PcStats>,
+    ) -> Self {
         Self {
             graph: graph.to_string(),
             iters: Vec::new(),
@@ -83,7 +96,34 @@ impl SimResult {
                 0.0
             },
             aggregate_bw: 0.0,
+            pc_stats,
         }
+    }
+
+    /// Mean per-PC utilization (0 when no PC stats were recorded).
+    pub fn avg_pc_utilization(&self) -> f64 {
+        if self.pc_stats.is_empty() {
+            return 0.0;
+        }
+        self.pc_stats.iter().map(PcStats::utilization).sum::<f64>()
+            / self.pc_stats.len() as f64
+    }
+
+    /// Busiest PC's utilization.
+    pub fn max_pc_utilization(&self) -> f64 {
+        self.pc_stats
+            .iter()
+            .map(PcStats::utilization)
+            .fold(0.0, f64::max)
+    }
+
+    /// Deepest request-queue backlog any PC saw (cycle engine only).
+    pub fn max_pc_queue_depth(&self) -> usize {
+        self.pc_stats
+            .iter()
+            .map(|s| s.max_queue_depth)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Total bytes moved.
@@ -107,8 +147,18 @@ impl SimResult {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let (m, p, d) = self.bottleneck_counts();
+        let pc = if self.pc_stats.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", PC util avg/max {:.0}%/{:.0}% (queue<= {})",
+                self.avg_pc_utilization() * 100.0,
+                self.max_pc_utilization() * 100.0,
+                self.max_pc_queue_depth()
+            )
+        };
         format!(
-            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}",
+            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}{}",
             self.graph,
             self.iters.len(),
             self.seconds * 1e3,
@@ -116,7 +166,8 @@ impl SimResult {
             self.aggregate_bw / 1e9,
             m,
             p,
-            d
+            d,
+            pc
         )
     }
 }
@@ -149,9 +200,39 @@ mod tests {
             traversed_edges: 1000,
             gteps: 1e-3,
             aggregate_bw: 3e5,
+            pc_stats: Vec::new(),
             };
         assert_eq!(r.total_bytes(), 300);
         assert_eq!(r.bottleneck_counts(), (2, 1, 0));
         assert!(r.summary().contains("GTEPS"));
+        assert_eq!(r.avg_pc_utilization(), 0.0);
+        assert_eq!(r.max_pc_queue_depth(), 0);
+    }
+
+    #[test]
+    fn pc_utilization_aggregates() {
+        let mk_pc = |pc: usize, busy: u64| PcStats {
+            pc,
+            beats: busy,
+            busy_cycles: busy,
+            cycles: 100,
+            queue_depth_sum: 10,
+            max_queue_depth: pc + 1,
+            stall_cycles: 0,
+        };
+        let r = SimResult {
+            graph: "t".into(),
+            iters: Vec::new(),
+            total_cycles: 100,
+            seconds: 1e-3,
+            traversed_edges: 10,
+            gteps: 1e-5,
+            aggregate_bw: 0.0,
+            pc_stats: vec![mk_pc(0, 80), mk_pc(1, 40)],
+        };
+        assert!((r.avg_pc_utilization() - 0.6).abs() < 1e-12);
+        assert!((r.max_pc_utilization() - 0.8).abs() < 1e-12);
+        assert_eq!(r.max_pc_queue_depth(), 2);
+        assert!(r.summary().contains("PC util"));
     }
 }

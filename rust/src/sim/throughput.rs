@@ -78,22 +78,42 @@ impl ThroughputSim {
         }
     }
 
-    /// Memory-phase cycles for one iteration.
-    fn memory_cycles(&self, it: &IterTraffic, graph_bytes_total: u64) -> u64 {
-        let bpc = self.pc_bytes_per_cycle(graph_bytes_total);
+    /// Byte load each in-service PC carries for one iteration — the
+    /// analytic face of the shared-PC contention model. Partitioned
+    /// placement folds the per-PG loads onto
+    /// `SimConfig::num_hbm_pcs` channels through the partition-aware
+    /// map ([`crate::graph::Partitioning::pc_of_pg`]); the
+    /// unpartitioned baseline spreads all traffic across the PCs that
+    /// actually hold data (§VI-E reason 2).
+    fn pc_byte_loads(&self, it: &IterTraffic, graph_bytes_total: u64) -> Vec<u64> {
+        let num_pcs = self.cfg.num_hbm_pcs.max(1);
+        let mut loads = vec![0u64; num_pcs];
         match self.cfg.placement {
             Placement::Partitioned => {
-                // Each PG reads only its own PC: busiest PC binds.
-                let max_bytes = it.max_pg_bytes();
-                (max_bytes as f64 / bpc).ceil() as u64
+                for pg in 0..self.cfg.part.num_pgs {
+                    let bytes = it.per_pg_offset_bytes[pg] + it.per_pg_edge_bytes[pg];
+                    loads[self.cfg.part.pc_of_pg(pg, num_pcs)] += bytes;
+                }
             }
             Placement::Unpartitioned => {
-                // All traffic funnels into the data-holding PCs.
-                let total: u64 = it.total_bytes();
-                let servers = self.serving_pcs(graph_bytes_total) as f64;
-                (total as f64 / (bpc * servers)).ceil() as u64
+                let servers = self.serving_pcs(graph_bytes_total).min(num_pcs).max(1);
+                let total = it.total_bytes();
+                let rem = (total % servers as u64) as usize;
+                for (pc, load) in loads.iter_mut().take(servers).enumerate() {
+                    *load = total / servers as u64 + u64::from(pc < rem);
+                }
             }
         }
+        loads
+    }
+
+    /// Memory-phase cycles for one iteration: the busiest *PC* binds
+    /// (which, with a private PC per PG, is the busiest PG as before).
+    /// `loads` is that iteration's [`Self::pc_byte_loads`].
+    fn memory_cycles_for_loads(&self, loads: &[u64], graph_bytes_total: u64) -> u64 {
+        let bpc = self.pc_bytes_per_cycle(graph_bytes_total);
+        let max_bytes = loads.iter().copied().max().unwrap_or(0);
+        (max_bytes as f64 / bpc).ceil() as u64
     }
 
     /// Compute-phase cycles: slowest PE over (P1 work, P2/P3 ops).
@@ -162,8 +182,13 @@ impl ThroughputSim {
         let fill = self.cfg.fill_cycles();
         let mut iters = Vec::with_capacity(run.traffic.iters.len());
         let mut total_cycles = 0u64;
+        let mut pc_bytes = vec![0u64; self.cfg.num_hbm_pcs.max(1)];
         for it in &run.traffic.iters {
-            let mem = self.memory_cycles(it, graph_bytes_total);
+            let loads = self.pc_byte_loads(it, graph_bytes_total);
+            for (pc, &bytes) in loads.iter().enumerate() {
+                pc_bytes[pc] += bytes;
+            }
+            let mem = self.memory_cycles_for_loads(&loads, graph_bytes_total);
             let pe = self.pe_cycles(it, n_vertices);
             let disp = self.dispatch_cycles(it);
             let overhead = fill + self.cfg.iter_sync_cycles;
@@ -191,6 +216,22 @@ impl ThroughputSim {
         }
         let seconds = self.cfg.cycles_to_seconds(total_cycles);
         let bytes: u64 = iters.iter().map(|i| i.bytes).sum();
+        // Analytic per-PC stats: service time each PC's byte load
+        // implies, against the run's total cycles. Queue-depth fields
+        // stay 0 — only the cycle engine measures queues.
+        let bpc = self.pc_bytes_per_cycle(graph_bytes_total);
+        let dw = self.cfg.dw_bytes().max(1);
+        let pc_stats = pc_bytes
+            .iter()
+            .enumerate()
+            .map(|(pc, &b)| crate::hbm::pc::PcStats {
+                pc,
+                beats: b / dw,
+                busy_cycles: (b as f64 / bpc).ceil() as u64,
+                cycles: total_cycles,
+                ..Default::default()
+            })
+            .collect();
         SimResult {
             graph: graph_name.to_string(),
             iters,
@@ -207,6 +248,7 @@ impl ThroughputSim {
             } else {
                 0.0
             },
+            pc_stats,
         }
     }
 }
@@ -308,6 +350,7 @@ pub fn time_run(
             run.cycles,
             cfg.cycles_to_seconds(run.cycles),
             run.traversed_edges,
+            run.pc_stats.clone(),
         ))
     } else {
         anyhow::bail!(
@@ -389,5 +432,45 @@ mod tests {
         let res = run_on(SimConfig::u280_full(), 12, 32, 4);
         // 32 PCs * 13.27 GB/s is the hard ceiling.
         assert!(res.aggregate_bw < 32.0 * 13.27e9);
+    }
+
+    #[test]
+    fn folding_pgs_onto_one_pc_saturates() {
+        // Contention knob: 8 PGs sharing ONE PC funnel the whole
+        // memory phase through a single channel — clearly sub-linear
+        // vs the paper's one-PC-per-PG placement.
+        let free = run_on(SimConfig::u280(8, 8), 12, 16, 6);
+        let contended = run_on(SimConfig::u280(8, 8).with_hbm_pcs(1), 12, 16, 6);
+        assert!(
+            free.gteps > 1.5 * contended.gteps,
+            "free {} vs contended {}",
+            free.gteps,
+            contended.gteps
+        );
+        assert_eq!(contended.pc_stats.len(), 1);
+        assert_eq!(free.pc_stats.len(), 8);
+        assert!(
+            contended.max_pc_utilization() >= free.max_pc_utilization(),
+            "the shared PC must be the hotter one"
+        );
+    }
+
+    #[test]
+    fn analytic_pc_stats_cover_the_traffic() {
+        let res = run_on(SimConfig::u280(4, 8), 10, 8, 3);
+        assert_eq!(res.pc_stats.len(), 4);
+        let pc_bytes: u64 = res
+            .pc_stats
+            .iter()
+            .map(|s| s.beats * SimConfig::u280(4, 8).dw_bytes())
+            .sum();
+        // Beats are floor(bytes/DW) per PC: within one beat per PC of
+        // the iteration totals.
+        let total = res.total_bytes();
+        assert!(pc_bytes <= total);
+        assert!(total - pc_bytes < 4 * SimConfig::u280(4, 8).dw_bytes());
+        for s in &res.pc_stats {
+            assert!(s.utilization() <= 1.0 + 1e-9, "{}", s.utilization());
+        }
     }
 }

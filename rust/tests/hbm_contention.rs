@@ -1,0 +1,136 @@
+//! Integration tests for the shared HBM pseudo-channel contention
+//! model: the PC-scaling experiment surface (monotone growth with
+//! measured per-PC utilization), the contention-saturated fold
+//! (sub-linear by construction), and functional bit-exactness of the
+//! cycle simulator under every memory-model configuration.
+
+use scalabfs::bfs::reference;
+use scalabfs::coordinator::sweep::{pc_contention, pc_scaling};
+use scalabfs::graph::generators;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::{Placement, SimConfig};
+use scalabfs::sim::cycle::CycleSim;
+
+#[test]
+fn pc_scaling_is_monotone_with_measured_utilization() {
+    // The acceptance axis (PCs ∈ {8, 16, 32}) at a CI-friendly scale;
+    // the full RMAT-18 curve runs in `rmat18_pc_scaling_acceptance`
+    // (ignored) and via `scalabfs pcsweep --dataset=RMAT18-16`.
+    let g = generators::rmat_graph500(14, 16, 40);
+    let curve = pc_scaling(&g, "throughput", &[8, 16, 32], 1, 40).unwrap();
+    assert_eq!(curve.points.len(), 3);
+    for w in curve.points.windows(2) {
+        assert!(
+            w[1].gteps > w[0].gteps,
+            "{} PCs {} !< {} PCs {}",
+            w[0].pcs,
+            w[0].gteps,
+            w[1].pcs,
+            w[1].gteps
+        );
+    }
+    for p in &curve.points {
+        assert!(
+            p.avg_pc_util > 0.0 && p.max_pc_util <= 1.0 + 1e-9,
+            "{} PCs: util avg {} max {}",
+            p.pcs,
+            p.avg_pc_util,
+            p.max_pc_util
+        );
+    }
+    // The report renders utilization alongside GTEPS.
+    let rendered = curve.render();
+    assert!(rendered.contains("util"));
+    assert!(rendered.contains("knee"));
+}
+
+#[test]
+fn contention_saturated_config_scales_sublinearly() {
+    // Few PCs, many PGs: 32 PGs folded onto 2 PCs vs 32 private PCs.
+    let g = generators::rmat_graph500(13, 16, 41);
+    let curve = pc_contention(&g, "throughput", 32, &[2, 8, 32], 41).unwrap();
+    let p2 = &curve.points[0];
+    let p32 = &curve.points[2];
+    assert!(p32.gteps > p2.gteps, "more channels must help");
+    // 16x the channels must buy visibly less than 16x the throughput
+    // at this demand, and the starved end must run its PCs hotter.
+    assert!(
+        p32.speedup < 16.0 * 0.9,
+        "fold scaled implausibly linearly: x{}",
+        p32.speedup
+    );
+    assert!(p2.max_pc_util >= p32.max_pc_util * 0.9);
+}
+
+#[test]
+fn cycle_levels_bit_identical_under_every_memory_model() {
+    // The memory model changes *when* beats arrive, never *what* the
+    // search computes: private PCs, folded PCs, and the packed
+    // unpartitioned baseline must all reproduce reference levels.
+    let g = generators::rmat_graph500(10, 8, 42);
+    let root = reference::sample_roots(&g, 1, 42)[0];
+    let truth = reference::bfs(&g, root);
+    let mut configs = vec![
+        ("private", SimConfig::u280(8, 16)),
+        ("folded", SimConfig::u280(8, 16).with_hbm_pcs(2)),
+        ("single", SimConfig::u280(8, 16).with_hbm_pcs(1)),
+    ];
+    let mut base = SimConfig::u280(8, 16);
+    base.placement = Placement::Unpartitioned;
+    configs.push(("unpartitioned", base));
+    let mut cycles = Vec::new();
+    for (name, cfg) in configs {
+        let res = CycleSim::new(&g, cfg).run(root, &mut Hybrid::default());
+        assert_eq!(res.levels, truth.levels, "{name} diverged");
+        assert!(res.cycles > 0);
+        cycles.push((name, res.cycles));
+    }
+    // Contention must cost cycles: the single shared PC is the slowest
+    // partitioned config.
+    let private = cycles[0].1;
+    let single = cycles[2].1;
+    assert!(
+        single > private,
+        "single shared PC {single} !> private PCs {private}"
+    );
+}
+
+#[test]
+fn cycle_and_analytic_agree_on_the_contention_direction() {
+    // Both fidelity levels must tell the same story when PGs fold onto
+    // one PC: slower than private, by a comparable factor.
+    let g = generators::rmat_graph500(11, 16, 43);
+    let root = reference::sample_roots(&g, 1, 43)[0];
+    let slow_cfg = SimConfig::u280(4, 4).with_hbm_pcs(1);
+    let fast_cfg = SimConfig::u280(4, 4);
+    let cyc_slow = CycleSim::new(&g, slow_cfg.clone()).run(root, &mut Hybrid::default());
+    let cyc_fast = CycleSim::new(&g, fast_cfg.clone()).run(root, &mut Hybrid::default());
+    let cyc_ratio = cyc_slow.cycles as f64 / cyc_fast.cycles as f64;
+    let (_, thr_slow) =
+        scalabfs::sim::throughput::simulate_bfs(&g, slow_cfg, root, &mut Hybrid::default());
+    let (_, thr_fast) =
+        scalabfs::sim::throughput::simulate_bfs(&g, fast_cfg, root, &mut Hybrid::default());
+    let thr_ratio = thr_slow.total_cycles as f64 / thr_fast.total_cycles as f64;
+    assert!(cyc_ratio > 1.2, "cycle sim saw no contention: {cyc_ratio}");
+    assert!(thr_ratio > 1.2, "analytic saw no contention: {thr_ratio}");
+    let gap = cyc_ratio / thr_ratio;
+    assert!(
+        (0.4..=2.5).contains(&gap),
+        "fidelity levels diverge: cycle x{cyc_ratio:.2} vs analytic x{thr_ratio:.2}"
+    );
+}
+
+#[test]
+#[ignore = "full RMAT-18 acceptance sweep; run with --ignored (or use `scalabfs pcsweep`)"]
+fn rmat18_pc_scaling_acceptance() {
+    let g = generators::rmat_graph500(18, 16, 44);
+    let curve = pc_scaling(&g, "throughput", &[8, 16, 32], 1, 44).unwrap();
+    for w in curve.points.windows(2) {
+        assert!(w[1].gteps > w[0].gteps, "not monotone on RMAT-18");
+    }
+    for p in &curve.points {
+        assert!(p.avg_pc_util > 0.0);
+    }
+    let contended = pc_contention(&g, "throughput", 32, &[2, 32], 44).unwrap();
+    assert!(contended.points[1].speedup < 16.0 * 0.9);
+}
