@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let small = datasets::by_name("RMAT18-8", (scale * 4).max(32), seed).unwrap();
     let root0 = reference::sample_roots(&small, 1, seed)[0];
     let ccfg = SimConfig::u280(8, 16);
-    let cyc = CycleSim::new(&small, ccfg.clone()).run(root0, &mut Hybrid::default());
+    let cyc = CycleSim::new(&small, ccfg.clone()).run(root0, &mut Hybrid::default())?;
     let truth = reference::bfs(&small, root0);
     anyhow::ensure!(cyc.levels == truth.levels, "cycle sim mismatch");
     let (func_run, thr) = scalabfs::sim::throughput::simulate_bfs(

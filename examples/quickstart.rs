@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let scfg = SimConfig::u280(4, 8);
     for name in ENGINE_NAMES {
         let mut engine = make_engine(name, &small, &scfg)?;
-        let erun = engine.run(sroot, &mut Hybrid::default());
+        let erun = engine.run(sroot, &mut Hybrid::default())?;
         anyhow::ensure!(erun.levels == struth.levels, "{name} diverged");
         println!(
             "  {:<13} {} iterations, {} reached - levels match",

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = Table::new(vec!["#PE (1 PC)", "cycle-sim GTEPS", "analytic GTEPS", "ratio"]);
     for pes in [1usize, 2, 4, 8] {
         let cfg = SimConfig::u280(1, pes);
-        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default());
+        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
         let (_, thr) =
             scalabfs::sim::throughput::simulate_bfs(&g, cfg, root, &mut Hybrid::default());
         t.row(vec![

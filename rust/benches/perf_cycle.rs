@@ -1,0 +1,59 @@
+//! Bench: host-side throughput of the cycle-stepped simulator's core
+//! loop (HBM subsystem + dispatcher fabric + PE pipelines ticked per
+//! cycle).
+//!
+//! The fabric refactor made the per-cycle work O(delivered + k·N)
+//! instead of O(messages in flight); this bench watches the loop's
+//! simulated-cycles-per-second so a regression in the host-side loop
+//! is caught in CI, with bit-exactness against the reference BFS as
+//! the functional gate.
+//!
+//! ```bash
+//! cargo bench --bench perf_cycle                  # full (RMAT-16)
+//! SCALABFS_BENCH_SMOKE=1 cargo bench --bench perf_cycle   # CI smoke (RMAT-14)
+//! ```
+
+use scalabfs::bfs::reference;
+use scalabfs::sched::Hybrid;
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::cycle::CycleSim;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("SCALABFS_BENCH_SMOKE").is_ok();
+    let (scale, reps) = if smoke { (14u32, 1usize) } else { (16, 3) };
+    println!(
+        "=== cycle-sim host loop bench (RMAT-{scale} d16, {}) ===\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    let g = scalabfs::graph::generators::rmat_graph500(scale, 16, 7);
+    let root = reference::sample_roots(&g, 1, 7)[0];
+    let truth = reference::bfs(&g, root);
+
+    let configs = [
+        ("8 PC x 16 PE, full crossbar", SimConfig::u280(8, 16)),
+        ("1 PC x 64 PE, 3-layer [4,4,4]", SimConfig::u280(1, 64)),
+    ];
+    for (label, cfg) in configs {
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let res = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(res);
+        }
+        let res = last.expect("reps >= 1");
+        anyhow::ensure!(res.levels == truth.levels, "{label}: wrong BFS");
+        println!(
+            "{label:<32} {:>12} sim cycles in {:>7.2} s  ({:>6.2} M cycles/s)  \
+             {:.3} GTEPS  xbar conflicts/stalls {}/{}",
+            res.cycles,
+            best,
+            res.cycles as f64 / best / 1e6,
+            res.gteps,
+            res.dispatcher.conflicts,
+            res.dispatcher.stalls + res.dispatcher.inject_stalls,
+        );
+    }
+    Ok(())
+}

@@ -40,7 +40,9 @@ fn time_run(
             repr,
         };
         let t0 = std::time::Instant::now();
-        let run = engine.run_with_state(&mut state, root, &mut policy);
+        let run = engine
+            .run_with_state(&mut state, root, &mut policy)
+            .expect("bitmap step is infallible");
         best = best.min(t0.elapsed().as_secs_f64());
         last = Some(run);
     }

@@ -93,7 +93,9 @@ fn main() {
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
 
-    let run = engine.run_with_state(&mut state, root, &mut Hybrid::default());
+    let run = engine
+        .run_with_state(&mut state, root, &mut Hybrid::default())
+        .expect("bitmap step is infallible");
     let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
     let sim = ThroughputSim::new(SimConfig::u280_full());
     time("throughput simulator (accounting only)", 10, || {

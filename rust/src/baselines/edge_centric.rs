@@ -100,7 +100,7 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
         self.part
     }
 
-    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> StepStats {
+    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> Result<StepStats> {
         let graph = self.graph;
         let mut it = IterTraffic::new(
             state.bfs_level,
@@ -126,11 +126,11 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
                 }
             }
         }
-        StepStats {
+        Ok(StepStats {
             newly_visited: it.newly_visited,
             traffic: Some(it),
             ..StepStats::default()
-        }
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -142,7 +142,9 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
 /// full edge list through the single channel.
 pub fn estimate(g: &Graph, root: VertexId, cfg: EdgeCentricConfig) -> EdgeCentricResult {
     let mut engine = EdgeCentricEngine::new(g, cfg);
-    let run = engine.run(root, &mut Fixed(Mode::Push));
+    let run = engine
+        .run(root, &mut Fixed(Mode::Push))
+        .expect("the edge-centric step is infallible");
     let iterations = run.iterations;
     let edges_streamed = g.num_edges() * iterations as u64;
     let bytes = edges_streamed as f64 * cfg.edge_bytes;
@@ -174,7 +176,8 @@ mod tests {
         let g = generators::rmat_graph500(9, 8, 3);
         let root = reference::sample_roots(&g, 1, 3)[0];
         let run = EdgeCentricEngine::new(&g, EdgeCentricConfig::default())
-            .run(root, &mut Fixed(Mode::Push));
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         assert_eq!(run.levels, reference::bfs(&g, root).levels);
     }
 

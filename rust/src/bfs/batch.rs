@@ -90,7 +90,9 @@ impl<'g> BatchDriver<'g> {
                 },
                 |(engine, state), &root| {
                     let mut policy = make_policy();
-                    let run = engine.run_with_state(state, root, policy.as_mut());
+                    let run = engine
+                        .run_with_state(state, root, policy.as_mut())
+                        .expect("the functional bitmap step is infallible");
                     let gteps = sim.simulate(&run, &self.graph.name, bytes).gteps;
                     (run, gteps)
                 },

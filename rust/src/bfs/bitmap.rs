@@ -93,9 +93,12 @@ impl<'g> BitmapEngine<'g> {
 
     /// Run BFS from `root` with a fresh state (see
     /// [`BfsEngine::run_with_state`] for state reuse across roots).
+    /// Infallible: the functional engine's step cannot fail, so the
+    /// driver's `Result` unwraps here.
     pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
         let mut state = SearchState::new(self.graph.num_vertices());
         crate::exec::drive(self, &mut state, root, policy)
+            .expect("the functional bitmap step is infallible")
     }
 
     /// Push iteration (Algorithm 2 lines 6-14): consume the current
@@ -227,7 +230,7 @@ impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
         self.part
     }
 
-    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats {
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> Result<StepStats> {
         let mut it = IterTraffic::new(
             state.bfs_level,
             mode,
@@ -242,11 +245,11 @@ impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
             Mode::Push => self.push_iteration(state, &mut it),
             Mode::Pull => self.pull_iteration(state, &mut it),
         }
-        StepStats {
+        Ok(StepStats {
             newly_visited: it.newly_visited,
             traffic: Some(it),
             ..StepStats::default()
-        }
+        })
     }
 
     fn name(&self) -> &'static str {

@@ -86,7 +86,7 @@ pub fn run_graph(
     let mut per_root = Vec::with_capacity(roots.len());
     for &root in &roots {
         let mut policy = make_policy(&opts.policy);
-        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         per_root.push(time_run(&run, cfg, &graph.name, bytes)?);
     }
     let gteps = harmonic_mean(&per_root.iter().map(|r| r.gteps).collect::<Vec<_>>());

@@ -493,7 +493,7 @@ pub fn engine_matrix(opts: &ExpOptions) -> Result<Table> {
     for name in ENGINE_NAMES {
         let mut engine = make_engine(name, &graph, &cfg)?;
         let mut policy = driver::make_policy("hybrid");
-        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         let res = crate::sim::throughput::time_run(&run, &cfg, &graph.name, bytes)?;
         t.row(vec![
             name.to_string(),

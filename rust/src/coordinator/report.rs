@@ -75,7 +75,7 @@ impl Json {
 }
 
 /// Serialize a [`SimResult`] (summary + per-iteration breakdown +
-/// per-PC utilization).
+/// per-PC utilization + dispatcher/PE pipeline stats).
 pub fn sim_result_json(r: &SimResult) -> Json {
     Json::obj(vec![
         ("graph", Json::Str(r.graph.clone())),
@@ -84,6 +84,37 @@ pub fn sim_result_json(r: &SimResult) -> Json {
         ("gteps", Json::Num(r.gteps)),
         ("aggregate_bw", Json::Num(r.aggregate_bw)),
         ("traversed_edges", Json::Num(r.traversed_edges as f64)),
+        (
+            "dispatcher",
+            Json::obj(vec![
+                ("delivered", Json::Num(r.dispatcher.delivered as f64)),
+                ("conflicts", Json::Num(r.dispatcher.conflicts as f64)),
+                (
+                    "stalls",
+                    Json::Num((r.dispatcher.stalls + r.dispatcher.inject_stalls) as f64),
+                ),
+                ("avg_occupancy", Json::Num(r.dispatcher.avg_occupancy())),
+                ("max_occupancy", Json::Num(r.dispatcher.max_occupancy as f64)),
+            ]),
+        ),
+        (
+            "pes",
+            Json::Arr(
+                r.pe_stats
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("pe", Json::Num(s.pe as f64)),
+                            ("fetches", Json::Num(s.fetches as f64)),
+                            ("msgs_checked", Json::Num(s.msgs_checked as f64)),
+                            ("results_written", Json::Num(s.results_written as f64)),
+                            ("busy_cycles", Json::Num(s.busy_cycles as f64)),
+                            ("bram_stalls", Json::Num(s.bram_stall_cycles as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "pcs",
             Json::Arr(
@@ -160,6 +191,43 @@ pub fn pc_scaling_json(c: &crate::coordinator::sweep::PcScalingCurve) -> Json {
     ])
 }
 
+/// Serialize a [`PeScalingCurve`](crate::coordinator::sweep::PeScalingCurve)
+/// — the Fig-10 experiment record, measured break-point included.
+pub fn pe_scaling_json(c: &crate::coordinator::sweep::PeScalingCurve) -> Json {
+    Json::obj(vec![
+        ("engine", Json::Str(c.engine.clone())),
+        ("graph", Json::Str(c.graph.clone())),
+        ("pcs", Json::Num(c.pcs as f64)),
+        (
+            "break_point_pes_per_pc",
+            match c.break_point() {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "points",
+            Json::Arr(
+                c.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("pes_per_pc", Json::Num(p.pes_per_pc as f64)),
+                            ("pes", Json::Num(p.pes as f64)),
+                            ("gteps", Json::Num(p.gteps)),
+                            ("speedup", Json::Num(p.speedup)),
+                            ("disp_conflicts", Json::Num(p.disp_conflicts as f64)),
+                            ("disp_stalls", Json::Num(p.disp_stalls as f64)),
+                            ("disp_avg_occupancy", Json::Num(p.disp_avg_occupancy)),
+                            ("bram_stalls", Json::Num(p.bram_stalls as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Write a JSON report file.
 pub fn write_json(path: &std::path::Path, value: &Json) -> crate::Result<()> {
     std::fs::write(path, value.render())?;
@@ -218,6 +286,31 @@ mod tests {
             json.matches('{').count(),
             json.matches('}').count()
         );
+    }
+
+    #[test]
+    fn pe_scaling_curve_serializes_with_break_point() {
+        use crate::coordinator::sweep::{PeScalingCurve, PeScalingPoint};
+        let mk = |ppc: usize, gteps: f64| PeScalingPoint {
+            pes_per_pc: ppc,
+            pes: ppc,
+            gteps,
+            speedup: 1.0,
+            disp_conflicts: 11,
+            disp_stalls: 7,
+            disp_avg_occupancy: 2.5,
+            bram_stalls: 3,
+        };
+        let c = PeScalingCurve {
+            engine: "cycle".into(),
+            graph: "RMAT16-16".into(),
+            pcs: 1,
+            points: vec![mk(4, 1.0), mk(16, 2.0), mk(64, 1.2)],
+        };
+        let json = pe_scaling_json(&c).render();
+        assert!(json.contains("\"break_point_pes_per_pc\":16"));
+        assert!(json.contains("\"disp_conflicts\":11"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! [`crate::exec::make_engine`] can be gridded against the hardware
 //! knobs, exactly the way PC/PE counts are.
 //!
+//! The PE axis rides on the cycle-stepped compute-side contention
+//! model: [`pe_scaling`] pins the PC count and grows PEs per PG — the
+//! paper's Fig 10 axis. GTEPS rises to a **measured break-point**
+//! ([`PeScalingCurve::break_point`]) and then declines: past the Eq-2
+//! bandwidth saturation every (wider) beat takes longer and Eq 3's
+//! offset overhead grows, while the dispatcher fabric's conflict/stall
+//! counters report the compute-side pressure per point.
+//!
 //! Two PC-axis experiments ride on the shared HBM contention model:
 //! [`pc_scaling`] grows PGs *with* PCs (the paper's Fig 9 axis — GTEPS
 //! should climb until another phase binds, the knee
@@ -94,7 +102,7 @@ pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
                         cfg.placement = placement;
                         let mut engine = make_engine(engine_name, graph, &cfg)?;
                         let mut policy = make_policy(policy_name);
-                        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+                        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
                         let res = time_run(&run, &cfg, &graph.name, bytes)?;
                         out.push(SweepPoint {
                             engine: engine_name.clone(),
@@ -121,6 +129,144 @@ pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
     points
         .iter()
         .max_by(|a, b| a.gteps.partial_cmp(&b.gteps).unwrap())
+}
+
+
+/// One point of the Fig-10 axis: a PE-per-PC count with its measured
+/// throughput and compute-side contention counters.
+#[derive(Clone, Debug)]
+pub struct PeScalingPoint {
+    /// PEs per PC at this point.
+    pub pes_per_pc: usize,
+    /// Total PEs.
+    pub pes: usize,
+    /// Measured GTEPS.
+    pub gteps: f64,
+    /// Speedup over the curve's first point.
+    pub speedup: f64,
+    /// Dispatcher output-port conflicts over the run.
+    pub disp_conflicts: u64,
+    /// Dispatcher stalls (full link FIFOs + injection rejects).
+    pub disp_stalls: u64,
+    /// Mean messages queued in the fabric per cycle.
+    pub disp_avg_occupancy: f64,
+    /// BRAM port-saturation cycles summed over the PEs.
+    pub bram_stalls: u64,
+}
+
+/// A GTEPS-vs-PEs-per-PC curve (paper Fig 10) with the dispatcher/PE
+/// telemetry that explains its shape.
+#[derive(Clone, Debug)]
+pub struct PeScalingCurve {
+    /// Engine that produced the curve.
+    pub engine: String,
+    /// Graph it ran on.
+    pub graph: String,
+    /// PC count held fixed across the curve.
+    pub pcs: usize,
+    /// Points in ascending PE-per-PC order.
+    pub points: Vec<PeScalingPoint>,
+}
+
+impl PeScalingCurve {
+    /// The measured break-point: the PE-per-PC count with peak GTEPS,
+    /// reported only when some larger configuration measurably
+    /// declines from it (the Fig 10 shape). `None` while the curve is
+    /// still non-decreasing through the last point.
+    pub fn break_point(&self) -> Option<usize> {
+        let (best_idx, best) = self
+            .points
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.gteps.partial_cmp(&b.1.gteps).unwrap())?;
+        let declines = self.points[best_idx + 1..]
+            .iter()
+            .any(|p| p.gteps < best.gteps * 0.999);
+        declines.then_some(best.pes_per_pc)
+    }
+
+    /// Render the curve as report lines (one per point, plus the
+    /// break-point).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "PE scaling [{}] on {} ({} PC; PEs/PC -> GTEPS, xbar conflicts/stalls, occupancy, BRAM stalls):\n",
+            self.engine, self.graph, self.pcs
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "  {:>3} PE/PC ({:>3} PE): {:>7.3} GTEPS  x{:<5.2} xbar {:>8}/{:<8} occ {:>6.1}  bram {}\n",
+                p.pes_per_pc,
+                p.pes,
+                p.gteps,
+                p.speedup,
+                p.disp_conflicts,
+                p.disp_stalls,
+                p.disp_avg_occupancy,
+                p.bram_stalls
+            ));
+        }
+        match self.break_point() {
+            Some(b) => out.push_str(&format!(
+                "  break-point: {b} PEs/PC (GTEPS declines beyond it)\n"
+            )),
+            None => out.push_str("  break-point: none (non-decreasing through the last point)\n"),
+        }
+        out
+    }
+}
+
+/// Fig-10 axis: PCs pinned at `num_pcs`, PEs per PC swept through
+/// `ppc_list`. On the cycle engine the curve's decline is *measured*:
+/// bandwidth-saturated wide beats plus dispatcher FIFO conflicts and
+/// BRAM port pressure, all reported per point.
+pub fn pe_scaling(
+    graph: &Graph,
+    engine_name: &str,
+    num_pcs: usize,
+    ppc_list: &[usize],
+    seed: u64,
+) -> Result<PeScalingCurve> {
+    anyhow::ensure!(
+        num_pcs >= 1 && num_pcs.is_power_of_two(),
+        "PC count must be a power of two (got {num_pcs})"
+    );
+    for &ppc in ppc_list {
+        anyhow::ensure!(
+            ppc >= 1 && ppc.is_power_of_two(),
+            "PEs per PC must be a power of two (got {ppc})"
+        );
+    }
+    let roots = crate::bfs::reference::sample_roots(graph, 1, seed);
+    anyhow::ensure!(!roots.is_empty(), "no roots");
+    let root = roots[0];
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut state = SearchState::new(graph.num_vertices());
+    let mut points: Vec<PeScalingPoint> = Vec::new();
+    for &ppc in ppc_list {
+        let pes = num_pcs * ppc;
+        let cfg = SimConfig::u280(num_pcs, pes);
+        let mut engine = make_engine(engine_name, graph, &cfg)?;
+        let mut policy = make_policy("hybrid");
+        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
+        let res = time_run(&run, &cfg, &graph.name, bytes)?;
+        let base = points.first().map(|p| p.gteps).unwrap_or(res.gteps);
+        points.push(PeScalingPoint {
+            pes_per_pc: ppc,
+            pes,
+            gteps: res.gteps,
+            speedup: if base > 0.0 { res.gteps / base } else { 1.0 },
+            disp_conflicts: res.dispatcher.conflicts,
+            disp_stalls: res.dispatcher.stalls + res.dispatcher.inject_stalls,
+            disp_avg_occupancy: res.dispatcher.avg_occupancy(),
+            bram_stalls: res.total_bram_stalls(),
+        });
+    }
+    Ok(PeScalingCurve {
+        engine: engine_name.to_string(),
+        graph: graph.name.clone(),
+        pcs: num_pcs,
+        points,
+    })
 }
 
 /// One point of a PC-axis curve.
@@ -253,7 +399,7 @@ fn pc_curve(
         let (pgs, cfg) = mk_cfg(pcs);
         let mut engine = make_engine(engine_name, graph, &cfg)?;
         let mut policy = make_policy("hybrid");
-        let run = engine.run_with_state(&mut state, root, policy.as_mut());
+        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         let res = time_run(&run, &cfg, &graph.name, bytes)?;
         let base = points.first().map(|p| p.gteps).unwrap_or(res.gteps);
         points.push(PcScalingPoint {
@@ -371,6 +517,52 @@ mod tests {
         // but the contended one must see at least as deep a backlog.
         assert!(curve.points[0].max_pc_queue >= curve.points[1].max_pc_queue.min(1));
         assert!(curve.points[1].gteps > curve.points[0].gteps);
+    }
+
+    #[test]
+    fn pe_break_point_detection() {
+        let mk = |ppc: usize, gteps: f64| PeScalingPoint {
+            pes_per_pc: ppc,
+            pes: ppc,
+            gteps,
+            speedup: 1.0,
+            disp_conflicts: 0,
+            disp_stalls: 0,
+            disp_avg_occupancy: 0.0,
+            bram_stalls: 0,
+        };
+        let rising = PeScalingCurve {
+            engine: "x".into(),
+            graph: "g".into(),
+            pcs: 1,
+            points: vec![mk(1, 1.0), mk(2, 1.8), mk(4, 2.5)],
+        };
+        assert_eq!(rising.break_point(), None);
+        let bends = PeScalingCurve {
+            engine: "x".into(),
+            graph: "g".into(),
+            pcs: 1,
+            points: vec![mk(1, 1.0), mk(4, 2.5), mk(16, 2.0), mk(64, 1.4)],
+        };
+        assert_eq!(bends.break_point(), Some(4));
+        assert!(bends.render().contains("break-point: 4"));
+    }
+
+    #[test]
+    fn pe_scaling_curve_runs_on_the_analytic_engine() {
+        // Structure check on the cheap engine (the measured Fig-10
+        // shape itself is pinned on the cycle engine in
+        // tests/dispatcher_fabric.rs).
+        let g = generators::rmat_graph500(10, 16, 12);
+        let curve = pe_scaling(&g, "throughput", 2, &[1, 2, 4], 12).unwrap();
+        assert_eq!(curve.points.len(), 3);
+        assert_eq!(curve.pcs, 2);
+        for (p, &ppc) in curve.points.iter().zip(&[1usize, 2, 4]) {
+            assert_eq!(p.pes_per_pc, ppc);
+            assert_eq!(p.pes, 2 * ppc);
+            assert!(p.gteps > 0.0);
+        }
+        assert!(curve.render().contains("PE scaling"));
     }
 
     #[test]

@@ -1,0 +1,455 @@
+//! Cycle-stepped runtime face of the vertex dispatcher (paper §IV-D).
+//!
+//! [`crate::dispatcher::FullCrossbar`] and
+//! [`crate::dispatcher::MultiLayerCrossbar`] describe the *static*
+//! design — routing function, FIFO count, hop count — for the resource
+//! and analytic models. [`DispatcherFabric`] is the structure the cycle
+//! simulator actually ticks: one rank of **bounded link FIFOs per
+//! layer**, one rank per factor of `N = C₁ × … × C_k` (a full crossbar
+//! is the single-layer `[N]` factorization). Per cycle:
+//!
+//! * each layer-`i` output port accepts at most `link_width` messages
+//!   (Eq 1 sizes every link at two vertices per PE per cycle — the
+//!   double-pump BRAM ingest rate; `link_width = 1` is the strict
+//!   one-message-per-output-port-per-layer arbitration);
+//! * a message whose output port is already at width this cycle is a
+//!   **conflict** — it stays queued, and because links are FIFOs it
+//!   also blocks everything behind it (head-of-line blocking, the loss
+//!   mechanism that bends the Fig 10 PE-scaling curve);
+//! * a message whose downstream FIFO is full is a **stall** — bounded
+//!   queues back-pressure upstream instead of buffering infinitely, all
+//!   the way to [`inject`](DispatcherFabric::inject)ion, whose rejects
+//!   the PG's edge-beat stream must absorb by stalling its HBM port
+//!   (see [`crate::sim::cycle`]).
+//!
+//! Total queued messages are bounded by construction: every message
+//! lives in some layer's depth-bounded link FIFO, so
+//! `total_queued() <= capacity()` always (the fabric debug-asserts it
+//! each cycle). Hop latency is emergent — a message traverses one layer
+//! rank per cycle, so the k-layer latency the static model reports as
+//! [`hops`](crate::dispatcher::Dispatcher::hops) falls out of the
+//! stepping rather than being charged as a flat delay.
+
+use super::fifo::Fifo;
+use crate::graph::VertexId;
+use std::collections::VecDeque;
+
+/// A routed vertex message: `vid` selects the destination PE
+/// (`VID % N`), `child` carries the vertex a pull-mode parent check may
+/// activate (`child == vid` in push mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VertexMsg {
+    /// Vertex id the dispatcher routes by.
+    pub vid: VertexId,
+    /// Pull mode: the unvisited child whose parent `vid` is checked.
+    pub child: VertexId,
+}
+
+/// Measured dispatcher behaviour over an observation window (one
+/// iteration for [`crate::exec::StepStats`], a whole run once the
+/// driver has [`merge`](DispatcherStats::merge)d the iterations).
+#[derive(Clone, Debug, Default)]
+pub struct DispatcherStats {
+    /// Messages delivered out of the final layer into the PE FIFOs.
+    pub delivered: u64,
+    /// Head-of-queue messages that lost output-port arbitration (the
+    /// port was already at `link_width` this cycle) — at injection
+    /// into layer 0 or between ranks.
+    pub conflicts: u64,
+    /// Head-of-queue messages blocked by a full downstream link FIFO.
+    pub stalls: u64,
+    /// Injection attempts rejected by a full layer-0 entry FIFO — each
+    /// one stalls the edge-beat stream that offered the message.
+    pub inject_stalls: u64,
+    /// Sum over observed cycles of the total queued messages
+    /// (occupancy integral; divide by `cycles` for the mean).
+    pub occupancy_sum: u64,
+    /// High-water mark of total queued messages.
+    pub max_occupancy: usize,
+    /// Cycles observed.
+    pub cycles: u64,
+}
+
+impl DispatcherStats {
+    /// Mean queued messages per observed cycle.
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fold another observation window into this one.
+    pub fn merge(&mut self, other: &DispatcherStats) {
+        self.delivered += other.delivered;
+        self.conflicts += other.conflicts;
+        self.stalls += other.stalls;
+        self.inject_stalls += other.inject_stalls;
+        self.occupancy_sum += other.occupancy_sum;
+        self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+        self.cycles += other.cycles;
+    }
+}
+
+/// The cycle-stepped dispatcher: `k` ranks of `N` bounded link FIFOs.
+///
+/// `stages[i][lane]` holds messages that have traversed layers `0..=i`;
+/// a lane's index agrees with the message's `vid` in mixed-radix digits
+/// `0..=i` (radices `C₁..C_{i+1}`), so after the last rank the lane
+/// *is* the destination PE and `stages[k-1]` doubles as the per-PE
+/// input FIFOs the PEs' P2 stage drains.
+pub struct DispatcherFabric {
+    /// Layer radices (product = N). A full crossbar is `[N]`.
+    factors: Vec<usize>,
+    /// `lower[i]` = product of `factors[..i]` (mixed-radix place value).
+    lower: Vec<usize>,
+    n: usize,
+    link_width: u32,
+    fifo_depth: usize,
+    stages: Vec<Vec<Fifo<VertexMsg>>>,
+    /// Layer-0 (injection) output-port budget used this cycle.
+    inject_used: Vec<u32>,
+    /// Scratch per-port budget for internal layer moves.
+    scratch_used: Vec<u32>,
+    /// Per-layer round-robin arbitration offset.
+    rr: Vec<usize>,
+    /// Measured behaviour.
+    pub stats: DispatcherStats,
+}
+
+impl DispatcherFabric {
+    /// Fabric over a factorization of N with the given link FIFO depth
+    /// and per-port link width (messages per output port per layer per
+    /// cycle).
+    pub fn new(factors: Vec<usize>, fifo_depth: usize, link_width: u32) -> Self {
+        assert!(!factors.is_empty(), "at least one layer");
+        assert!(factors.iter().all(|&c| c >= 1), "radices must be >= 1");
+        assert!(fifo_depth >= 1 && link_width >= 1);
+        let n: usize = factors.iter().product();
+        let mut lower = Vec::with_capacity(factors.len());
+        let mut acc = 1usize;
+        for &c in &factors {
+            lower.push(acc);
+            acc *= c;
+        }
+        let k = factors.len();
+        let stages = (0..k)
+            .map(|_| (0..n).map(|_| Fifo::new(fifo_depth)).collect())
+            .collect();
+        Self {
+            factors,
+            lower,
+            n,
+            link_width,
+            fifo_depth,
+            stages,
+            inject_used: vec![0; n],
+            scratch_used: vec![0; n],
+            rr: vec![0; k],
+            stats: DispatcherStats::default(),
+        }
+    }
+
+    /// Port count N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Layers a message traverses (== the static model's hop count).
+    pub fn hops(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Mixed-radix digit `i` of a vertex id.
+    #[inline]
+    fn digit(&self, vid: VertexId, i: usize) -> usize {
+        (vid as usize / self.lower[i]) % self.factors[i]
+    }
+
+    /// Output lane of layer `i` for a message currently in `lane`:
+    /// digit `i` of the lane is replaced by the vid's digit `i` (the
+    /// message stays inside its layer-`i` small crossbar).
+    #[inline]
+    fn out_lane(&self, lane: usize, vid: VertexId, i: usize) -> usize {
+        let old = (lane / self.lower[i]) % self.factors[i];
+        lane - old * self.lower[i] + self.digit(vid, i) * self.lower[i]
+    }
+
+    /// Start a new cycle: sample occupancy and reset the injection
+    /// port budgets.
+    pub fn begin_cycle(&mut self) {
+        self.stats.cycles += 1;
+        let queued = self.total_queued();
+        debug_assert!(
+            queued <= self.capacity(),
+            "fabric occupancy {queued} exceeds total link FIFO capacity {}",
+            self.capacity()
+        );
+        self.stats.occupancy_sum += queued as u64;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(queued);
+        self.inject_used.fill(0);
+    }
+
+    /// Advance the internal ranks: for each layer boundary (from the
+    /// output side back, so a message moves one rank per cycle), each
+    /// input lane forwards up to `link_width` head messages, subject to
+    /// the output port's `link_width` budget and the downstream FIFO's
+    /// space. Blocked heads stay queued (FIFO links: head-of-line).
+    pub fn tick(&mut self) {
+        let k = self.factors.len();
+        if k < 2 {
+            return; // single layer: injection routes straight into the PE FIFOs
+        }
+        for i in (0..k - 1).rev() {
+            // Move stage i -> stage i+1 through layer i+1's crossbars.
+            self.scratch_used.fill(0);
+            let rr = self.rr[i];
+            for off in 0..self.n {
+                let lane = (rr + off) % self.n;
+                let mut sent = 0u32;
+                while sent < self.link_width {
+                    let Some(vid) = self.stages[i][lane].peek().map(|m| m.vid) else {
+                        break;
+                    };
+                    let out = self.out_lane(lane, vid, i + 1);
+                    if self.scratch_used[out] >= self.link_width {
+                        self.stats.conflicts += 1;
+                        break;
+                    }
+                    if self.stages[i + 1][out].is_full() {
+                        self.stats.stalls += 1;
+                        break;
+                    }
+                    let msg = self.stages[i][lane].pop().expect("peeked head");
+                    let pushed = self.stages[i + 1][out].push(msg);
+                    debug_assert!(pushed, "checked for space above");
+                    self.scratch_used[out] += 1;
+                    sent += 1;
+                }
+            }
+            self.rr[i] = (rr + 1) % self.n;
+        }
+    }
+
+    /// Offer a stream's staged messages to layer 0, in order, stopping
+    /// at the first blocked one (the stream is a FIFO too). Each entry
+    /// is `(src_lane, msg)` where `src_lane` is the lane of the PE
+    /// whose subgraph stream produced the message. At most `budget`
+    /// messages are accepted (the AXI width: one edge beat's worth per
+    /// cycle), each subject to its layer-0 output port's `link_width`
+    /// budget — shared with every other stream injecting this cycle —
+    /// and the entry FIFO's space. Returns the number accepted; a
+    /// shortfall means the offering stream must stall.
+    pub fn inject(
+        &mut self,
+        staging: &mut VecDeque<(usize, VertexMsg)>,
+        budget: u32,
+    ) -> u32 {
+        let mut accepted = 0u32;
+        while accepted < budget {
+            let Some(&(src_lane, msg)) = staging.front() else {
+                break;
+            };
+            let out = self.out_lane(src_lane, msg.vid, 0);
+            if self.inject_used[out] >= self.link_width {
+                self.stats.conflicts += 1;
+                break;
+            }
+            if self.stages[0][out].is_full() {
+                self.stats.inject_stalls += 1;
+                break;
+            }
+            staging.pop_front();
+            let pushed = self.stages[0][out].push(msg);
+            debug_assert!(pushed, "checked for space above");
+            self.inject_used[out] += 1;
+            accepted += 1;
+        }
+        accepted
+    }
+
+    /// Head of PE `lane`'s input FIFO (the final rank), if any.
+    pub fn peek_output(&self, lane: usize) -> Option<&VertexMsg> {
+        self.stages[self.factors.len() - 1][lane].peek()
+    }
+
+    /// Pop PE `lane`'s input FIFO (call only after
+    /// [`peek_output`](Self::peek_output) and a successful BRAM port
+    /// claim).
+    pub fn pop_output(&mut self, lane: usize) -> Option<VertexMsg> {
+        let msg = self.stages[self.factors.len() - 1][lane].pop();
+        if msg.is_some() {
+            self.stats.delivered += 1;
+        }
+        msg
+    }
+
+    /// Messages queued anywhere in the fabric.
+    pub fn total_queued(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|rank| rank.iter().map(Fifo::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Σ layer FIFO capacities — the hard bound on
+    /// [`total_queued`](Self::total_queued).
+    pub fn capacity(&self) -> usize {
+        self.stages.len() * self.n * self.fifo_depth
+    }
+
+    /// True when no message is queued in any rank.
+    pub fn is_empty(&self) -> bool {
+        self.total_queued() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(vid: u32) -> VertexMsg {
+        VertexMsg { vid, child: vid }
+    }
+
+    fn drain_all(f: &mut DispatcherFabric, limit: u32) -> Vec<(usize, VertexMsg)> {
+        let mut out = Vec::new();
+        for _ in 0..limit {
+            f.begin_cycle();
+            for lane in 0..f.n() {
+                while f.peek_output(lane).is_some() {
+                    out.push((lane, f.pop_output(lane).unwrap()));
+                }
+            }
+            f.tick();
+            if f.is_empty() {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn routes_every_vid_to_vid_mod_n() {
+        for factors in [vec![16], vec![4, 4], vec![2, 2, 2, 2], vec![4, 2, 2]] {
+            let mut f = DispatcherFabric::new(factors.clone(), 64, 2);
+            let mut staging: VecDeque<(usize, VertexMsg)> =
+                (0..64u32).map(|v| (3usize, msg(v))).collect();
+            let mut cycles = 0;
+            while !staging.is_empty() {
+                f.begin_cycle();
+                f.inject(&mut staging, 8);
+                // Drain outputs so the fabric never back-pressures.
+                for lane in 0..f.n() {
+                    while f.pop_output(lane).is_some() {}
+                }
+                f.tick();
+                cycles += 1;
+                assert!(cycles < 1000);
+            }
+            let delivered = drain_all(&mut f, 1000);
+            // Every injected message was or will be delivered at vid % 16.
+            for (lane, m) in delivered {
+                assert_eq!(lane, m.vid as usize % 16, "factors {factors:?}");
+            }
+            assert!(f.is_empty());
+        }
+    }
+
+    #[test]
+    fn bounded_occupancy_and_backpressure() {
+        // Depth-2 FIFOs, width 1: flood one hot destination.
+        let mut f = DispatcherFabric::new(vec![4, 4], 2, 1);
+        let mut staging: VecDeque<(usize, VertexMsg)> =
+            (0..64).map(|_| (0usize, msg(5))).collect();
+        for _ in 0..10 {
+            f.begin_cycle();
+            f.inject(&mut staging, 8);
+            f.tick();
+        }
+        assert!(f.total_queued() <= f.capacity());
+        assert!(!staging.is_empty(), "bounded FIFOs must refuse the flood");
+        assert!(f.stats.conflicts > 0, "width-1 hot port must conflict");
+        assert!(
+            f.stats.stalls + f.stats.inject_stalls > 0,
+            "depth-2 FIFOs must fill and stall"
+        );
+        // Nothing is lost: staged + queued + delivered == 64.
+        let delivered = drain_all(&mut f, 10_000);
+        assert_eq!(
+            staging.len() + delivered.len(),
+            64,
+            "messages must never be dropped"
+        );
+        for (lane, m) in delivered {
+            assert_eq!(lane, 5);
+            assert_eq!(m.vid, 5);
+        }
+    }
+
+    #[test]
+    fn hot_port_conflicts_are_counted() {
+        // Two streams, both aimed at PE 0 through the same layer-0
+        // port group: width 1 admits one per cycle, the other loses
+        // the port arbitration.
+        let mut f = DispatcherFabric::new(vec![4, 4], 16, 1);
+        let mut a: VecDeque<(usize, VertexMsg)> = (0..8).map(|_| (0usize, msg(0))).collect();
+        let mut b: VecDeque<(usize, VertexMsg)> = (0..8).map(|_| (1usize, msg(4))).collect();
+        f.begin_cycle();
+        // Both route to layer-0 port 0 of crossbar 0 (digit0 of 0 and 4
+        // is 0; lanes 0 and 1 share lower digits' group).
+        let got_a = f.inject(&mut a, 4);
+        let got_b = f.inject(&mut b, 4);
+        assert_eq!(got_a, 1, "width-1 port admits one");
+        assert_eq!(got_b, 0, "port budget is shared across streams");
+        assert!(f.stats.conflicts > 0, "arbitration losses are conflicts");
+        assert_eq!(f.stats.inject_stalls, 0, "no FIFO was full");
+    }
+
+    #[test]
+    fn latency_is_one_cycle_per_layer() {
+        let mut f = DispatcherFabric::new(vec![4, 4], 16, 2);
+        let mut staging: VecDeque<(usize, VertexMsg)> = VecDeque::from([(0usize, msg(7))]);
+        f.begin_cycle();
+        assert_eq!(f.inject(&mut staging, 4), 1);
+        // After injection the message sits in rank 0; one tick moves it
+        // to rank 1 (the PE FIFO).
+        assert!(f.peek_output(7).is_none());
+        f.tick();
+        assert_eq!(f.peek_output(7).map(|m| m.vid), Some(7));
+        assert_eq!(f.pop_output(7).unwrap().vid, 7);
+        assert!(f.is_empty());
+        assert_eq!(f.stats.delivered, 1);
+    }
+
+    #[test]
+    fn single_layer_full_crossbar_delivers_in_one_hop() {
+        let mut f = DispatcherFabric::new(vec![8], 16, 2);
+        let mut staging: VecDeque<(usize, VertexMsg)> =
+            VecDeque::from([(2usize, msg(11)), (2usize, msg(3))]);
+        f.begin_cycle();
+        assert_eq!(f.inject(&mut staging, 8), 2);
+        assert_eq!(f.pop_output(11 % 8).unwrap().vid, 11);
+        assert_eq!(f.pop_output(3).unwrap().vid, 3);
+        assert_eq!(f.hops(), 1);
+    }
+
+    #[test]
+    fn occupancy_stats_accumulate() {
+        let mut f = DispatcherFabric::new(vec![4], 16, 2);
+        let mut staging: VecDeque<(usize, VertexMsg)> =
+            (0..6u32).map(|v| (0usize, msg(v))).collect();
+        f.begin_cycle();
+        f.inject(&mut staging, 2);
+        f.begin_cycle(); // samples the 2 queued messages
+        assert!(f.stats.occupancy_sum >= 2);
+        assert!(f.stats.max_occupancy >= 2);
+        assert!(f.stats.avg_occupancy() > 0.0);
+        let mut merged = DispatcherStats::default();
+        merged.merge(&f.stats);
+        merged.merge(&f.stats);
+        assert_eq!(merged.cycles, 2 * f.stats.cycles);
+        assert_eq!(merged.max_occupancy, f.stats.max_occupancy);
+    }
+}

@@ -43,6 +43,12 @@ impl<T> Fifo<T> {
         self.buf.pop_front()
     }
 
+    /// The oldest entry without dequeuing it (the head a cycle-stepped
+    /// router inspects before claiming an output port).
+    pub fn peek(&self) -> Option<&T> {
+        self.buf.front()
+    }
+
     /// Current occupancy.
     pub fn len(&self) -> usize {
         self.buf.len()

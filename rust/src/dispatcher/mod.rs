@@ -2,19 +2,29 @@
 //! from all PCs and scatters each vertex to the PE owning it
 //! (`VID % N_pe`).
 //!
-//! Two interchangeable implementations:
+//! Two interchangeable static designs:
 //! * [`crossbar::FullCrossbar`] — the naive N×N design: 1-hop latency,
 //!   N² FIFOs (unbuildable at N=64 on the U280).
 //! * [`multilayer::MultiLayerCrossbar`] — the paper's contribution: factor
 //!   N = C₁×…×C_k, route through k layers of small crossbars; FIFO count
 //!   drops to Σ (N/Cᵢ)·Cᵢ², latency grows to k hops. Throughput-critical
 //!   BFS tolerates the latency (§IV-D).
+//!
+//! Both describe routing/resource/latency *statically* for the
+//! analytic and resource models. The cycle simulator instead ticks
+//! [`fabric::DispatcherFabric`] — the runtime face of either design:
+//! per-layer bounded link FIFOs, per-output-port arbitration, measured
+//! [`fabric::DispatcherStats`] (conflicts, stalls, occupancy), and
+//! back-pressure that propagates all the way into the HBM edge-beat
+//! stream instead of buffering unboundedly.
 
 pub mod fifo;
 pub mod crossbar;
 pub mod multilayer;
+pub mod fabric;
 
 pub use crossbar::FullCrossbar;
+pub use fabric::{DispatcherFabric, DispatcherStats, VertexMsg};
 pub use multilayer::MultiLayerCrossbar;
 
 /// Routing contract shared by both crossbar designs.

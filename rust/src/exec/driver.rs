@@ -14,9 +14,12 @@
 use super::engine::{BfsEngine, BfsRun};
 use super::state::SearchState;
 use crate::bfs::traffic::RunTraffic;
+use crate::dispatcher::DispatcherStats;
 use crate::graph::VertexId;
 use crate::hbm::pc::merge_pc_stats;
+use crate::pe::merge_pe_stats;
 use crate::sched::ModePolicy;
+use crate::Result;
 
 /// Drive a full BFS from `root` over `state` with `engine`, letting
 /// `policy` pick each iteration's direction *and* the representation
@@ -24,12 +27,17 @@ use crate::sched::ModePolicy;
 /// [`crate::sched::ReprPolicy`]). `state` is reset in place for the
 /// root (no allocation), so callers may reuse one state across many
 /// roots.
+///
+/// A step that fails — e.g. the cycle simulator's typed
+/// [`SimError::NonConvergence`](crate::sim::failure::SimError) — fails
+/// the whole run: the error propagates out of the driver instead of
+/// aborting the process.
 pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
     engine: &mut E,
     state: &mut SearchState,
     root: VertexId,
     policy: &mut dyn ModePolicy,
-) -> BfsRun {
+) -> Result<BfsRun> {
     let graph = engine.graph();
     let n = graph.num_vertices();
     assert_eq!(
@@ -51,6 +59,8 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
     let mut total_cycles = 0u64;
     let mut backpressure = 0u64;
     let mut pc_stats = Vec::new();
+    let mut dispatcher = DispatcherStats::default();
+    let mut pe_stats = Vec::new();
 
     while state.frontier_size > 0 {
         let mode = policy.decide(
@@ -65,7 +75,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         // the frontier staged by this iteration overflows to dense
         // exactly when it outgrows the scheduler's threshold.
         state.next.set_sparse_cap(policy.repr().sparse_cap(n));
-        let stats = engine.step(state, mode);
+        let stats = engine.step(state, mode)?;
         if let Some(it) = stats.traffic {
             traffic.iters.push(it);
         }
@@ -75,10 +85,12 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         }
         backpressure += stats.backpressure;
         merge_pc_stats(&mut pc_stats, &stats.pc_stats);
+        dispatcher.merge(&stats.dispatcher);
+        merge_pe_stats(&mut pe_stats, &stats.pe_stats);
         state.finish_iteration(stats.newly_visited);
     }
 
-    BfsRun {
+    Ok(BfsRun {
         levels: state.levels.clone(),
         reached: state.reached(),
         iterations: state.bfs_level,
@@ -88,7 +100,9 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
         iter_cycles,
         backpressure,
         pc_stats,
-    }
+        dispatcher,
+        pe_stats,
+    })
 }
 
 #[cfg(test)]
@@ -106,7 +120,7 @@ mod tests {
         let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
         let mut state = SearchState::new(g.num_vertices());
         for &root in &reference::sample_roots(&g, 4, 5) {
-            let run = drive(&mut engine, &mut state, root, &mut Hybrid::default());
+            let run = drive(&mut engine, &mut state, root, &mut Hybrid::default()).unwrap();
             let truth = reference::bfs(&g, root);
             assert_eq!(run.levels, truth.levels, "root {root}");
             assert_eq!(run.reached, truth.reached);
@@ -123,7 +137,8 @@ mod tests {
             &mut SearchState::new(g.num_vertices()),
             0,
             &mut Hybrid::default(),
-        );
+        )
+        .unwrap();
         assert_eq!(run.iterations, reference::bfs(&g, 0).depth);
         assert_eq!(run.levels.iter().filter(|&&l| l != INF).count(), 10);
     }
@@ -136,7 +151,7 @@ mod tests {
         let root = reference::sample_roots(&g, 1, 33)[0];
         let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
         let mut state = SearchState::new(g.num_vertices());
-        let run = drive(&mut engine, &mut state, root, &mut Hybrid::default());
+        let run = drive(&mut engine, &mut state, root, &mut Hybrid::default()).unwrap();
         assert_eq!(run.reached, state.visited.count_ones());
         let rescanned: u64 = state
             .visited
@@ -158,7 +173,7 @@ mod tests {
                 inner: Hybrid::default(),
                 repr,
             };
-            let run = drive(&mut engine, &mut state, root, &mut policy);
+            let run = drive(&mut engine, &mut state, root, &mut policy).unwrap();
             assert_eq!(run.levels, truth.levels, "repr {}", repr.label());
             assert_eq!(run.reached, truth.reached);
         }

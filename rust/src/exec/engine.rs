@@ -4,8 +4,10 @@ use super::driver;
 use super::state::SearchState;
 use crate::bfs::traffic::{IterTraffic, RunTraffic};
 use crate::bfs::Mode;
+use crate::dispatcher::DispatcherStats;
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::hbm::pc::PcStats;
+use crate::pe::PeStats;
 use crate::sched::ModePolicy;
 use crate::sim::config::SimConfig;
 use crate::Result;
@@ -34,6 +36,13 @@ pub struct StepStats {
     /// driver merges these across iterations into
     /// [`BfsRun::pc_stats`].
     pub pc_stats: Vec<PcStats>,
+    /// Dispatcher fabric behaviour measured this iteration (cycle
+    /// engine; all-zero for engines that do not step the fabric). The
+    /// driver merges iterations into [`BfsRun::dispatcher`].
+    pub dispatcher: DispatcherStats,
+    /// Per-PE pipeline stats measured this iteration (cycle engine;
+    /// empty otherwise), merged into [`BfsRun::pe_stats`].
+    pub pe_stats: Vec<PeStats>,
 }
 
 /// Complete result of a BFS run through the shared driver. This is the
@@ -63,6 +72,12 @@ pub struct BfsRun {
     /// Per-PC HBM utilization/queue stats merged over the run (empty
     /// unless the engine models the shared memory subsystem).
     pub pc_stats: Vec<PcStats>,
+    /// Dispatcher fabric occupancy/conflict/stall stats merged over the
+    /// run (all-zero unless the engine steps the fabric).
+    pub dispatcher: DispatcherStats,
+    /// Per-PE pipeline stats merged over the run (empty unless the
+    /// engine steps the PE pipelines).
+    pub pe_stats: Vec<PeStats>,
 }
 
 /// A level-synchronous BFS engine over partitioned bitmap state.
@@ -91,8 +106,13 @@ pub trait BfsEngine<'g> {
     /// The bound partitioning.
     fn partitioning(&self) -> Partitioning;
 
-    /// Process one level-synchronous iteration in `mode`.
-    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats;
+    /// Process one level-synchronous iteration in `mode`. Timing
+    /// engines may fail with a typed simulation error (e.g.
+    /// [`SimError::NonConvergence`](crate::sim::failure::SimError));
+    /// the driver surfaces it as a failed [`Result`] instead of a
+    /// process abort. Functional state mutated by a failed step is
+    /// unspecified — reset it before reuse.
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> Result<StepStats>;
 
     /// Engine name for reports and sweeps.
     fn name(&self) -> &'static str;
@@ -104,12 +124,12 @@ pub trait BfsEngine<'g> {
         state: &mut SearchState,
         root: VertexId,
         policy: &mut dyn ModePolicy,
-    ) -> BfsRun {
+    ) -> Result<BfsRun> {
         driver::drive(self, state, root, policy)
     }
 
     /// Run BFS from `root` with a fresh state.
-    fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> BfsRun {
+    fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> Result<BfsRun> {
         let mut state = SearchState::new(self.graph().num_vertices());
         driver::drive(self, &mut state, root, policy)
     }
@@ -181,7 +201,7 @@ mod tests {
             } else {
                 assert_eq!(e.partitioning().num_pes, 4);
             }
-            let run = e.run(root, &mut Hybrid::default());
+            let run = e.run(root, &mut Hybrid::default()).expect(name);
             assert_eq!(run.levels, truth.levels, "engine {name}");
         }
     }

@@ -270,6 +270,16 @@ pub struct PcQueue {
     pub queue_capacity: usize,
     /// Maximum transactions in flight (the AXI outstanding window).
     pub max_outstanding: usize,
+    /// Beats the channel can complete per cycle (≤ 1). Below the
+    /// bandwidth-saturation point (`DW·F <= BW_MAX`) this is 1.0; past
+    /// it, a DW-wide beat physically takes `DW·F / BW_MAX > 1` cycles
+    /// to transfer, so the rate drops below one — the Eq 2 cap measured
+    /// per beat instead of per iteration. See
+    /// [`SimConfig::hbm_beats_per_cycle`](crate::sim::config::SimConfig::hbm_beats_per_cycle).
+    pub beats_per_cycle: f64,
+    /// Accrued fractional beat credit (capped at one beat — the channel
+    /// cannot bank transfers).
+    beat_credit: f64,
     latency: u64,
     queue: VecDeque<PcRequest>,
     inflight: Vec<InflightTx>,
@@ -284,6 +294,8 @@ impl PcQueue {
         Self {
             queue_capacity,
             max_outstanding,
+            beats_per_cycle: 1.0,
+            beat_credit: 0.0,
             latency,
             queue: VecDeque::new(),
             inflight: Vec::new(),
@@ -292,6 +304,13 @@ impl PcQueue {
                 ..PcStats::default()
             },
         }
+    }
+
+    /// Set the per-cycle beat rate (see [`Self::beats_per_cycle`]).
+    pub fn with_beat_rate(mut self, rate: f64) -> Self {
+        assert!(rate > 0.0 && rate <= 1.0, "beat rate must be in (0, 1]");
+        self.beats_per_cycle = rate;
+        self
     }
 
     /// Current request-queue depth.
@@ -324,6 +343,15 @@ impl PcQueue {
     /// in-flight window while slots are free, then stream one beat from
     /// the oldest ready transaction, if any.
     pub fn tick(&mut self, now: u64) -> Option<PcBeat> {
+        self.tick_gated(now, &[])
+    }
+
+    /// [`tick`](Self::tick) with destination-port gating: a ready
+    /// transaction whose `port` is flagged in `blocked` is skipped this
+    /// cycle (its beat would land in a full dispatcher staging buffer —
+    /// the stalled dispatcher stalls the memory consumer). Ports beyond
+    /// `blocked.len()` are treated as open.
+    pub fn tick_gated(&mut self, now: u64, blocked: &[bool]) -> Option<PcBeat> {
         self.stats.cycles += 1;
         self.stats.queue_depth_sum += self.queue.len() as u64;
         self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
@@ -338,13 +366,25 @@ impl PcQueue {
                 follow_up_bytes: req.follow_up_bytes,
             });
         }
+        // Accrue bandwidth credit: one beat's worth at most (a channel
+        // cannot bank idle cycles into a later burst).
+        self.beat_credit = (self.beat_credit + self.beats_per_cycle).min(1.0);
         let idx = self
             .inflight
             .iter()
             .enumerate()
-            .filter(|(_, t)| t.ready_at <= now)
+            .filter(|(_, t)| {
+                t.ready_at <= now && !blocked.get(t.port).copied().unwrap_or(false)
+            })
             .min_by_key(|(_, t)| t.ready_at)
             .map(|(i, _)| i)?;
+        if self.beat_credit < 1.0 {
+            // Mid-transfer of a wide, bandwidth-saturated beat: the
+            // channel is busy, but no beat completes this cycle.
+            self.stats.busy_cycles += 1;
+            return None;
+        }
+        self.beat_credit -= 1.0;
         let finished = {
             let t = &mut self.inflight[idx];
             t.beats -= 1;
@@ -521,6 +561,59 @@ mod tests {
         }
         assert_eq!(t_local, Some(9));
         assert_eq!(t_remote, Some(25), "lateral crossing adds 16 cycles");
+    }
+
+    #[test]
+    fn saturated_beat_rate_paces_streaming() {
+        // Half-rate channel: 4 beats take ~8 cycles of service instead
+        // of 4, and the channel reads busy while a wide beat transfers.
+        let mut q = PcQueue::new(0, 8, 8, 2).with_beat_rate(0.5);
+        assert!(q.try_push(req(0, 4)).is_ok());
+        let (mut beats, mut first, mut last) = (0u64, None, 0u64);
+        for now in 1..100u64 {
+            if q.tick(now).is_some() {
+                first.get_or_insert(now);
+                last = now;
+                beats += 1;
+            }
+            if q.idle() {
+                break;
+            }
+        }
+        assert_eq!(beats, 4);
+        // Ready at 1+2; credit needs 2 cycles per beat.
+        let span = last - first.unwrap();
+        assert!(span >= 6, "4 beats at half rate must span >= 6 cycles, got {span}");
+        assert!(q.stats.busy_cycles > q.stats.beats);
+    }
+
+    #[test]
+    fn gated_port_is_skipped_until_unblocked() {
+        let mut q = PcQueue::new(0, 8, 8, 1);
+        assert!(q.try_push(req(0, 1)).is_ok());
+        assert!(q.try_push(req(1, 1)).is_ok());
+        // Port 0 blocked: the later-admitted port-1 transaction streams
+        // first; port 0 drains only after the gate lifts.
+        let blocked = [true, false];
+        let mut served = Vec::new();
+        for now in 1..20u64 {
+            if let Some(b) = q.tick_gated(now, &blocked) {
+                served.push(b.port);
+            }
+            if served.len() == 1 {
+                break;
+            }
+        }
+        assert_eq!(served, vec![1]);
+        for now in 20..40u64 {
+            if let Some(b) = q.tick_gated(now, &[]) {
+                served.push(b.port);
+            }
+            if q.idle() {
+                break;
+            }
+        }
+        assert_eq!(served, vec![1, 0], "nothing dropped once the gate lifts");
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub struct HbmSubsystemConfig {
     pub switch: SwitchTiming,
     /// Per-PC request-queue capacity (back-pressure bound).
     pub queue_capacity: usize,
+    /// Beats each PC completes per cycle (≤ 1): 1.0 while the AXI
+    /// demand `DW·F` stays under the physical ceiling, `BW_MAX / (DW·F)`
+    /// past it — wide beats then take more than one cycle each (see
+    /// [`PcQueue::beats_per_cycle`]).
+    pub beats_per_cycle: f64,
 }
 
 /// The shared HBM subsystem: `num_pcs` contended [`PcQueue`]s behind an
@@ -75,6 +80,7 @@ impl HbmSubsystem {
                     cfg.axi.outstanding,
                     cfg.latency_cycles,
                 )
+                .with_beat_rate(cfg.beats_per_cycle)
             })
             .collect();
         Self {
@@ -111,6 +117,14 @@ impl HbmSubsystem {
     /// streams at most one beat, and completed offset reads spawn their
     /// edge fetches. Returns this cycle's beats (at most one per PC).
     pub fn tick(&mut self) -> Vec<PcBeat> {
+        self.tick_gated(&[])
+    }
+
+    /// [`tick`](Self::tick) with destination-port gating: PCs skip
+    /// beats bound for a port flagged in `blocked` (its dispatcher
+    /// staging is full — back-pressure from the compute side reaches
+    /// the memory side here). Ports beyond `blocked.len()` are open.
+    pub fn tick_gated(&mut self, blocked: &[bool]) -> Vec<PcBeat> {
         self.now += 1;
         for (port, pending) in self.pending.iter_mut().enumerate() {
             let Some(&req) = pending.front() else {
@@ -125,7 +139,7 @@ impl HbmSubsystem {
         }
         let mut beats = Vec::new();
         for pc in self.pcs.iter_mut() {
-            if let Some(beat) = pc.tick(self.now) {
+            if let Some(beat) = pc.tick_gated(self.now, blocked) {
                 beats.push(beat);
             }
         }
@@ -177,6 +191,7 @@ mod tests {
             latency_cycles: latency,
             switch: SwitchTiming { hop_cycles: 8 },
             queue_capacity: queue,
+            beats_per_cycle: 1.0,
         }
     }
 
@@ -254,6 +269,27 @@ mod tests {
             h.port_crossing_latency(3) > 0,
             "PG3 (slot 12) must cross to PC0 (slot 0)"
         );
+    }
+
+    #[test]
+    fn gated_ports_backpressure_the_stream() {
+        // Two ports on one PC; port 0's dispatcher staging is "full":
+        // only port 1's beats may stream until the gate lifts.
+        let map = AddressMap::partitioned(Partitioning::new(2, 2), 1);
+        let mut h = HbmSubsystem::new(map, cfg(8, 4, 16));
+        h.request_list(0, 0, 32);
+        h.request_list(1, 0, 32);
+        for _ in 0..50 {
+            for b in h.tick_gated(&[true, false]) {
+                assert_ne!(b.port, 0, "gated port must not stream");
+            }
+        }
+        assert!(!h.idle(), "port 0's work must survive the gate");
+        // Gate lifted: everything drains, nothing was dropped.
+        let (offsets, edges, _) = drain(&mut h, 1000);
+        assert_eq!(offsets, 1, "port 0's offset beat");
+        assert_eq!(edges, 2, "port 0's 32 B = 2 edge beats at DW 16");
+        assert!(h.idle());
     }
 
     #[test]

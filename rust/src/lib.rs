@@ -29,9 +29,13 @@
 //! * [`sched`] — push/pull mode policies (Beamer hybrid et al.) and the
 //!   paired frontier-representation policy ([`sched::ReprPolicy`]).
 //! * [`hbm`] / [`pe`] / [`dispatcher`] — the U280 component models;
-//!   [`hbm`] includes the shared, contended pseudo-channel subsystem
-//!   (bounded per-PC queues, switch-crossing latency, partition-aware
-//!   address map) the cycle simulator issues into.
+//!   [`hbm`] is the shared, contended pseudo-channel subsystem
+//!   (bounded per-PC queues, paced beats, switch-crossing latency,
+//!   partition-aware address map), [`dispatcher`] carries both the
+//!   static crossbar designs and their cycle-steppable runtime face
+//!   ([`dispatcher::DispatcherFabric`]: bounded link FIFOs whose
+//!   back-pressure gates the HBM ports), and [`pe`] holds the
+//!   cycle-steppable PE pipelines both simulators instantiate.
 //! * [`sim`] — the analytic throughput simulator (+
 //!   [`sim::throughput::ThroughputEngine`]) and the cycle-accurate
 //!   simulator, both `BfsEngine`s.

@@ -34,6 +34,10 @@ Experiment commands (regenerate paper tables/figures):
                   --dataset=NAME [--pcs=8,16,32 --engine=cycle --pes-per-pc=1 --json=FILE]
                   (--pgs=N pins the PG count and folds it onto each PC count:
                    the contention-saturated axis)
+  pesweep         Fig-10 axis: GTEPS vs PEs per PC at a pinned PC count, with
+                  measured dispatcher conflict/stall and BRAM-pressure stats
+                  --dataset=NAME [--pcs=1 --pes-per-pc=1,2,4,8,16,32,64
+                   --engine=cycle --json=FILE]
 
 System commands:
   run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
@@ -217,6 +221,36 @@ fn main() -> anyhow::Result<()> {
             print!("{}", curve.render());
             if let Some(path) = kv.get("json") {
                 let json = scalabfs::coordinator::report::pc_scaling_json(&curve);
+                scalabfs::coordinator::report::write_json(std::path::Path::new(path), &json)?;
+                println!("wrote {path}");
+            }
+        }
+        "pesweep" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-16".into());
+            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let engine = kv.get("engine").cloned().unwrap_or_else(|| "cycle".into());
+            let pcs = get_usize("pcs", 1);
+            let ppc: Vec<usize> = match kv.get("pes-per-pc") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| {
+                        x.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("bad --pes-per-pc entry '{x}' (expected e.g. 1,2,4,8)")
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+                None => vec![1, 2, 4, 8, 16, 32, 64],
+            };
+            anyhow::ensure!(!ppc.is_empty(), "--pes-per-pc parsed to an empty list");
+            let curve =
+                scalabfs::coordinator::sweep::pe_scaling(&graph, &engine, pcs, &ppc, opts.seed)?;
+            print!("{}", curve.render());
+            if let Some(path) = kv.get("json") {
+                let json = scalabfs::coordinator::report::pe_scaling_json(&curve);
                 scalabfs::coordinator::report::write_json(std::path::Path::new(path), &json)?;
                 println!("wrote {path}");
             }

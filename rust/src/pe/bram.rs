@@ -47,6 +47,11 @@ impl DoublePumpBram {
         }
     }
 
+    /// Ops claimed so far in the current core cycle.
+    pub fn ops_used_this_cycle(&self) -> u32 {
+        self.ops_this_cycle
+    }
+
     /// Advance to the next core cycle.
     pub fn next_cycle(&mut self) {
         if self.ops_this_cycle >= self.ops_per_cycle {

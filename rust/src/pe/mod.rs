@@ -1,16 +1,25 @@
 //! Processing Element / Processing Group models (paper §IV-B, §IV-C).
 //!
-//! A PG owns one HBM PC (via its HBM reader) and one or more hybrid-mode
-//! PEs. Each PE pipelines three stages — P1 workload preparing, P2
-//! neighbor checking, P3 result writing — over the three BRAM bitmaps and
-//! the URAM level array. The same circuits serve push and pull with
+//! A PG owns one HBM AXI port and one or more hybrid-mode PEs. Each PE
+//! pipelines three stages — P1 workload preparing, P2 neighbor
+//! checking, P3 result writing — over the three BRAM bitmaps and the
+//! URAM level array. The same circuits serve push and pull with
 //! register-selected parameters (the paper's resource-saving trick), so
 //! one Rust model with a `Mode` knob is faithful.
+//!
+//! Both simulators instantiate these types. The analytic engine uses
+//! the closed-form stage costs
+//! ([`ProcessingElement::iteration_cycles`],
+//! [`ProcessingGroup::compute_cycles`]); the cycle simulator ticks the
+//! same structs' runtime state — P2 reads and P3 writes contending for
+//! the two [`DoublePumpBram`] ports each cycle, the P1 issue schedule,
+//! and the bounded dispatcher staging buffer whose back-pressure
+//! reaches the HBM port (see [`crate::sim::cycle`]).
 
 pub mod bram;
 pub mod pe;
 pub mod pg;
 
 pub use bram::DoublePumpBram;
-pub use pe::{PeConfig, PeStats, ProcessingElement};
+pub use pe::{merge_pe_stats, P1Work, PeConfig, PeStats, ProcessingElement};
 pub use pg::ProcessingGroup;

@@ -2,22 +2,30 @@
 //!
 //! The three pipeline stages of a PE:
 //!
-//! * **P1 — workload preparing**: scan the current frontier (push) or the
-//!   visited map (pull) for the PE's vertex interval, issue neighbor-list
-//!   reads via the PG's HBM reader.
+//! * **P1 — workload preparing**: pop the frontier FIFO (sparse push)
+//!   or scan the frontier/visited bitmap interval (dense push / pull),
+//!   issuing neighbor-list reads via the PG's HBM port.
 //! * **P2 — neighbor checking**: receive dispatched vertices, check the
 //!   visited map (push) or current frontier (pull) in the double-pump
 //!   BRAM.
-//! * **P3 — result writing**: set next-frontier/visited bits and write the
-//!   level value to the URAM level array.
+//! * **P3 — result writing**: set next-frontier/visited bits and write
+//!   the level value to the URAM level array.
 //!
-//! This module provides the *cycle-cost* model of those stages; the
-//! functional state lives in [`crate::bfs::bitmap::BitmapEngine`]. The
-//! cycle simulator composes both; the throughput simulator uses the
-//! per-stage cycle formulas.
+//! One Rust model serves both fidelity levels. The *analytic* face —
+//! [`p1_cycles`](ProcessingElement::p1_cycles),
+//! [`p2_p3_cycles`](ProcessingElement::p2_p3_cycles),
+//! [`iteration_cycles`](ProcessingElement::iteration_cycles) — prices a
+//! whole iteration for [`crate::sim::throughput::ThroughputSim`]. The
+//! *cycle-stepped* face is per-cycle state the cycle simulator ticks:
+//! P2 reads and P3 writes claim ports on the shared [`DoublePumpBram`]
+//! ([`try_check`](ProcessingElement::try_check) /
+//! [`stage_result`](ProcessingElement::stage_result)), and a discovery
+//! that arrives when both ports are spent carries its write into the
+//! next cycle ([`retire_pending_writes`](ProcessingElement::retire_pending_writes))
+//! — the BRAM port pressure that, together with dispatcher conflicts,
+//! bends the Fig 10 PE-scaling curve.
 
 use super::bram::DoublePumpBram;
-use crate::bfs::Mode;
 
 /// Static PE parameters.
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +38,9 @@ pub struct PeConfig {
     pub scan_bits_per_cycle: u32,
     /// Messages P2 consumes per cycle (bounded by the BRAM budget: each
     /// message costs one bitmap read; results cost a second op in P3).
+    /// Also the dispatcher's per-link width — Eq 1 sizes the buses at
+    /// two vertices per PE per cycle precisely so the double-pump BRAM
+    /// absorbs them.
     pub p2_msgs_per_cycle: u32,
 }
 
@@ -43,20 +54,64 @@ impl Default for PeConfig {
     }
 }
 
-/// Per-iteration work counters for one PE (filled by the simulators).
+/// The work P1 performed in one iteration: the sparse datapath pops the
+/// frontier FIFO at one vertex per cycle, the dense one scans bitmap
+/// words at [`PeConfig::scan_bits_per_cycle`].
+#[derive(Clone, Copy, Debug)]
+pub enum P1Work {
+    /// Bits of this PE's bitmap interval scanned (dense push / pull).
+    ScanBits(u64),
+    /// Frontier-FIFO pops (sparse push).
+    FifoPops(u64),
+}
+
+/// Per-iteration (or per-run, once merged) work counters for one PE.
+/// The cycle simulator measures them; the analytic engine derives them
+/// from its traffic counters.
 #[derive(Clone, Debug, Default)]
 pub struct PeStats {
+    /// Global PE index.
+    pub pe: usize,
     /// Neighbor-list fetches issued in P1.
     pub fetches: u64,
     /// Messages received/checked in P2.
     pub msgs_checked: u64,
     /// Results written in P3 (bits set + level writes).
     pub results_written: u64,
-    /// Cycles this PE was the pipeline bottleneck.
+    /// Cycles this PE performed at least one BRAM op.
     pub busy_cycles: u64,
+    /// Cycles the double-pump BRAM was saturated (demand hit the port
+    /// budget) — the P2/P3 port-pressure signal.
+    pub bram_stall_cycles: u64,
 }
 
-/// Cycle-cost model of one PE.
+impl PeStats {
+    /// Fold another observation window of the *same* PE into this one.
+    pub fn merge(&mut self, other: &PeStats) {
+        self.fetches += other.fetches;
+        self.msgs_checked += other.msgs_checked;
+        self.results_written += other.results_written;
+        self.busy_cycles += other.busy_cycles;
+        self.bram_stall_cycles += other.bram_stall_cycles;
+    }
+}
+
+/// Merge a step's per-PE stats into a run-level accumulator, growing it
+/// to cover every PE index the step mentions.
+pub fn merge_pe_stats(acc: &mut Vec<PeStats>, step: &[PeStats]) {
+    let needed = step.iter().map(|s| s.pe + 1).max().unwrap_or(0);
+    for pe in acc.len()..needed {
+        acc.push(PeStats {
+            pe,
+            ..PeStats::default()
+        });
+    }
+    for s in step {
+        acc[s.pe].merge(s);
+    }
+}
+
+/// One PE: cost model + cycle-steppable P2/P3 state.
 #[derive(Clone, Debug)]
 pub struct ProcessingElement {
     /// Configuration.
@@ -65,6 +120,9 @@ pub struct ProcessingElement {
     pub bram: DoublePumpBram,
     /// Accumulated stats.
     pub stats: PeStats,
+    /// P3 writes whose discovery claimed no port this cycle; retired
+    /// first thing next cycle, ahead of new P2 reads.
+    pub pending_writes: u32,
 }
 
 impl ProcessingElement {
@@ -74,13 +132,18 @@ impl ProcessingElement {
             cfg,
             bram: DoublePumpBram::new(cfg.bram_ops_per_cycle),
             stats: PeStats::default(),
+            pending_writes: 0,
         }
     }
 
-    /// Cycles for P1 to scan `bits` of frontier/visited bitmap for this
-    /// PE's interval.
-    pub fn p1_scan_cycles(&self, bits: u64) -> u64 {
-        bits.div_ceil(self.cfg.scan_bits_per_cycle as u64)
+    // ---- Analytic face -------------------------------------------------
+
+    /// Cycles P1 takes for `work` on this PE.
+    pub fn p1_cycles(&self, work: P1Work) -> u64 {
+        match work {
+            P1Work::ScanBits(bits) => bits.div_ceil(self.cfg.scan_bits_per_cycle as u64),
+            P1Work::FifoPops(pops) => pops,
+        }
     }
 
     /// Cycles for P2+P3 to process `msgs` dispatched vertices of which
@@ -93,18 +156,78 @@ impl ProcessingElement {
         ops.div_ceil(self.cfg.bram_ops_per_cycle as u64)
     }
 
-    /// Record an iteration's work (used by ThroughputSim).
+    /// Record an iteration's work (used by the analytic engine).
     pub fn record(&mut self, fetches: u64, msgs: u64, hits: u64) {
         self.stats.fetches += fetches;
         self.stats.msgs_checked += msgs;
         self.stats.results_written += hits;
     }
 
-    /// Iteration cycle bound for this PE given its share of work
-    /// (`scan_bits` in P1, `msgs`/`hits` through P2/P3). Stages are
-    /// pipelined, so the bound is the max, not the sum.
-    pub fn iteration_cycles(&self, scan_bits: u64, msgs: u64, hits: u64, _mode: Mode) -> u64 {
-        self.p1_scan_cycles(scan_bits).max(self.p2_p3_cycles(msgs, hits))
+    /// Iteration cycle bound for this PE given its share of work (`p1`
+    /// through the preparing stage, `msgs`/`hits` through P2/P3).
+    /// Stages are pipelined, so the bound is the max, not the sum.
+    pub fn iteration_cycles(&self, p1: P1Work, msgs: u64, hits: u64) -> u64 {
+        self.p1_cycles(p1).max(self.p2_p3_cycles(msgs, hits))
+    }
+
+    // ---- Cycle-stepped face --------------------------------------------
+
+    /// Start a new cycle: account the finished cycle's activity and
+    /// reset the BRAM port budget.
+    pub fn begin_cycle(&mut self) {
+        if self.bram.ops_used_this_cycle() > 0 {
+            self.stats.busy_cycles += 1;
+        }
+        self.bram.next_cycle();
+    }
+
+    /// Retire backlogged P3 writes (they claim ports ahead of new P2
+    /// reads). Returns true when no write remains pending.
+    pub fn retire_pending_writes(&mut self) -> bool {
+        while self.pending_writes > 0 && self.bram.try_op() {
+            self.pending_writes -= 1;
+            self.stats.results_written += 1;
+        }
+        self.pending_writes == 0
+    }
+
+    /// P2: claim a BRAM read port for one message check. False = both
+    /// ports already spent this cycle (the message waits in its FIFO).
+    pub fn try_check(&mut self) -> bool {
+        if self.bram.try_op() {
+            self.stats.msgs_checked += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// P3: a check discovered a new vertex — claim a write port now or
+    /// carry the write into the next cycle.
+    pub fn stage_result(&mut self) {
+        if self.bram.try_op() {
+            self.stats.results_written += 1;
+        } else {
+            self.pending_writes += 1;
+        }
+    }
+
+    /// True when no P3 write is outstanding.
+    pub fn idle(&self) -> bool {
+        self.pending_writes == 0
+    }
+
+    /// Close an observation window: the window's last cycle never gets
+    /// a successor, so book its activity exactly like
+    /// [`begin_cycle`](Self::begin_cycle) would (busy if any port was
+    /// used, a BRAM stall if both were), then snapshot the saturation
+    /// counter.
+    pub fn finish_window(&mut self) {
+        if self.bram.ops_used_this_cycle() > 0 {
+            self.stats.busy_cycles += 1;
+        }
+        self.bram.next_cycle(); // books the final cycle's stall, if any
+        self.stats.bram_stall_cycles = self.bram.stall_cycles;
     }
 }
 
@@ -115,9 +238,10 @@ mod tests {
     #[test]
     fn p1_scan_is_word_granular() {
         let pe = ProcessingElement::new(PeConfig::default());
-        assert_eq!(pe.p1_scan_cycles(0), 0);
-        assert_eq!(pe.p1_scan_cycles(64), 1);
-        assert_eq!(pe.p1_scan_cycles(65), 2);
+        assert_eq!(pe.p1_cycles(P1Work::ScanBits(0)), 0);
+        assert_eq!(pe.p1_cycles(P1Work::ScanBits(64)), 1);
+        assert_eq!(pe.p1_cycles(P1Work::ScanBits(65)), 2);
+        assert_eq!(pe.p1_cycles(P1Work::FifoPops(17)), 17);
     }
 
     #[test]
@@ -132,9 +256,11 @@ mod tests {
     fn iteration_bound_is_stage_max() {
         let pe = ProcessingElement::new(PeConfig::default());
         // Scan-dominated: 1280 bits = 20 cycles vs 2 ops = 1 cycle.
-        assert_eq!(pe.iteration_cycles(1280, 1, 1, Mode::Push), 20);
+        assert_eq!(pe.iteration_cycles(P1Work::ScanBits(1280), 1, 1), 20);
         // Message-dominated.
-        assert_eq!(pe.iteration_cycles(64, 100, 50, Mode::Pull), 75);
+        assert_eq!(pe.iteration_cycles(P1Work::ScanBits(64), 100, 50), 75);
+        // Sparse pops price P1 at one pop per cycle.
+        assert_eq!(pe.iteration_cycles(P1Work::FifoPops(9), 2, 1), 9);
     }
 
     #[test]
@@ -145,5 +271,49 @@ mod tests {
         assert_eq!(pe.stats.fetches, 4);
         assert_eq!(pe.stats.msgs_checked, 15);
         assert_eq!(pe.stats.results_written, 3);
+    }
+
+    #[test]
+    fn reads_and_writes_share_the_two_ports() {
+        let mut pe = ProcessingElement::new(PeConfig::default());
+        pe.begin_cycle();
+        // First message: read + hit write consume both ports.
+        assert!(pe.try_check());
+        pe.stage_result();
+        assert!(pe.idle(), "write claimed the second port");
+        // Second message cannot even read this cycle.
+        assert!(!pe.try_check());
+        pe.begin_cycle();
+        assert_eq!(pe.stats.busy_cycles, 1);
+        // Read-then-read fits; the second hit's write carries over.
+        assert!(pe.try_check());
+        assert!(pe.try_check());
+        pe.stage_result();
+        assert!(!pe.idle());
+        pe.begin_cycle();
+        assert!(pe.retire_pending_writes());
+        assert!(pe.idle());
+        assert_eq!(pe.stats.msgs_checked, 3);
+        assert_eq!(pe.stats.results_written, 2);
+    }
+
+    #[test]
+    fn merge_pe_stats_grows_and_accumulates() {
+        let mut acc = Vec::new();
+        let a = PeStats {
+            pe: 1,
+            msgs_checked: 5,
+            results_written: 2,
+            busy_cycles: 4,
+            bram_stall_cycles: 1,
+            fetches: 3,
+        };
+        merge_pe_stats(&mut acc, std::slice::from_ref(&a));
+        merge_pe_stats(&mut acc, std::slice::from_ref(&a));
+        assert_eq!(acc.len(), 2);
+        assert_eq!(acc[0].msgs_checked, 0);
+        assert_eq!(acc[1].msgs_checked, 10);
+        assert_eq!(acc[1].bram_stall_cycles, 2);
+        assert_eq!(acc[1].pe, 1);
     }
 }

@@ -1,31 +1,74 @@
-//! Processing Group: one HBM PC + its HBM reader + `N_pe` PEs
-//! (paper Fig 4). The PG is the unit of the first scaling direction
-//! (more PCs → more PGs → linear speedup, Fig 9).
+//! Processing Group: one HBM PC port + `N_pe` PEs (paper Fig 4). The PG
+//! is the unit of the first scaling direction (more PCs → more PGs →
+//! linear speedup, Fig 9) — and, since the dispatcher/PE refactor, the
+//! **shared structure both simulators instantiate**: the analytic
+//! engine prices its iterations through
+//! [`compute_cycles`](ProcessingGroup::compute_cycles) /
+//! [`memory_cycles`](ProcessingGroup::memory_cycles), and the cycle
+//! simulator ticks the same struct's runtime state — the P1 issue
+//! schedule, the edge-beat stream cursor, and the bounded dispatcher
+//! staging buffer that back-pressures the HBM port (these replaced
+//! `sim/cycle.rs`'s former parallel arrays `pe_fifo`/`pe_budget`/
+//! `stream_*`).
 
-use super::pe::{PeConfig, ProcessingElement};
+use super::pe::{P1Work, PeConfig, ProcessingElement};
+use crate::dispatcher::VertexMsg;
+use crate::graph::VertexId;
 use crate::hbm::axi::AxiConfig;
 use crate::hbm::pc::{HbmConfig, PseudoChannel};
+use std::collections::VecDeque;
 
-/// A processing group bound to one pseudo channel.
+/// A processing group bound to one HBM port.
 pub struct ProcessingGroup {
-    /// Group index == PC index.
+    /// Group index == AXI port index.
     pub id: usize,
-    /// The PEs in this group.
+    /// The PEs in this group (cycle-steppable pipeline state included).
     pub pes: Vec<ProcessingElement>,
-    /// The pseudo channel this PG owns.
+    /// Bandwidth/capacity model of a pseudo channel (analytic face; the
+    /// cycle simulator contends through the shared
+    /// [`crate::hbm::HbmSubsystem`] instead).
     pub pc: PseudoChannel,
     /// AXI port configuration (width from Eq 1).
     pub axi: AxiConfig,
+    /// P1 issue schedule for the running iteration: `(ready_cycle,
+    /// vertex, entries_to_fetch)` in issue order. An entry enters the
+    /// HBM port's pending list only once the PE-side scan/pop has
+    /// actually reached its vertex — P1 runs concurrently with P2/P3
+    /// draining instead of being charged as an end-of-iteration floor.
+    pub issue: VecDeque<(u64, VertexId, usize)>,
+    /// Lists fetched but not yet streamed out as edge beats.
+    pub list_queue: VecDeque<(VertexId, usize)>,
+    /// The list currently streaming `(vertex, entries to stream)`.
+    pub stream: Option<(VertexId, usize)>,
+    /// Entries of the streaming list already sent.
+    pub stream_pos: usize,
+    /// Dispatcher staging: messages decoded from edge beats, waiting to
+    /// enter the fabric's layer 0, tagged with their source PE lane.
+    /// **Bounded** by the cycle simulator (two beats' worth): when full,
+    /// the PG's HBM port is gated — a stalled dispatcher stalls the
+    /// memory consumer.
+    pub staging: VecDeque<(usize, VertexMsg)>,
 }
 
 impl ProcessingGroup {
-    /// Build a PG with `n_pes` PEs over a PC.
-    pub fn new(id: usize, n_pes: usize, pe_cfg: PeConfig, hbm_cfg: HbmConfig, sv_bytes: u64) -> Self {
+    /// Build a PG with `n_pes` PEs over one HBM port.
+    pub fn new(
+        id: usize,
+        n_pes: usize,
+        pe_cfg: PeConfig,
+        hbm_cfg: HbmConfig,
+        sv_bytes: u64,
+    ) -> Self {
         Self {
             id,
             pes: (0..n_pes).map(|_| ProcessingElement::new(pe_cfg)).collect(),
             pc: PseudoChannel::new(hbm_cfg),
             axi: AxiConfig::for_pes(n_pes, sv_bytes),
+            issue: VecDeque::new(),
+            list_queue: VecDeque::new(),
+            stream: None,
+            stream_pos: 0,
+            staging: VecDeque::new(),
         }
     }
 
@@ -40,26 +83,46 @@ impl ProcessingGroup {
     }
 
     /// Compute-phase cycles: the slowest PE bound over per-PE work
-    /// triples `(scan_bits, msgs, hits)`.
-    pub fn compute_cycles(
-        &self,
-        work: &[(u64, u64, u64)],
-        mode: crate::bfs::Mode,
-    ) -> u64 {
+    /// triples `(p1 work, msgs, hits)`.
+    pub fn compute_cycles(&self, work: &[(P1Work, u64, u64)]) -> u64 {
         assert_eq!(work.len(), self.pes.len());
         self.pes
             .iter()
             .zip(work)
-            .map(|(pe, &(scan, msgs, hits))| pe.iteration_cycles(scan, msgs, hits, mode))
+            .map(|(pe, &(p1, msgs, hits))| pe.iteration_cycles(p1, msgs, hits))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Pop `list_queue` until a list with entries to stream is active
+    /// (zero-fetch lists have no edge beats, so they must never occupy
+    /// the stream slot).
+    pub fn select_next_stream(&mut self) {
+        while self.stream.is_none() {
+            let Some((v, fetch_len)) = self.list_queue.pop_front() else {
+                break;
+            };
+            if fetch_len > 0 {
+                self.stream = Some((v, fetch_len));
+                self.stream_pos = 0;
+            }
+        }
+    }
+
+    /// True when nothing remains in this PG's memory-side pipeline:
+    /// no unissued fetches, no queued or streaming lists, no staged
+    /// dispatcher messages.
+    pub fn stream_idle(&self) -> bool {
+        self.issue.is_empty()
+            && self.stream.is_none()
+            && self.list_queue.is_empty()
+            && self.staging.is_empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bfs::Mode;
 
     fn pg(n: usize) -> ProcessingGroup {
         ProcessingGroup::new(0, n, PeConfig::default(), HbmConfig::default(), 4)
@@ -84,7 +147,10 @@ mod tests {
     #[test]
     fn compute_cycles_take_slowest_pe() {
         let g = pg(2);
-        let c = g.compute_cycles(&[(64, 10, 5), (64, 100, 50)], Mode::Push);
+        let c = g.compute_cycles(&[
+            (P1Work::ScanBits(64), 10, 5),
+            (P1Work::ScanBits(64), 100, 50),
+        ]);
         assert_eq!(c, 75); // PE1 dominates: (100+50)/2
     }
 
@@ -92,6 +158,21 @@ mod tests {
     #[should_panic]
     fn compute_cycles_requires_matching_arity() {
         let g = pg(2);
-        g.compute_cycles(&[(0, 0, 0)], Mode::Push);
+        g.compute_cycles(&[(P1Work::ScanBits(0), 0, 0)]);
+    }
+
+    #[test]
+    fn stream_slot_skips_zero_fetch_lists() {
+        let mut g = pg(2);
+        g.list_queue.push_back((3, 0));
+        g.list_queue.push_back((7, 0));
+        g.list_queue.push_back((11, 4));
+        g.select_next_stream();
+        assert_eq!(g.stream, Some((11, 4)));
+        assert_eq!(g.stream_pos, 0);
+        g.stream = None;
+        g.select_next_stream();
+        assert_eq!(g.stream, None, "queue exhausted");
+        assert!(g.stream_idle());
     }
 }

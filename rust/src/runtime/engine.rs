@@ -142,7 +142,7 @@ impl<'g> XlaBfsEngine<'g> {
     pub fn run(&mut self, graph: &'g Graph, root: VertexId) -> Result<XlaBfsResult> {
         self.prepare(graph, Partitioning::new(1, 1))?;
         let mut state = SearchState::new(graph.num_vertices());
-        let run = crate::exec::drive(self, &mut state, root, &mut crate::sched::Fixed(Mode::Push));
+        let run = crate::exec::drive(self, &mut state, root, &mut crate::sched::Fixed(Mode::Push))?;
         if let Some(e) = self.step_error.take() {
             return Err(e);
         }
@@ -227,7 +227,7 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
     /// push-only, so the requested mode is ignored. A PJRT failure
     /// mid-run ends the search early (newly_visited = 0) and is parked
     /// in `step_error`; [`XlaBfsEngine::run`] returns it to the caller.
-    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> StepStats {
+    fn step(&mut self, state: &mut SearchState, _mode: Mode) -> Result<StepStats> {
         let blocked = self.blocked.as_ref().expect("prepare not called");
         let n_pad = blocked.n;
         let n_real = blocked.real_n;
@@ -256,7 +256,7 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
                 Ok(outs) => outs,
                 Err(e) => {
                     self.step_error.get_or_insert(e);
-                    return StepStats::default();
+                    return Ok(StepStats::default());
                 }
             };
         // Download: write the outputs back into the shared state. New
@@ -274,10 +274,10 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
         for (v, l) in levels_to_u32(&level_f, n_real).into_iter().enumerate() {
             state.levels[v] = l;
         }
-        StepStats {
+        Ok(StepStats {
             newly_visited: num_new,
             ..StepStats::default()
-        }
+        })
     }
 
     fn name(&self) -> &'static str {

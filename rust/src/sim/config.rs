@@ -1,7 +1,7 @@
 //! Simulator configuration: the published U280 / ScalaBFS constants with
 //! every knob the experiments sweep.
 
-use crate::dispatcher::{Dispatcher, FullCrossbar, MultiLayerCrossbar};
+use crate::dispatcher::{Dispatcher, DispatcherFabric, FullCrossbar, MultiLayerCrossbar};
 use crate::graph::partition::pg_footprint_bytes;
 use crate::graph::{Graph, Partitioning};
 use crate::hbm::map::AddressMap;
@@ -46,6 +46,34 @@ impl DispatcherKind {
             }
         }
     }
+
+    /// Instantiate the **runtime** face of the dispatcher — the
+    /// cycle-steppable [`DispatcherFabric`] the cycle simulator ticks.
+    /// `fifo_depth` sizes every link FIFO
+    /// ([`SimConfig::xbar_fifo_depth`]: the runtime knob for the same
+    /// quantity the static crossbar structs' `fifo_depth` field feeds
+    /// the resource model) and `link_width` is the per-output-port
+    /// message rate ([`PeConfig::p2_msgs_per_cycle`]: Eq 1 sizes the
+    /// links at two vertices per PE per cycle; 1 = strict
+    /// one-message-per-port arbitration).
+    pub fn build_fabric(
+        &self,
+        n_pes: usize,
+        fifo_depth: usize,
+        link_width: u32,
+    ) -> DispatcherFabric {
+        match self {
+            DispatcherKind::Full => DispatcherFabric::new(vec![n_pes], fifo_depth, link_width),
+            DispatcherKind::MultiLayer(factors) => {
+                assert_eq!(
+                    factors.iter().product::<usize>(),
+                    n_pes,
+                    "factorization must multiply to N"
+                );
+                DispatcherFabric::new(factors.clone(), fifo_depth, link_width)
+            }
+        }
+    }
 }
 
 /// Edge-data placement across HBM PCs.
@@ -87,10 +115,19 @@ pub struct SimConfig {
     pub pe: PeConfig,
     /// Dispatcher design.
     pub dispatcher: DispatcherKind,
+    /// Link FIFO depth of the cycle-stepped dispatcher fabric (paper
+    /// example: 16). Small depths back-pressure sooner; the
+    /// functional result is identical either way.
+    pub xbar_fifo_depth: usize,
     /// Edge-data placement.
     pub placement: Placement,
     /// Fixed per-iteration overhead (scheduler sync + frontier swap).
     pub iter_sync_cycles: u64,
+    /// Cycle-budget per iteration for the cycle simulator: exceeding it
+    /// fails the run with the typed
+    /// [`SimError::NonConvergence`](crate::sim::failure::SimError)
+    /// instead of aborting the process.
+    pub max_cycles_per_iter: u64,
     /// Chunked pull-mode early exit (ablation; the paper's reader
     /// streams whole lists — see [`crate::bfs::bitmap::TrafficConfig`]).
     pub pull_early_exit: bool,
@@ -111,8 +148,10 @@ impl SimConfig {
             pc_queue_capacity: 64,
             pe: PeConfig::default(),
             dispatcher: DispatcherKind::paper_default(num_pes),
+            xbar_fifo_depth: 16,
             placement: Placement::Partitioned,
             iter_sync_cycles: 32,
+            max_cycles_per_iter: 500_000_000,
             pull_early_exit: false,
         }
     }
@@ -129,6 +168,34 @@ impl SimConfig {
         assert!(n >= 1 && n.is_power_of_two());
         self.num_hbm_pcs = n;
         self
+    }
+
+    /// Override the dispatcher design (the fabric axis of
+    /// `tests/engine_equivalence.rs`).
+    pub fn with_dispatcher(mut self, kind: DispatcherKind) -> Self {
+        self.dispatcher = kind;
+        self
+    }
+
+    /// Override the fabric's link FIFO depth.
+    pub fn with_xbar_fifo_depth(mut self, depth: usize) -> Self {
+        assert!(depth >= 1);
+        self.xbar_fifo_depth = depth;
+        self
+    }
+
+    /// Beats each PC can complete per cycle for this config's AXI
+    /// width: 1.0 while the demand `DW·F` stays below the physical
+    /// ceiling `BW_MAX · efficiency` (Eq 2's first branch), and the
+    /// supply/demand ratio past it — a bandwidth-saturated DW-wide beat
+    /// then takes `> 1` cycles to transfer. Wide-bus configs (many PEs
+    /// per PC) pay this per *beat*, which is what prices Eq 3's
+    /// offset-read overhead into the cycle simulator and bends the
+    /// Fig 10 PE-scaling curve downward past the break-point.
+    pub fn hbm_beats_per_cycle(&self) -> f64 {
+        let demand = self.dw_bytes() as f64 * self.f_mhz * 1e6;
+        let supply = self.hbm.bw_max * self.hbm.random_efficiency;
+        (supply / demand).min(1.0)
     }
 
     /// Build the PG-shard → PC address map this config implies:
@@ -205,6 +272,28 @@ mod tests {
         let c = SimConfig::u280_full();
         let s = c.cycles_to_seconds(90_000_000);
         assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn beat_rate_saturates_with_wide_buses() {
+        // Narrow bus (2 PEs/PC, DW=16B at 90 MHz = 1.44 GB/s demand):
+        // well under BW_MAX, full rate.
+        assert_eq!(SimConfig::u280(4, 8).hbm_beats_per_cycle(), 1.0);
+        // 64 PEs on one PC: DW = 512B, demand 46 GB/s >> 13.27 —
+        // saturated, each beat takes ~3.5 cycles.
+        let r = SimConfig::u280(1, 64).hbm_beats_per_cycle();
+        assert!(r < 0.5 && r > 0.2, "rate {r}");
+    }
+
+    #[test]
+    fn fabric_builds_from_either_kind() {
+        let full = DispatcherKind::Full.build_fabric(8, 4, 2);
+        assert_eq!(full.hops(), 1);
+        assert_eq!(full.n(), 8);
+        assert_eq!(full.capacity(), 8 * 4);
+        let ml = DispatcherKind::MultiLayer(vec![4, 4]).build_fabric(16, 2, 1);
+        assert_eq!(ml.hops(), 2);
+        assert_eq!(ml.capacity(), 2 * 16 * 2);
     }
 
     #[test]

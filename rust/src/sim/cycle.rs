@@ -1,44 +1,56 @@
 //! Cycle-stepped, FIFO-accurate simulator.
 //!
-//! Models, cycle by cycle: the **shared** HBM subsystem (bounded per-PC
-//! request queues, bounded in-flight windows, one data beat per PC per
-//! cycle, lateral switch-crossing latency — see
-//! [`crate::hbm::HbmSubsystem`]), the vertex dispatcher's output-port
-//! serialization with bounded FIFOs and hop latency, and PEs consuming
-//! messages at the double-pump rate. PC count is a genuinely contended
-//! resource: with fewer PCs than PGs (`SimConfig::with_hbm_pcs`) or the
-//! unpartitioned Fig-11 placement, several PGs queue into one PC and
-//! its single beat-per-cycle output is what they fight over. It
-//! re-derives the per-iteration work from the same Algorithm-2
+//! Models, cycle by cycle, **both contended halves** of the
+//! accelerator and the back-pressure coupling between them:
+//!
+//! * the **shared HBM subsystem** (bounded per-PC request queues,
+//!   bounded in-flight windows, at most one — bandwidth-paced —
+//!   data beat per PC per cycle, lateral switch-crossing latency; see
+//!   [`crate::hbm::HbmSubsystem`]);
+//! * the **dispatcher fabric** ([`crate::dispatcher::DispatcherFabric`]):
+//!   per-layer bounded link FIFOs, per-output-port arbitration with
+//!   measured conflicts/stalls, emergent k-hop latency — a full layer
+//!   back-pressures upstream, and a full *entry* stage gates the PG's
+//!   HBM port ([`HbmSubsystem::tick_gated`]), so a stalled dispatcher
+//!   stalls the memory consumer;
+//! * the **PE pipelines** ([`crate::pe::ProcessingGroup`] /
+//!   [`crate::pe::ProcessingElement`]): P1 issues each neighbor-list
+//!   fetch only once its frontier-FIFO pop / bitmap-interval scan has
+//!   actually reached the vertex (concurrent with P2/P3 draining), and
+//!   P2 reads + P3 writes contend for the two
+//!   [`DoublePumpBram`](crate::pe::DoublePumpBram) ports per cycle.
+//!
+//! It re-derives the per-iteration work from the same Algorithm-2
 //! semantics as the functional engine, so its visited/level results are
-//! cross-checked against it in tests.
+//! cross-checked against it in tests: contention moves *when* messages
+//! move, never what the search computes.
 //!
 //! The engine implements [`BfsEngine`]: each [`step`](CycleSim::step)
 //! simulates one iteration over the shared [`SearchState`]; the
-//! level-synchronous loop lives in [`crate::exec::driver`]. The
-//! per-iteration fetch-list construction (the host-side analog of the
-//! P1 scan) consumes a sparse frontier's vertex list directly (the
-//! frontier-FIFO datapath — no bitmap scan at all) and falls back to a
-//! rayon-sharded word-range scan for dense frontiers — per-PG queues
-//! come back in the same ascending vertex order the hardware's scan
-//! produces either way.
+//! level-synchronous loop lives in [`crate::exec::driver`]. An
+//! iteration that fails to drain within
+//! [`SimConfig::max_cycles_per_iter`] returns the typed
+//! [`SimError::NonConvergence`] through the driver instead of aborting
+//! the process.
 //!
 //! Intended for small graphs (RMAT18-class): it steps every cycle. The
 //! analytic [`super::throughput`] simulator covers the big datasets; the
 //! cycle simulator validates it (EXPERIMENTS.md reports the agreement).
 
 use super::config::SimConfig;
+use super::failure::SimError;
 use crate::bfs::Mode;
+use crate::dispatcher::{DispatcherStats, VertexMsg};
 use crate::exec::{BfsEngine, SearchState, StepStats};
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::hbm::axi::{AxiConfig, ReadKind};
 use crate::hbm::map::AddressMap;
 use crate::hbm::pc::PcStats;
 use crate::hbm::subsystem::{HbmSubsystem, HbmSubsystemConfig};
+use crate::pe::{PeStats, ProcessingGroup};
 use crate::sched::ModePolicy;
 use crate::Result;
 use rayon::prelude::*;
-use std::collections::VecDeque;
 
 /// Result of a cycle-accurate run.
 #[derive(Clone, Debug)]
@@ -55,10 +67,15 @@ pub struct CycleResult {
     pub traversed_edges: u64,
     /// GTEPS.
     pub gteps: f64,
-    /// Dispatcher backpressure events observed.
+    /// Dispatcher backpressure events observed (fabric stalls +
+    /// injection rejects).
     pub backpressure: u64,
     /// Per-PC utilization/queue statistics measured over the run.
     pub pc_stats: Vec<PcStats>,
+    /// Dispatcher fabric conflicts/stalls/occupancy over the run.
+    pub dispatcher: DispatcherStats,
+    /// Per-PE pipeline statistics over the run.
+    pub pe_stats: Vec<PeStats>,
 }
 
 /// The cycle-stepped simulator.
@@ -66,14 +83,6 @@ pub struct CycleSim<'g> {
     graph: &'g Graph,
     cfg: SimConfig,
     map: AddressMap,
-}
-
-/// A routed message: neighbor `vid` (push) or parent check (pull, with
-/// the child it may activate).
-#[derive(Clone, Copy, Debug)]
-struct Msg {
-    vid: VertexId,
-    child: VertexId, // == vid in push mode
 }
 
 /// Words per rayon task in the sharded P1 scan. 4096 words = 256 Ki
@@ -101,12 +110,13 @@ impl<'g> CycleSim<'g> {
     }
 
     /// Run BFS from `root` cycle-accurately (fresh state; the shared
-    /// driver loop does the level synchronization).
-    pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> CycleResult {
+    /// driver loop does the level synchronization). Fails with the
+    /// typed [`SimError`] when an iteration exceeds the cycle budget.
+    pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> Result<CycleResult> {
         let mut state = SearchState::new(self.graph.num_vertices());
-        let run = crate::exec::drive(self, &mut state, root, policy);
+        let run = crate::exec::drive(self, &mut state, root, policy)?;
         let seconds = self.cfg.cycles_to_seconds(run.cycles);
-        CycleResult {
+        Ok(CycleResult {
             cycles: run.cycles,
             iter_cycles: run.iter_cycles,
             seconds,
@@ -119,7 +129,9 @@ impl<'g> CycleSim<'g> {
             },
             backpressure: run.backpressure,
             pc_stats: run.pc_stats,
-        }
+            dispatcher: run.dispatcher,
+            pe_stats: run.pe_stats,
+        })
     }
 
     /// Build this iteration's per-PG fetch lists: `(vertex, entries to
@@ -204,6 +216,42 @@ impl<'g> CycleSim<'g> {
         }
         fetches
     }
+
+    /// Fill each PG's P1 issue schedule from its fetch list: the cycle
+    /// at which the owning PE's frontier-FIFO pop (sparse push, one pop
+    /// per PE per cycle) or bitmap-interval scan (dense push / pull,
+    /// [`scan_bits_per_cycle`](crate::pe::PeConfig::scan_bits_per_cycle)
+    /// bits per PE per cycle) actually reaches the vertex. The fetch
+    /// enters the HBM port's pending list only then — P1 runs
+    /// *concurrently* with P2/P3 instead of being charged as an
+    /// end-of-iteration floor.
+    fn schedule_p1(
+        &self,
+        pgs: &mut [ProcessingGroup],
+        fetches: &[Vec<(VertexId, usize)>],
+        sparse_pop: bool,
+    ) {
+        let part = self.cfg.part;
+        let ppg = part.pes_per_pg();
+        let sbpc = self.cfg.pe.scan_bits_per_cycle as u64;
+        for (pgi, pg_fetches) in fetches.iter().enumerate() {
+            let mut sched: Vec<(u64, VertexId, usize)> = Vec::with_capacity(pg_fetches.len());
+            let mut pops = vec![0u64; ppg];
+            for &(v, len) in pg_fetches {
+                let lpe = part.pe_of(v) % ppg;
+                pgs[pgi].pes[lpe].stats.fetches += 1;
+                let ready = if sparse_pop {
+                    pops[lpe] += 1;
+                    pops[lpe]
+                } else {
+                    part.local_index(v) as u64 / sbpc + 1
+                };
+                sched.push((ready, v, len));
+            }
+            sched.sort_unstable_by_key(|&(ready, v, _)| (ready, v));
+            pgs[pgi].issue = sched.into();
+        }
+    }
 }
 
 impl<'g> BfsEngine<'g> for CycleSim<'g> {
@@ -223,27 +271,28 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
     }
 
     /// Simulate one iteration cycle-by-cycle.
-    fn step(&mut self, state: &mut SearchState, mode: Mode) -> StepStats {
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> Result<StepStats> {
         let n = self.graph.num_vertices();
         let part = self.cfg.part;
         let npes = part.num_pes;
         let npgs = part.num_pgs;
+        let ppg = part.pes_per_pg();
         let dw = self.cfg.dw_bytes();
         let sv = self.cfg.sv_bytes;
         let verts_per_beat = (dw / sv).max(1) as usize;
-        let hops = self.cfg.dispatcher.build(npes).hops() as u64;
         let graph = self.graph;
-        let mut backpressure = 0u64;
 
         // ---- Build this iteration's fetch lists per PG (parallel). ----
         let fetches = self.build_fetch_lists(state, mode, verts_per_beat);
 
-        // ---- Cycle loop for the iteration. ----
+        // ---- The three contended subsystems. ----
         // One *shared* HBM subsystem: per-PC bounded queues behind the
         // partition-aware address map. Outstanding depth sized to hide
         // the HBM latency at one beat per cycle (Little's law: >=
         // latency requests in flight; Shuhai's measurement rig uses an
-        // outstanding buffer of 256).
+        // outstanding buffer of 256). Beat completion is paced below
+        // one per cycle once the AXI demand DW·F exceeds the physical
+        // ceiling (wide-bus configs).
         let mut hbm = HbmSubsystem::new(
             self.map.clone(),
             HbmSubsystemConfig {
@@ -255,135 +304,64 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
                 latency_cycles: self.cfg.hbm.latency_cycles,
                 switch: self.cfg.switch_timing,
                 queue_capacity: self.cfg.pc_queue_capacity,
+                beats_per_cycle: self.cfg.hbm_beats_per_cycle(),
             },
         );
-        // Per-PG: stream cursors of lists currently being beaten out.
-        let mut list_queue: Vec<VecDeque<(VertexId, usize)>> = vec![VecDeque::new(); npgs];
-        // Dispatcher input staging and per-PE output FIFOs.
-        let mut in_flight_msgs: VecDeque<(u64, usize, Msg)> = VecDeque::new();
-        let mut pe_fifo: Vec<VecDeque<Msg>> = vec![VecDeque::new(); npes];
-        // Per-PG cursor into the neighbor list being streamed.
-        let mut stream_pos: Vec<usize> = vec![0; npgs];
-        let mut stream_vert: Vec<Option<(VertexId, usize)>> = vec![None; npgs];
+        // The dispatcher fabric: bounded link FIFOs per layer, link
+        // width from Eq 1 (two vertices per PE per cycle). Its final
+        // rank doubles as the per-PE input FIFOs.
+        let mut fabric = self.cfg.dispatcher.build_fabric(
+            npes,
+            self.cfg.xbar_fifo_depth,
+            self.cfg.pe.p2_msgs_per_cycle,
+        );
+        // The processing groups: stream cursors, bounded dispatcher
+        // staging, P1 issue schedules, and the PEs' BRAM-port state.
+        let mut pgs: Vec<ProcessingGroup> = (0..npgs)
+            .map(|id| ProcessingGroup::new(id, ppg, self.cfg.pe, self.cfg.hbm, sv))
+            .collect();
 
-        // P1 prologue floor: a sparse push frontier is popped from the
-        // frontier FIFO at one pop per PE per cycle — no bitmap scan —
-        // while a dense frontier (and pull's visited-map walk) has each
-        // PE scan its bitmap interval (pipelined with fetch issue;
-        // charged as a floor at the end). Matches the analytic model's
-        // P1 pricing so the two fidelity levels stay in agreement.
-        let scan_floor = if mode == Mode::Push && state.current.is_sparse() {
+        let sparse_pop = mode == Mode::Push && state.current.is_sparse();
+        self.schedule_p1(&mut pgs, &fetches, sparse_pop);
+
+        // P1 completion floor: even when the schedule drains early, the
+        // scanner still walks its whole interval (dense) or pops the
+        // whole frontier FIFO (sparse) before the iteration can close.
+        let scan_floor = if sparse_pop {
             state.current.len().div_ceil(npes as u64)
         } else {
             let interval_bits = (n as u64).div_ceil(npes as u64);
             interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64)
         };
 
-        // Seed the per-port request lists.
-        for (pg, pg_fetches) in fetches.iter().enumerate() {
-            for &(v, fetch_len) in pg_fetches {
-                hbm.request_list(pg, part.pe_of(v) % part.pes_per_pg(), fetch_len as u64 * sv);
-                list_queue[pg].push_back((v, fetch_len));
-            }
-        }
-
-        // Pops list_queue until a stream with entries to send is
-        // active (zero-fetch lists have no edge beats, so they must
-        // never occupy the stream slot).
-        let next_stream = |stream_vert: &mut Option<(VertexId, usize)>,
-                           stream_pos: &mut usize,
-                           queue: &mut VecDeque<(VertexId, usize)>| {
-            while stream_vert.is_none() {
-                let Some((v, fetch_len)) = queue.pop_front() else {
-                    break;
-                };
-                if fetch_len > 0 {
-                    *stream_vert = Some((v, fetch_len));
-                    *stream_pos = 0;
-                }
-            }
-        };
-
+        // A PG's staging holds at most two beats' worth of decoded
+        // messages; beyond that its HBM port is gated.
+        let staging_cap = 2 * verts_per_beat;
+        let mut blocked = vec![false; npgs];
         let mut cycle = 0u64;
         let mut newly = 0u64;
-        let mut pe_budget = vec![0u32; npes];
         loop {
             cycle += 1;
-            // Shared HBM subsystem: at most one beat per *PC* per
-            // cycle, routed back to the issuing PG's stream slot.
-            for beat in hbm.tick() {
-                let pg = beat.port;
-                match beat.kind {
-                    ReadKind::Offset => {
-                        // Offset beat: select the next list to stream.
-                        next_stream(
-                            &mut stream_vert[pg],
-                            &mut stream_pos[pg],
-                            &mut list_queue[pg],
-                        );
-                    }
-                    ReadKind::Edges => {
-                        next_stream(
-                            &mut stream_vert[pg],
-                            &mut stream_pos[pg],
-                            &mut list_queue[pg],
-                        );
-                        if let Some((v, fetch_len)) = stream_vert[pg] {
-                            let list = match mode {
-                                Mode::Push => graph.out_neighbors(v),
-                                Mode::Pull => graph.in_neighbors(v),
-                            };
-                            let end = (stream_pos[pg] + verts_per_beat).min(fetch_len);
-                            for &u in &list[stream_pos[pg]..end] {
-                                let msg = match mode {
-                                    Mode::Push => Msg { vid: u, child: u },
-                                    Mode::Pull => Msg { vid: u, child: v },
-                                };
-                                in_flight_msgs.push_back((
-                                    cycle + hops,
-                                    part.pe_of(msg.vid),
-                                    msg,
-                                ));
-                            }
-                            stream_pos[pg] = end;
-                            if end >= fetch_len {
-                                stream_vert[pg] = None;
-                            }
-                        }
-                    }
-                }
-            }
-            // Dispatcher delivery: after `hops` cycles, each output
-            // port delivers up to p2_msgs_per_cycle messages per
-            // cycle — the port width Eq 1 sizes the AXI bus for (two
-            // vertices per PE per cycle, absorbed by the double-pump
-            // BRAM).
-            let port_width = self.cfg.pe.p2_msgs_per_cycle;
-            let mut delivered = vec![0u32; npes];
-            let mut requeue: VecDeque<(u64, usize, Msg)> = VecDeque::new();
-            while let Some((t, pe, msg)) = in_flight_msgs.pop_front() {
-                if t > cycle {
-                    requeue.push_back((t, pe, msg));
-                    continue;
-                }
-                if delivered[pe] >= port_width || pe_fifo[pe].len() >= 64 {
-                    backpressure += u64::from(pe_fifo[pe].len() >= 64);
-                    requeue.push_back((t, pe, msg));
-                    continue;
-                }
-                delivered[pe] += 1;
-                pe_fifo[pe].push_back(msg);
-            }
-            in_flight_msgs = requeue;
+            fabric.begin_cycle();
 
-            // PEs: consume up to bram_ops_per_cycle messages.
+            // ---- PEs: P2 reads + P3 writes contend for the two BRAM
+            // ports; messages pop from the fabric's final rank. ----
             for pe in 0..npes {
-                pe_budget[pe] = self.cfg.pe.bram_ops_per_cycle;
-                while pe_budget[pe] > 0 {
-                    let Some(msg) = pe_fifo[pe].pop_front() else {
+                let pgi = part.pg_of_pe(pe);
+                let lpe = pe % ppg;
+                let elem = &mut pgs[pgi].pes[lpe];
+                elem.begin_cycle();
+                if !elem.retire_pending_writes() {
+                    continue; // carried P3 writes exhausted this cycle's ports
+                }
+                loop {
+                    let Some(&msg) = fabric.peek_output(pe) else {
                         break;
                     };
-                    pe_budget[pe] -= 1;
+                    if !elem.try_check() {
+                        break; // both BRAM ports spent
+                    }
+                    fabric.pop_output(pe);
                     match mode {
                         Mode::Push => {
                             let w = msg.vid as usize;
@@ -392,6 +370,7 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
                                 state.next.insert(msg.vid, graph.csr.degree(msg.vid));
                                 state.levels[w] = state.bfs_level + 1;
                                 newly += 1;
+                                elem.stage_result();
                             }
                         }
                         Mode::Pull => {
@@ -402,33 +381,118 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
                                 state.next.insert(msg.child, graph.csr.degree(msg.child));
                                 state.levels[c] = state.bfs_level + 1;
                                 newly += 1;
+                                elem.stage_result();
                             }
                         }
                     }
                 }
             }
 
-            // Termination: all pipelines drained.
-            let hbm_idle = hbm.idle();
-            let streams_idle = stream_vert.iter().all(|s| s.is_none())
-                && list_queue.iter().all(|q| q.is_empty());
-            let dispatch_idle = in_flight_msgs.is_empty();
-            let pes_idle = pe_fifo.iter().all(|f| f.is_empty());
-            if hbm_idle && streams_idle && dispatch_idle && pes_idle {
+            // ---- Fabric: advance one rank per cycle. ----
+            fabric.tick();
+
+            // ---- Injection: each PG offers its staged messages to the
+            // fabric's entry rank at the AXI width. ----
+            for pg in pgs.iter_mut() {
+                fabric.inject(&mut pg.staging, verts_per_beat as u32);
+            }
+
+            // ---- P1 issue: fetches whose pop/scan is reached enter the
+            // HBM port's pending list (the port serializes actual issue
+            // at one request per cycle). ----
+            for (pgi, pg) in pgs.iter_mut().enumerate() {
+                while let Some(&(ready, v, len)) = pg.issue.front() {
+                    if ready > cycle {
+                        break;
+                    }
+                    pg.issue.pop_front();
+                    hbm.request_list(pgi, part.pe_of(v) % ppg, len as u64 * sv);
+                    // A zero-fetch list has no edge beats, so it must
+                    // never wait in the stream queue (its offset beat
+                    // still costs channel time above).
+                    if len > 0 {
+                        pg.list_queue.push_back((v, len));
+                    }
+                }
+            }
+
+            // ---- HBM: stream beats, gating ports whose staging cannot
+            // absorb a full beat (the dispatcher's back-pressure
+            // reaching the memory side). ----
+            for (pgi, pg) in pgs.iter().enumerate() {
+                blocked[pgi] = pg.staging.len() + verts_per_beat > staging_cap;
+            }
+            for beat in hbm.tick_gated(&blocked) {
+                let pg = &mut pgs[beat.port];
+                match beat.kind {
+                    ReadKind::Offset => {
+                        // Offset beat: select the next list to stream.
+                        pg.select_next_stream();
+                    }
+                    ReadKind::Edges => {
+                        pg.select_next_stream();
+                        if let Some((v, fetch_len)) = pg.stream {
+                            let list = match mode {
+                                Mode::Push => graph.out_neighbors(v),
+                                Mode::Pull => graph.in_neighbors(v),
+                            };
+                            let src_lane = part.pe_of(v);
+                            let end = (pg.stream_pos + verts_per_beat).min(fetch_len);
+                            for &u in &list[pg.stream_pos..end] {
+                                let msg = match mode {
+                                    Mode::Push => VertexMsg { vid: u, child: u },
+                                    Mode::Pull => VertexMsg { vid: u, child: v },
+                                };
+                                pg.staging.push_back((src_lane, msg));
+                            }
+                            pg.stream_pos = end;
+                            if end >= fetch_len {
+                                pg.stream = None;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // ---- Termination: all pipelines drained. ----
+            let mem_idle = hbm.idle() && pgs.iter().all(ProcessingGroup::stream_idle);
+            let pes_idle = pgs
+                .iter()
+                .all(|pg| pg.pes.iter().all(crate::pe::ProcessingElement::idle));
+            if mem_idle && pes_idle && fabric.is_empty() {
                 break;
             }
-            if cycle > 500_000_000 {
-                panic!("cycle sim did not converge");
+            if cycle > self.cfg.max_cycles_per_iter {
+                return Err(SimError::NonConvergence {
+                    iteration: state.bfs_level,
+                    limit: self.cfg.max_cycles_per_iter,
+                }
+                .into());
             }
         }
+
+        // ---- Collect per-PE stats (global PE order). ----
+        let mut pe_stats: Vec<PeStats> = Vec::with_capacity(npes);
+        for pg in pgs.iter_mut() {
+            for elem in pg.pes.iter_mut() {
+                elem.finish_window();
+                let mut s = elem.stats.clone();
+                s.pe = pe_stats.len();
+                pe_stats.push(s);
+            }
+        }
+
         let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
-        StepStats {
+        let backpressure = fabric.stats.stalls + fabric.stats.inject_stalls;
+        Ok(StepStats {
             newly_visited: newly,
             traffic: None,
             cycles: it_cycles,
             backpressure,
             pc_stats: hbm.stats(),
-        }
+            dispatcher: fabric.stats.clone(),
+            pe_stats,
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -447,7 +511,9 @@ mod tests {
     fn cycle_sim_levels_match_reference_push() {
         let g = generators::rmat_graph500(8, 8, 21);
         let root = reference::sample_roots(&g, 1, 21)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Fixed(Mode::Push));
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         let r = reference::bfs(&g, root);
         assert_eq!(res.levels, r.levels);
     }
@@ -456,7 +522,9 @@ mod tests {
     fn cycle_sim_levels_match_reference_hybrid() {
         let g = generators::rmat_graph500(9, 8, 22);
         let root = reference::sample_roots(&g, 1, 22)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+            .run(root, &mut Hybrid::default())
+            .unwrap();
         let r = reference::bfs(&g, root);
         assert_eq!(res.levels, r.levels);
         assert!(res.gteps > 0.0);
@@ -466,8 +534,12 @@ mod tests {
     fn more_pcs_fewer_cycles() {
         let g = generators::rmat_graph500(9, 16, 23);
         let root = reference::sample_roots(&g, 1, 23)[0];
-        let slow = CycleSim::new(&g, SimConfig::u280(1, 2)).run(root, &mut Fixed(Mode::Push));
-        let fast = CycleSim::new(&g, SimConfig::u280(8, 16)).run(root, &mut Fixed(Mode::Push));
+        let slow = CycleSim::new(&g, SimConfig::u280(1, 2))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        let fast = CycleSim::new(&g, SimConfig::u280(8, 16))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         // Fixed per-iteration costs (latency fill, sync) don't scale, so
         // an RMAT9 graph sees ~3x rather than 8x from 8 PCs.
         assert!(
@@ -486,9 +558,12 @@ mod tests {
         let g = generators::rmat_graph500(9, 8, 31);
         let root = reference::sample_roots(&g, 1, 31)[0];
         let truth = reference::bfs(&g, root);
-        let free = CycleSim::new(&g, SimConfig::u280(8, 8)).run(root, &mut Fixed(Mode::Push));
+        let free = CycleSim::new(&g, SimConfig::u280(8, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         let contended = CycleSim::new(&g, SimConfig::u280(8, 8).with_hbm_pcs(1))
-            .run(root, &mut Fixed(Mode::Push));
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         assert_eq!(free.levels, truth.levels);
         assert_eq!(contended.levels, truth.levels);
         assert!(
@@ -509,7 +584,9 @@ mod tests {
     fn pc_stats_are_measured_and_sane() {
         let g = generators::rmat_graph500(9, 8, 22);
         let root = reference::sample_roots(&g, 1, 22)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+            .run(root, &mut Hybrid::default())
+            .unwrap();
         assert_eq!(res.pc_stats.len(), 4);
         assert!(res.pc_stats.iter().any(|s| s.beats > 0));
         for s in &res.pc_stats {
@@ -520,16 +597,64 @@ mod tests {
     }
 
     #[test]
+    fn dispatcher_and_pe_stats_are_measured() {
+        // Push-only: every out-neighbor of every reached vertex is
+        // routed through the fabric exactly once, so delivered ==
+        // Graph500 traversed edges; every delivery is one P2 check.
+        let g = generators::rmat_graph500(9, 8, 41);
+        let root = reference::sample_roots(&g, 1, 41)[0];
+        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        assert_eq!(res.dispatcher.delivered, res.traversed_edges);
+        assert!(res.dispatcher.cycles > 0);
+        assert!(res.dispatcher.max_occupancy > 0);
+        assert_eq!(res.pe_stats.len(), 8);
+        let checked: u64 = res.pe_stats.iter().map(|s| s.msgs_checked).sum();
+        assert_eq!(checked, res.traversed_edges);
+        let written: u64 = res.pe_stats.iter().map(|s| s.results_written).sum();
+        let reached = res
+            .levels
+            .iter()
+            .filter(|&&l| l != crate::bfs::INF)
+            .count() as u64;
+        // One P3 write per discovery (root is never written).
+        assert_eq!(written, reached - 1);
+        // Fetches: one per reached vertex (each enters the frontier once).
+        let fetches: u64 = res.pe_stats.iter().map(|s| s.fetches).sum();
+        assert_eq!(fetches, reached);
+    }
+
+    #[test]
+    fn tiny_cycle_budget_fails_typed_not_aborts() {
+        let g = generators::rmat_graph500(8, 8, 21);
+        let root = reference::sample_roots(&g, 1, 21)[0];
+        let mut cfg = SimConfig::u280(2, 4);
+        cfg.max_cycles_per_iter = 3; // no iteration can drain this fast
+        let err = CycleSim::new(&g, cfg)
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap_err();
+        match err.downcast_ref::<SimError>() {
+            Some(SimError::NonConvergence { limit, .. }) => assert_eq!(*limit, 3),
+            other => panic!("expected NonConvergence, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn unpartitioned_placement_loses_in_the_cycle_sim() {
         // Fig 11, cycle-accurate: packing every shard into PC0 funnels
         // all eight PGs' traffic through one queue plus the lateral
         // switch, and must cost real cycles.
         let g = generators::rmat_graph500(9, 8, 17);
         let root = reference::sample_roots(&g, 1, 17)[0];
-        let part = CycleSim::new(&g, SimConfig::u280(8, 8)).run(root, &mut Fixed(Mode::Push));
+        let part = CycleSim::new(&g, SimConfig::u280(8, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         let mut base_cfg = SimConfig::u280(8, 8);
         base_cfg.placement = crate::sim::config::Placement::Unpartitioned;
-        let base = CycleSim::new(&g, base_cfg).run(root, &mut Fixed(Mode::Push));
+        let base = CycleSim::new(&g, base_cfg)
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
         assert_eq!(part.levels, base.levels, "placement must not change results");
         assert!(
             base.cycles > part.cycles,
@@ -567,5 +692,29 @@ mod tests {
         }
         let total: usize = sparse.iter().map(Vec::len).sum();
         assert_eq!(total, state.current.len() as usize);
+    }
+
+    #[test]
+    fn small_link_fifos_backpressure_but_stay_exact() {
+        // Depth-2 link FIFOs force fabric stalls all the way into the
+        // HBM stream; the search result must not move.
+        let g = generators::rmat_graph500(9, 16, 51);
+        let root = reference::sample_roots(&g, 1, 51)[0];
+        let truth = reference::bfs(&g, root);
+        let deep = CycleSim::new(&g, SimConfig::u280(2, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        let shallow = CycleSim::new(&g, SimConfig::u280(2, 8).with_xbar_fifo_depth(2))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        assert_eq!(deep.levels, truth.levels);
+        assert_eq!(shallow.levels, truth.levels);
+        assert_eq!(deep.dispatcher.delivered, shallow.dispatcher.delivered);
+        assert!(
+            shallow.cycles + 64 >= deep.cycles,
+            "shallow FIFOs cannot be meaningfully faster: {} vs {}",
+            shallow.cycles,
+            deep.cycles
+        );
     }
 }

@@ -1,4 +1,6 @@
-//! Failure / degradation injection (robustness study, extension).
+//! Simulation failures: the typed errors a timing simulation can
+//! surface, plus failure/degradation *injection* (robustness study,
+//! extension).
 //!
 //! HBM PCs do not fail outright on a healthy board, but effective
 //! per-PC bandwidth varies (temperature throttling, refresh storms,
@@ -12,6 +14,38 @@ use super::config::SimConfig;
 use super::results::{Bottleneck, IterBreakdown, SimResult};
 use crate::bfs::bitmap::BfsRun;
 use crate::bfs::traffic::IterTraffic;
+
+/// Typed failure of a timing simulation. Surfaced as a failed
+/// [`Result`](crate::Result) from [`crate::exec::drive`] — a
+/// mis-configured or diverging simulation fails the run, it does not
+/// abort the process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimError {
+    /// The cycle-stepped simulator exceeded its per-iteration cycle
+    /// budget ([`SimConfig::max_cycles_per_iter`]) without draining its
+    /// pipelines — a deadlocked or runaway configuration rather than a
+    /// slow one.
+    NonConvergence {
+        /// BFS iteration (0-based) that failed to drain.
+        iteration: u32,
+        /// The cycle budget that was exceeded.
+        limit: u64,
+    },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::NonConvergence { iteration, limit } => write!(
+                f,
+                "cycle simulation did not converge: iteration {iteration} still \
+                 undrained after {limit} cycles"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// A bandwidth derate applied to specific PCs.
 #[derive(Clone, Debug, Default)]
@@ -119,6 +153,8 @@ impl DegradedSim {
             gteps: run.traversed_edges as f64 / seconds.max(1e-30) / 1e9,
             aggregate_bw: bytes as f64 / seconds.max(1e-30),
             pc_stats: Vec::new(),
+            dispatcher: Default::default(),
+            pe_stats: Vec::new(),
         }
     }
 }
@@ -127,6 +163,20 @@ impl DegradedSim {
 mod tests {
     use super::*;
     use crate::bfs::bitmap::run_bfs;
+
+    #[test]
+    fn sim_error_displays_and_downcasts() {
+        let e = SimError::NonConvergence {
+            iteration: 3,
+            limit: 1000,
+        };
+        assert!(e.to_string().contains("iteration 3"));
+        assert!(e.to_string().contains("1000"));
+        // Through anyhow (the crate Result), the typed error survives.
+        let any: crate::Result<()> = Err(e.clone().into());
+        let back = any.unwrap_err();
+        assert_eq!(back.downcast_ref::<SimError>(), Some(&e));
+    }
     use crate::bfs::reference;
     use crate::graph::generators;
     use crate::sched::Hybrid;

@@ -6,14 +6,23 @@
 //!   Scales to the full Table-I datasets.
 //!   [`throughput::ThroughputEngine`] packages it as a
 //!   [`crate::exec::BfsEngine`].
-//! * [`cycle`] — cycle-stepped, FIFO-accurate simulator of the shared
-//!   HBM subsystem ([`crate::hbm::HbmSubsystem`]: bounded per-PC
-//!   queues, switch-crossing latency, a partition-aware address map),
-//!   dispatcher and PEs, also a [`crate::exec::BfsEngine`]. Used on
-//!   small graphs (RMAT18-*) to validate the analytic model and for
-//!   dispatcher/contention ablations.
+//! * [`cycle`] — cycle-stepped, FIFO-accurate composition of the three
+//!   contended subsystems: the shared HBM
+//!   ([`crate::hbm::HbmSubsystem`]: bounded per-PC queues, paced
+//!   beats, switch-crossing latency, a partition-aware address map),
+//!   the dispatcher fabric
+//!   ([`crate::dispatcher::DispatcherFabric`]: bounded link FIFOs,
+//!   port arbitration, back-pressure that gates the HBM ports), and
+//!   the PE pipelines ([`crate::pe::ProcessingGroup`]: concurrent P1
+//!   issue, BRAM-port contention in P2/P3). Also a
+//!   [`crate::exec::BfsEngine`]. Used on small graphs (RMAT18-*) to
+//!   validate the analytic model and for dispatcher/contention
+//!   ablations.
 //! * [`config`] / [`results`] — shared configuration and result types,
-//!   including the per-PC utilization stats both simulators report.
+//!   including the per-PC, per-PE, and dispatcher stats the simulators
+//!   report.
+//! * [`failure`] — typed simulation errors ([`failure::SimError`])
+//!   plus the degraded-PC straggler study.
 
 pub mod config;
 pub mod throughput;
@@ -22,6 +31,7 @@ pub mod results;
 pub mod failure;
 
 pub use config::{DispatcherKind, Placement, SimConfig};
+pub use failure::SimError;
 pub use results::{IterBreakdown, SimResult};
 pub use throughput::{ThroughputEngine, ThroughputSim};
 pub use cycle::CycleSim;

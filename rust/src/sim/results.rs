@@ -4,7 +4,9 @@
 //! ([`PcStats`], re-exported from [`crate::hbm`]).
 
 use crate::bfs::Mode;
+use crate::dispatcher::DispatcherStats;
 use crate::hbm::pc::PcStats;
+use crate::pe::PeStats;
 
 /// Which pipeline phase bounded an iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +73,13 @@ pub struct SimResult {
     /// engine's shared subsystem, derived from per-iteration traffic by
     /// the analytic model (whose queue-depth fields stay 0).
     pub pc_stats: Vec<PcStats>,
+    /// Dispatcher fabric conflicts/stalls/occupancy (measured by the
+    /// cycle engine; all-zero for the analytic model, which has no
+    /// stepped fabric).
+    pub dispatcher: DispatcherStats,
+    /// Per-PE pipeline stats (measured by the cycle engine; empty
+    /// otherwise).
+    pub pe_stats: Vec<PeStats>,
 }
 
 impl SimResult {
@@ -83,6 +92,8 @@ impl SimResult {
         seconds: f64,
         traversed_edges: u64,
         pc_stats: Vec<PcStats>,
+        dispatcher: DispatcherStats,
+        pe_stats: Vec<PeStats>,
     ) -> Self {
         Self {
             graph: graph.to_string(),
@@ -97,7 +108,15 @@ impl SimResult {
             },
             aggregate_bw: 0.0,
             pc_stats,
+            dispatcher,
+            pe_stats,
         }
+    }
+
+    /// Total BRAM-port saturation cycles across the PEs (0 unless the
+    /// cycle engine measured the pipelines).
+    pub fn total_bram_stalls(&self) -> u64 {
+        self.pe_stats.iter().map(|s| s.bram_stall_cycles).sum()
     }
 
     /// Mean per-PC utilization (0 when no PC stats were recorded).
@@ -157,8 +176,18 @@ impl SimResult {
                 self.max_pc_queue_depth()
             )
         };
+        let xbar = if self.dispatcher.cycles == 0 {
+            String::new()
+        } else {
+            format!(
+                ", xbar conflicts/stalls {}/{} (occ avg {:.1})",
+                self.dispatcher.conflicts,
+                self.dispatcher.stalls + self.dispatcher.inject_stalls,
+                self.dispatcher.avg_occupancy()
+            )
+        };
         format!(
-            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}{}",
+            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}{}{}",
             self.graph,
             self.iters.len(),
             self.seconds * 1e3,
@@ -167,7 +196,8 @@ impl SimResult {
             m,
             p,
             d,
-            pc
+            pc,
+            xbar
         )
     }
 }
@@ -201,7 +231,9 @@ mod tests {
             gteps: 1e-3,
             aggregate_bw: 3e5,
             pc_stats: Vec::new(),
-            };
+            dispatcher: DispatcherStats::default(),
+            pe_stats: Vec::new(),
+        };
         assert_eq!(r.total_bytes(), 300);
         assert_eq!(r.bottleneck_counts(), (2, 1, 0));
         assert!(r.summary().contains("GTEPS"));
@@ -229,6 +261,8 @@ mod tests {
             gteps: 1e-5,
             aggregate_bw: 0.0,
             pc_stats: vec![mk_pc(0, 80), mk_pc(1, 40)],
+            dispatcher: DispatcherStats::default(),
+            pe_stats: Vec::new(),
         };
         assert!((r.avg_pc_utilization() - 0.6).abs() < 1e-12);
         assert!((r.max_pc_utilization() - 0.8).abs() < 1e-12);

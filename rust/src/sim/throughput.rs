@@ -21,6 +21,7 @@ use crate::bfs::bitmap::BfsRun;
 use crate::bfs::traffic::IterTraffic;
 use crate::exec::{BfsEngine, SearchState, StepStats};
 use crate::graph::Graph;
+use crate::pe::{P1Work, ProcessingGroup};
 
 /// Compute-side cycle bounds of one iteration (see
 /// [`ThroughputSim::probe_iteration`]).
@@ -36,12 +37,21 @@ pub struct IterProbe {
 pub struct ThroughputSim {
     /// Configuration in effect.
     pub cfg: SimConfig,
+    /// The processing groups this config implies — the same structure
+    /// the cycle simulator ticks; here their closed-form stage costs
+    /// ([`ProcessingGroup::compute_cycles`]) price the compute phase.
+    pgs: Vec<ProcessingGroup>,
 }
 
 impl ThroughputSim {
     /// New simulator over a config.
     pub fn new(cfg: SimConfig) -> Self {
-        Self { cfg }
+        let pgs = (0..cfg.part.num_pgs)
+            .map(|id| {
+                ProcessingGroup::new(id, cfg.part.pes_per_pg(), cfg.pe, cfg.hbm, cfg.sv_bytes)
+            })
+            .collect();
+        Self { cfg, pgs }
     }
 
     /// Effective per-PC bandwidth in bytes/cycle for this iteration.
@@ -128,33 +138,39 @@ impl ThroughputSim {
     fn pe_cycles(&self, it: &IterTraffic, n_vertices: u64) -> u64 {
         let cfg = &self.cfg;
         let npes = cfg.part.num_pes as u64;
-        let scan = if it.frontier_fifo_pops > 0 {
-            it.frontier_fifo_pops.div_ceil(npes)
+        let p1 = if it.frontier_fifo_pops > 0 {
+            P1Work::FifoPops(it.frontier_fifo_pops.div_ceil(npes))
         } else {
             let bits = if it.scanned_bits > 0 {
                 it.scanned_bits
             } else {
                 n_vertices
             };
-            bits.div_ceil(npes)
-                .div_ceil(cfg.pe.scan_bits_per_cycle as u64)
+            P1Work::ScanBits(bits.div_ceil(npes))
         };
-        // Hits are attributed proportionally to received messages.
+        // Hits are attributed proportionally to received messages; the
+        // per-PG bound comes from the shared ProcessingGroup structure
+        // (slowest PE of the slowest group). Traffic recorded under a
+        // smaller partitioning (the single-channel edge-centric
+        // baseline) reads as zero for the PEs it has no entry for.
         let total_recv: u64 = it.per_pe_recv.iter().sum();
-        let max_pe = it
-            .per_pe_recv
-            .iter()
-            .map(|&msgs| {
-                let hits = if total_recv == 0 {
-                    0
-                } else {
-                    (it.newly_visited as u128 * msgs as u128 / total_recv as u128) as u64
-                };
-                (msgs + hits).div_ceil(cfg.pe.bram_ops_per_cycle as u64)
-            })
-            .max()
-            .unwrap_or(0);
-        scan.max(max_pe)
+        let ppg = cfg.part.pes_per_pg();
+        let mut worst = 0u64;
+        for (pgi, pg) in self.pgs.iter().enumerate() {
+            let work: Vec<(P1Work, u64, u64)> = (0..ppg)
+                .map(|l| {
+                    let msgs = it.per_pe_recv.get(pgi * ppg + l).copied().unwrap_or(0);
+                    let hits = if total_recv == 0 {
+                        0
+                    } else {
+                        (it.newly_visited as u128 * msgs as u128 / total_recv as u128) as u64
+                    };
+                    (p1, msgs, hits)
+                })
+                .collect();
+            worst = worst.max(pg.compute_cycles(&work));
+        }
+        worst
     }
 
     /// Dispatcher cycles: busiest output port. Port width matches Eq 1's
@@ -249,6 +265,8 @@ impl ThroughputSim {
                 0.0
             },
             pc_stats,
+            dispatcher: Default::default(),
+            pe_stats: Vec::new(),
         }
     }
 }
@@ -294,7 +312,9 @@ impl<'g> ThroughputEngine<'g> {
         root: crate::graph::VertexId,
         policy: &mut dyn crate::sched::ModePolicy,
     ) -> (BfsRun, SimResult) {
-        let run = self.run(root, policy);
+        let run = self
+            .run(root, policy)
+            .expect("the delegated bitmap step is infallible");
         let res = ThroughputSim::new(self.cfg.clone()).simulate(
             &run,
             &self.graph_name,
@@ -321,7 +341,11 @@ impl<'g> BfsEngine<'g> for ThroughputEngine<'g> {
         self.cfg.part
     }
 
-    fn step(&mut self, state: &mut SearchState, mode: crate::bfs::Mode) -> StepStats {
+    fn step(
+        &mut self,
+        state: &mut SearchState,
+        mode: crate::bfs::Mode,
+    ) -> crate::Result<StepStats> {
         self.inner.step(state, mode)
     }
 
@@ -351,6 +375,8 @@ pub fn time_run(
             cfg.cycles_to_seconds(run.cycles),
             run.traversed_edges,
             run.pc_stats.clone(),
+            run.dispatcher.clone(),
+            run.pe_stats.clone(),
         ))
     } else {
         anyhow::bail!(

@@ -72,7 +72,7 @@ fn cycle_sim_matches_reference() {
                 &mut Fixed(Mode::Push) as &mut dyn ModePolicy,
                 &mut Hybrid::default(),
             ] {
-                let res = CycleSim::new(g, cfg.clone()).run(root, policy);
+                let res = CycleSim::new(g, cfg.clone()).run(root, policy).unwrap();
                 assert_eq!(
                     res.levels, truth.levels,
                     "graph={} pcs={pcs} pes={pes}",
@@ -94,7 +94,7 @@ fn traversed_edges_equal_across_engines() {
     // GTEPS numerator is mode-independent (each edge once).
     assert_eq!(a.traversed_edges, b.traversed_edges);
     assert_eq!(a.traversed_edges, c.traversed_edges);
-    let cyc = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default());
+    let cyc = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default()).unwrap();
     assert_eq!(cyc.traversed_edges, a.traversed_edges);
 }
 

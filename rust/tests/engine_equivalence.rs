@@ -61,7 +61,7 @@ fn all_engines_match_reference_across_random_graphs() {
             for engine_name in ENGINE_NAMES {
                 for policy in policies().iter_mut() {
                     let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
-                    let run = engine.run(root, policy.as_mut());
+                    let run = engine.run(root, policy.as_mut()).expect(engine_name);
                     assert_eq!(
                         run.levels,
                         truth.levels,
@@ -99,7 +99,8 @@ fn shared_state_reused_across_roots_and_engines_is_clean() {
         let truth = reference::bfs(&g, root);
         for engine_name in ENGINE_NAMES {
             let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
-            let run = drive(engine.as_mut(), &mut state, root, &mut Hybrid::default());
+            let run =
+                drive(engine.as_mut(), &mut state, root, &mut Hybrid::default()).unwrap();
             assert_eq!(run.levels, truth.levels, "engine={engine_name} root={root}");
         }
     }
@@ -123,7 +124,7 @@ fn shared_state_survives_representation_round_trips() {
             inner: Hybrid::default(),
             repr,
         };
-        let run = drive(engine.as_mut(), &mut state, root, &mut policy);
+        let run = drive(engine.as_mut(), &mut state, root, &mut policy).unwrap();
         assert_eq!(run.levels, truth.levels, "root={root} repr={}", repr.label());
         assert_eq!(run.reached, truth.reached);
     }
@@ -164,8 +165,54 @@ fn engines_agree_on_degenerate_graphs() {
         let truth = reference::bfs(&g, 0);
         for engine_name in ENGINE_NAMES {
             let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
-            let run = engine.run(0, &mut Hybrid::default());
+            let run = engine.run(0, &mut Hybrid::default()).expect(engine_name);
             assert_eq!(run.levels, truth.levels, "engine={engine_name} graph={}", g.name);
+        }
+    }
+}
+
+
+/// The dispatcher axis: the cycle engine's levels must be bit-identical
+/// to the reference under every fabric — full crossbar, the paper's
+/// multi-layer factorizations, a degenerate single-layer "multi-layer"
+/// — and under both starved and roomy link FIFO depths. Timing moves;
+/// results must not.
+#[test]
+fn cycle_engine_bit_identical_across_dispatcher_fabrics() {
+    use scalabfs::sim::config::DispatcherKind;
+    let g = generators::rmat_graph500(9, 8, 77);
+    let root = reference::sample_roots(&g, 1, 77)[0];
+    let truth = reference::bfs(&g, root);
+    // 16-PE fabrics (4 PCs), then the paper's 64-PE three-layer config.
+    let cases: Vec<(usize, usize, DispatcherKind)> = vec![
+        (4, 16, DispatcherKind::Full),
+        (4, 16, DispatcherKind::MultiLayer(vec![4, 4])),
+        (4, 16, DispatcherKind::MultiLayer(vec![2, 2, 2, 2])),
+        (4, 16, DispatcherKind::MultiLayer(vec![16])), // degenerate single layer
+        (4, 64, DispatcherKind::MultiLayer(vec![4, 4, 4])),
+        (4, 64, DispatcherKind::Full),
+    ];
+    let mut prev_delivered: Option<u64> = None;
+    for (pcs, pes, kind) in cases {
+        for depth in [2usize, 64] {
+            let cfg = SimConfig::u280(pcs, pes)
+                .with_dispatcher(kind.clone())
+                .with_xbar_fifo_depth(depth);
+            let mut engine = make_engine("cycle", &g, &cfg).expect("cycle");
+            let run = engine
+                .run(root, &mut Hybrid::default())
+                .expect("cycle run");
+            assert_eq!(
+                run.levels, truth.levels,
+                "fabric {kind:?} depth {depth} diverged"
+            );
+            assert_eq!(run.reached, truth.reached);
+            assert!(run.dispatcher.delivered > 0, "fabric saw no messages");
+            // Message count is a property of the search, not the fabric.
+            if let Some(d) = prev_delivered {
+                assert_eq!(run.dispatcher.delivered, d, "fabric {kind:?} depth {depth}");
+            }
+            prev_delivered = Some(run.dispatcher.delivered);
         }
     }
 }

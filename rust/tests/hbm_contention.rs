@@ -80,7 +80,7 @@ fn cycle_levels_bit_identical_under_every_memory_model() {
     configs.push(("unpartitioned", base));
     let mut cycles = Vec::new();
     for (name, cfg) in configs {
-        let res = CycleSim::new(&g, cfg).run(root, &mut Hybrid::default());
+        let res = CycleSim::new(&g, cfg).run(root, &mut Hybrid::default()).unwrap();
         assert_eq!(res.levels, truth.levels, "{name} diverged");
         assert!(res.cycles > 0);
         cycles.push((name, res.cycles));
@@ -103,8 +103,8 @@ fn cycle_and_analytic_agree_on_the_contention_direction() {
     let root = reference::sample_roots(&g, 1, 43)[0];
     let slow_cfg = SimConfig::u280(4, 4).with_hbm_pcs(1);
     let fast_cfg = SimConfig::u280(4, 4);
-    let cyc_slow = CycleSim::new(&g, slow_cfg.clone()).run(root, &mut Hybrid::default());
-    let cyc_fast = CycleSim::new(&g, fast_cfg.clone()).run(root, &mut Hybrid::default());
+    let cyc_slow = CycleSim::new(&g, slow_cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
+    let cyc_fast = CycleSim::new(&g, fast_cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
     let cyc_ratio = cyc_slow.cycles as f64 / cyc_fast.cycles as f64;
     let (_, thr_slow) =
         scalabfs::sim::throughput::simulate_bfs(&g, slow_cfg, root, &mut Hybrid::default());

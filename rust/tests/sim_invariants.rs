@@ -117,7 +117,7 @@ fn analytic_and_cycle_sims_agree_within_2x() {
         let g = generators::rmat_graph500(11, 16, seed);
         let root = reference::sample_roots(&g, 1, seed)[0];
         let cfg = SimConfig::u280(4, 8);
-        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default());
+        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
         let (_, thr) = simulate_bfs(&g, cfg, root, &mut Hybrid::default());
         let ratio = cyc.cycles as f64 / thr.total_cycles as f64;
         assert!(
