@@ -8,11 +8,12 @@
 //! meaningful. Used to drive the optimization loop in EXPERIMENTS.md
 //! §Perf.
 
+use scalabfs::bfs::bitmap::{BitmapEngine, TrafficConfig};
 use scalabfs::bfs::reference;
 use scalabfs::bfs::Mode;
 use scalabfs::exec::{BfsEngine, SearchState};
 use scalabfs::graph::{generators, partition, Partitioning};
-use scalabfs::sched::{Fixed, Hybrid};
+use scalabfs::sched::{Fixed, Hybrid, ReprPolicy, WithRepr};
 use scalabfs::sim::config::SimConfig;
 use scalabfs::sim::throughput::ThroughputSim;
 
@@ -82,6 +83,61 @@ fn main() {
         let _ = engine.run_with_state(&mut state, root, &mut Fixed(Mode::Pull));
     });
     println!("{:>64}", format!("-> {:.1} M edges/s", edges as f64 / t / 1e6));
+
+    // The word-parallel host path vs its scalar oracle, forced dense so
+    // the AND-scan engages every iteration, plus the P1 attribution
+    // counters it reports through IterTraffic.
+    let base = TrafficConfig::for_partitioning(part);
+    let pull_dense = || WithRepr {
+        inner: Fixed(Mode::Pull),
+        repr: ReprPolicy::Dense,
+    };
+    let mut scalar_engine = BitmapEngine::new(&g, part).with_config(base.host_scalar());
+    let t_scalar = time("pull, scalar per-vertex (dense frontier)", 5, || {
+        let _ = scalar_engine.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    let mut word_engine = BitmapEngine::new(&g, part).with_config(base);
+    let t_word = time("pull, word-parallel AND-scan (dense)", 5, || {
+        let _ = word_engine.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    println!(
+        "{:>64}",
+        format!("-> word/scalar pull speedup {:.2}x", t_scalar / t_word)
+    );
+    let run = word_engine
+        .run_with_state(&mut state, root, &mut pull_dense())
+        .expect("bitmap step is infallible");
+    let p1_words: u64 = run.traffic.iters.iter().map(|i| i.p1_words_scanned).sum();
+    let p1_bits: u64 = run.traffic.iters.iter().map(|i| i.p1_bits_set).sum();
+    println!(
+        "{:>64}",
+        format!(
+            "-> P1 scanned {p1_words} words -> {p1_bits} work bits ({:.2} bits/word)",
+            p1_bits as f64 / p1_words.max(1) as f64
+        )
+    );
+
+    let push_dense = || WithRepr {
+        inner: Fixed(Mode::Push),
+        repr: ReprPolicy::Dense,
+    };
+    let mut direct_engine = BitmapEngine::new(&g, part).with_config(base.with_push_tiling(None));
+    let t_direct = time("push, dense direct (forced dense)", 5, || {
+        let _ = direct_engine.run_with_state(&mut state, root, &mut push_dense());
+    });
+    let tile_bits = scale.saturating_sub(3);
+    let mut tiled_engine =
+        BitmapEngine::new(&g, part).with_config(base.with_push_tiling(Some(tile_bits)));
+    let t_tiled = time("push, dense tiled (forced dense)", 5, || {
+        let _ = tiled_engine.run_with_state(&mut state, root, &mut push_dense());
+    });
+    println!(
+        "{:>64}",
+        format!(
+            "-> direct/tiled push ratio {:.2}x (2^{tile_bits}-vertex tiles)",
+            t_direct / t_tiled
+        )
+    );
 
     let t = time("bitmap engine, hybrid (state reused)", 5, || {
         let _ = engine.run_with_state(&mut state, root, &mut Hybrid::default());

@@ -47,6 +47,19 @@ pub struct IterTraffic {
     /// Pull mode only: results forwarded PE->PE over the soft crossbar
     /// (child vertices whose parent check succeeded on a remote PE).
     pub crossbar_results: u64,
+    /// Host-attribution counter: 64-bit words the word-parallel P1 scan
+    /// examined (frontier words in dense push, visited words in pull).
+    /// 0 on the scalar host datapath and on sparse (FIFO) iterations.
+    /// Purely diagnostic — **no timing model consumes it** (the sims
+    /// price P1 from `scanned_bits` / `frontier_fifo_pops`), so the
+    /// word-parallel host paths cannot perturb simulated cycle counts.
+    pub p1_words_scanned: u64,
+    /// Host-attribution counter: work bits the word-parallel P1 scan
+    /// yielded (frontier members in dense push, unvisited candidates in
+    /// pull). Together with `p1_words_scanned` this attributes the
+    /// AND-scan win: words examined vs. bits that became work. 0 on the
+    /// scalar datapath; diagnostic only, like `p1_words_scanned`.
+    pub p1_bits_set: u64,
 }
 
 impl IterTraffic {
@@ -66,6 +79,8 @@ impl IterTraffic {
             per_pg_offset_bytes: vec![0; num_pgs],
             per_pg_edge_bytes: vec![0; num_pgs],
             crossbar_results: 0,
+            p1_words_scanned: 0,
+            p1_bits_set: 0,
         }
     }
 

@@ -1,0 +1,736 @@
+//! The perf-trajectory harness: run the repo's measured-mode benchmarks
+//! in-process and persist them as a `BENCH_<pr>.json` document, plus the
+//! comparator the CI regression gate runs against the committed
+//! predecessor.
+//!
+//! # Document schema (`scalabfs-bench-v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "scalabfs-bench-v1",
+//!   "pr": 6,
+//!   "mode": "full" | "smoke",
+//!   "provenance": "measured" | "expected",
+//!   "note": "...optional free text...",
+//!   "sections": [
+//!     { "name": "hotpath",
+//!       "metrics": [
+//!         { "name": "pull_word_speedup_rmat18", "value": 1.6,
+//!           "unit": "x", "kind": "ratio", "floor": 0.95 }, ...
+//!       ] }, ...
+//!   ]
+//! }
+//! ```
+//!
+//! Metric `kind` drives the comparison policy (see [`compare`]):
+//!
+//! * `"exact"` — deterministic simulator/counter outputs (sim cycles,
+//!   sim GTEPS, P1 scan counters). Machine-independent, so any drift
+//!   against a measured same-mode baseline is a regression.
+//! * `"ratio"` — host speedups (word/scalar, adaptive/dense,
+//!   parallel/serial). Machine-dependent magnitude but stable
+//!   direction: gated by the per-metric absolute `floor` always, and by
+//!   the tolerance band against a measured same-mode baseline.
+//! * `"wall"` — raw wall-clock / host rates. Informational only; never
+//!   gated (CI runners are not a stable perf reference).
+//!
+//! `provenance` records how the numbers were obtained: `"measured"`
+//! means this harness produced them on some machine; `"expected"` marks
+//! an authored bootstrap baseline (values are design expectations, not
+//! measurements). The comparator only applies band comparisons against
+//! a *measured* baseline of the same mode; floors apply to every new
+//! run regardless, so the gate is meaningful from the first PR.
+//!
+//! Metric names embed the workload (`..._rmat18`, `..._chain20`), so a
+//! smoke run can never be accidentally banded against a full baseline.
+
+use crate::bfs::batch::BatchDriver;
+use crate::bfs::bitmap::{BitmapEngine, TrafficConfig};
+use crate::bfs::{reference, Mode};
+use crate::coordinator::report::Json;
+use crate::exec::{BfsEngine, SearchState};
+use crate::graph::{generators, Graph, Partitioning};
+use crate::sched::{Fixed, Hybrid, ReprPolicy, WithRepr};
+use crate::sim::config::SimConfig;
+use crate::sim::cycle::CycleSim;
+use crate::sim::throughput::ThroughputSim;
+use crate::Result;
+use std::time::Instant;
+
+/// Schema tag every `BENCH_*.json` carries.
+pub const SCHEMA: &str = "scalabfs-bench-v1";
+
+/// Harness options.
+pub struct BenchOptions {
+    /// Smoke mode: CI-sized workloads (seconds, not minutes).
+    pub smoke: bool,
+    /// PR number stamped into the document.
+    pub pr: u32,
+}
+
+/// One measured (or expected) quantity.
+struct Metric {
+    name: String,
+    value: Option<f64>,
+    unit: &'static str,
+    kind: &'static str,
+    floor: Option<f64>,
+}
+
+impl Metric {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("value", self.value.map_or(Json::Null, Json::Num)),
+            ("unit", Json::Str(self.unit.into())),
+            ("kind", Json::Str(self.kind.into())),
+            ("floor", self.floor.map_or(Json::Null, Json::Num)),
+        ])
+    }
+}
+
+fn wall(name: String, value: f64, unit: &'static str) -> Metric {
+    Metric {
+        name,
+        value: Some(value),
+        unit,
+        kind: "wall",
+        floor: None,
+    }
+}
+
+fn exact(name: String, value: f64, unit: &'static str) -> Metric {
+    Metric {
+        name,
+        value: Some(value),
+        unit,
+        kind: "exact",
+        floor: None,
+    }
+}
+
+fn ratio(name: String, value: f64, floor: f64) -> Metric {
+    Metric {
+        name,
+        value: Some(value),
+        unit: "x",
+        kind: "ratio",
+        floor: Some(floor),
+    }
+}
+
+/// A named group of metrics.
+struct Section {
+    name: &'static str,
+    metrics: Vec<Metric>,
+}
+
+impl Section {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.into())),
+            ("metrics", Json::Arr(self.metrics.iter().map(Metric::to_json).collect())),
+        ])
+    }
+}
+
+/// Best-of-`reps` wall time (one extra warm-up call).
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn pull_dense() -> WithRepr<Fixed> {
+    WithRepr {
+        inner: Fixed(Mode::Pull),
+        repr: ReprPolicy::Dense,
+    }
+}
+
+fn push_dense() -> WithRepr<Fixed> {
+    WithRepr {
+        inner: Fixed(Mode::Push),
+        repr: ReprPolicy::Dense,
+    }
+}
+
+/// `perf_hotpath` in measured mode: scalar-vs-word pull, direct-vs-tiled
+/// dense push, hybrid end-to-end, and the P1 scan attribution counters.
+fn hotpath_section(smoke: bool) -> Section {
+    let (scale, reps) = if smoke { (14u32, 3usize) } else { (18, 5) };
+    let tag = format!("rmat{scale}");
+    println!("[bench] hotpath: RMAT-{scale} d16 ...");
+    let g = generators::rmat_graph500(scale, 16, 1);
+    let edges = g.num_edges();
+    let root = reference::sample_roots(&g, 1, 1)[0];
+    let part = Partitioning::new(64, 32);
+    let base = TrafficConfig::for_partitioning(part);
+    let mut state = SearchState::new(g.num_vertices());
+
+    let mut scalar = BitmapEngine::new(&g, part).with_config(base.host_scalar());
+    let t_pull_scalar = time_best(reps, || {
+        let _ = scalar.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    let mut word = BitmapEngine::new(&g, part).with_config(base);
+    let t_pull_word = time_best(reps, || {
+        let _ = word.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    let word_run = word
+        .run_with_state(&mut state, root, &mut pull_dense())
+        .expect("the functional bitmap step is infallible");
+    let p1_words: u64 = word_run.traffic.iters.iter().map(|i| i.p1_words_scanned).sum();
+    let p1_bits: u64 = word_run.traffic.iters.iter().map(|i| i.p1_bits_set).sum();
+
+    let mut direct = BitmapEngine::new(&g, part).with_config(base.with_push_tiling(None));
+    let t_push_direct = time_best(reps, || {
+        let _ = direct.run_with_state(&mut state, root, &mut push_dense());
+    });
+    let mut tiled =
+        BitmapEngine::new(&g, part).with_config(base.with_push_tiling(Some(scale - 3)));
+    let t_push_tiled = time_best(reps, || {
+        let _ = tiled.run_with_state(&mut state, root, &mut push_dense());
+    });
+
+    let mut hybrid = BitmapEngine::new(&g, part);
+    let t_hybrid = time_best(reps, || {
+        let _ = hybrid.run_with_state(&mut state, root, &mut Hybrid::default());
+    });
+
+    Section {
+        name: "hotpath",
+        metrics: vec![
+            wall(format!("pull_scalar_ms_{tag}"), t_pull_scalar * 1e3, "ms"),
+            wall(format!("pull_word_ms_{tag}"), t_pull_word * 1e3, "ms"),
+            ratio(
+                format!("pull_word_speedup_{tag}"),
+                t_pull_scalar / t_pull_word,
+                0.95,
+            ),
+            exact(format!("pull_p1_words_{tag}"), p1_words as f64, "words"),
+            exact(format!("pull_p1_bits_{tag}"), p1_bits as f64, "bits"),
+            wall(format!("push_direct_ms_{tag}"), t_push_direct * 1e3, "ms"),
+            wall(format!("push_tiled_ms_{tag}"), t_push_tiled * 1e3, "ms"),
+            ratio(
+                format!("push_tiled_ratio_{tag}"),
+                t_push_direct / t_push_tiled,
+                0.4,
+            ),
+            wall(
+                format!("hybrid_medges_per_s_{tag}"),
+                edges as f64 / t_hybrid / 1e6,
+                "Medge/s",
+            ),
+        ],
+    }
+}
+
+/// `perf_frontier` in measured mode: adaptive-vs-dense representation on
+/// the two bracketing workloads.
+fn frontier_section(smoke: bool) -> Section {
+    let (chain_pow, rmat_scale, reps) = if smoke { (14u32, 12u32, 2usize) } else { (20, 18, 3) };
+    println!("[bench] frontier: chain-2^{chain_pow} + RMAT-{rmat_scale} ...");
+    let part = Partitioning::new(1, 1);
+    let time_repr = |g: &Graph, root: u32, repr: ReprPolicy| {
+        let mut engine = BitmapEngine::new(g, part);
+        let mut state = SearchState::new(g.num_vertices());
+        time_best(reps, || {
+            let mut policy = WithRepr {
+                inner: Hybrid::default(),
+                repr,
+            };
+            let _ = engine.run_with_state(&mut state, root, &mut policy);
+        })
+    };
+
+    let chain = generators::chain(1usize << chain_pow);
+    let t_chain_dense = time_repr(&chain, 0, ReprPolicy::Dense);
+    let t_chain_adaptive = time_repr(&chain, 0, ReprPolicy::default());
+
+    let rmat = generators::rmat_graph500(rmat_scale, 16, 1);
+    let rmat_root = reference::sample_roots(&rmat, 1, 1)[0];
+    let t_rmat_dense = time_repr(&rmat, rmat_root, ReprPolicy::Dense);
+    let t_rmat_adaptive = time_repr(&rmat, rmat_root, ReprPolicy::default());
+
+    Section {
+        name: "frontier",
+        metrics: vec![
+            wall(format!("chain_dense_ms_chain{chain_pow}"), t_chain_dense * 1e3, "ms"),
+            wall(
+                format!("chain_adaptive_ms_chain{chain_pow}"),
+                t_chain_adaptive * 1e3,
+                "ms",
+            ),
+            ratio(
+                format!("chain_adaptive_speedup_chain{chain_pow}"),
+                t_chain_dense / t_chain_adaptive,
+                2.0,
+            ),
+            ratio(
+                format!("rmat_adaptive_ratio_rmat{rmat_scale}"),
+                t_rmat_dense / t_rmat_adaptive,
+                0.7,
+            ),
+        ],
+    }
+}
+
+/// `perf_batch` in measured mode: the Graph500-style multi-root batch,
+/// serial pool vs the ambient pool.
+fn batch_section(smoke: bool) -> Section {
+    let (scale, num_roots) = if smoke { (12u32, 8usize) } else { (18, 64) };
+    println!("[bench] batch: RMAT-{scale} d16, {num_roots} roots ...");
+    let tag = format!("rmat{scale}");
+    let g = generators::rmat_graph500(scale, 16, 1);
+    let cfg = SimConfig::u280_full();
+    let roots = reference::sample_roots(&g, num_roots, 1);
+    let driver = BatchDriver::new(&g, cfg.part);
+
+    let serial_pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(1)
+        .build()
+        .expect("single-thread pool");
+    let t0 = Instant::now();
+    let serial =
+        serial_pool.install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let parallel = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+    let t_parallel = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        serial.harmonic_gteps, parallel.harmonic_gteps,
+        "batch results must not depend on the worker count"
+    );
+
+    Section {
+        name: "batch",
+        metrics: vec![
+            wall(format!("batch_serial_s_{tag}"), t_serial, "s"),
+            wall(format!("batch_parallel_s_{tag}"), t_parallel, "s"),
+            ratio(format!("batch_parallel_speedup_{tag}"), t_serial / t_parallel, 0.8),
+            exact(
+                format!("batch_harmonic_gteps_{tag}"),
+                parallel.harmonic_gteps,
+                "GTEPS",
+            ),
+        ],
+    }
+}
+
+/// `perf_cycle` in measured mode: the cycle-stepped simulator's host
+/// loop rate plus its (deterministic) simulated outputs.
+fn cycle_section(smoke: bool) -> Result<Section> {
+    let (scale, reps) = if smoke { (12u32, 1usize) } else { (16, 3) };
+    println!("[bench] cycle: RMAT-{scale} d16, 8 PC x 16 PE ...");
+    let tag = format!("rmat{scale}");
+    let g = generators::rmat_graph500(scale, 16, 7);
+    let root = reference::sample_roots(&g, 1, 7)[0];
+    let cfg = SimConfig::u280(8, 16);
+    let res = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
+    anyhow::ensure!(
+        res.levels == reference::bfs(&g, root).levels,
+        "cycle sim diverged from the reference BFS"
+    );
+    let t = time_best(reps, || {
+        let _ = CycleSim::new(&g, cfg.clone())
+            .run(root, &mut Hybrid::default())
+            .expect("cycle sim step");
+    });
+    Ok(Section {
+        name: "cycle",
+        metrics: vec![
+            exact(format!("cycle_sim_cycles_{tag}"), res.cycles as f64, "cycles"),
+            exact(format!("cycle_gteps_{tag}"), res.gteps, "GTEPS"),
+            wall(
+                format!("cycle_host_mcps_{tag}"),
+                res.cycles as f64 / t / 1e6,
+                "Mcycle/s",
+            ),
+        ],
+    })
+}
+
+/// Headline GTEPS on the trajectory's anchor graphs, through the
+/// throughput simulator (deterministic) plus the host wall time.
+fn graphs_section(smoke: bool) -> Section {
+    println!("[bench] graphs: anchor GTEPS ...");
+    struct Spec {
+        tag: String,
+        graph: Graph,
+        cfg: SimConfig,
+    }
+    let specs: Vec<Spec> = if smoke {
+        vec![
+            Spec {
+                tag: "rmat14".into(),
+                graph: generators::rmat_graph500(14, 16, 1),
+                cfg: SimConfig::u280_full(),
+            },
+            Spec {
+                tag: "rmat16".into(),
+                graph: generators::rmat_graph500(16, 16, 1),
+                cfg: SimConfig::u280_full(),
+            },
+            Spec {
+                tag: "chain14_1pe".into(),
+                graph: generators::chain(1 << 14),
+                cfg: SimConfig::u280(1, 1),
+            },
+        ]
+    } else {
+        vec![
+            Spec {
+                tag: "rmat18".into(),
+                graph: generators::rmat_graph500(18, 16, 1),
+                cfg: SimConfig::u280_full(),
+            },
+            Spec {
+                tag: "rmat22".into(),
+                graph: generators::rmat_graph500(22, 16, 1),
+                cfg: SimConfig::u280_full(),
+            },
+            Spec {
+                tag: "chain20_1pe".into(),
+                graph: generators::chain(1 << 20),
+                cfg: SimConfig::u280(1, 1),
+            },
+        ]
+    };
+    let mut metrics = Vec::new();
+    for spec in &specs {
+        let g = &spec.graph;
+        let root = reference::sample_roots(g, 1, 1)[0];
+        let mut engine = BitmapEngine::new(g, spec.cfg.part);
+        let mut state = SearchState::new(g.num_vertices());
+        let t0 = Instant::now();
+        let run = engine
+            .run_with_state(&mut state, root, &mut Hybrid::default())
+            .expect("the functional bitmap step is infallible");
+        let host_s = t0.elapsed().as_secs_f64();
+        let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
+        let sim = ThroughputSim::new(spec.cfg.clone()).simulate(&run, &g.name, bytes);
+        metrics.push(exact(format!("sim_gteps_{}", spec.tag), sim.gteps, "GTEPS"));
+        metrics.push(wall(format!("host_ms_{}", spec.tag), host_s * 1e3, "ms"));
+    }
+    Section {
+        name: "graphs",
+        metrics,
+    }
+}
+
+/// Run the whole suite and return the `scalabfs-bench-v1` document
+/// (provenance `"measured"`).
+pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
+    let mode = if opts.smoke { "smoke" } else { "full" };
+    println!("=== scalabfs bench suite ({mode}) ===");
+    let sections = vec![
+        hotpath_section(opts.smoke),
+        frontier_section(opts.smoke),
+        batch_section(opts.smoke),
+        cycle_section(opts.smoke)?,
+        graphs_section(opts.smoke),
+    ];
+    Ok(Json::obj(vec![
+        ("schema", Json::Str(SCHEMA.into())),
+        ("pr", Json::Num(f64::from(opts.pr))),
+        ("mode", Json::Str(mode.into())),
+        ("provenance", Json::Str("measured".into())),
+        (
+            "sections",
+            Json::Arr(sections.iter().map(Section::to_json).collect()),
+        ),
+    ]))
+}
+
+/// A metric read back out of a document.
+struct ReadMetric {
+    value: Option<f64>,
+    kind: String,
+    floor: Option<f64>,
+}
+
+/// Flatten a document into `section/name -> metric` pairs, validating
+/// the schema tag.
+fn flatten(doc: &Json) -> Result<Vec<(String, ReadMetric)>> {
+    anyhow::ensure!(
+        doc.get("schema").and_then(Json::as_str) == Some(SCHEMA),
+        "unknown bench schema (expected {SCHEMA})"
+    );
+    let mut out = Vec::new();
+    for sec in doc
+        .get("sections")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing sections array"))?
+    {
+        let sec_name = sec
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("section without a name"))?;
+        for m in sec
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("section {sec_name} without metrics"))?
+        {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("metric without a name in {sec_name}"))?;
+            let kind = m
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("metric {name} without a kind"))?;
+            out.push((
+                format!("{sec_name}/{name}"),
+                ReadMetric {
+                    value: m.get("value").and_then(Json::as_f64),
+                    kind: kind.to_string(),
+                    floor: m.get("floor").and_then(Json::as_f64),
+                },
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Relative tolerance for `"exact"` metrics: they are deterministic, so
+/// this only absorbs f64 text round-trips.
+const EXACT_REL_TOL: f64 = 1e-9;
+
+/// Compare a new bench document against a committed baseline.
+///
+/// Always enforced: every new `"ratio"` metric with a `floor` must meet
+/// it (absolute gate — meaningful even against a bootstrap baseline).
+/// Additionally, when the baseline has provenance `"measured"` and the
+/// same mode: `"exact"` metrics must match to [`EXACT_REL_TOL`], and
+/// `"ratio"` metrics must stay within `tolerance` of the baseline
+/// (`new >= old * (1 - tolerance)`). `"wall"` metrics are reported but
+/// never gated. Returns the comparison report; errors if any gate
+/// fails.
+pub fn compare(old: &Json, new: &Json, tolerance: f64) -> Result<String> {
+    let old_metrics = flatten(old)?;
+    let new_metrics = flatten(new)?;
+    let old_measured = old.get("provenance").and_then(Json::as_str) == Some("measured");
+    let same_mode =
+        old.get("mode").and_then(Json::as_str) == new.get("mode").and_then(Json::as_str);
+    let mut report = String::new();
+    let mut violations: Vec<String> = Vec::new();
+
+    for (name, m) in &new_metrics {
+        if let (Some(v), Some(f)) = (m.value, m.floor) {
+            if v >= f {
+                report.push_str(&format!("floor  ok    {name}: {v:.4} >= {f:.4}\n"));
+            } else {
+                violations.push(format!("{name}: {v:.4} below floor {f:.4}"));
+            }
+        }
+    }
+
+    if old_measured && same_mode {
+        for (name, new_m) in &new_metrics {
+            let Some(new_v) = new_m.value else { continue };
+            let Some(old_v) = old_metrics
+                .iter()
+                .find(|(n, _)| n == name)
+                .and_then(|(_, m)| m.value)
+            else {
+                continue;
+            };
+            match new_m.kind.as_str() {
+                "exact" => {
+                    let denom = old_v.abs().max(1.0);
+                    if ((new_v - old_v) / denom).abs() <= EXACT_REL_TOL {
+                        report.push_str(&format!("exact  ok    {name}: {new_v}\n"));
+                    } else {
+                        violations
+                            .push(format!("{name}: exact metric drifted {old_v} -> {new_v}"));
+                    }
+                }
+                "ratio" => {
+                    if new_v >= old_v * (1.0 - tolerance) {
+                        report.push_str(&format!(
+                            "ratio  ok    {name}: {new_v:.4} (baseline {old_v:.4})\n"
+                        ));
+                    } else {
+                        violations.push(format!(
+                            "{name}: {new_v:.4} regressed below {old_v:.4} - {:.0}%",
+                            tolerance * 100.0
+                        ));
+                    }
+                }
+                _ => {
+                    report.push_str(&format!(
+                        "wall   info  {name}: {new_v:.4} (baseline {old_v:.4})\n"
+                    ));
+                }
+            }
+        }
+    } else {
+        report.push_str(
+            "note: baseline is not a measured same-mode run; floor gates only \
+             (band comparison engages once a measured baseline of this mode is committed)\n",
+        );
+    }
+
+    anyhow::ensure!(
+        violations.is_empty(),
+        "bench regression gate failed:\n  {}\n--- report ---\n{report}",
+        violations.join("\n  ")
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(mode: &str, provenance: &str, metrics: Vec<(&str, &str, Option<f64>, Option<f64>)>) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("pr", Json::Num(6.0)),
+            ("mode", Json::Str(mode.into())),
+            ("provenance", Json::Str(provenance.into())),
+            (
+                "sections",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::Str("s".into())),
+                    (
+                        "metrics",
+                        Json::Arr(
+                            metrics
+                                .into_iter()
+                                .map(|(name, kind, value, floor)| {
+                                    Json::obj(vec![
+                                        ("name", Json::Str(name.into())),
+                                        ("value", value.map_or(Json::Null, Json::Num)),
+                                        ("unit", Json::Str("u".into())),
+                                        ("kind", Json::Str(kind.into())),
+                                        ("floor", floor.map_or(Json::Null, Json::Num)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_measured_docs_pass() {
+        let d = doc(
+            "smoke",
+            "measured",
+            vec![
+                ("speed", "ratio", Some(1.5), Some(0.9)),
+                ("cycles", "exact", Some(123456.0), None),
+                ("ms", "wall", Some(42.0), None),
+            ],
+        );
+        let report = compare(&d, &d, 0.3).unwrap();
+        assert!(report.contains("floor  ok"));
+        assert!(report.contains("exact  ok"));
+        assert!(report.contains("ratio  ok"));
+    }
+
+    #[test]
+    fn floor_violation_fails_even_against_bootstrap_baseline() {
+        let old = doc("full", "expected", vec![("speed", "ratio", Some(1.6), Some(0.9))]);
+        let bad = doc("smoke", "measured", vec![("speed", "ratio", Some(0.5), Some(0.9))]);
+        let err = compare(&old, &bad, 0.3).unwrap_err().to_string();
+        assert!(err.contains("below floor"), "{err}");
+        // And a passing new run is green: floors only, with the note.
+        let good = doc("smoke", "measured", vec![("speed", "ratio", Some(1.2), Some(0.9))]);
+        let report = compare(&old, &good, 0.3).unwrap();
+        assert!(report.contains("floor gates only"), "{report}");
+    }
+
+    #[test]
+    fn exact_drift_and_ratio_regression_fail_against_measured_baseline() {
+        let old = doc(
+            "smoke",
+            "measured",
+            vec![
+                ("cycles", "exact", Some(1000.0), None),
+                ("speed", "ratio", Some(2.0), None),
+            ],
+        );
+        let drifted = doc(
+            "smoke",
+            "measured",
+            vec![
+                ("cycles", "exact", Some(1001.0), None),
+                ("speed", "ratio", Some(2.0), None),
+            ],
+        );
+        assert!(compare(&old, &drifted, 0.3).unwrap_err().to_string().contains("drifted"));
+        let slower = doc(
+            "smoke",
+            "measured",
+            vec![
+                ("cycles", "exact", Some(1000.0), None),
+                ("speed", "ratio", Some(1.0), None),
+            ],
+        );
+        assert!(compare(&old, &slower, 0.3).unwrap_err().to_string().contains("regressed"));
+        // Within the band is fine.
+        let close = doc(
+            "smoke",
+            "measured",
+            vec![
+                ("cycles", "exact", Some(1000.0), None),
+                ("speed", "ratio", Some(1.5), None),
+            ],
+        );
+        assert!(compare(&old, &close, 0.3).is_ok());
+    }
+
+    #[test]
+    fn null_values_are_skipped_not_compared() {
+        let old = doc("full", "expected", vec![("cycles", "exact", None, None)]);
+        let new = doc("full", "measured", vec![("cycles", "exact", Some(5.0), None)]);
+        assert!(compare(&old, &new, 0.3).is_ok());
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let mut bad = doc("full", "measured", vec![]);
+        if let Json::Obj(fields) = &mut bad {
+            fields[0].1 = Json::Str("something-else".into());
+        }
+        let good = doc("full", "measured", vec![]);
+        assert!(compare(&bad, &good, 0.3).is_err());
+        assert!(compare(&good, &bad, 0.3).is_err());
+    }
+
+    #[test]
+    fn sections_round_trip_through_render_and_parse() {
+        let sec = Section {
+            name: "hotpath",
+            metrics: vec![
+                ratio("pull_word_speedup_rmat18".into(), 1.62, 0.95),
+                exact("pull_p1_words_rmat18".into(), 40960.0, "words"),
+                wall("pull_word_ms_rmat18".into(), 12.5, "ms"),
+            ],
+        };
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("pr", Json::Num(6.0)),
+            ("mode", Json::Str("full".into())),
+            ("provenance", Json::Str("measured".into())),
+            ("sections", Json::Arr(vec![sec.to_json()])),
+        ]);
+        let back = Json::parse(&doc.render()).unwrap();
+        let metrics = flatten(&back).unwrap();
+        assert_eq!(metrics.len(), 3);
+        assert_eq!(metrics[0].0, "hotpath/pull_word_speedup_rmat18");
+        assert_eq!(metrics[0].1.floor, Some(0.95));
+        assert_eq!(metrics[1].1.kind, "exact");
+        assert_eq!(metrics[2].1.value, Some(12.5));
+    }
+}

@@ -3,9 +3,11 @@
 //! report) and the per-figure/table experiment runners the CLI and the
 //! benches call into.
 
+pub mod bench;
 pub mod driver;
 pub mod experiments;
 pub mod sweep;
 pub mod report;
 
+pub use bench::BenchOptions;
 pub use driver::{run_dataset, DatasetRun, DriverOptions};

@@ -46,6 +46,199 @@ impl Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Parse a JSON document (the full grammar this writer emits, plus
+    /// insignificant whitespace). Used by the bench regression gate to
+    /// read committed `BENCH_*.json` baselines back — the offline
+    /// vendor set has no serde, so the reader lives next to the writer.
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            anyhow::bail!("trailing content at byte {pos}");
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, c: u8) -> crate::Result<()> {
+    if bytes.get(*pos) == Some(&c) {
+        *pos += 1;
+        Ok(())
+    } else {
+        anyhow::bail!("expected '{}' at byte {}", c as char, *pos)
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> crate::Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                fields.push((key, parse_value(bytes, pos)?));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => anyhow::bail!("expected ',' or '}}' at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(xs));
+                    }
+                    _ => anyhow::bail!("expected ',' or ']' at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') if bytes[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if bytes[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if bytes[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < bytes.len()
+                && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&bytes[start..*pos])?;
+            let x: f64 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad number {s:?} at byte {start}"))?;
+            Ok(Json::Num(x))
+        }
+        None => anyhow::bail!("unexpected end of input"),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> crate::Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u escape {code:#x}"))?,
+                        );
+                        *pos += 4;
+                    }
+                    _ => anyhow::bail!("bad escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (the input is a &str, so the
+                // byte stream is valid UTF-8 by construction).
+                let start = *pos;
+                *pos += 1;
+                while *pos < bytes.len() && bytes[*pos] & 0xc0 == 0x80 {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&bytes[start..*pos])?);
+            }
+            None => anyhow::bail!("unterminated string"),
+        }
+    }
+}
+
+impl Json {
     /// Render to a compact JSON string.
     pub fn render(&self) -> String {
         match self {
@@ -148,6 +341,11 @@ pub fn sim_result_json(r: &SimResult) -> Json {
                             ("total", Json::Num(it.total_cycles as f64)),
                             ("bytes", Json::Num(it.bytes as f64)),
                             ("bound", Json::Str(it.bottleneck.to_string())),
+                            // Host P1 attribution (diagnostic; not a
+                            // timing input): words the word-parallel
+                            // scan examined vs. work bits it yielded.
+                            ("p1_words", Json::Num(it.p1_words_scanned as f64)),
+                            ("p1_bits", Json::Num(it.p1_bits_set as f64)),
                         ])
                     })
                     .collect(),
@@ -260,6 +458,68 @@ mod tests {
     fn escapes_control_chars() {
         let j = Json::Str("line\nbreak\u{1}".into());
         assert_eq!(j.render(), "\"line\\nbreak\\u0001\"");
+    }
+
+    #[test]
+    fn parse_round_trips_what_render_emits() {
+        let doc = Json::obj(vec![
+            ("name", Json::Str("RMAT-18 \"dense\"\npath".into())),
+            ("ok", Json::Bool(true)),
+            ("missing", Json::Null),
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5), Json::Num(-3e9)])),
+            (
+                "nested",
+                Json::obj(vec![("k", Json::Arr(vec![Json::Obj(Vec::new())]))]),
+            ),
+        ]);
+        let text = doc.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_escapes() {
+        let j = Json::parse(" { \"a\" : [ 1 , 2.5e2 ] , \"s\" : \"x\\u0041\\n\" } ").unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(250.0));
+        assert_eq!(j.get("s").unwrap().as_str(), Some("xA\n"));
+        assert!(j.get("zzz").is_none());
+        assert!(Json::Null.get("a").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        assert!(Json::parse("{\"a\":1} trailing").is_err());
+        assert!(Json::parse("{\"a\"").is_err());
+        assert!(Json::parse("[1,").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nope").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn sim_result_json_carries_p1_attribution() {
+        use crate::bfs::bitmap::run_bfs;
+        use crate::bfs::reference;
+        use crate::bfs::Mode;
+        use crate::graph::generators;
+        use crate::sched::Fixed;
+        use crate::sim::config::SimConfig;
+        use crate::sim::throughput::ThroughputSim;
+        let g = generators::rmat_graph500(8, 4, 2);
+        let root = reference::sample_roots(&g, 1, 2)[0];
+        let cfg = SimConfig::u280(2, 4);
+        let run = run_bfs(&g, cfg.part, root, &mut Fixed(Mode::Pull));
+        let res = ThroughputSim::new(cfg).simulate(&run, &g.name, 0);
+        let json = sim_result_json(&res);
+        let iters = json.get("iterations").unwrap().as_arr().unwrap();
+        // Word-parallel pull is the default: every iteration attributes
+        // its P1 scan.
+        assert!(iters
+            .iter()
+            .all(|it| it.get("p1_words").unwrap().as_f64().unwrap() > 0.0));
+        // And the counters survive a JSON round trip.
+        let back = Json::parse(&json.render()).unwrap();
+        assert_eq!(back.render(), json.render());
     }
 
     #[test]

@@ -198,6 +198,80 @@ impl Frontier {
         true
     }
 
+    /// Word-batched insert: stage every vertex in `mask` (bit `b` of
+    /// word `wi` = vertex `wi * 64 + b`) in one bitmap OR, then account
+    /// `len`/`edges` and the sparse list only for the bits that were
+    /// actually new. Exactly equivalent to calling
+    /// [`insert`](Self::insert) for each mask bit in ascending order —
+    /// same discovery order, same overflow-to-dense behavior — but the
+    /// membership test-and-set is a single word op. `degree_of` is
+    /// invoked once per *newly* inserted vertex. Returns the mask of
+    /// newly inserted bits.
+    pub fn insert_word(
+        &mut self,
+        wi: usize,
+        mask: u64,
+        mut degree_of: impl FnMut(VertexId) -> u64,
+    ) -> u64 {
+        if mask == 0 {
+            return 0;
+        }
+        let newly = self.bits.test_and_set_word(wi, mask);
+        let mut m = newly;
+        while m != 0 {
+            let v = ((wi << 6) + m.trailing_zeros() as usize) as VertexId;
+            m &= m - 1;
+            self.len += 1;
+            self.edges += degree_of(v);
+            if self.sparse {
+                if self.verts.len() >= self.sparse_cap {
+                    self.sparse = false;
+                    self.verts.clear();
+                } else {
+                    self.verts.push(v);
+                }
+            }
+        }
+        newly
+    }
+
+    /// Walk the frontier like [`iter`](Self::iter) but, on the sparse
+    /// (FIFO) path, drive a two-stage software-prefetch pipeline: for
+    /// the vertex `far` positions ahead call `prefetch_far` (pull its
+    /// `row_ptr` entry toward L1), and for the vertex `near` positions
+    /// ahead call `prefetch_near` (its offset is resident by then, so
+    /// the `col_idx` stream can be seeded). The dense path is a linear
+    /// bitmap scan the hardware prefetcher already covers, so the
+    /// callbacks are not used there. Visit order is identical to
+    /// [`iter`](Self::iter) in both representations.
+    pub fn for_each_with_lookahead(
+        &self,
+        far: usize,
+        mut prefetch_far: impl FnMut(usize),
+        near: usize,
+        mut prefetch_near: impl FnMut(usize),
+        mut f: impl FnMut(usize),
+    ) {
+        if let Some(verts) = self.sparse_verts() {
+            for &v in verts.iter().take(far) {
+                prefetch_far(v as usize);
+            }
+            for (i, &v) in verts.iter().enumerate() {
+                if let Some(&ahead) = verts.get(i + far) {
+                    prefetch_far(ahead as usize);
+                }
+                if let Some(&ahead) = verts.get(i + near) {
+                    prefetch_near(ahead as usize);
+                }
+                f(v as usize);
+            }
+        } else {
+            for v in self.bits.iter_ones() {
+                f(v);
+            }
+        }
+    }
+
     /// The dense bitmap view (always valid, either representation).
     #[inline]
     pub fn bits(&self) -> &Bitset {
@@ -378,6 +452,72 @@ mod tests {
         assert!(f.bits().none());
         assert!(f.is_sparse());
         assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn insert_word_matches_scalar_inserts() {
+        // Word-batched insert must be indistinguishable from the
+        // ascending scalar insert loop: counters, order, overflow.
+        let degree = |v: VertexId| u64::from(v) + 1;
+        let mut batched = Frontier::with_sparse_cap(256, 256);
+        let mut scalar = Frontier::with_sparse_cap(256, 256);
+        scalar.insert(70, degree(70));
+        batched.insert(70, degree(70));
+        let mask = 1u64 << 2 | 1 << 6 | 1 << 63;
+        let newly = batched.insert_word(1, mask, degree);
+        // Bit 6 of word 1 = vertex 70 was already present.
+        assert_eq!(newly, 1u64 << 2 | 1 << 63);
+        for bit in [2usize, 6, 63] {
+            let v = (64 + bit) as VertexId;
+            scalar.insert(v, degree(v));
+        }
+        assert_eq!(batched.len(), scalar.len());
+        assert_eq!(batched.edges(), scalar.edges());
+        assert_eq!(batched.sparse_verts(), scalar.sparse_verts());
+        assert_eq!(batched.insert_word(1, mask, degree), 0);
+    }
+
+    #[test]
+    fn insert_word_overflows_to_dense_like_insert() {
+        let mut f = Frontier::with_sparse_cap(256, 2);
+        assert_eq!(f.insert_word(0, 0b111, |_| 1), 0b111);
+        assert_eq!(f.repr(), FrontierRepr::Dense);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.edges(), 3);
+        assert_eq!(f.iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lookahead_walk_matches_iter_and_sees_ahead() {
+        let mut f = Frontier::with_sparse_cap(512, 512);
+        for &v in &[9u32, 300, 5, 130, 64] {
+            f.insert(v, 1);
+        }
+        let mut far_seen = Vec::new();
+        let mut near_seen = Vec::new();
+        let mut visited = Vec::new();
+        f.for_each_with_lookahead(
+            2,
+            |v| far_seen.push(v),
+            1,
+            |v| near_seen.push(v),
+            |v| visited.push(v),
+        );
+        assert_eq!(visited, f.iter().collect::<Vec<_>>());
+        // Warm-up covers the first `far` entries, then one-ahead each.
+        assert_eq!(far_seen, vec![9, 300, 5, 130, 64]);
+        assert_eq!(near_seen, vec![300, 5, 130, 64]);
+        // Dense path: same visit order, no prefetch callbacks.
+        f.to_dense();
+        let mut dense_visited = Vec::new();
+        f.for_each_with_lookahead(
+            2,
+            |_| panic!("no prefetch on the dense path"),
+            1,
+            |_| panic!("no prefetch on the dense path"),
+            |v| dense_visited.push(v),
+        );
+        assert_eq!(dense_visited, vec![5, 9, 64, 130, 300]);
     }
 
     #[test]

@@ -41,6 +41,11 @@ Experiment commands (regenerate paper tables/figures):
 
 System commands:
   run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
+  bench           measured perf suite -> scalabfs-bench-v1 JSON
+                  [--smoke --pr=6 --json=FILE]
+  bench-compare   regression gate: --old=BENCH_6.json --new=new.json
+                  [--tolerance=0.3] (floors always; exact/ratio bands vs a
+                  measured same-mode baseline; exits non-zero on regression)
   datasets        list Table-I datasets
   xla             run BFS through the AOT XLA artifact --dataset=RMAT18-8 [--scale=...]
                   (needs a build with --features xla)
@@ -254,6 +259,40 @@ fn main() -> anyhow::Result<()> {
                 scalabfs::coordinator::report::write_json(std::path::Path::new(path), &json)?;
                 println!("wrote {path}");
             }
+        }
+        "bench" => {
+            let bopts = scalabfs::coordinator::BenchOptions {
+                smoke: kv.get("smoke").is_some(),
+                pr: get_u32("pr", 6),
+            };
+            let doc = scalabfs::coordinator::bench::run_suite(&bopts)?;
+            if let Some(path) = kv.get("json") {
+                scalabfs::coordinator::report::write_json(std::path::Path::new(path), &doc)?;
+                println!("wrote {path}");
+            } else {
+                println!("{}", doc.render());
+            }
+        }
+        "bench-compare" => {
+            let old_path = kv
+                .get("old")
+                .ok_or_else(|| anyhow::anyhow!("bench-compare needs --old=FILE"))?;
+            let new_path = kv
+                .get("new")
+                .ok_or_else(|| anyhow::anyhow!("bench-compare needs --new=FILE"))?;
+            let tolerance: f64 = kv
+                .get("tolerance")
+                .map_or(Ok(0.3), |v| v.parse())
+                .map_err(|_| anyhow::anyhow!("bad --tolerance (expected e.g. 0.3)"))?;
+            let old = scalabfs::coordinator::report::Json::parse(&std::fs::read_to_string(
+                old_path,
+            )?)?;
+            let new = scalabfs::coordinator::report::Json::parse(&std::fs::read_to_string(
+                new_path,
+            )?)?;
+            let report = scalabfs::coordinator::bench::compare(&old, &new, tolerance)?;
+            print!("{report}");
+            println!("bench gate OK ({new_path} vs {old_path})");
         }
         "datasets" => println!("{}", experiments::datasets_table().render()),
         "run" => {

@@ -181,18 +181,34 @@ mod tests {
 
     #[test]
     fn policies_produce_correct_bfs() {
-        use crate::bfs::bitmap::run_bfs;
+        use crate::bfs::bitmap::{run_bfs, BitmapEngine, TrafficConfig};
         use crate::bfs::reference;
         use crate::graph::{generators, Partitioning};
         let g = generators::rmat_graph500(9, 8, 17);
         let root = reference::sample_roots(&g, 1, 17)[0];
         let truth = reference::bfs(&g, root);
+        let part = Partitioning::new(4, 2);
+        // Every extension policy, under every host datapath: the
+        // default word-parallel/tiled path, the scalar oracle, and
+        // tiles small enough to engage on a 512-vertex graph.
+        let base = TrafficConfig::for_partitioning(part);
         for policy in [
             &mut DegreeAware::default() as &mut dyn ModePolicy,
             &mut FrontierFraction::default(),
         ] {
-            let run = run_bfs(&g, Partitioning::new(4, 2), root, policy);
+            let run = run_bfs(&g, part, root, policy);
             assert_eq!(run.levels, truth.levels, "{}", policy.name());
+        }
+        for cfg in [base, base.host_scalar(), base.with_push_tiling(Some(4))] {
+            for policy in [
+                &mut DegreeAware::default() as &mut dyn ModePolicy,
+                &mut FrontierFraction::default(),
+            ] {
+                let run = BitmapEngine::new(&g, part)
+                    .with_config(cfg)
+                    .run(root, policy);
+                assert_eq!(run.levels, truth.levels, "{}", policy.name());
+            }
         }
     }
 }

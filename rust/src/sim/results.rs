@@ -50,6 +50,15 @@ pub struct IterBreakdown {
     pub bottleneck: Bottleneck,
     /// HBM bytes moved.
     pub bytes: u64,
+    /// Host-attribution counter carried through from
+    /// [`IterTraffic`](crate::bfs::traffic::IterTraffic): words the
+    /// word-parallel P1 scan examined. Diagnostic only — never an input
+    /// to any cycle count in this breakdown.
+    pub p1_words_scanned: u64,
+    /// Host-attribution counter carried through from `IterTraffic`:
+    /// work bits the P1 scan yielded. Diagnostic only, like
+    /// `p1_words_scanned`.
+    pub p1_bits_set: u64,
 }
 
 /// Result of simulating one BFS run.
@@ -217,6 +226,8 @@ mod tests {
             total_cycles: 11,
             bottleneck: bott,
             bytes: 100,
+            p1_words_scanned: 0,
+            p1_bits_set: 0,
         }
     }
 

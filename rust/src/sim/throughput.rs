@@ -228,6 +228,8 @@ impl ThroughputSim {
                 total_cycles: total,
                 bottleneck,
                 bytes: it.total_bytes(),
+                p1_words_scanned: it.p1_words_scanned,
+                p1_bits_set: it.p1_bits_set,
             });
         }
         let seconds = self.cfg.cycles_to_seconds(total_cycles);

@@ -123,6 +123,81 @@ impl Bitset {
         self.bits.len()
     }
 
+    /// Read backing word `wi` (0 for out-of-range indices).
+    #[inline]
+    pub fn word(&self, wi: usize) -> u64 {
+        self.bits.get(wi).copied().unwrap_or(0)
+    }
+
+    /// Mask of the bits of word `wi` that address valid (< `len`) bit
+    /// positions: all-ones for interior words, the partial tail mask for
+    /// the last word, zero beyond the end.
+    #[inline]
+    pub fn live_mask(&self, wi: usize) -> u64 {
+        let base = wi << 6;
+        if base + 64 <= self.len {
+            !0u64
+        } else if base >= self.len {
+            0
+        } else {
+            (1u64 << (self.len - base)) - 1
+        }
+    }
+
+    /// The **clear** bits of word `wi`, masked to valid positions — the
+    /// word-granular unit of a bottom-up pull scan: one AND-NOT per 64
+    /// vertices decides whether any of them still needs work.
+    #[inline]
+    pub fn zeros_word(&self, wi: usize) -> u64 {
+        !self.word(wi) & self.live_mask(wi)
+    }
+
+    /// Number of bits set in `self` but not in `other` (`self & !other`
+    /// popcount, word-at-a-time). `other` may be shorter; its missing
+    /// words read as zero.
+    pub fn and_not_count(&self, other: &Bitset) -> u64 {
+        self.bits
+            .iter()
+            .enumerate()
+            .map(|(wi, &w)| (w & !other.word(wi)).count_ones() as u64)
+            .sum()
+    }
+
+    /// OR every word of `other` into `self`
+    /// (`self |= other`, the batched visited-map commit of a pull
+    /// iteration's staged discoveries). Panics if `other` has more
+    /// backing words than `self`.
+    pub fn or_assign_from(&mut self, other: &Bitset) {
+        assert!(other.bits.len() <= self.bits.len());
+        for (dst, &src) in self.bits.iter_mut().zip(other.bits.iter()) {
+            *dst |= src;
+        }
+    }
+
+    /// Visit every **non-zero** backing word as `(word_index, word)`, in
+    /// ascending order. This is the dense-frontier P1 primitive: one
+    /// load + one compare skips 64 vertices at a time.
+    pub fn for_set_words(&self, mut f: impl FnMut(usize, u64)) {
+        for (wi, &w) in self.bits.iter().enumerate() {
+            if w != 0 {
+                f(wi, w);
+            }
+        }
+    }
+
+    /// Chunked 64-bit test-and-set: OR `mask` into word `wi` and return
+    /// the bits of `mask` that were **newly** set (previously clear).
+    /// One read-modify-write covers what 64 scalar
+    /// [`test_and_set`](Self::test_and_set) calls would.
+    #[inline]
+    pub fn test_and_set_word(&mut self, wi: usize, mask: u64) -> u64 {
+        debug_assert!(mask & !self.live_mask(wi) == 0, "mask beyond len");
+        let w = &mut self.bits[wi];
+        let newly = mask & !*w;
+        *w |= mask;
+        newly
+    }
+
     /// Visit every set bit whose index falls in words
     /// `[word_start, word_end)` (clamped to the bit length), in ascending
     /// order. This is the primitive behind sharded parallel scans: each
@@ -373,5 +448,86 @@ mod tests {
         assert!(b.is_empty());
         assert_eq!(b.iter_ones().count(), 0);
         assert_eq!(b.iter_zeros().count(), 0);
+    }
+
+    #[test]
+    fn live_mask_covers_interior_tail_and_beyond() {
+        let b = Bitset::new(70);
+        assert_eq!(b.live_mask(0), !0);
+        assert_eq!(b.live_mask(1), (1 << 6) - 1);
+        assert_eq!(b.live_mask(2), 0);
+        // Exact multiple of 64: full tail word.
+        let c = Bitset::new(128);
+        assert_eq!(c.live_mask(1), !0);
+        assert_eq!(c.live_mask(2), 0);
+    }
+
+    #[test]
+    fn zeros_word_matches_iter_zeros() {
+        let mut b = Bitset::new(100);
+        for i in (0..100).step_by(3) {
+            b.set(i);
+        }
+        let mut from_words = Vec::new();
+        for wi in 0..b.num_words() {
+            let mut z = b.zeros_word(wi);
+            while z != 0 {
+                from_words.push((wi << 6) + z.trailing_zeros() as usize);
+                z &= z - 1;
+            }
+        }
+        assert_eq!(from_words, b.iter_zeros().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn and_not_count_is_set_difference_popcount() {
+        let mut a = Bitset::new(200);
+        let mut b = Bitset::new(200);
+        for i in (0..200).step_by(2) {
+            a.set(i);
+        }
+        for i in (0..200).step_by(4) {
+            b.set(i);
+        }
+        // a \ b = multiples of 2 that are not multiples of 4.
+        assert_eq!(a.and_not_count(&b), 50);
+        assert_eq!(b.and_not_count(&a), 0);
+        // Shorter `other` reads as zeros.
+        let short = Bitset::new(64);
+        assert_eq!(a.and_not_count(&short), 100);
+    }
+
+    #[test]
+    fn or_assign_from_unions() {
+        let mut a = Bitset::new(130);
+        let mut b = Bitset::new(130);
+        a.set(0);
+        b.set(129);
+        b.set(0);
+        a.or_assign_from(&b);
+        assert!(a.get(0) && a.get(129));
+        assert_eq!(a.count_ones(), 2);
+    }
+
+    #[test]
+    fn for_set_words_skips_zero_words() {
+        let mut b = Bitset::new(256);
+        b.set(1);
+        b.set(130);
+        let mut seen = Vec::new();
+        b.for_set_words(|wi, w| seen.push((wi, w)));
+        assert_eq!(seen, vec![(0, 1u64 << 1), (2, 1u64 << 2)]);
+    }
+
+    #[test]
+    fn test_and_set_word_reports_newly_set() {
+        let mut b = Bitset::new(128);
+        b.set(1);
+        b.set(3);
+        let newly = b.test_and_set_word(0, 0b1111);
+        assert_eq!(newly, 0b0101);
+        assert_eq!(b.count_ones(), 4);
+        // Second application: nothing new.
+        assert_eq!(b.test_and_set_word(0, 0b1111), 0);
     }
 }

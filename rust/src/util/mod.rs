@@ -7,6 +7,7 @@
 
 pub mod rng;
 pub mod bitset;
+pub mod mem;
 pub mod tables;
 pub mod prop;
 pub mod units;

@@ -1,0 +1,169 @@
+//! Property tests for the word-granular `Bitset` combinators: every
+//! word-at-a-time operation must agree with the naive one-bit-at-a-time
+//! oracle on random bitsets, including tail-word edge cases (lengths
+//! that are not multiples of 64).
+
+use scalabfs::prop_assert;
+use scalabfs::util::prop::{for_all, PropConfig};
+use scalabfs::util::rng::Xoshiro256;
+use scalabfs::util::Bitset;
+
+/// Random bitset with a length that stresses tail-word masking.
+fn random_bitset(rng: &mut Xoshiro256) -> Bitset {
+    let len = (1 + rng.next_below(300)) as usize;
+    let mut b = Bitset::new(len);
+    // Roughly half-full on average, with whole-word runs mixed in so
+    // all-ones / all-zeros words both occur.
+    for i in 0..len {
+        if rng.next_below(2) == 0 {
+            b.set(i);
+        }
+    }
+    if rng.next_below(3) == 0 && len > 64 {
+        for i in 0..64 {
+            b.set(i);
+        }
+    }
+    b
+}
+
+#[test]
+fn and_not_count_matches_bit_loop() {
+    for_all(
+        PropConfig { cases: 200, ..Default::default() },
+        "and_not_count oracle",
+        |rng| {
+            let a = random_bitset(rng);
+            let b = random_bitset(rng);
+            let naive = (0..a.len())
+                .filter(|&i| a.get(i) && !(i < b.len() && b.get(i)))
+                .count() as u64;
+            prop_assert!(
+                a.and_not_count(&b) == naive,
+                "and_not_count {} != naive {naive} (|a|={}, |b|={})",
+                a.and_not_count(&b),
+                a.len(),
+                b.len()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn or_assign_from_matches_bit_loop() {
+    for_all(
+        PropConfig { cases: 200, ..Default::default() },
+        "or_assign_from oracle",
+        |rng| {
+            let mut a = random_bitset(rng);
+            let mut b = Bitset::new(a.len());
+            for i in 0..a.len() {
+                if rng.next_below(3) == 0 {
+                    b.set(i);
+                }
+            }
+            let mut expect = Bitset::new(a.len());
+            for i in 0..a.len() {
+                if a.get(i) || b.get(i) {
+                    expect.set(i);
+                }
+            }
+            a.or_assign_from(&b);
+            prop_assert!(a == expect, "union diverges at len {}", a.len());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn for_set_words_reconstructs_exactly_the_ones() {
+    for_all(
+        PropConfig { cases: 200, ..Default::default() },
+        "for_set_words oracle",
+        |rng| {
+            let b = random_bitset(rng);
+            let mut rebuilt = Vec::new();
+            let mut zero_words = 0usize;
+            b.for_set_words(|wi, mut w| {
+                if w == 0 {
+                    zero_words += 1;
+                }
+                while w != 0 {
+                    rebuilt.push((wi << 6) + w.trailing_zeros() as usize);
+                    w &= w - 1;
+                }
+            });
+            prop_assert!(zero_words == 0, "visited {zero_words} zero words");
+            let naive: Vec<usize> = b.iter_ones().collect();
+            prop_assert!(rebuilt == naive, "set-word walk != iter_ones");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zeros_word_and_live_mask_match_bit_loop() {
+    for_all(
+        PropConfig { cases: 200, ..Default::default() },
+        "zeros_word oracle",
+        |rng| {
+            let b = random_bitset(rng);
+            for wi in 0..b.num_words() + 1 {
+                let mut naive = 0u64;
+                for bit in 0..64 {
+                    let i = (wi << 6) + bit;
+                    if i < b.len() && !b.get(i) {
+                        naive |= 1 << bit;
+                    }
+                }
+                prop_assert!(
+                    b.zeros_word(wi) == naive,
+                    "zeros_word({wi}) = {:#x} != naive {naive:#x} at len {}",
+                    b.zeros_word(wi),
+                    b.len()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn test_and_set_word_matches_scalar_test_and_set() {
+    for_all(
+        PropConfig { cases: 200, ..Default::default() },
+        "test_and_set_word oracle",
+        |rng| {
+            let base = random_bitset(rng);
+            let wi = rng.next_below(base.num_words() as u64) as usize;
+            let mask = {
+                // Random mask restricted to valid bits of the word.
+                let mut m = rng.next_u64() & base.live_mask(wi);
+                if rng.next_below(4) == 0 {
+                    m = base.live_mask(wi); // occasionally the full word
+                }
+                m
+            };
+            let mut word_path = base.clone();
+            let newly = word_path.test_and_set_word(wi, mask);
+
+            let mut scalar_path = base.clone();
+            let mut naive_newly = 0u64;
+            for bit in 0..64 {
+                if mask >> bit & 1 == 1 {
+                    let i = (wi << 6) + bit;
+                    if !scalar_path.test_and_set(i) {
+                        naive_newly |= 1 << bit;
+                    }
+                }
+            }
+            prop_assert!(
+                newly == naive_newly,
+                "newly {newly:#x} != naive {naive_newly:#x}"
+            );
+            prop_assert!(word_path == scalar_path, "resulting bitsets diverge");
+            Ok(())
+        },
+    );
+}

@@ -217,6 +217,85 @@ fn cycle_engine_bit_identical_across_dispatcher_fabrics() {
     }
 }
 
+/// The PR-6 host-datapath axis: the word-parallel pull engine and the
+/// tile-blocked dense push must be *traffic*-identical — not just
+/// level-identical — to the scalar per-vertex oracle, across every mode
+/// policy × representation (forced-sparse / forced-dense / adaptive)
+/// and both early-exit settings. The timing simulators price iterations
+/// from these counters, so a host-side speedup that perturbed any of
+/// them would silently move simulated cycles.
+#[test]
+fn host_datapaths_traffic_identical_to_scalar_oracle() {
+    use scalabfs::bfs::bitmap::{BitmapEngine, TrafficConfig};
+    use scalabfs::bfs::traffic::RunTraffic;
+    use scalabfs::graph::Partitioning;
+
+    fn assert_traffic_identical(a: &RunTraffic, b: &RunTraffic, label: &str) {
+        assert_eq!(a.iters.len(), b.iters.len(), "{label}: iteration counts");
+        for (x, y) in a.iters.iter().zip(&b.iters) {
+            let i = x.iteration;
+            assert_eq!(x.iteration, y.iteration, "{label}");
+            assert_eq!(x.mode, y.mode, "{label} iter {i}");
+            assert_eq!(x.list_fetches, y.list_fetches, "{label} iter {i}");
+            assert_eq!(x.neighbors_streamed, y.neighbors_streamed, "{label} iter {i}");
+            assert_eq!(x.newly_visited, y.newly_visited, "{label} iter {i}");
+            assert_eq!(x.frontier_size, y.frontier_size, "{label} iter {i}");
+            assert_eq!(x.scanned_bits, y.scanned_bits, "{label} iter {i}");
+            assert_eq!(x.frontier_fifo_pops, y.frontier_fifo_pops, "{label} iter {i}");
+            assert_eq!(x.per_pe_fetches, y.per_pe_fetches, "{label} iter {i}");
+            assert_eq!(x.per_pe_recv, y.per_pe_recv, "{label} iter {i}");
+            assert_eq!(x.per_pg_offset_bytes, y.per_pg_offset_bytes, "{label} iter {i}");
+            assert_eq!(x.per_pg_edge_bytes, y.per_pg_edge_bytes, "{label} iter {i}");
+            assert_eq!(x.crossbar_results, y.crossbar_results, "{label} iter {i}");
+            // p1_words_scanned / p1_bits_set are host-attribution only
+            // and legitimately differ between datapaths.
+        }
+    }
+
+    let mut rng = Xoshiro256::seed_from(0x60D5EED);
+    for case in 0..4 {
+        let g = random_graph(&mut rng);
+        let root = reference::sample_roots(&g, 1, rng.next_u64())[0];
+        let truth = reference::bfs(&g, root);
+        let part = Partitioning::new(8, 4);
+        let base = TrafficConfig::for_partitioning(part);
+        for early_exit in [false, true] {
+            // Oracle; default fast path; tiles small enough that the
+            // blocked push engages even on these 128..512-vertex graphs.
+            let base_e = if early_exit { base.with_early_exit() } else { base };
+            let scalar_cfg = base_e.host_scalar();
+            let word_cfg = base_e;
+            let tiny_tiles_cfg = word_cfg.with_push_tiling(Some(4));
+            let n_policies = policies().len();
+            for pi in 0..n_policies {
+                let run_with = |cfg: TrafficConfig| {
+                    let mut engine = BitmapEngine::new(&g, part).with_config(cfg);
+                    engine.run(root, policies()[pi].as_mut())
+                };
+                let oracle = run_with(scalar_cfg);
+                assert_eq!(
+                    oracle.levels, truth.levels,
+                    "case={case} scalar oracle diverged from reference"
+                );
+                for (cfg, which) in [(word_cfg, "word"), (tiny_tiles_cfg, "tiny-tiles")] {
+                    let fast = run_with(cfg);
+                    let label = format!(
+                        "case={case} root={root} policy={} early_exit={early_exit} {which}",
+                        policies()[pi].name()
+                    );
+                    assert_eq!(fast.levels, oracle.levels, "{label}: levels");
+                    assert_eq!(fast.reached, oracle.reached, "{label}: reached");
+                    assert_eq!(
+                        fast.traversed_edges, oracle.traversed_edges,
+                        "{label}: traversed edges"
+                    );
+                    assert_traffic_identical(&oracle.traffic, &fast.traffic, &label);
+                }
+            }
+        }
+    }
+}
+
 /// The XLA engine joins the differential test when its feature (and the
 /// AOT artifacts) are present.
 #[cfg(feature = "xla")]
