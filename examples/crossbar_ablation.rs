@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     println!("resource trade-off:\n{}", t.render());
 
     // ---- performance side: hops cost only pipeline fill ----
-    let graph = generators::rmat_graph500(16, 16, 5);
+    let graph = std::sync::Arc::new(generators::rmat_graph500(16, 16, 5));
     let root = reference::sample_roots(&graph, 1, 5)[0];
     let mut t2 = Table::new(vec!["dispatcher (64 PE / 32 PC)", "GTEPS", "delta"]);
     let mut base = 0.0f64;

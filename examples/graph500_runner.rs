@@ -34,8 +34,10 @@ fn main() -> anyhow::Result<()> {
     println!("=== ScalaBFS end-to-end driver: {dataset} (scale 1/{scale}) ===\n");
 
     // ---- 1. dataset ----
-    let graph = datasets::by_name(dataset, scale, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let graph = std::sync::Arc::new(
+        datasets::by_name(dataset, scale, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+    );
     println!(
         "[1/4] dataset {}: |V|={} |E|={} avg deg {:.1}",
         graph.name,
@@ -48,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = SimConfig::u280_full();
     let roots = reference::sample_roots(&graph, 16, seed);
     let t0 = std::time::Instant::now();
-    let batch = BatchDriver::new(&graph, cfg.part).run_batch(&roots, &cfg, || {
+    let batch = BatchDriver::new(graph.clone(), cfg.part).run_batch(&roots, &cfg, || {
         Box::new(Hybrid::default())
     });
     let batch_secs = t0.elapsed().as_secs_f64();
@@ -69,10 +71,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3. cycle-sim cross-check on one root ----
-    let small = datasets::by_name("RMAT18-8", (scale * 4).max(32), seed).unwrap();
+    let small =
+        std::sync::Arc::new(datasets::by_name("RMAT18-8", (scale * 4).max(32), seed).unwrap());
     let root0 = reference::sample_roots(&small, 1, seed)[0];
     let ccfg = SimConfig::u280(8, 16);
-    let cyc = CycleSim::new(&small, ccfg.clone()).run(root0, &mut Hybrid::default())?;
+    let cyc = CycleSim::new(small.clone(), ccfg.clone()).run(root0, &mut Hybrid::default())?;
     let truth = reference::bfs(&small, root0);
     anyhow::ensure!(cyc.levels == truth.levels, "cycle sim mismatch");
     let (func_run, thr) = scalabfs::sim::throughput::simulate_bfs(
@@ -91,20 +94,21 @@ fn main() -> anyhow::Result<()> {
     // ---- 4. XLA/PJRT path on a tiny copy ----
     #[cfg(feature = "xla")]
     {
+        use scalabfs::graph::Partitioning;
         use scalabfs::runtime::XlaBfsEngine;
         // Shrink until the graph fits the largest dense artifact.
         let mut shrink = 256u32;
         let tiny = loop {
             let g = datasets::by_name(dataset, shrink.max(scale), seed).unwrap();
             if g.num_vertices() <= 2048 {
-                break g;
+                break std::sync::Arc::new(g);
             }
             shrink *= 2;
         };
-        match XlaBfsEngine::new() {
+        match XlaBfsEngine::bind(tiny.clone(), Partitioning::new(1, 1)) {
             Ok(mut engine) => {
                 let troot = reference::sample_roots(&tiny, 1, seed)[0];
-                let res = engine.run(&tiny, troot)?;
+                let res = engine.run(troot)?;
                 let truth = reference::bfs(&tiny, troot);
                 anyhow::ensure!(
                     res.levels == truth.levels,
@@ -119,7 +123,7 @@ fn main() -> anyhow::Result<()> {
                     res.execute_seconds * 1e3
                 );
                 // Whole-BFS-on-device variant (one PJRT call, lax.while_loop).
-                if let Ok(full) = engine.run_full(&tiny, troot) {
+                if let Ok(full) = engine.run_full(troot) {
                     anyhow::ensure!(full.levels == truth.levels, "bfs_full diverges");
                     println!(
                         "      bfs_full (single execute): exec {:.1} ms ({:.1}x vs per-step)",

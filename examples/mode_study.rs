@@ -19,8 +19,10 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dataset = args.first().map(String::as_str).unwrap_or("RMAT22-32");
     let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
-    let graph = datasets::by_name(dataset, scale, 42)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let graph = std::sync::Arc::new(
+        datasets::by_name(dataset, scale, 42)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+    );
     let cfg = SimConfig::u280_full();
     let root = reference::sample_roots(&graph, 1, 9)[0];
     let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);

@@ -9,7 +9,7 @@
 
 use scalabfs::bfs::bitmap::run_bfs;
 use scalabfs::bfs::reference;
-use scalabfs::exec::{make_engine, BfsEngine, ENGINE_NAMES};
+use scalabfs::exec::{build_engine, BfsEngine, ENGINE_NAMES};
 use scalabfs::graph::generators;
 use scalabfs::sched::Hybrid;
 use scalabfs::sim::config::SimConfig;
@@ -17,7 +17,7 @@ use scalabfs::sim::throughput::ThroughputSim;
 
 fn main() -> anyhow::Result<()> {
     // 1. A Graph500-style Kronecker graph: 2^16 vertices, avg degree ~32.
-    let graph = generators::rmat_graph500(16, 16, 42);
+    let graph = std::sync::Arc::new(generators::rmat_graph500(16, 16, 42));
     println!(
         "graph {}: |V|={} |E|={} avg degree {:.1}",
         graph.name,
@@ -62,12 +62,12 @@ fn main() -> anyhow::Result<()> {
     //    loop — see rust/src/exec/). The cycle engine steps every cycle,
     //    so use a smaller analog for it.
     println!("\nengine sweep (all implement exec::BfsEngine):");
-    let small = generators::rmat_graph500(10, 8, 42);
+    let small = std::sync::Arc::new(generators::rmat_graph500(10, 8, 42));
     let sroot = reference::sample_roots(&small, 1, 7)[0];
     let struth = reference::bfs(&small, sroot);
     let scfg = SimConfig::u280(4, 8);
     for name in ENGINE_NAMES {
-        let mut engine = make_engine(name, &small, &scfg)?;
+        let mut engine = build_engine(name, &small, &scfg)?;
         let erun = engine.run(sroot, &mut Hybrid::default())?;
         anyhow::ensure!(erun.levels == struth.levels, "{name} diverged");
         println!(

@@ -13,7 +13,7 @@ use scalabfs::sim::config::SimConfig;
 use scalabfs::sim::throughput::simulate_bfs;
 use scalabfs::util::tables::{fmt_f, Table};
 
-fn gteps_for(graph: &scalabfs::graph::Graph, pcs: usize, pes: usize, seed: u64) -> f64 {
+fn gteps_for(graph: &std::sync::Arc<scalabfs::graph::Graph>, pcs: usize, pes: usize, seed: u64) -> f64 {
     let cfg = SimConfig::u280(pcs, pes);
     let root = reference::sample_roots(graph, 1, seed)[0];
     let (_, res) = simulate_bfs(graph, cfg, root, &mut Hybrid::default());
@@ -24,8 +24,10 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dataset = args.first().map(String::as_str).unwrap_or("RMAT22-16");
     let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
-    let graph = datasets::by_name(dataset, scale, 42)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let graph = std::sync::Arc::new(
+        datasets::by_name(dataset, scale, 42)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+    );
     println!(
         "scaling study on {} (|V|={}, |E|={})\n",
         graph.name,

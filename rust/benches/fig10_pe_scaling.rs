@@ -36,12 +36,14 @@ fn main() -> anyhow::Result<()> {
 
     // Cycle-level cross-check on the smallest graph.
     println!("cycle-simulator cross-check (RMAT18-8, shrunk):");
-    let g = datasets::by_name("RMAT18-8", (opts.scale_factor * 8).max(64), opts.seed).unwrap();
+    let g = std::sync::Arc::new(
+        datasets::by_name("RMAT18-8", (opts.scale_factor * 8).max(64), opts.seed).unwrap(),
+    );
     let root = reference::sample_roots(&g, 1, opts.seed)[0];
     let mut t = Table::new(vec!["#PE (1 PC)", "cycle-sim GTEPS", "analytic GTEPS", "ratio"]);
     for pes in [1usize, 2, 4, 8] {
         let cfg = SimConfig::u280(1, pes);
-        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
+        let cyc = CycleSim::new(g.clone(), cfg.clone()).run(root, &mut Hybrid::default())?;
         let (_, thr) =
             scalabfs::sim::throughput::simulate_bfs(&g, cfg, root, &mut Hybrid::default());
         t.row(vec![

@@ -24,7 +24,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(64usize);
     println!("=== multi-root batch bench (Graph500-style) ===\n");
-    let g = generators::rmat_graph500(scale, 16, 1);
+    let g = std::sync::Arc::new(generators::rmat_graph500(scale, 16, 1));
     println!(
         "workload: {} |V|={} |E|={}, {} roots, 32PC/64PE hybrid\n",
         g.name,
@@ -34,7 +34,7 @@ fn main() {
     );
     let cfg = SimConfig::u280_full();
     let roots = reference::sample_roots(&g, num_roots, 1);
-    let driver = BatchDriver::new(&g, cfg.part);
+    let driver = BatchDriver::new(g.clone(), cfg.part);
 
     // Serial baseline: the same driver inside a one-thread pool.
     let serial_pool = rayon::ThreadPoolBuilder::new()

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         "=== cycle-sim host loop bench (RMAT-{scale} d16, {}) ===\n",
         if smoke { "smoke" } else { "full" }
     );
-    let g = scalabfs::graph::generators::rmat_graph500(scale, 16, 7);
+    let g = std::sync::Arc::new(scalabfs::graph::generators::rmat_graph500(scale, 16, 7));
     let root = reference::sample_roots(&g, 1, 7)[0];
     let truth = reference::bfs(&g, root);
 
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         let mut last = None;
         for _ in 0..reps {
             let t0 = std::time::Instant::now();
-            let res = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
+            let res = CycleSim::new(g.clone(), cfg.clone()).run(root, &mut Hybrid::default())?;
             best = best.min(t0.elapsed().as_secs_f64());
             last = Some(res);
         }

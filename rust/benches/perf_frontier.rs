@@ -24,13 +24,13 @@ use scalabfs::graph::{generators, Graph, Partitioning};
 use scalabfs::sched::{Hybrid, ReprPolicy, WithRepr};
 
 fn time_run(
-    g: &Graph,
+    g: &std::sync::Arc<Graph>,
     root: u32,
     reps: usize,
     repr: ReprPolicy,
 ) -> (f64, BfsRun) {
     let part = Partitioning::new(1, 1);
-    let mut engine = BitmapEngine::new(g, part);
+    let mut engine = BitmapEngine::new(g.clone(), part);
     let mut state = SearchState::new(g.num_vertices());
     let mut best = f64::INFINITY;
     let mut last = None;
@@ -49,7 +49,7 @@ fn time_run(
     (best, last.expect("reps >= 1"))
 }
 
-fn compare(name: &str, g: &Graph, root: u32, reps: usize) -> f64 {
+fn compare(name: &str, g: &std::sync::Arc<Graph>, root: u32, reps: usize) -> f64 {
     let (t_dense, run_dense) = time_run(g, root, reps, ReprPolicy::Dense);
     let (t_adaptive, run_adaptive) = time_run(g, root, reps, ReprPolicy::default());
     assert_eq!(
@@ -82,7 +82,7 @@ fn main() {
     );
 
     // High-diameter chain: the adaptive win.
-    let chain = generators::chain(1usize << chain_scale);
+    let chain = std::sync::Arc::new(generators::chain(1usize << chain_scale));
     let chain_speedup = compare(
         &format!("chain-2^{chain_scale} (frontier=1)"),
         &chain,
@@ -91,7 +91,7 @@ fn main() {
     );
 
     // Scale-free RMAT through the hybrid scheduler: must not regress.
-    let rmat = generators::rmat_graph500(rmat_scale, 16, 1);
+    let rmat = std::sync::Arc::new(generators::rmat_graph500(rmat_scale, 16, 1));
     let root = reference::sample_roots(&rmat, 1, 1)[0];
     let rmat_speedup = compare(
         &format!("RMAT-{rmat_scale} d16 (hybrid)"),

@@ -42,7 +42,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(18u32);
-    let g = generators::rmat_graph500(scale, 16, 1);
+    let g = std::sync::Arc::new(generators::rmat_graph500(scale, 16, 1));
     let edges = g.num_edges();
     println!(
         "workload: {} |V|={} |E|={}\n",
@@ -72,7 +72,7 @@ fn main() {
 
     // The bitmap engine through the shared exec driver, one SearchState
     // reused across repetitions (the production multi-root pattern).
-    let mut engine = scalabfs::bfs::bitmap::BitmapEngine::new(&g, part);
+    let mut engine = scalabfs::bfs::bitmap::BitmapEngine::new(g.clone(), part);
     let mut state = SearchState::new(g.num_vertices());
     let t = time("bitmap engine, push-only (state reused)", 5, || {
         let _ = engine.run_with_state(&mut state, root, &mut Fixed(Mode::Push));
@@ -92,11 +92,11 @@ fn main() {
         inner: Fixed(Mode::Pull),
         repr: ReprPolicy::Dense,
     };
-    let mut scalar_engine = BitmapEngine::new(&g, part).with_config(base.host_scalar());
+    let mut scalar_engine = BitmapEngine::new(g.clone(), part).with_config(base.host_scalar());
     let t_scalar = time("pull, scalar per-vertex (dense frontier)", 5, || {
         let _ = scalar_engine.run_with_state(&mut state, root, &mut pull_dense());
     });
-    let mut word_engine = BitmapEngine::new(&g, part).with_config(base);
+    let mut word_engine = BitmapEngine::new(g.clone(), part).with_config(base);
     let t_word = time("pull, word-parallel AND-scan (dense)", 5, || {
         let _ = word_engine.run_with_state(&mut state, root, &mut pull_dense());
     });
@@ -121,13 +121,14 @@ fn main() {
         inner: Fixed(Mode::Push),
         repr: ReprPolicy::Dense,
     };
-    let mut direct_engine = BitmapEngine::new(&g, part).with_config(base.with_push_tiling(None));
+    let mut direct_engine =
+        BitmapEngine::new(g.clone(), part).with_config(base.with_push_tiling(None));
     let t_direct = time("push, dense direct (forced dense)", 5, || {
         let _ = direct_engine.run_with_state(&mut state, root, &mut push_dense());
     });
     let tile_bits = scale.saturating_sub(3);
     let mut tiled_engine =
-        BitmapEngine::new(&g, part).with_config(base.with_push_tiling(Some(tile_bits)));
+        BitmapEngine::new(g.clone(), part).with_config(base.with_push_tiling(Some(tile_bits)));
     let t_tiled = time("push, dense tiled (forced dense)", 5, || {
         let _ = tiled_engine.run_with_state(&mut state, root, &mut push_dense());
     });

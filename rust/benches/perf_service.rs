@@ -1,0 +1,81 @@
+//! Bench: the two-tier BFS query service under mixed open-loop load —
+//! queries/second and per-tier p50/p99 latency, with the cycle-sim
+//! (accurate) tier running concurrently with bitmap (fast) traffic to
+//! demonstrate that slow queries do not inflate fast-tier tails.
+//!
+//! ```bash
+//! cargo bench --bench perf_service                       # RMAT-12, 384 queries
+//! SCALABFS_BENCH_SCALE=10 cargo bench --bench perf_service   # quicker
+//! ```
+
+use scalabfs::graph::generators;
+use scalabfs::service::{loadgen, BfsService, GraphCatalog, LoadgenOptions, ServiceConfig};
+use scalabfs::sim::config::SimConfig;
+use std::sync::Arc;
+
+fn main() {
+    let scale = std::env::var("SCALABFS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12u32);
+    let queries = std::env::var("SCALABFS_BENCH_QUERIES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(384usize);
+    println!("=== BFS query service bench (open loop) ===\n");
+    let catalog = Arc::new(GraphCatalog::new());
+    let g = generators::rmat_graph500(scale, 8, 21);
+    println!(
+        "workload: {} |V|={} |E|={}, {} queries, accurate every 16, root pool 16\n",
+        g.name,
+        g.num_vertices(),
+        g.num_edges(),
+        queries
+    );
+    catalog.insert("bench", g);
+    let service = BfsService::start(
+        Arc::clone(&catalog),
+        ServiceConfig {
+            sim: SimConfig::u280(2, 4),
+            ..ServiceConfig::default()
+        },
+    );
+
+    // Pass 1: cold — every distinct root computed.
+    let opts = LoadgenOptions {
+        graph: "bench".into(),
+        queries,
+        accurate_every: 16,
+        root_pool: 16,
+        seed: 21,
+    };
+    let cold = loadgen::run(&service, &opts).expect("cold run");
+    // Pass 2: warm — the cache absorbs the fast tier.
+    let warm = loadgen::run(&service, &opts).expect("warm run");
+
+    for (label, report) in [("cold", &cold), ("warm", &warm)] {
+        println!(
+            "{label}: {} submitted, {} rejected, {} errors, {:.2}s wall -> {:.0} q/s",
+            report.submitted, report.rejected, report.errors, report.wall_seconds, report.qps
+        );
+        for (tier, lat) in [("fast", report.fast), ("accurate", report.accurate)] {
+            println!(
+                "  {tier:<9} {:>5} done  p50 {:>9.3} ms  p99 {:>9.3} ms  max {:>9.3} ms",
+                lat.completed, lat.p50_ms, lat.p99_ms, lat.max_ms
+            );
+        }
+    }
+    let stats = service.stats();
+    println!(
+        "\nservice counters: {} completed, {} cache hits, {} batches over {} roots, {} errors",
+        stats.completed, stats.cache_hits, stats.batches, stats.batched_roots, stats.errors
+    );
+    assert_eq!(cold.errors + warm.errors, 0, "service load run reported errors");
+    assert!(
+        warm.qps >= cold.qps * 0.5,
+        "warm pass should not be dramatically slower than cold ({:.0} vs {:.0} q/s)",
+        warm.qps,
+        cold.qps
+    );
+    println!("\n(persisted trajectory: `scalabfs bench --json=BENCH_7.json`, section `service`)");
+}

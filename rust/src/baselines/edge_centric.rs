@@ -61,39 +61,31 @@ pub struct EdgeCentricResult {
 /// edge list through one memory channel, testing each edge against the
 /// current frontier. Direction-agnostic — there is no pull variant, so
 /// `step` ignores the requested mode.
-pub struct EdgeCentricEngine<'g> {
-    graph: &'g Graph,
+pub struct EdgeCentricEngine {
+    graph: std::sync::Arc<Graph>,
     part: Partitioning,
     /// Channel parameters used by [`estimate`].
     pub cfg: EdgeCentricConfig,
 }
 
-impl<'g> EdgeCentricEngine<'g> {
-    /// New baseline engine (single channel: the partitioning collapses
-    /// to one PE / one PG for traffic accounting).
-    pub fn new(graph: &'g Graph, cfg: EdgeCentricConfig) -> Self {
+impl EdgeCentricEngine {
+    /// New baseline engine. Any requested partitioning is irrelevant:
+    /// the edge-centric baseline is single-channel by definition, so
+    /// its traffic is always attributed to one PE / one PG regardless
+    /// of the sweep's PC/PE point (sweeps time that one channel with
+    /// the HBM model; the DDR4 Fig-12 number comes from [`estimate`]).
+    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, cfg: EdgeCentricConfig) -> Self {
         Self {
-            graph,
+            graph: graph.into(),
             part: Partitioning::new(1, 1),
             cfg,
         }
     }
 }
 
-impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
-    /// Rebinds the graph. The requested partitioning is ignored: the
-    /// edge-centric baseline is single-channel by definition, so its
-    /// traffic is always attributed to one PE / one PG regardless of
-    /// the sweep's PC/PE point (sweeps time that one channel with the
-    /// HBM model; the DDR4 Fig-12 number comes from [`estimate`]).
-    fn prepare(&mut self, graph: &'g Graph, _part: Partitioning) -> Result<()> {
-        self.graph = graph;
-        self.part = Partitioning::new(1, 1);
-        Ok(())
-    }
-
-    fn graph(&self) -> &'g Graph {
-        self.graph
+impl BfsEngine for EdgeCentricEngine {
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn partitioning(&self) -> Partitioning {
@@ -101,7 +93,7 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
     }
 
     fn step(&mut self, state: &mut SearchState, _mode: Mode) -> Result<StepStats> {
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         let mut it = IterTraffic::new(
             state.bfs_level,
             Mode::Push,
@@ -140,8 +132,12 @@ impl<'g> BfsEngine<'g> for EdgeCentricEngine<'g> {
 
 /// Estimate edge-centric BFS performance: every iteration streams the
 /// full edge list through the single channel.
-pub fn estimate(g: &Graph, root: VertexId, cfg: EdgeCentricConfig) -> EdgeCentricResult {
-    let mut engine = EdgeCentricEngine::new(g, cfg);
+pub fn estimate(
+    g: &std::sync::Arc<Graph>,
+    root: VertexId,
+    cfg: EdgeCentricConfig,
+) -> EdgeCentricResult {
+    let mut engine = EdgeCentricEngine::new(std::sync::Arc::clone(g), cfg);
     let run = engine
         .run(root, &mut Fixed(Mode::Push))
         .expect("the edge-centric step is infallible");
@@ -165,7 +161,7 @@ mod tests {
 
     #[test]
     fn edge_centric_streams_full_graph_each_iteration() {
-        let g = generators::chain(10);
+        let g = std::sync::Arc::new(generators::chain(10));
         let res = estimate(&g, 0, EdgeCentricConfig::default());
         assert_eq!(res.iterations, 10);
         assert_eq!(res.edges_streamed, 9 * 10);
@@ -173,9 +169,9 @@ mod tests {
 
     #[test]
     fn edge_centric_levels_match_reference() {
-        let g = generators::rmat_graph500(9, 8, 3);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 3));
         let root = reference::sample_roots(&g, 1, 3)[0];
-        let run = EdgeCentricEngine::new(&g, EdgeCentricConfig::default())
+        let run = EdgeCentricEngine::new(g.clone(), EdgeCentricConfig::default())
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         assert_eq!(run.levels, reference::bfs(&g, root).levels);
@@ -186,7 +182,7 @@ mod tests {
         // On an LJ-like scale-free graph the model should land in the
         // hundreds-of-MTEPS range (ForeGraph: ~410 MTEPS), far below a
         // GTEPS-class vertex-centric design.
-        let g = generators::rmat_graph500(13, 14, 77);
+        let g = std::sync::Arc::new(generators::rmat_graph500(13, 14, 77));
         let root = reference::sample_roots(&g, 1, 1)[0];
         let res = estimate(&g, root, EdgeCentricConfig::default());
         assert!(

@@ -38,7 +38,7 @@ mod tests {
 
     #[test]
     fn baseline_is_slower_and_uses_less_bandwidth() {
-        let g = generators::rmat_graph500(12, 16, 31);
+        let g = std::sync::Arc::new(generators::rmat_graph500(12, 16, 31));
         let root = reference::sample_roots(&g, 1, 31)[0];
         let cfg = SimConfig::u280(16, 32);
         let run = run_bfs(&g, cfg.part, root, &mut Hybrid::default());

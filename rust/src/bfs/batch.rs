@@ -14,6 +14,11 @@
 //! bit-identical whatever the worker count; `collect` preserves root
 //! order.
 //!
+//! The driver holds its graph as an `Arc`, so the long-lived
+//! [`crate::service`] layer can coalesce concurrent queries for the
+//! same catalog graph into one batch without copying or borrowing
+//! across threads.
+//!
 //! Serial behaviour (for A/B timing) is just the same driver run inside
 //! a one-thread rayon pool — see `benches/perf_batch.rs`.
 
@@ -25,6 +30,7 @@ use crate::sched::ModePolicy;
 use crate::sim::config::SimConfig;
 use crate::sim::throughput::ThroughputSim;
 use rayon::prelude::*;
+use std::sync::Arc;
 
 /// Result of a multi-root batch.
 #[derive(Clone, Debug)]
@@ -39,17 +45,17 @@ pub struct BatchResult {
 
 /// Multi-root driver: host-parallel across roots, state reused within
 /// each worker.
-pub struct BatchDriver<'g> {
-    graph: &'g Graph,
+pub struct BatchDriver {
+    graph: Arc<Graph>,
     part: Partitioning,
     cfg: Option<TrafficConfig>,
 }
 
-impl<'g> BatchDriver<'g> {
-    /// New batch driver.
-    pub fn new(graph: &'g Graph, part: Partitioning) -> Self {
+impl BatchDriver {
+    /// New batch driver over a shared graph.
+    pub fn new(graph: impl Into<Arc<Graph>>, part: Partitioning) -> Self {
         Self {
-            graph,
+            graph: graph.into(),
             part,
             cfg: None,
         }
@@ -82,7 +88,7 @@ impl<'g> BatchDriver<'g> {
                 // One engine + one search state per worker shard,
                 // reused (reset in place) across that shard's roots.
                 || {
-                    let mut engine = BitmapEngine::new(self.graph, self.part);
+                    let mut engine = BitmapEngine::new(Arc::clone(&self.graph), self.part);
                     if let Some(cfg) = self.cfg {
                         engine = engine.with_config(cfg);
                     }
@@ -117,10 +123,10 @@ mod tests {
 
     #[test]
     fn batch_validates_every_root() {
-        let g = generators::rmat_graph500(9, 8, 13);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 13));
         let cfg = SimConfig::u280(4, 8);
         let roots = reference::sample_roots(&g, 5, 13);
-        let batch = BatchDriver::new(&g, cfg.part).run_batch(&roots, &cfg, || {
+        let batch = BatchDriver::new(g.clone(), cfg.part).run_batch(&roots, &cfg, || {
             Box::new(Hybrid::default())
         });
         assert_eq!(batch.runs.len(), 5);
@@ -135,10 +141,10 @@ mod tests {
 
     #[test]
     fn parallel_batch_matches_single_thread_pool() {
-        let g = generators::rmat_graph500(10, 8, 17);
+        let g = Arc::new(generators::rmat_graph500(10, 8, 17));
         let cfg = SimConfig::u280(4, 8);
         let roots = reference::sample_roots(&g, 8, 17);
-        let driver = BatchDriver::new(&g, cfg.part);
+        let driver = BatchDriver::new(g, cfg.part);
         let serial = rayon::ThreadPoolBuilder::new()
             .num_threads(1)
             .build()
@@ -156,10 +162,10 @@ mod tests {
     #[test]
     fn batch_is_bit_exact_across_frontier_representations() {
         use crate::sched::{ReprPolicy, WithRepr};
-        let g = generators::rmat_graph500(9, 8, 23);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 23));
         let cfg = SimConfig::u280(4, 8);
         let roots = reference::sample_roots(&g, 6, 23);
-        let driver = BatchDriver::new(&g, cfg.part);
+        let driver = BatchDriver::new(g, cfg.part);
         let baseline = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
         for repr in [ReprPolicy::Sparse, ReprPolicy::Dense] {
             let forced = driver.run_batch(&roots, &cfg, move || {
@@ -178,10 +184,10 @@ mod tests {
 
     #[test]
     fn empty_batch_is_degenerate() {
-        let g = generators::chain(8);
+        let g = Arc::new(generators::chain(8));
         let cfg = SimConfig::u280(1, 1);
         let batch =
-            BatchDriver::new(&g, cfg.part).run_batch(&[], &cfg, || Box::new(Hybrid::default()));
+            BatchDriver::new(g, cfg.part).run_batch(&[], &cfg, || Box::new(Hybrid::default()));
         assert!(batch.runs.is_empty());
         assert_eq!(batch.harmonic_gteps, 0.0);
     }

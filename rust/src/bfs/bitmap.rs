@@ -34,6 +34,8 @@
 //! [`SearchState`], and the level-synchronous loop lives in
 //! [`crate::exec::driver`].
 
+use std::sync::Arc;
+
 use super::traffic::IterTraffic;
 use super::Mode;
 use crate::exec::frontier::Frontier;
@@ -190,8 +192,8 @@ fn push_visit(
 /// The Algorithm-2 engine. Search state (the three bitmaps + level
 /// array the paper keeps in double-pump BRAM / URAM) lives in the
 /// [`SearchState`] passed to each step.
-pub struct BitmapEngine<'g> {
-    graph: &'g Graph,
+pub struct BitmapEngine {
+    graph: Arc<Graph>,
     part: Partitioning,
     cfg: TrafficConfig,
     /// Per-destination-tile neighbor buckets for the tiled push walk.
@@ -200,11 +202,15 @@ pub struct BitmapEngine<'g> {
     tile_bufs: Vec<Vec<VertexId>>,
 }
 
-impl<'g> BitmapEngine<'g> {
-    /// New engine over `graph` partitioned as `part`.
-    pub fn new(graph: &'g Graph, part: Partitioning) -> Self {
+impl BitmapEngine {
+    /// New engine over `graph` partitioned as `part`. Takes the graph
+    /// by shared handle — pass an owned [`Graph`] or clone an existing
+    /// `Arc<Graph>`; the engine keeps the graph alive for its own
+    /// lifetime, which is what lets it cross threads and outlive its
+    /// construction site.
+    pub fn new(graph: impl Into<Arc<Graph>>, part: Partitioning) -> Self {
         Self {
-            graph,
+            graph: graph.into(),
             part,
             cfg: TrafficConfig::for_partitioning(part),
             tile_bufs: Vec::new(),
@@ -260,7 +266,7 @@ impl<'g> BitmapEngine<'g> {
     fn push_sparse(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         let offsets = &graph.csr.offsets;
         let edge_arr = &graph.csr.edges;
         let SearchState {
@@ -299,7 +305,7 @@ impl<'g> BitmapEngine<'g> {
     fn push_dense_direct(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         let SearchState {
             current,
             next,
@@ -339,7 +345,7 @@ impl<'g> BitmapEngine<'g> {
     fn push_dense_tiled(&mut self, state: &mut SearchState, it: &mut IterTraffic, tile_bits: u32) {
         let cfg = self.cfg;
         let part = self.part;
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         let n = state.current.num_vertices();
         let tile = 1usize << tile_bits;
         let num_tiles = n.div_ceil(tile);
@@ -405,7 +411,7 @@ impl<'g> BitmapEngine<'g> {
     fn pull_words(&self, state: &mut SearchState, it: &mut IterTraffic) {
         let cfg = self.cfg;
         let part = self.part;
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         it.scanned_bits = state.visited.len() as u64;
         let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
         {
@@ -506,7 +512,7 @@ impl<'g> BitmapEngine<'g> {
         let part = self.part;
         it.scanned_bits = state.visited.len() as u64;
         let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         // Visited updates are staged in `next` and OR-ed into the
         // visited map after the scan (each unvisited vertex is seen once
         // per iteration, so deferral is safe) — this lets the scan
@@ -554,16 +560,9 @@ impl<'g> BitmapEngine<'g> {
     }
 }
 
-impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
-    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
-        self.graph = graph;
-        self.part = part;
-        self.cfg = self.cfg.rebind(part);
-        Ok(())
-    }
-
-    fn graph(&self) -> &'g Graph {
-        self.graph
+impl BfsEngine for BitmapEngine {
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn partitioning(&self) -> Partitioning {
@@ -597,14 +596,15 @@ impl<'g> BfsEngine<'g> for BitmapEngine<'g> {
     }
 }
 
-/// Convenience wrapper: run Algorithm 2 with a policy on a graph.
+/// Convenience wrapper: run Algorithm 2 with a policy on a graph. The
+/// `Arc` is cloned (a refcount bump), never the graph itself.
 pub fn run_bfs(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     part: Partitioning,
     root: VertexId,
     policy: &mut dyn ModePolicy,
 ) -> BfsRun {
-    BitmapEngine::new(graph, part).run(root, policy)
+    BitmapEngine::new(Arc::clone(graph), part).run(root, policy)
 }
 
 #[cfg(test)]
@@ -614,7 +614,7 @@ mod tests {
     use crate::graph::generators;
     use crate::sched::{Fixed, Hybrid, ReprPolicy, WithRepr};
 
-    fn check_levels(g: &Graph, root: VertexId, policy: &mut dyn ModePolicy) {
+    fn check_levels(g: &Arc<Graph>, root: VertexId, policy: &mut dyn ModePolicy) {
         let part = Partitioning::new(4, 2);
         let run = run_bfs(g, part, root, policy);
         let reference = reference::bfs(g, root);
@@ -624,32 +624,32 @@ mod tests {
 
     #[test]
     fn push_matches_reference_on_rmat() {
-        let g = generators::rmat_graph500(9, 8, 1);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 1));
         check_levels(&g, reference::sample_roots(&g, 1, 1)[0], &mut Fixed(Mode::Push));
     }
 
     #[test]
     fn pull_matches_reference_on_rmat() {
-        let g = generators::rmat_graph500(9, 8, 2);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 2));
         check_levels(&g, reference::sample_roots(&g, 1, 2)[0], &mut Fixed(Mode::Pull));
     }
 
     #[test]
     fn hybrid_matches_reference_on_rmat() {
-        let g = generators::rmat_graph500(10, 16, 3);
+        let g = Arc::new(generators::rmat_graph500(10, 16, 3));
         check_levels(&g, reference::sample_roots(&g, 1, 3)[0], &mut Hybrid::default());
     }
 
     #[test]
     fn hybrid_matches_on_chain_and_star() {
-        check_levels(&generators::chain(50), 0, &mut Hybrid::default());
-        check_levels(&generators::star(33), 0, &mut Hybrid::default());
-        check_levels(&generators::complete(17), 5, &mut Hybrid::default());
+        check_levels(&Arc::new(generators::chain(50)), 0, &mut Hybrid::default());
+        check_levels(&Arc::new(generators::star(33)), 0, &mut Hybrid::default());
+        check_levels(&Arc::new(generators::complete(17)), 5, &mut Hybrid::default());
     }
 
     #[test]
     fn traversed_edges_counts_each_once() {
-        let g = generators::complete(8);
+        let g = Arc::new(generators::complete(8));
         let run = run_bfs(&g, Partitioning::new(2, 1), 0, &mut Fixed(Mode::Push));
         // All 8 vertices reached; each has out-degree 7.
         assert_eq!(run.traversed_edges, 56);
@@ -657,7 +657,7 @@ mod tests {
 
     #[test]
     fn hybrid_reduces_traffic_vs_pull_on_dense_graph() {
-        let g = generators::rmat_graph500(10, 32, 5);
+        let g = Arc::new(generators::rmat_graph500(10, 32, 5));
         let root = reference::sample_roots(&g, 1, 5)[0];
         let part = Partitioning::new(8, 4);
         let hybrid = run_bfs(&g, part, root, &mut Hybrid::default());
@@ -672,7 +672,7 @@ mod tests {
 
     #[test]
     fn dispatcher_recv_conserves_streamed_neighbors() {
-        let g = generators::rmat_graph500(9, 8, 7);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 7));
         let root = reference::sample_roots(&g, 1, 7)[0];
         let run = run_bfs(&g, Partitioning::new(4, 4), root, &mut Hybrid::default());
         for it in &run.traffic.iters {
@@ -683,7 +683,7 @@ mod tests {
 
     #[test]
     fn newly_visited_sums_to_reached_minus_root() {
-        let g = generators::rmat_graph500(9, 4, 9);
+        let g = Arc::new(generators::rmat_graph500(9, 4, 9));
         let root = reference::sample_roots(&g, 1, 9)[0];
         let run = run_bfs(&g, Partitioning::new(4, 2), root, &mut Hybrid::default());
         let total: u64 = run.traffic.iters.iter().map(|i| i.newly_visited).sum();
@@ -692,7 +692,7 @@ mod tests {
 
     #[test]
     fn single_pe_configuration_works() {
-        let g = generators::rmat_graph500(8, 4, 4);
+        let g = Arc::new(generators::rmat_graph500(8, 4, 4));
         let root = reference::sample_roots(&g, 1, 4)[0];
         let run = run_bfs(&g, Partitioning::new(1, 1), root, &mut Hybrid::default());
         let reference = reference::bfs(&g, root);
@@ -702,7 +702,7 @@ mod tests {
     #[test]
     fn burst_alignment_rounds_edge_bytes() {
         // Star root push: hub list length 9 * 4B = 36B -> rounded to DW.
-        let g = generators::star(10);
+        let g = Arc::new(generators::star(10));
         let part = Partitioning::new(2, 1); // DW = 2*2*4 = 16B
         let run = run_bfs(&g, part, 0, &mut Fixed(Mode::Push));
         let it0 = &run.traffic.iters[0];
@@ -715,13 +715,13 @@ mod tests {
     fn p1_accounting_distinguishes_fifo_from_bitmap_scan() {
         // Chain frontiers have size 1: sparse runs pop the frontier
         // FIFO in P1; forcing dense pays the full word scan.
-        let g = generators::chain(512);
+        let g = Arc::new(generators::chain(512));
         let part = Partitioning::new(1, 1);
         let mut sparse_policy = WithRepr {
             inner: Fixed(Mode::Push),
             repr: ReprPolicy::Sparse,
         };
-        let sparse = BitmapEngine::new(&g, part).run(0, &mut sparse_policy);
+        let sparse = BitmapEngine::new(g.clone(), part).run(0, &mut sparse_policy);
         for it in &sparse.traffic.iters {
             assert_eq!(it.frontier_fifo_pops, it.frontier_size, "iter {}", it.iteration);
             assert_eq!(it.scanned_bits, 0, "iter {}", it.iteration);
@@ -732,7 +732,7 @@ mod tests {
             inner: Fixed(Mode::Push),
             repr: ReprPolicy::Dense,
         };
-        let dense = BitmapEngine::new(&g, part).run(0, &mut dense_policy);
+        let dense = BitmapEngine::new(g.clone(), part).run(0, &mut dense_policy);
         for it in &dense.traffic.iters {
             assert_eq!(it.frontier_fifo_pops, 0, "iter {}", it.iteration);
             assert_eq!(it.scanned_bits, 512, "iter {}", it.iteration);
@@ -747,22 +747,24 @@ mod tests {
     }
 
     #[test]
-    fn prepare_rebinds_preserving_flags() {
-        let g1 = generators::chain(8);
-        let g2 = generators::star(16);
+    fn rebind_recomputes_dw_preserving_flags() {
+        // Rebinding a traffic config to a new partitioning recomputes
+        // only the Eq-1 AXI width; every policy flag survives. (The
+        // engine itself is born bound now — re-targeting a graph means
+        // constructing a fresh engine with the rebound config.)
         let p1 = Partitioning::new(2, 1);
-        let mut e = BitmapEngine::new(&g1, p1).with_config(
-            TrafficConfig::for_partitioning(p1)
-                .with_early_exit()
-                .host_scalar(),
-        );
-        e.prepare(&g2, Partitioning::new(4, 2)).unwrap();
+        let p2 = Partitioning::new(4, 2);
+        let cfg = TrafficConfig::for_partitioning(p1)
+            .with_early_exit()
+            .host_scalar()
+            .rebind(p2);
+        assert!(cfg.pull_early_exit);
+        assert!(!cfg.pull_word_parallel);
+        assert_eq!(cfg.push_tile_bits, None);
+        assert_eq!(cfg.dw_bytes, 2 * 2 * 4);
+        let g = Arc::new(generators::star(16));
+        let mut e = BitmapEngine::new(g, p2).with_config(cfg);
         assert_eq!(e.partitioning().num_pes, 4);
-        // Every policy flag survives a rebind; only DW is recomputed.
-        assert!(e.cfg.pull_early_exit);
-        assert!(!e.cfg.pull_word_parallel);
-        assert_eq!(e.cfg.push_tile_bits, None);
-        assert_eq!(e.cfg.dw_bytes, 2 * 2 * 4);
         let run = e.run(0, &mut Hybrid::default());
         assert_eq!(run.reached, 16);
     }
@@ -812,15 +814,15 @@ mod tests {
     #[test]
     fn word_pull_is_bit_identical_to_scalar() {
         for (early, seed) in [(false, 11u64), (true, 12)] {
-            let g = generators::rmat_graph500(10, 16, seed);
+            let g = Arc::new(generators::rmat_graph500(10, 16, seed));
             let root = reference::sample_roots(&g, 1, seed)[0];
             let part = Partitioning::new(4, 2);
             let base = TrafficConfig::for_partitioning(part);
             let base = if early { base.with_early_exit() } else { base };
-            let word = BitmapEngine::new(&g, part)
+            let word = BitmapEngine::new(g.clone(), part)
                 .with_config(base.with_pull_word_parallel(true))
                 .run(root, &mut Fixed(Mode::Pull));
-            let scalar = BitmapEngine::new(&g, part)
+            let scalar = BitmapEngine::new(g.clone(), part)
                 .with_config(base.with_pull_word_parallel(false))
                 .run(root, &mut Fixed(Mode::Pull));
             assert_traffic_identical(&word, &scalar, if early { "early-exit" } else { "full-list" });
@@ -832,7 +834,7 @@ mod tests {
 
     #[test]
     fn tiled_push_is_bit_identical_to_direct() {
-        let g = generators::rmat_graph500(11, 8, 13);
+        let g = Arc::new(generators::rmat_graph500(11, 8, 13));
         let root = reference::sample_roots(&g, 1, 13)[0];
         let part = Partitioning::new(4, 2);
         let base = TrafficConfig::for_partitioning(part);
@@ -841,14 +843,14 @@ mod tests {
             repr: ReprPolicy::Dense,
         };
         // 2^8-vertex tiles on a 2^11-vertex graph: 8 tiles engaged.
-        let tiled = BitmapEngine::new(&g, part)
+        let tiled = BitmapEngine::new(g.clone(), part)
             .with_config(base.with_push_tiling(Some(8)))
             .run(root, &mut dense_policy);
         let mut dense_policy = WithRepr {
             inner: Fixed(Mode::Push),
             repr: ReprPolicy::Dense,
         };
-        let direct = BitmapEngine::new(&g, part)
+        let direct = BitmapEngine::new(g.clone(), part)
             .with_config(base.with_push_tiling(None))
             .run(root, &mut dense_policy);
         assert_traffic_identical(&tiled, &direct, "tiled-vs-direct");
@@ -861,12 +863,12 @@ mod tests {
         // Graph smaller than one default tile: the direct walk runs
         // (observable only through identical results, so just pin the
         // levels against the reference with tiling nominally on).
-        let g = generators::rmat_graph500(9, 8, 14);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 14));
         let root = reference::sample_roots(&g, 1, 14)[0];
         let part = Partitioning::new(2, 1);
         let cfg = TrafficConfig::for_partitioning(part);
         assert_eq!(cfg.push_tile_bits, Some(DEFAULT_PUSH_TILE_BITS));
-        let run = BitmapEngine::new(&g, part)
+        let run = BitmapEngine::new(g.clone(), part)
             .with_config(cfg)
             .run(root, &mut Fixed(Mode::Push));
         assert_eq!(run.levels, reference::bfs(&g, root).levels);

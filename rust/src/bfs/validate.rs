@@ -126,7 +126,7 @@ mod tests {
 
     #[test]
     fn bitmap_engine_validates() {
-        let g = generators::rmat_graph500(10, 16, 2);
+        let g = std::sync::Arc::new(generators::rmat_graph500(10, 16, 2));
         let root = reference::sample_roots(&g, 1, 2)[0];
         let run = run_bfs(&g, Partitioning::new(8, 4), root, &mut Hybrid::default());
         validate(&g, root, &run.levels).unwrap();

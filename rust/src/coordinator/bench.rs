@@ -55,6 +55,7 @@ use crate::sim::config::SimConfig;
 use crate::sim::cycle::CycleSim;
 use crate::sim::throughput::ThroughputSim;
 use crate::Result;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Schema tag every `BENCH_*.json` carries.
@@ -166,18 +167,18 @@ fn hotpath_section(smoke: bool) -> Section {
     let (scale, reps) = if smoke { (14u32, 3usize) } else { (18, 5) };
     let tag = format!("rmat{scale}");
     println!("[bench] hotpath: RMAT-{scale} d16 ...");
-    let g = generators::rmat_graph500(scale, 16, 1);
+    let g = Arc::new(generators::rmat_graph500(scale, 16, 1));
     let edges = g.num_edges();
     let root = reference::sample_roots(&g, 1, 1)[0];
     let part = Partitioning::new(64, 32);
     let base = TrafficConfig::for_partitioning(part);
     let mut state = SearchState::new(g.num_vertices());
 
-    let mut scalar = BitmapEngine::new(&g, part).with_config(base.host_scalar());
+    let mut scalar = BitmapEngine::new(g.clone(), part).with_config(base.host_scalar());
     let t_pull_scalar = time_best(reps, || {
         let _ = scalar.run_with_state(&mut state, root, &mut pull_dense());
     });
-    let mut word = BitmapEngine::new(&g, part).with_config(base);
+    let mut word = BitmapEngine::new(g.clone(), part).with_config(base);
     let t_pull_word = time_best(reps, || {
         let _ = word.run_with_state(&mut state, root, &mut pull_dense());
     });
@@ -187,17 +188,17 @@ fn hotpath_section(smoke: bool) -> Section {
     let p1_words: u64 = word_run.traffic.iters.iter().map(|i| i.p1_words_scanned).sum();
     let p1_bits: u64 = word_run.traffic.iters.iter().map(|i| i.p1_bits_set).sum();
 
-    let mut direct = BitmapEngine::new(&g, part).with_config(base.with_push_tiling(None));
+    let mut direct = BitmapEngine::new(g.clone(), part).with_config(base.with_push_tiling(None));
     let t_push_direct = time_best(reps, || {
         let _ = direct.run_with_state(&mut state, root, &mut push_dense());
     });
     let mut tiled =
-        BitmapEngine::new(&g, part).with_config(base.with_push_tiling(Some(scale - 3)));
+        BitmapEngine::new(g.clone(), part).with_config(base.with_push_tiling(Some(scale - 3)));
     let t_push_tiled = time_best(reps, || {
         let _ = tiled.run_with_state(&mut state, root, &mut push_dense());
     });
 
-    let mut hybrid = BitmapEngine::new(&g, part);
+    let mut hybrid = BitmapEngine::new(g.clone(), part);
     let t_hybrid = time_best(reps, || {
         let _ = hybrid.run_with_state(&mut state, root, &mut Hybrid::default());
     });
@@ -236,8 +237,8 @@ fn frontier_section(smoke: bool) -> Section {
     let (chain_pow, rmat_scale, reps) = if smoke { (14u32, 12u32, 2usize) } else { (20, 18, 3) };
     println!("[bench] frontier: chain-2^{chain_pow} + RMAT-{rmat_scale} ...");
     let part = Partitioning::new(1, 1);
-    let time_repr = |g: &Graph, root: u32, repr: ReprPolicy| {
-        let mut engine = BitmapEngine::new(g, part);
+    let time_repr = |g: &Arc<Graph>, root: u32, repr: ReprPolicy| {
+        let mut engine = BitmapEngine::new(g.clone(), part);
         let mut state = SearchState::new(g.num_vertices());
         time_best(reps, || {
             let mut policy = WithRepr {
@@ -248,11 +249,11 @@ fn frontier_section(smoke: bool) -> Section {
         })
     };
 
-    let chain = generators::chain(1usize << chain_pow);
+    let chain = Arc::new(generators::chain(1usize << chain_pow));
     let t_chain_dense = time_repr(&chain, 0, ReprPolicy::Dense);
     let t_chain_adaptive = time_repr(&chain, 0, ReprPolicy::default());
 
-    let rmat = generators::rmat_graph500(rmat_scale, 16, 1);
+    let rmat = Arc::new(generators::rmat_graph500(rmat_scale, 16, 1));
     let rmat_root = reference::sample_roots(&rmat, 1, 1)[0];
     let t_rmat_dense = time_repr(&rmat, rmat_root, ReprPolicy::Dense);
     let t_rmat_adaptive = time_repr(&rmat, rmat_root, ReprPolicy::default());
@@ -286,10 +287,10 @@ fn batch_section(smoke: bool) -> Section {
     let (scale, num_roots) = if smoke { (12u32, 8usize) } else { (18, 64) };
     println!("[bench] batch: RMAT-{scale} d16, {num_roots} roots ...");
     let tag = format!("rmat{scale}");
-    let g = generators::rmat_graph500(scale, 16, 1);
+    let g = Arc::new(generators::rmat_graph500(scale, 16, 1));
     let cfg = SimConfig::u280_full();
     let roots = reference::sample_roots(&g, num_roots, 1);
-    let driver = BatchDriver::new(&g, cfg.part);
+    let driver = BatchDriver::new(g, cfg.part);
 
     let serial_pool = rayon::ThreadPoolBuilder::new()
         .num_threads(1)
@@ -329,16 +330,16 @@ fn cycle_section(smoke: bool) -> Result<Section> {
     let (scale, reps) = if smoke { (12u32, 1usize) } else { (16, 3) };
     println!("[bench] cycle: RMAT-{scale} d16, 8 PC x 16 PE ...");
     let tag = format!("rmat{scale}");
-    let g = generators::rmat_graph500(scale, 16, 7);
+    let g = Arc::new(generators::rmat_graph500(scale, 16, 7));
     let root = reference::sample_roots(&g, 1, 7)[0];
     let cfg = SimConfig::u280(8, 16);
-    let res = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default())?;
+    let res = CycleSim::new(g.clone(), cfg.clone()).run(root, &mut Hybrid::default())?;
     anyhow::ensure!(
         res.levels == reference::bfs(&g, root).levels,
         "cycle sim diverged from the reference BFS"
     );
     let t = time_best(reps, || {
-        let _ = CycleSim::new(&g, cfg.clone())
+        let _ = CycleSim::new(g.clone(), cfg.clone())
             .run(root, &mut Hybrid::default())
             .expect("cycle sim step");
     });
@@ -362,24 +363,24 @@ fn graphs_section(smoke: bool) -> Section {
     println!("[bench] graphs: anchor GTEPS ...");
     struct Spec {
         tag: String,
-        graph: Graph,
+        graph: Arc<Graph>,
         cfg: SimConfig,
     }
     let specs: Vec<Spec> = if smoke {
         vec![
             Spec {
                 tag: "rmat14".into(),
-                graph: generators::rmat_graph500(14, 16, 1),
+                graph: Arc::new(generators::rmat_graph500(14, 16, 1)),
                 cfg: SimConfig::u280_full(),
             },
             Spec {
                 tag: "rmat16".into(),
-                graph: generators::rmat_graph500(16, 16, 1),
+                graph: Arc::new(generators::rmat_graph500(16, 16, 1)),
                 cfg: SimConfig::u280_full(),
             },
             Spec {
                 tag: "chain14_1pe".into(),
-                graph: generators::chain(1 << 14),
+                graph: Arc::new(generators::chain(1 << 14)),
                 cfg: SimConfig::u280(1, 1),
             },
         ]
@@ -387,17 +388,17 @@ fn graphs_section(smoke: bool) -> Section {
         vec![
             Spec {
                 tag: "rmat18".into(),
-                graph: generators::rmat_graph500(18, 16, 1),
+                graph: Arc::new(generators::rmat_graph500(18, 16, 1)),
                 cfg: SimConfig::u280_full(),
             },
             Spec {
                 tag: "rmat22".into(),
-                graph: generators::rmat_graph500(22, 16, 1),
+                graph: Arc::new(generators::rmat_graph500(22, 16, 1)),
                 cfg: SimConfig::u280_full(),
             },
             Spec {
                 tag: "chain20_1pe".into(),
-                graph: generators::chain(1 << 20),
+                graph: Arc::new(generators::chain(1 << 20)),
                 cfg: SimConfig::u280(1, 1),
             },
         ]
@@ -406,7 +407,7 @@ fn graphs_section(smoke: bool) -> Section {
     for spec in &specs {
         let g = &spec.graph;
         let root = reference::sample_roots(g, 1, 1)[0];
-        let mut engine = BitmapEngine::new(g, spec.cfg.part);
+        let mut engine = BitmapEngine::new(g.clone(), spec.cfg.part);
         let mut state = SearchState::new(g.num_vertices());
         let t0 = Instant::now();
         let run = engine
@@ -424,6 +425,73 @@ fn graphs_section(smoke: bool) -> Section {
     }
 }
 
+/// `perf_service` in measured mode: the two-tier query service under
+/// mixed open-loop load — q/s and per-tier p50/p99 latency, plus the
+/// accounting floors (every admitted query completes; the service
+/// keeps a usable query rate even with cycle-sim queries in the mix).
+fn service_section(smoke: bool) -> Result<Section> {
+    use crate::service::{loadgen, BfsService, GraphCatalog, LoadgenOptions, ServiceConfig};
+    let (scale, queries) = if smoke { (10u32, 64usize) } else { (12, 384) };
+    println!("[bench] service: RMAT-{scale} d8, {queries} mixed open-loop queries ...");
+    let tag = format!("rmat{scale}");
+    let catalog = Arc::new(GraphCatalog::new());
+    catalog.insert("bench", generators::rmat_graph500(scale, 8, 21));
+    let service = BfsService::start(
+        Arc::clone(&catalog),
+        ServiceConfig {
+            sim: SimConfig::u280(2, 4),
+            ..ServiceConfig::default()
+        },
+    );
+    let lopts = LoadgenOptions {
+        graph: "bench".into(),
+        queries,
+        accurate_every: 16,
+        root_pool: 16,
+        seed: 21,
+    };
+    let report = loadgen::run(&service, &lopts).map_err(anyhow::Error::new)?;
+    anyhow::ensure!(report.errors == 0, "service load run reported errors");
+    let stats = service.stats();
+    let completed = report.fast.completed + report.accurate.completed;
+    Ok(Section {
+        name: "service",
+        metrics: vec![
+            // q/s is machine-dependent in magnitude but must never
+            // collapse: the floor is far below any working build.
+            Metric {
+                name: format!("service_qps_{tag}"),
+                value: Some(report.qps),
+                unit: "q/s",
+                kind: "ratio",
+                floor: Some(5.0),
+            },
+            ratio(
+                format!("service_completion_{tag}"),
+                completed as f64 / report.submitted.max(1) as f64,
+                1.0,
+            ),
+            wall(format!("service_fast_p50_ms_{tag}"), report.fast.p50_ms, "ms"),
+            wall(format!("service_fast_p99_ms_{tag}"), report.fast.p99_ms, "ms"),
+            wall(
+                format!("service_accurate_p99_ms_{tag}"),
+                report.accurate.p99_ms,
+                "ms",
+            ),
+            wall(
+                format!("service_cache_hits_{tag}"),
+                stats.cache_hits as f64,
+                "hits",
+            ),
+            wall(
+                format!("service_rejected_{tag}"),
+                report.rejected as f64,
+                "queries",
+            ),
+        ],
+    })
+}
+
 /// Run the whole suite and return the `scalabfs-bench-v1` document
 /// (provenance `"measured"`).
 pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
@@ -435,6 +503,7 @@ pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
         batch_section(opts.smoke),
         cycle_section(opts.smoke)?,
         graphs_section(opts.smoke),
+        service_section(opts.smoke)?,
     ];
     Ok(Json::obj(vec![
         ("schema", Json::Str(SCHEMA.into())),

@@ -3,19 +3,22 @@
 //! time it, and aggregate GTEPS the Graph500 way.
 //!
 //! The engine is a sweep dimension exactly like PC/PE counts: every
-//! engine name accepted by [`crate::exec::make_engine`] works here, and
+//! engine name accepted by [`crate::exec::EngineSpec`] works here, and
 //! one engine + one search state are reused (reset in place) across the
-//! sampled roots.
+//! sampled roots. Graphs are materialized once into an [`Arc`] so the
+//! same resident graph can feed engines, sweeps, and the long-lived
+//! [`crate::service`] catalog without copies.
 
 use crate::bfs::gteps::harmonic_mean;
 use crate::bfs::reference;
-use crate::exec::{make_engine, BfsEngine, SearchState};
+use crate::exec::{build_engine, BfsEngine, SearchState};
 use crate::graph::{datasets, Graph};
 use crate::sched::{Fixed, Hybrid, ModePolicy};
 use crate::sim::config::SimConfig;
 use crate::sim::results::SimResult;
 use crate::sim::throughput::time_run;
 use crate::Result;
+use std::sync::Arc;
 
 /// Options for a dataset run.
 #[derive(Clone, Debug)]
@@ -28,7 +31,7 @@ pub struct DriverOptions {
     pub seed: u64,
     /// Scheduling policy: "hybrid", "push", "pull".
     pub policy: String,
-    /// Engine to run: any name [`make_engine`] accepts
+    /// Engine to run: any name [`build_engine`] accepts
     /// ("bitmap", "throughput", "cycle", "edge-centric", "xla").
     pub engine: String,
 }
@@ -73,7 +76,7 @@ pub struct DatasetRun {
 
 /// Run a materialized graph under a config.
 pub fn run_graph(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     cfg: &SimConfig,
     opts: &DriverOptions,
 ) -> Result<DatasetRun> {
@@ -81,7 +84,7 @@ pub fn run_graph(
     anyhow::ensure!(!roots.is_empty(), "no valid roots in {}", graph.name);
     let bytes = graph.csr.footprint_bytes(cfg.sv_bytes as usize)
         + graph.csc.footprint_bytes(cfg.sv_bytes as usize);
-    let mut engine = make_engine(&opts.engine, graph, cfg)?;
+    let mut engine = build_engine(&opts.engine, graph, cfg)?;
     let mut state = SearchState::new(graph.num_vertices());
     let mut per_root = Vec::with_capacity(roots.len());
     for &root in &roots {
@@ -106,7 +109,7 @@ pub fn run_graph(
 pub fn run_dataset(name: &str, cfg: &SimConfig, opts: &DriverOptions) -> Result<DatasetRun> {
     let graph = datasets::by_name(name, opts.scale_factor, opts.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
-    run_graph(&graph, cfg, opts)
+    run_graph(&Arc::new(graph), cfg, opts)
 }
 
 #[cfg(test)]
@@ -116,7 +119,7 @@ mod tests {
 
     #[test]
     fn run_graph_aggregates_roots() {
-        let g = generators::rmat_graph500(10, 8, 3);
+        let g = Arc::new(generators::rmat_graph500(10, 8, 3));
         let cfg = SimConfig::u280(4, 8);
         let opts = DriverOptions {
             num_roots: 3,
@@ -144,7 +147,7 @@ mod tests {
     #[test]
     fn engine_is_a_sweep_dimension() {
         // Same dataset, every engine: all must produce positive GTEPS.
-        let g = generators::rmat_graph500(8, 8, 9);
+        let g = Arc::new(generators::rmat_graph500(8, 8, 9));
         let cfg = SimConfig::u280(2, 4);
         for engine in crate::exec::ENGINE_NAMES {
             let opts = DriverOptions {
@@ -159,7 +162,7 @@ mod tests {
 
     #[test]
     fn unknown_engine_is_a_clean_error() {
-        let g = generators::chain(8);
+        let g = Arc::new(generators::chain(8));
         let cfg = SimConfig::u280(1, 1);
         let opts = DriverOptions {
             engine: "warp-drive".into(),

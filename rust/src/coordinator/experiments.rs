@@ -11,7 +11,7 @@ use crate::bfs::bitmap::run_bfs;
 use crate::bfs::gteps::harmonic_mean;
 use crate::bfs::reference;
 use crate::coordinator::driver::{self, DriverOptions};
-use crate::exec::{make_engine, BfsEngine, SearchState, ENGINE_NAMES};
+use crate::exec::{build_engine, BfsEngine, SearchState, ENGINE_NAMES};
 use crate::graph::{datasets, generators, Graph};
 use crate::hbm::switch::SwitchModel;
 use crate::model::gpu;
@@ -22,6 +22,7 @@ use crate::sim::config::SimConfig;
 use crate::sim::throughput::ThroughputSim;
 use crate::util::tables::{fmt_f, Table};
 use crate::Result;
+use std::sync::Arc;
 
 /// Default per-experiment scale factor for quick runs; EXPERIMENTS.md
 /// records which scale each recorded run used.
@@ -254,12 +255,13 @@ pub fn fig11(opts: &ExpOptions) -> Result<Table> {
         let Some(graph) = datasets::by_name(name, opts.scale_factor, opts.seed) else {
             continue;
         };
+        let graph = Arc::new(graph);
         let roots = reference::sample_roots(&graph, opts.num_roots, opts.seed);
         let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
         let sim = ThroughputSim::new(cfg.clone());
         // Multi-root batch sharded across host cores; the same per-root
         // functional runs then feed both placements' timing models.
-        let batch = BatchDriver::new(&graph, cfg.part).run_batch(&roots, &cfg, || {
+        let batch = BatchDriver::new(graph.clone(), cfg.part).run_batch(&roots, &cfg, || {
             driver::make_policy("hybrid")
         });
         let mut sc_g = Vec::new();
@@ -356,8 +358,10 @@ pub fn table3(opts: &ExpOptions) -> Result<Table> {
 
 /// Edge-centric single-channel context (supports the Fig 12 discussion).
 pub fn edge_centric_context(opts: &ExpOptions) -> Result<Table> {
-    let g: Graph = datasets::by_name("LJ", opts.scale_factor, opts.seed)
-        .ok_or_else(|| anyhow::anyhow!("LJ"))?;
+    let g: Arc<Graph> = Arc::new(
+        datasets::by_name("LJ", opts.scale_factor, opts.seed)
+            .ok_or_else(|| anyhow::anyhow!("LJ"))?,
+    );
     let root = reference::sample_roots(&g, 1, opts.seed)[0];
     let res = edge_centric::estimate(&g, root, edge_centric::EdgeCentricConfig::default());
     let cfg = SimConfig::u280(1, 4);
@@ -394,12 +398,13 @@ pub fn early_exit_ablation(opts: &ExpOptions) -> Result<Table> {
         let Some(graph) = datasets::by_name(name, opts.scale_factor, opts.seed) else {
             continue;
         };
+        let graph = Arc::new(graph);
         let root = reference::sample_roots(&graph, 1, opts.seed)[0];
         let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
         let sim = ThroughputSim::new(cfg.clone());
-        let base_run = BitmapEngine::new(&graph, cfg.part)
+        let base_run = BitmapEngine::new(graph.clone(), cfg.part)
             .run(root, &mut crate::sched::Hybrid::default());
-        let ee_run = BitmapEngine::new(&graph, cfg.part)
+        let ee_run = BitmapEngine::new(graph.clone(), cfg.part)
             .with_config(TrafficConfig::for_partitioning(cfg.part).with_early_exit())
             .run(root, &mut crate::sched::Hybrid::default());
         let base = sim.simulate(&base_run, name, bytes);
@@ -425,8 +430,10 @@ pub fn early_exit_ablation(opts: &ExpOptions) -> Result<Table> {
 pub fn straggler(opts: &ExpOptions) -> Result<Table> {
     use crate::sim::failure::{Degradation, DegradedSim};
     let cfg = SimConfig::u280_full();
-    let graph = datasets::by_name("RMAT22-32", opts.scale_factor, opts.seed)
-        .ok_or_else(|| anyhow::anyhow!("dataset"))?;
+    let graph = Arc::new(
+        datasets::by_name("RMAT22-32", opts.scale_factor, opts.seed)
+            .ok_or_else(|| anyhow::anyhow!("dataset"))?,
+    );
     let root = reference::sample_roots(&graph, 1, opts.seed)[0];
     let mut policy = driver::make_policy("hybrid");
     let run = run_bfs(&graph, cfg.part, root, policy.as_mut());
@@ -481,8 +488,10 @@ pub fn projection() -> Table {
 /// cycle engine steps every cycle, so the graph is kept RMAT18-class.
 pub fn engine_matrix(opts: &ExpOptions) -> Result<Table> {
     let cfg = SimConfig::u280(8, 16);
-    let graph = datasets::by_name("RMAT18-8", opts.scale_factor.max(8), opts.seed)
-        .ok_or_else(|| anyhow::anyhow!("dataset"))?;
+    let graph = Arc::new(
+        datasets::by_name("RMAT18-8", opts.scale_factor.max(8), opts.seed)
+            .ok_or_else(|| anyhow::anyhow!("dataset"))?,
+    );
     let root = reference::sample_roots(&graph, 1, opts.seed)[0];
     let truth = reference::bfs(&graph, root);
     let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
@@ -491,7 +500,7 @@ pub fn engine_matrix(opts: &ExpOptions) -> Result<Table> {
     ]);
     let mut state = SearchState::new(graph.num_vertices());
     for name in ENGINE_NAMES {
-        let mut engine = make_engine(name, &graph, &cfg)?;
+        let mut engine = build_engine(name, &graph, &cfg)?;
         let mut policy = driver::make_policy("hybrid");
         let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         let res = crate::sim::throughput::time_run(&run, &cfg, &graph.name, bytes)?;

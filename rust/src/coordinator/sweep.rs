@@ -3,8 +3,9 @@
 //! scaling figures and the design-space discussion of §VI-D.
 //!
 //! Engines are a first-class sweep dimension: any name accepted by
-//! [`crate::exec::make_engine`] can be gridded against the hardware
-//! knobs, exactly the way PC/PE counts are.
+//! [`crate::exec::EngineSpec`] can be gridded against the hardware
+//! knobs, exactly the way PC/PE counts are — each grid point binds the
+//! shared [`Arc<Graph>`] with [`crate::exec::build_engine`].
 //!
 //! The PE axis rides on the cycle-stepped compute-side contention
 //! model: [`pe_scaling`] pins the PC count and grows PEs per PG — the
@@ -23,11 +24,12 @@
 //! produce.
 
 use crate::coordinator::driver::make_policy;
-use crate::exec::{make_engine, BfsEngine, SearchState};
+use crate::exec::{build_engine, BfsEngine, SearchState};
 use crate::graph::Graph;
 use crate::sim::config::{Placement, SimConfig};
 use crate::sim::throughput::time_run;
 use crate::Result;
+use std::sync::Arc;
 
 /// One point of a sweep.
 #[derive(Clone, Debug)]
@@ -57,7 +59,7 @@ pub struct SweepPoint {
 /// Sweep specification.
 #[derive(Clone, Debug)]
 pub struct SweepSpec {
-    /// Engines to test (any [`crate::exec::make_engine`] name).
+    /// Engines to test (any [`crate::exec::ENGINE_NAMES`] entry).
     pub engines: Vec<String>,
     /// PC counts to test.
     pub pcs: Vec<usize>,
@@ -85,7 +87,7 @@ impl Default for SweepSpec {
 }
 
 /// Run the full grid on one graph.
-pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
+pub fn sweep(graph: &Arc<Graph>, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
     let roots = crate::bfs::reference::sample_roots(graph, 1, spec.seed);
     anyhow::ensure!(!roots.is_empty(), "no roots");
     let root = roots[0];
@@ -100,7 +102,7 @@ pub fn sweep(graph: &Graph, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
                     for &placement in &spec.placements {
                         let mut cfg = SimConfig::u280(pcs, pes);
                         cfg.placement = placement;
-                        let mut engine = make_engine(engine_name, graph, &cfg)?;
+                        let mut engine = build_engine(engine_name, graph, &cfg)?;
                         let mut policy = make_policy(policy_name);
                         let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
                         let res = time_run(&run, &cfg, &graph.name, bytes)?;
@@ -220,7 +222,7 @@ impl PeScalingCurve {
 /// bandwidth-saturated wide beats plus dispatcher FIFO conflicts and
 /// BRAM port pressure, all reported per point.
 pub fn pe_scaling(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     engine_name: &str,
     num_pcs: usize,
     ppc_list: &[usize],
@@ -245,7 +247,7 @@ pub fn pe_scaling(
     for &ppc in ppc_list {
         let pes = num_pcs * ppc;
         let cfg = SimConfig::u280(num_pcs, pes);
-        let mut engine = make_engine(engine_name, graph, &cfg)?;
+        let mut engine = build_engine(engine_name, graph, &cfg)?;
         let mut policy = make_policy("hybrid");
         let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         let res = time_run(&run, &cfg, &graph.name, bytes)?;
@@ -352,7 +354,7 @@ impl PcScalingCurve {
 /// one PC private to each PG. GTEPS should grow near-linearly until a
 /// non-memory phase binds.
 pub fn pc_scaling(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     engine_name: &str,
     pcs_list: &[usize],
     pes_per_pc: usize,
@@ -368,7 +370,7 @@ pub fn pc_scaling(
 /// shared PCs per [`crate::graph::Partitioning::pc_of_pg`]. Scaling is
 /// sub-linear whenever PCs < PGs: the queues, not the ports, bind.
 pub fn pc_contention(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     engine_name: &str,
     num_pgs: usize,
     pcs_list: &[usize],
@@ -383,7 +385,7 @@ pub fn pc_contention(
 /// through [`time_run`], with `mk_cfg` mapping each PC count to its
 /// `(num_pgs, SimConfig)`.
 fn pc_curve(
-    graph: &Graph,
+    graph: &Arc<Graph>,
     engine_name: &str,
     pcs_list: &[usize],
     seed: u64,
@@ -397,7 +399,7 @@ fn pc_curve(
     let mut points: Vec<PcScalingPoint> = Vec::new();
     for &pcs in pcs_list {
         let (pgs, cfg) = mk_cfg(pcs);
-        let mut engine = make_engine(engine_name, graph, &cfg)?;
+        let mut engine = build_engine(engine_name, graph, &cfg)?;
         let mut policy = make_policy("hybrid");
         let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
         let res = time_run(&run, &cfg, &graph.name, bytes)?;
@@ -426,7 +428,7 @@ mod tests {
 
     #[test]
     fn grid_has_expected_cardinality() {
-        let g = generators::rmat_graph500(9, 8, 3);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 3));
         let spec = SweepSpec {
             pcs: vec![1, 4],
             pes_per_pc: vec![1, 2],
@@ -445,7 +447,7 @@ mod tests {
 
     #[test]
     fn engines_sweep_like_hardware_knobs() {
-        let g = generators::rmat_graph500(8, 8, 11);
+        let g = Arc::new(generators::rmat_graph500(8, 8, 11));
         let spec = SweepSpec {
             engines: vec!["bitmap".into(), "cycle".into(), "edge-centric".into()],
             pcs: vec![2],
@@ -466,7 +468,7 @@ mod tests {
     fn pc_scaling_curve_is_monotone_with_utilization() {
         // The Fig-9 axis on the analytic engine: GTEPS grows with PCs
         // and every point carries measured per-PC utilization.
-        let g = generators::rmat_graph500(12, 16, 8);
+        let g = Arc::new(generators::rmat_graph500(12, 16, 8));
         let curve = pc_scaling(&g, "throughput", &[2, 4, 8], 1, 8).unwrap();
         assert_eq!(curve.points.len(), 3);
         for w in curve.points.windows(2) {
@@ -491,7 +493,7 @@ mod tests {
         // 16 PGs folded onto 1..16 PCs: going from 1 to 16 PCs helps,
         // but the contention-saturated end (few PCs, many PGs) is
         // clearly sub-linear — the knee the shared queues create.
-        let g = generators::rmat_graph500(11, 16, 9);
+        let g = Arc::new(generators::rmat_graph500(11, 16, 9));
         let curve = pc_contention(&g, "throughput", 16, &[1, 4, 16], 9).unwrap();
         assert_eq!(curve.points.len(), 3);
         let p1 = &curve.points[0];
@@ -509,7 +511,7 @@ mod tests {
 
     #[test]
     fn cycle_engine_reports_queue_depths_in_curves() {
-        let g = generators::rmat_graph500(9, 8, 13);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 13));
         let curve = pc_contention(&g, "cycle", 4, &[1, 4], 13).unwrap();
         assert_eq!(curve.points.len(), 2);
         assert!(curve.points[0].gteps > 0.0);
@@ -553,7 +555,7 @@ mod tests {
         // Structure check on the cheap engine (the measured Fig-10
         // shape itself is pinned on the cycle engine in
         // tests/dispatcher_fabric.rs).
-        let g = generators::rmat_graph500(10, 16, 12);
+        let g = Arc::new(generators::rmat_graph500(10, 16, 12));
         let curve = pe_scaling(&g, "throughput", 2, &[1, 2, 4], 12).unwrap();
         assert_eq!(curve.points.len(), 3);
         assert_eq!(curve.pcs, 2);
@@ -593,7 +595,7 @@ mod tests {
 
     #[test]
     fn more_resources_never_hurt_at_fixed_ppc() {
-        let g = generators::rmat_graph500(11, 16, 5);
+        let g = Arc::new(generators::rmat_graph500(11, 16, 5));
         let spec = SweepSpec {
             pcs: vec![2, 8],
             pes_per_pc: vec![1],

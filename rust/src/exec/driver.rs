@@ -32,14 +32,23 @@ use crate::Result;
 /// [`SimError::NonConvergence`](crate::sim::failure::SimError) — fails
 /// the whole run: the error propagates out of the driver instead of
 /// aborting the process.
-pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
+pub fn drive<E: BfsEngine + ?Sized>(
     engine: &mut E,
     state: &mut SearchState,
     root: VertexId,
     policy: &mut dyn ModePolicy,
 ) -> Result<BfsRun> {
-    let graph = engine.graph();
-    let n = graph.num_vertices();
+    // Scalar graph facts are copied out up front: `graph()` now borrows
+    // from the engine itself (engines own their graph via `Arc`), so a
+    // live `&Graph` cannot be held across the `&mut` step calls below.
+    let (n, num_edges, root_degree) = {
+        let graph = engine.graph();
+        (
+            graph.num_vertices(),
+            graph.num_edges(),
+            graph.csr.degree(root),
+        )
+    };
     assert_eq!(
         state.num_vertices(),
         n,
@@ -52,7 +61,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
     let cap = policy.repr().sparse_cap(n);
     state.current.set_sparse_cap(cap);
     state.next.set_sparse_cap(cap);
-    state.reset_for_root(root, graph.csr.degree(root));
+    state.reset_for_root(root, root_degree);
 
     let mut traffic = RunTraffic::default();
     let mut iter_cycles = Vec::new();
@@ -69,7 +78,7 @@ pub fn drive<'g, E: BfsEngine<'g> + ?Sized>(
             state.frontier_edges,
             state.visited_count,
             n as u64,
-            graph.num_edges(),
+            num_edges,
         );
         // Representation switch rides along with the direction switch:
         // the frontier staged by this iteration overflows to dense
@@ -113,11 +122,12 @@ mod tests {
     use crate::bfs::INF;
     use crate::graph::{generators, Partitioning};
     use crate::sched::{Hybrid, ReprPolicy, WithRepr};
+    use std::sync::Arc;
 
     #[test]
     fn state_reuse_across_roots_is_bit_exact() {
-        let g = generators::rmat_graph500(9, 8, 5);
-        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let g = Arc::new(generators::rmat_graph500(9, 8, 5));
+        let mut engine = BitmapEngine::new(g.clone(), Partitioning::new(4, 2));
         let mut state = SearchState::new(g.num_vertices());
         for &root in &reference::sample_roots(&g, 4, 5) {
             let run = drive(&mut engine, &mut state, root, &mut Hybrid::default()).unwrap();
@@ -130,8 +140,8 @@ mod tests {
     #[test]
     fn iteration_count_matches_reference_depth() {
         // The loop runs one step per level plus the final empty step.
-        let g = generators::chain(10);
-        let mut engine = BitmapEngine::new(&g, Partitioning::new(1, 1));
+        let g = Arc::new(generators::chain(10));
+        let mut engine = BitmapEngine::new(g.clone(), Partitioning::new(1, 1));
         let run = drive(
             &mut engine,
             &mut SearchState::new(g.num_vertices()),
@@ -147,9 +157,9 @@ mod tests {
     fn tracked_totals_match_rescans() {
         // `reached` and `traversed_edges` are tracked during the search;
         // they must equal what a full end-of-run rescan would produce.
-        let g = generators::rmat_graph500(9, 8, 33);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 33));
         let root = reference::sample_roots(&g, 1, 33)[0];
-        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let mut engine = BitmapEngine::new(g.clone(), Partitioning::new(4, 2));
         let mut state = SearchState::new(g.num_vertices());
         let run = drive(&mut engine, &mut state, root, &mut Hybrid::default()).unwrap();
         assert_eq!(run.reached, state.visited.count_ones());
@@ -163,10 +173,10 @@ mod tests {
 
     #[test]
     fn forced_representations_agree_with_adaptive() {
-        let g = generators::rmat_graph500(9, 8, 5);
+        let g = Arc::new(generators::rmat_graph500(9, 8, 5));
         let root = reference::sample_roots(&g, 1, 5)[0];
         let truth = reference::bfs(&g, root);
-        let mut engine = BitmapEngine::new(&g, Partitioning::new(4, 2));
+        let mut engine = BitmapEngine::new(g.clone(), Partitioning::new(4, 2));
         let mut state = SearchState::new(g.num_vertices());
         for repr in [ReprPolicy::Sparse, ReprPolicy::Dense, ReprPolicy::default()] {
             let mut policy = WithRepr {

@@ -1,4 +1,17 @@
 //! The [`BfsEngine`] trait: one processing abstraction, many engines.
+//!
+//! Engines are lifetime-free and object-safe: construction *binds* an
+//! [`Arc<Graph>`], so a bound engine owns a handle to its graph, is
+//! `Send`, and can outlive the stack frame that built it — the property
+//! the long-lived [`crate::service`] layer needs to park engines on
+//! worker threads. There is no unbound engine state to observe (and
+//! therefore no "panics before prepare" method): [`EngineSpec`] is the
+//! graph-free half (name + [`SimConfig`] knobs, cloneable, buildable
+//! anywhere), and [`EngineSpec::bind`] is the only way to obtain a
+//! `Box<dyn BfsEngine>`.
+
+use std::fmt;
+use std::sync::Arc;
 
 use super::driver;
 use super::state::SearchState;
@@ -82,26 +95,25 @@ pub struct BfsRun {
 
 /// A level-synchronous BFS engine over partitioned bitmap state.
 ///
-/// The contract: [`prepare`](Self::prepare) binds the engine to a graph
-/// and partitioning (rebuilding any engine-private structures);
-/// [`step`](Self::step) processes exactly one iteration — reading
-/// `state.current`/`state.visited`, staging discoveries into
-/// `state.next` (via [`Frontier::insert`](super::frontier::Frontier),
-/// passing the discovered vertex's out-degree so the scheduler signals
-/// accumulate for free) plus `state.visited`/`state.levels` — and reports
+/// The contract: an engine is *born bound* — every constructor takes the
+/// graph (as an [`Arc<Graph>`]), so there is no unbound state and no
+/// panicking accessor. [`step`](Self::step) processes exactly one
+/// iteration — reading `state.current`/`state.visited`, staging
+/// discoveries into `state.next` (via
+/// [`Frontier::insert`](super::frontier::Frontier), passing the
+/// discovered vertex's out-degree so the scheduler signals accumulate
+/// for free) plus `state.visited`/`state.levels` — and reports
 /// [`StepStats`]. The level-synchronous loop itself lives in ONE place,
 /// [`driver::drive`], which the provided [`run`](Self::run) /
 /// [`run_with_state`](Self::run_with_state) methods delegate to; no
 /// engine carries its own copy.
 ///
-/// The `'g` parameter is the lifetime of the bound graph, so the driver
-/// can read the graph while holding the engine mutably.
-pub trait BfsEngine<'g> {
-    /// Bind (or re-bind) the engine to `graph` partitioned as `part`.
-    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()>;
-
-    /// The bound graph. Panics if `prepare` has not succeeded.
-    fn graph(&self) -> &'g Graph;
+/// The trait is object-safe and `Send`: a `Box<dyn BfsEngine>` can move
+/// to a worker thread and serve queries for as long as the process
+/// lives, holding the graph alive through its own `Arc`.
+pub trait BfsEngine: Send {
+    /// The bound graph.
+    fn graph(&self) -> &Graph;
 
     /// The bound partitioning.
     fn partitioning(&self) -> Partitioning;
@@ -135,47 +147,249 @@ pub trait BfsEngine<'g> {
     }
 }
 
-/// The engine names [`make_engine`] accepts (the XLA engine additionally
-/// exists behind the `xla` cargo feature).
-pub const ENGINE_NAMES: &[&str] = &["bitmap", "throughput", "cycle", "edge-centric"];
+/// Typed engine-construction error (the old factory's stringly
+/// `anyhow::bail!` paths, made matchable).
+#[derive(Debug)]
+pub enum EngineError {
+    /// The name matches no registered engine.
+    UnknownEngine {
+        /// The rejected name.
+        name: String,
+    },
+    /// The engine exists but needs a cargo feature this build lacks.
+    MissingFeature {
+        /// The engine that was requested.
+        name: &'static str,
+        /// The cargo feature that would provide it.
+        feature: &'static str,
+    },
+    /// Binding the spec to a graph failed — e.g. the config's placement
+    /// cannot pack the graph's shards onto the HBM stack.
+    BadPartitioning {
+        /// The engine being bound.
+        name: &'static str,
+        /// The underlying bind failure.
+        source: anyhow::Error,
+    },
+}
 
-/// Build a prepared engine by name — the knob that lets every
-/// figure/table driver sweep *engines* the same way it sweeps PC/PE
-/// counts. `cfg` supplies the partitioning and the simulator knobs the
-/// timed engines need.
-pub fn make_engine<'g>(
-    name: &str,
-    graph: &'g Graph,
-    cfg: &SimConfig,
-) -> Result<Box<dyn BfsEngine<'g> + 'g>> {
-    use crate::baselines::edge_centric::{EdgeCentricConfig, EdgeCentricEngine};
-    use crate::bfs::bitmap::{BitmapEngine, TrafficConfig};
-    use crate::sim::cycle::CycleSim;
-    use crate::sim::throughput::ThroughputEngine;
-
-    let mut engine: Box<dyn BfsEngine<'g> + 'g> = match name {
-        "bitmap" => {
-            let mut tc = TrafficConfig::for_partitioning(cfg.part);
-            tc.pull_early_exit = cfg.pull_early_exit;
-            Box::new(BitmapEngine::new(graph, cfg.part).with_config(tc))
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::UnknownEngine { name } => write!(
+                f,
+                "unknown engine '{name}' (expected one of {ENGINE_NAMES:?} or 'xla')"
+            ),
+            EngineError::MissingFeature { name, feature } => write!(
+                f,
+                "engine '{name}' needs the `{feature}` cargo feature (vendored xla crate); \
+                 rebuild with `--features {feature}`"
+            ),
+            EngineError::BadPartitioning { name, source } => {
+                write!(f, "cannot bind engine '{name}' to graph: {source}")
+            }
         }
-        "throughput" => Box::new(ThroughputEngine::new(graph, cfg.clone())),
-        "cycle" => Box::new(CycleSim::try_new(graph, cfg.clone())?),
-        "edge-centric" => Box::new(EdgeCentricEngine::new(graph, EdgeCentricConfig::default())),
-        #[cfg(feature = "xla")]
-        "xla" => Box::new(crate::runtime::XlaBfsEngine::new()?),
-        #[cfg(not(feature = "xla"))]
-        "xla" => anyhow::bail!(
-            "the XLA engine needs the `xla` cargo feature (vendored xla crate); \
-             rebuild with `--features xla`"
-        ),
-        other => anyhow::bail!(
-            "unknown engine '{other}' (expected one of {:?} or 'xla')",
-            ENGINE_NAMES
-        ),
-    };
-    engine.prepare(graph, cfg.part)?;
-    Ok(engine)
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::BadPartitioning { source, .. } => Some(source.as_ref()),
+            _ => None,
+        }
+    }
+}
+
+/// One registry row: the name the CLI/sweeps use, and the bind step
+/// that turns spec + graph into a live engine.
+struct Entry {
+    name: &'static str,
+    build: fn(&EngineSpec, Arc<Graph>) -> std::result::Result<Box<dyn BfsEngine>, EngineError>,
+}
+
+fn build_bitmap(
+    spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    use crate::bfs::bitmap::BitmapEngine;
+    Ok(Box::new(
+        BitmapEngine::new(graph, spec.cfg.part).with_config(spec.cfg.traffic_config()),
+    ))
+}
+
+fn build_throughput(
+    spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    use crate::sim::throughput::ThroughputEngine;
+    Ok(Box::new(ThroughputEngine::new(graph, spec.cfg.clone())))
+}
+
+fn build_cycle(
+    spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    use crate::sim::cycle::CycleSim;
+    match CycleSim::try_new(graph, spec.cfg.clone()) {
+        Ok(e) => Ok(Box::new(e)),
+        Err(source) => Err(EngineError::BadPartitioning {
+            name: "cycle",
+            source,
+        }),
+    }
+}
+
+fn build_edge_centric(
+    _spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    use crate::baselines::edge_centric::{EdgeCentricConfig, EdgeCentricEngine};
+    Ok(Box::new(EdgeCentricEngine::new(
+        graph,
+        EdgeCentricConfig::default(),
+    )))
+}
+
+#[cfg(feature = "xla")]
+fn build_xla(
+    spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    match crate::runtime::XlaBfsEngine::bind(graph, spec.cfg.part) {
+        Ok(e) => Ok(Box::new(e)),
+        Err(source) => Err(EngineError::BadPartitioning {
+            name: "xla",
+            source,
+        }),
+    }
+}
+
+/// The registry [`EngineSpec::new`] resolves against. [`ENGINE_NAMES`]
+/// is *derived* from this table at compile time, so the advertised list
+/// can never drift from what the factory actually builds.
+const REGISTRY: &[Entry] = &[
+    Entry {
+        name: "bitmap",
+        build: build_bitmap,
+    },
+    Entry {
+        name: "throughput",
+        build: build_throughput,
+    },
+    Entry {
+        name: "cycle",
+        build: build_cycle,
+    },
+    Entry {
+        name: "edge-centric",
+        build: build_edge_centric,
+    },
+];
+
+/// Feature-gated extras, kept out of [`ENGINE_NAMES`] so the advertised
+/// list only contains engines every build can run.
+#[cfg(feature = "xla")]
+const EXTRA_REGISTRY: &[Entry] = &[Entry {
+    name: "xla",
+    build: build_xla,
+}];
+#[cfg(not(feature = "xla"))]
+const EXTRA_REGISTRY: &[Entry] = &[];
+
+const ENGINE_COUNT: usize = REGISTRY.len();
+const ENGINE_NAME_ARR: [&str; ENGINE_COUNT] = {
+    let mut names = [""; ENGINE_COUNT];
+    let mut i = 0;
+    while i < ENGINE_COUNT {
+        names[i] = REGISTRY[i].name;
+        i += 1;
+    }
+    names
+};
+
+/// The engine names every build accepts, derived from the
+/// [`EngineSpec`] registry (the XLA engine additionally exists behind
+/// the `xla` cargo feature).
+pub const ENGINE_NAMES: &[&str] = &ENGINE_NAME_ARR;
+
+/// The graph-free half of an engine: a validated name plus the
+/// [`SimConfig`] knobs the engine will be built with. A spec is cheap
+/// to clone, needs no graph, and can cross threads; binding it to an
+/// [`Arc<Graph>`] with [`bind`](Self::bind) is the only way to obtain a
+/// live [`BfsEngine`] — which is why no engine has an observable
+/// "unbound" state.
+#[derive(Clone)]
+pub struct EngineSpec {
+    name: &'static str,
+    cfg: SimConfig,
+    build: fn(&EngineSpec, Arc<Graph>) -> std::result::Result<Box<dyn BfsEngine>, EngineError>,
+}
+
+impl fmt::Debug for EngineSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EngineSpec")
+            .field("name", &self.name)
+            .field("cfg", &self.cfg)
+            .finish()
+    }
+}
+
+impl EngineSpec {
+    /// Resolve `name` against the registry, capturing the config the
+    /// eventual bind will use. Fails with a typed [`EngineError`]
+    /// (unknown name, or a feature-gated engine in a build without the
+    /// feature) — validation happens here, not at bind time.
+    pub fn new(name: &str, cfg: &SimConfig) -> std::result::Result<Self, EngineError> {
+        for entry in REGISTRY.iter().chain(EXTRA_REGISTRY) {
+            if entry.name == name {
+                return Ok(Self {
+                    name: entry.name,
+                    cfg: cfg.clone(),
+                    build: entry.build,
+                });
+            }
+        }
+        if name == "xla" {
+            return Err(EngineError::MissingFeature {
+                name: "xla",
+                feature: "xla",
+            });
+        }
+        Err(EngineError::UnknownEngine { name: name.into() })
+    }
+
+    /// The validated engine name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The config the bind step will use.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Bind the spec to a graph, producing a live engine that owns its
+    /// own `Arc` handle. Timed engines that must lay the graph out on
+    /// the HBM stack can fail here with
+    /// [`EngineError::BadPartitioning`].
+    pub fn bind(
+        &self,
+        graph: Arc<Graph>,
+    ) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+        (self.build)(self, graph)
+    }
+}
+
+/// Build a bound engine by name — [`EngineSpec::new`] + [`EngineSpec::bind`]
+/// in one call, the knob that lets every figure/table driver sweep
+/// *engines* the same way it sweeps PC/PE counts.
+pub fn build_engine(
+    name: &str,
+    graph: &Arc<Graph>,
+    cfg: &SimConfig,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    EngineSpec::new(name, cfg)?.bind(Arc::clone(graph))
 }
 
 #[cfg(test)]
@@ -187,12 +401,12 @@ mod tests {
 
     #[test]
     fn factory_builds_every_named_engine() {
-        let g = generators::rmat_graph500(8, 4, 1);
+        let g = Arc::new(generators::rmat_graph500(8, 4, 1));
         let cfg = SimConfig::u280(2, 4);
         let root = reference::sample_roots(&g, 1, 1)[0];
         let truth = reference::bfs(&g, root);
         for name in ENGINE_NAMES {
-            let mut e = make_engine(name, &g, &cfg).expect(name);
+            let mut e = build_engine(name, &g, &cfg).expect(name);
             assert_eq!(e.name(), *name);
             // The edge-centric baseline is single-channel by definition
             // and ignores the requested partitioning.
@@ -207,9 +421,57 @@ mod tests {
     }
 
     #[test]
-    fn factory_rejects_unknown_names() {
-        let g = generators::chain(4);
+    fn engine_names_derive_from_registry() {
+        assert_eq!(ENGINE_NAMES.len(), REGISTRY.len());
+        for (adv, entry) in ENGINE_NAMES.iter().zip(REGISTRY) {
+            assert_eq!(*adv, entry.name);
+            // Every advertised name must resolve to a spec of that name.
+            let spec = EngineSpec::new(adv, &SimConfig::u280(1, 2)).expect(adv);
+            assert_eq!(spec.name(), entry.name);
+        }
+    }
+
+    #[test]
+    fn factory_rejects_unknown_names_with_typed_error() {
         let cfg = SimConfig::u280(1, 1);
-        assert!(make_engine("bogus", &g, &cfg).is_err());
+        match EngineSpec::new("bogus", &cfg) {
+            Err(EngineError::UnknownEngine { name }) => assert_eq!(name, "bogus"),
+            other => panic!("expected UnknownEngine, got {other:?}"),
+        }
+        #[cfg(not(feature = "xla"))]
+        match EngineSpec::new("xla", &cfg) {
+            Err(EngineError::MissingFeature { name, feature }) => {
+                assert_eq!(name, "xla");
+                assert_eq!(feature, "xla");
+            }
+            other => panic!("expected MissingFeature, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_is_graph_free_and_rebindable() {
+        let cfg = SimConfig::u280(2, 4);
+        let spec = EngineSpec::new("bitmap", &cfg).unwrap();
+        let spec2 = spec.clone();
+        // One spec binds any number of graphs, including across sizes.
+        for scale in [7u32, 8] {
+            let g = Arc::new(generators::rmat_graph500(scale, 4, 3));
+            let root = reference::sample_roots(&g, 1, 3)[0];
+            let truth = reference::bfs(&g, root);
+            let mut e = spec2.bind(g.clone()).unwrap();
+            let run = e.run(root, &mut Hybrid::default()).unwrap();
+            assert_eq!(run.levels, truth.levels, "scale {scale}");
+        }
+    }
+
+    #[test]
+    fn bound_engines_are_send_and_static() {
+        fn assert_send<T: Send + 'static>(_: &T) {}
+        let g = Arc::new(generators::chain(8));
+        let e = build_engine("bitmap", &g, &SimConfig::u280(1, 2)).unwrap();
+        assert_send(&e);
+        // The engine keeps the graph alive after the local Arc drops.
+        drop(g);
+        assert_eq!(e.graph().num_vertices(), 8);
     }
 }

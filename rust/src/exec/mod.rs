@@ -17,15 +17,23 @@
 //! * [`SearchState`] — the BRAM-resident search state, owned once and
 //!   reset in place between roots (`reset_for_root`, the hardware's
 //!   bitmap-clear pattern; sparse frontiers clear only touched words).
-//! * [`BfsEngine`] — the engine trait: `prepare(graph, part)` binds a
-//!   graph, `step(state, mode)` runs one iteration, and the blanket
+//! * [`BfsEngine`] — the engine trait, lifetime-free and object-safe:
+//!   construction binds an `Arc<Graph>` (no unbound state exists),
+//!   `step(state, mode)` runs one iteration, and the blanket
 //!   `run(root, policy)` is the *single* level-synchronous driver loop
-//!   shared by all engines (see [`driver::drive`]).
+//!   shared by all engines (see [`driver::drive`]). Bound engines are
+//!   `Send`, so the long-lived [`crate::service`] layer can park them
+//!   on worker threads.
 //! * [`driver`] — that shared loop: mode decision via
 //!   [`crate::sched::ModePolicy`] (direction *and* representation),
 //!   frontier swap, signal bookkeeping — no per-iteration rescans.
-//! * [`make_engine`] — name-keyed factory so the experiment drivers can
-//!   sweep *engines* exactly the way they sweep PC/PE counts.
+//! * [`EngineSpec`] — the graph-free half of an engine (validated name
+//!   + [`crate::sim::config::SimConfig`] knobs); [`EngineSpec::bind`]
+//!   attaches a graph, and [`build_engine`] is the one-call spelling so
+//!   the experiment drivers can sweep *engines* exactly the way they
+//!   sweep PC/PE counts. Construction failures are the typed
+//!   [`EngineError`], and [`ENGINE_NAMES`] derives from the spec
+//!   registry so the list can never drift from the factory.
 //!
 //! Multi-root batches are driven host-parallel by
 //! [`crate::bfs::batch::BatchDriver`], which shards roots across rayon
@@ -37,6 +45,8 @@ pub mod engine;
 pub mod driver;
 
 pub use driver::drive;
-pub use engine::{make_engine, BfsEngine, BfsRun, StepStats, ENGINE_NAMES};
+pub use engine::{
+    build_engine, BfsEngine, BfsRun, EngineError, EngineSpec, StepStats, ENGINE_NAMES,
+};
 pub use frontier::{Frontier, FrontierRepr};
 pub use state::SearchState;

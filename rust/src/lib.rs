@@ -47,10 +47,19 @@
 //! * [`coordinator`] — dataset drivers, experiment runners (one per
 //!   paper table/figure plus extensions), sweeps, reports.
 //!
+//! * [`service`] — the long-lived BFS query service: a
+//!   [`service::GraphCatalog`] of resident graphs, two-tier admission
+//!   queues, query coalescing through the batch driver, and an
+//!   epoch-keyed level-array cache (CLI: `scalabfs serve` /
+//!   `scalabfs loadgen`).
+//!
 //! The five engines — bitmap, cycle-accurate, analytic-throughput,
-//! edge-centric, XLA — all implement [`exec::BfsEngine`] and are built
-//! by name through [`exec::make_engine`], so experiment drivers sweep
-//! engines the same way they sweep PC/PE counts.
+//! edge-centric, XLA — all implement the lifetime-free, object-safe
+//! [`exec::BfsEngine`] and are built by name through
+//! [`exec::EngineSpec`]/[`exec::build_engine`] (a graph-free spec bound
+//! to an `Arc<Graph>`), so experiment drivers sweep engines the same
+//! way they sweep PC/PE counts and the service can bind one spec to
+//! many resident graphs.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
@@ -67,6 +76,7 @@ pub mod model;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod service;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

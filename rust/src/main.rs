@@ -41,9 +41,17 @@ Experiment commands (regenerate paper tables/figures):
 
 System commands:
   run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
+  serve           long-lived BFS query service, REPL on stdin
+                  [--pcs=4 --pes=8 --fast-queue=256 --accurate-queue=8 --cache=1024]
+                  REPL: load <name> <dataset> [scale] | query <graph> <root> [tier] [policy]
+                        reach <graph> <root> <target> | dist <graph> <root> <target>
+                        graphs | stats | quit
+  loadgen         open-loop mixed-tier load against an in-process service
+                  [--dataset=RMAT18-8 --queries=200 --accurate-every=16
+                   --root-pool=32 --cache=1024 --pcs=4 --pes=8]
   bench           measured perf suite -> scalabfs-bench-v1 JSON
-                  [--smoke --pr=6 --json=FILE]
-  bench-compare   regression gate: --old=BENCH_6.json --new=new.json
+                  [--smoke --pr=7 --json=FILE]
+  bench-compare   regression gate: --old=BENCH_7.json --new=new.json
                   [--tolerance=0.3] (floors always; exact/ratio bands vs a
                   measured same-mode baseline; exits non-zero on regression)
   datasets        list Table-I datasets
@@ -79,17 +87,20 @@ fn run_xla(
     scale: u32,
     seed: u64,
 ) -> anyhow::Result<()> {
+    use scalabfs::graph::Partitioning;
     use scalabfs::runtime::XlaBfsEngine;
     let dataset = kv
         .get("dataset")
         .cloned()
         .unwrap_or_else(|| "RMAT18-8".into());
     // The XLA dense path needs a small graph: shrink hard.
-    let graph = datasets::by_name(&dataset, scale, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
-    let mut engine = XlaBfsEngine::new()?;
+    let graph = std::sync::Arc::new(
+        datasets::by_name(&dataset, scale, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+    );
+    let mut engine = XlaBfsEngine::bind(graph.clone(), Partitioning::new(1, 1))?;
     let root = scalabfs::bfs::reference::sample_roots(&graph, 1, seed)[0];
-    let res = engine.run(&graph, root)?;
+    let res = engine.run(root)?;
     let reference = scalabfs::bfs::reference::bfs(&graph, root);
     let ok = res.levels == reference.levels;
     println!(
@@ -115,6 +126,188 @@ fn run_xla(
         "this binary was built without the `xla` feature; \
          rebuild with `cargo build --features xla` (needs the vendored xla crate)"
     )
+}
+
+/// Build a service from the shared CLI knobs.
+fn service_from_kv(kv: &std::collections::HashMap<String, String>) -> scalabfs::service::BfsService {
+    use scalabfs::service::{BfsService, GraphCatalog, ServiceConfig};
+    let get = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let defaults = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        sim: SimConfig::u280(get("pcs", 4), get("pes", 8)),
+        fast_queue: get("fast-queue", defaults.fast_queue),
+        accurate_queue: get("accurate-queue", defaults.accurate_queue),
+        cache_entries: get("cache", defaults.cache_entries),
+    };
+    BfsService::start(std::sync::Arc::new(GraphCatalog::new()), cfg)
+}
+
+/// The `serve` subcommand: a line-oriented REPL over a long-lived
+/// [`BfsService`](scalabfs::service::BfsService). Errors are printed
+/// per command, never fatal — the service outlives bad input.
+fn run_serve(
+    kv: &std::collections::HashMap<String, String>,
+    opts: &ExpOptions,
+) -> anyhow::Result<()> {
+    use scalabfs::bfs::INF;
+    use scalabfs::service::{Policy, Query, QueryOutput, Tier};
+    let service = service_from_kv(kv);
+    println!("scalabfs service ready (type 'help' for commands)");
+    let parse_query = |words: &[&str]| -> Result<Query, String> {
+        let (graph, root) = match words {
+            [g, r, ..] => (*g, r.parse::<u32>().map_err(|_| format!("bad root '{r}'"))?),
+            _ => return Err("usage: query <graph> <root> [tier] [policy]".into()),
+        };
+        let mut q = Query::levels(graph, root);
+        if let Some(t) = words.get(2) {
+            q = q.with_tier(Tier::parse(t).ok_or_else(|| format!("bad tier '{t}'"))?);
+        }
+        if let Some(p) = words.get(3) {
+            q = q.with_policy(Policy::parse(p).ok_or_else(|| format!("bad policy '{p}'"))?);
+        }
+        Ok(q)
+    };
+    let describe = |q: Query| match service.query(q) {
+        Ok(r) => {
+            let what = match &r.output {
+                QueryOutput::Levels(levels) => {
+                    let reached = levels.iter().filter(|&&l| l != INF).count();
+                    format!("{reached}/{} reached", levels.len())
+                }
+                QueryOutput::Reachable(yes) => format!("reachable: {yes}"),
+                QueryOutput::Distance(d) => match d {
+                    Some(d) => format!("distance: {d}"),
+                    None => "distance: unreachable".into(),
+                },
+            };
+            println!(
+                "[{}] {what} (epoch {}, {}, batch of {})",
+                r.tier.label(),
+                r.epoch,
+                if r.cache_hit { "cache hit" } else { "computed" },
+                r.batched_roots
+            );
+        }
+        Err(e) => println!("error: {e}"),
+    };
+    for line in std::io::stdin().lines() {
+        let line = line?;
+        let words: Vec<&str> = line.split_whitespace().collect();
+        match words.as_slice() {
+            [] => {}
+            ["quit"] | ["exit"] => break,
+            ["help"] => println!(
+                "commands: load <name> <dataset> [scale] | query <graph> <root> [tier] [policy]\n\
+                 \x20         reach <graph> <root> <target> | dist <graph> <root> <target>\n\
+                 \x20         graphs | stats | quit"
+            ),
+            ["load", name, dataset, rest @ ..] => {
+                let scale = rest
+                    .first()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(opts.scale_factor);
+                match datasets::by_name(dataset, scale, opts.seed) {
+                    Some(graph) => {
+                        let (v, e) = (graph.num_vertices(), graph.num_edges());
+                        let epoch = service.catalog().insert(*name, graph);
+                        println!("loaded '{name}' <- {dataset} (|V|={v} |E|={e}, epoch {epoch})");
+                    }
+                    None => println!("error: unknown dataset {dataset}"),
+                }
+            }
+            ["query", rest @ ..] => match parse_query(rest) {
+                Ok(q) => describe(q),
+                Err(e) => println!("error: {e}"),
+            },
+            ["reach", g, r, t] | ["dist", g, r, t] => {
+                let parsed = r
+                    .parse::<u32>()
+                    .and_then(|root| t.parse::<u32>().map(|target| (root, target)));
+                match parsed {
+                    Ok((root, target)) => describe(if words[0] == "reach" {
+                        Query::reachable(*g, root, target)
+                    } else {
+                        Query::distance(*g, root, target)
+                    }),
+                    Err(_) => println!("error: roots/targets must be vertex ids"),
+                }
+            }
+            ["graphs"] => {
+                for name in service.catalog().names() {
+                    let r = service.catalog().get(&name).expect("listed name resolves");
+                    println!(
+                        "  {name}: |V|={} |E|={} (epoch {})",
+                        r.graph.num_vertices(),
+                        r.graph.num_edges(),
+                        r.epoch
+                    );
+                }
+            }
+            ["stats"] => {
+                let s = service.stats();
+                println!(
+                    "submitted {} completed {} rejected {} cache hits {} \
+                     batches {} ({} roots) errors {} | {} cached levels",
+                    s.submitted,
+                    s.completed,
+                    s.rejected,
+                    s.cache_hits,
+                    s.batches,
+                    s.batched_roots,
+                    s.errors,
+                    service.cached_entries()
+                );
+            }
+            _ => println!("error: unknown command (try 'help')"),
+        }
+    }
+    Ok(())
+}
+
+/// The `loadgen` subcommand: offered-load benchmark against an
+/// in-process service.
+fn run_loadgen(
+    kv: &std::collections::HashMap<String, String>,
+    opts: &ExpOptions,
+) -> anyhow::Result<()> {
+    use scalabfs::service::{loadgen, LoadgenOptions};
+    let get = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let dataset = kv
+        .get("dataset")
+        .cloned()
+        .unwrap_or_else(|| "RMAT18-8".into());
+    let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let service = service_from_kv(kv);
+    service.catalog().insert(dataset.clone(), graph);
+    let lopts = LoadgenOptions {
+        graph: dataset.clone(),
+        queries: get("queries", 200),
+        accurate_every: get("accurate-every", 16),
+        root_pool: get("root-pool", 32),
+        seed: opts.seed,
+    };
+    println!(
+        "open-loop load: {} queries on {dataset} (accurate every {}, root pool {})",
+        lopts.queries, lopts.accurate_every, lopts.root_pool
+    );
+    let report = loadgen::run(&service, &lopts).map_err(anyhow::Error::new)?;
+    println!(
+        "submitted {} rejected {} errors {} in {:.2}s -> {:.0} q/s",
+        report.submitted, report.rejected, report.errors, report.wall_seconds, report.qps
+    );
+    for (label, tier) in [("fast", report.fast), ("accurate", report.accurate)] {
+        println!(
+            "  {label:<9} {:>5} done  p50 {:>8.2} ms  p99 {:>8.2} ms  max {:>8.2} ms",
+            tier.completed, tier.p50_ms, tier.p99_ms, tier.max_ms
+        );
+    }
+    let stats = service.stats();
+    println!(
+        "service: {} cache hits, {} batches over {} roots",
+        stats.cache_hits, stats.batches, stats.batched_roots
+    );
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -263,7 +456,7 @@ fn main() -> anyhow::Result<()> {
         "bench" => {
             let bopts = scalabfs::coordinator::BenchOptions {
                 smoke: kv.get("smoke").is_some(),
-                pr: get_u32("pr", 6),
+                pr: get_u32("pr", 7),
             };
             let doc = scalabfs::coordinator::bench::run_suite(&bopts)?;
             if let Some(path) = kv.get("json") {
@@ -322,6 +515,8 @@ fn main() -> anyhow::Result<()> {
                 println!("  {}", r.summary());
             }
         }
+        "serve" => run_serve(&kv, &opts)?,
+        "loadgen" => run_loadgen(&kv, &opts)?,
         "xla" => run_xla(&kv, get_u32("scale", 512), opts.seed)?,
         "all" => {
             println!("== Fig 3 ==\n{}", experiments::fig3().render());

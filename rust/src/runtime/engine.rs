@@ -3,14 +3,15 @@
 //! architecture end-to-end (Pallas kernel → JAX model → HLO text → PJRT
 //! execute) and is cross-validated against the bit-exact Rust engines.
 //!
-//! The engine implements [`BfsEngine`]: `prepare` picks the best-fit
-//! artifact, densifies the graph and warm-compiles the executable;
-//! `step` uploads the shared [`SearchState`] as f32 vectors, runs one
-//! `bfs_step` execute, and writes the outputs back into the bitmaps.
-//! The level-synchronous loop is the shared one in
-//! [`crate::exec::driver`] — the old per-engine host loop is gone.
-//! [`XlaBfsEngine::run_full`] remains the on-device alternative (the
-//! whole level loop under a `lax.while_loop` in one PJRT execute).
+//! The engine implements [`BfsEngine`] and is **born bound**:
+//! [`XlaBfsEngine::bind`] picks the best-fit artifact for the graph,
+//! densifies it and warm-compiles the executable, so an unprepared
+//! engine is unrepresentable. `step` uploads the shared [`SearchState`]
+//! as f32 vectors, runs one `bfs_step` execute, and writes the outputs
+//! back into the bitmaps. The level-synchronous loop is the shared one
+//! in [`crate::exec::driver`]. [`XlaBfsEngine::run_full`] remains the
+//! on-device alternative (the whole level loop under a `lax.while_loop`
+//! in one PJRT execute).
 //!
 //! The artifact signature (see `python/compile/model.py`):
 //!
@@ -27,6 +28,7 @@ use crate::bfs::Mode;
 use crate::exec::{BfsEngine, SearchState, StepStats};
 use crate::graph::{Graph, Partitioning, VertexId};
 use crate::Result;
+use std::sync::Arc;
 
 /// Result of an XLA-path BFS.
 #[derive(Clone, Debug)]
@@ -41,50 +43,67 @@ pub struct XlaBfsResult {
     pub execute_seconds: f64,
 }
 
-/// BFS engine running on the PJRT CPU client.
-pub struct XlaBfsEngine<'g> {
+/// BFS engine running on the PJRT CPU client. Bound to one graph for
+/// its whole lifetime: [`bind`](Self::bind) densifies the graph and
+/// warm-compiles the artifact once, and every later `step`/`run` reuses
+/// both.
+pub struct XlaBfsEngine {
     runtime: XlaRuntime,
     store: ArtifactStore,
-    graph: Option<&'g Graph>,
+    graph: Arc<Graph>,
     part: Partitioning,
-    artifact: Option<Artifact>,
-    blocked: Option<BlockedGraph>,
-    adj_lit: Option<xla::Literal>,
-    /// First PJRT failure observed by `step` (the trait method is
-    /// infallible, so the error is parked here and the search is ended
-    /// early; [`run`](Self::run) surfaces it).
+    artifact: Artifact,
+    blocked: BlockedGraph,
+    adj_lit: xla::Literal,
+    /// First PJRT failure observed by `step` (the trait method ends the
+    /// search early on failure; the error is parked here and
+    /// [`run`](Self::run) surfaces it).
     step_error: Option<anyhow::Error>,
-    /// Wall-clock seconds spent inside PJRT execute calls since the
-    /// last `prepare`.
+    /// Wall-clock seconds spent inside PJRT execute calls since `bind`.
     pub execute_seconds: f64,
 }
 
-impl<'g> XlaBfsEngine<'g> {
-    /// Build from the default artifact directory.
-    pub fn new() -> Result<Self> {
-        Ok(Self {
-            runtime: XlaRuntime::cpu()?,
-            store: ArtifactStore::load_default()?,
-            graph: None,
-            part: Partitioning::new(1, 1),
-            artifact: None,
-            blocked: None,
-            adj_lit: None,
-            step_error: None,
-            execute_seconds: 0.0,
-        })
+impl XlaBfsEngine {
+    /// Bind a graph using the default artifact directory. This is the
+    /// constructor [`EngineSpec::bind`](crate::exec::EngineSpec::bind)
+    /// goes through for the `xla` engine.
+    pub fn bind(graph: impl Into<Arc<Graph>>, part: Partitioning) -> Result<Self> {
+        Self::with_store(ArtifactStore::load_default()?, graph, part)
     }
 
-    /// Build from an explicit artifact store.
-    pub fn with_store(store: ArtifactStore) -> Result<Self> {
+    /// Bind a graph against an explicit artifact store: picks the
+    /// best-fit `bfs_step` artifact, densifies the graph, and
+    /// warm-compiles the executable so `step` never pays (or fails)
+    /// compilation.
+    pub fn with_store(
+        store: ArtifactStore,
+        graph: impl Into<Arc<Graph>>,
+        part: Partitioning,
+    ) -> Result<Self> {
+        let graph = graph.into();
+        let runtime = XlaRuntime::cpu()?;
+        let n_real = graph.num_vertices();
+        let artifact = store
+            .best_fit("bfs_step", n_real)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bfs_step artifact fits {n_real} vertices (have {:?})",
+                    store.sizes("bfs_step")
+                )
+            })?
+            .clone();
+        let blocked = BlockedGraph::build(&graph, artifact.n)?;
+        let n = artifact.n as i64;
+        let adj_lit = xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?;
+        runtime.load(&artifact.path)?;
         Ok(Self {
-            runtime: XlaRuntime::cpu()?,
+            runtime,
             store,
-            graph: None,
-            part: Partitioning::new(1, 1),
-            artifact: None,
-            blocked: None,
-            adj_lit: None,
+            graph,
+            part,
+            artifact,
+            blocked,
+            adj_lit,
             step_error: None,
             execute_seconds: 0.0,
         })
@@ -99,8 +118,8 @@ impl<'g> XlaBfsEngine<'g> {
     /// `bfs_full` artifact (the whole level loop runs on-device under a
     /// `lax.while_loop`; see EXPERIMENTS.md §Perf for the speedup over
     /// per-iteration execution).
-    pub fn run_full(&mut self, graph: &Graph, root: VertexId) -> Result<XlaBfsResult> {
-        let n_real = graph.num_vertices();
+    pub fn run_full(&mut self, root: VertexId) -> Result<XlaBfsResult> {
+        let n_real = self.graph.num_vertices();
         let artifact = self
             .store
             .best_fit("bfs_full", n_real)
@@ -111,7 +130,7 @@ impl<'g> XlaBfsEngine<'g> {
                 )
             })?
             .clone();
-        let blocked = BlockedGraph::build(graph, artifact.n)?;
+        let blocked = BlockedGraph::build(&self.graph, artifact.n)?;
         let (frontier, visited, level) = blocked.initial_state(root);
         let exe = self.runtime.load(&artifact.path)?;
         let n = artifact.n as i64;
@@ -137,11 +156,11 @@ impl<'g> XlaBfsEngine<'g> {
         })
     }
 
-    /// Run BFS from `root` through the shared driver, using the smallest
-    /// `bfs_step` artifact that fits.
-    pub fn run(&mut self, graph: &'g Graph, root: VertexId) -> Result<XlaBfsResult> {
-        self.prepare(graph, Partitioning::new(1, 1))?;
-        let mut state = SearchState::new(graph.num_vertices());
+    /// Run BFS from `root` through the shared driver on the bound graph.
+    pub fn run(&mut self, root: VertexId) -> Result<XlaBfsResult> {
+        self.step_error = None;
+        self.execute_seconds = 0.0;
+        let mut state = SearchState::new(self.graph.num_vertices());
         let run = crate::exec::drive(self, &mut state, root, &mut crate::sched::Fixed(Mode::Push))?;
         if let Some(e) = self.step_error.take() {
             return Err(e);
@@ -164,11 +183,9 @@ impl<'g> XlaBfsEngine<'g> {
         level: &[f32],
         bfs_level: u32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, u64)> {
-        let artifact = self.artifact.as_ref().expect("prepare not called");
-        let adj_lit = self.adj_lit.as_ref().expect("prepare not called").clone();
-        let exe = self.runtime.load(&artifact.path)?;
+        let exe = self.runtime.load(&self.artifact.path)?;
         let inputs = [
-            adj_lit,
+            self.adj_lit.clone(),
             xla::Literal::vec1(frontier),
             xla::Literal::vec1(visited),
             xla::Literal::vec1(level),
@@ -188,35 +205,9 @@ impl<'g> XlaBfsEngine<'g> {
     }
 }
 
-impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
-    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
-        let n_real = graph.num_vertices();
-        let artifact = self
-            .store
-            .best_fit("bfs_step", n_real)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no bfs_step artifact fits {n_real} vertices (have {:?})",
-                    self.sizes()
-                )
-            })?
-            .clone();
-        let blocked = BlockedGraph::build(graph, artifact.n)?;
-        let n = artifact.n as i64;
-        self.adj_lit = Some(xla::Literal::vec1(&blocked.adj).reshape(&[n, n])?);
-        // Warm-compile so step() never pays (or fails) compilation.
-        self.runtime.load(&artifact.path)?;
-        self.graph = Some(graph);
-        self.part = part;
-        self.artifact = Some(artifact);
-        self.blocked = Some(blocked);
-        self.step_error = None;
-        self.execute_seconds = 0.0;
-        Ok(())
-    }
-
-    fn graph(&self) -> &'g Graph {
-        self.graph.expect("prepare not called")
+impl BfsEngine for XlaBfsEngine {
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn partitioning(&self) -> Partitioning {
@@ -228,9 +219,8 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
     /// mid-run ends the search early (newly_visited = 0) and is parked
     /// in `step_error`; [`XlaBfsEngine::run`] returns it to the caller.
     fn step(&mut self, state: &mut SearchState, _mode: Mode) -> Result<StepStats> {
-        let blocked = self.blocked.as_ref().expect("prepare not called");
-        let n_pad = blocked.n;
-        let n_real = blocked.real_n;
+        let n_pad = self.blocked.n;
+        let n_real = self.blocked.real_n;
         // Upload: bitmaps -> padded f32 vectors (padding stays visited,
         // as BlockedGraph::initial_state sets it, so the kernel never
         // activates it).
@@ -262,7 +252,7 @@ impl<'g> BfsEngine<'g> for XlaBfsEngine<'g> {
         // Download: write the outputs back into the shared state. New
         // frontier vertices are staged with their out-degree so the
         // shared driver's insert-time signals stay exact.
-        let graph = self.graph.expect("prepare not called");
+        let graph = Arc::clone(&self.graph);
         for v in 0..n_real {
             if next_f[v] > 0.5 {
                 state.next.insert(v as VertexId, graph.csr.degree(v as VertexId));

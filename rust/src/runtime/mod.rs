@@ -10,8 +10,8 @@
 //! cargo feature because the `xla` crate is a vendored dependency not
 //! present in the offline registry; the artifact registry and the
 //! CSR→dense conversion build unconditionally. Without the feature,
-//! requesting the `xla` engine from
-//! [`make_engine`](crate::exec::make_engine) returns a clean error.
+//! requesting the `xla` engine from [`crate::exec::EngineSpec`] returns
+//! the typed [`EngineError::MissingFeature`](crate::exec::EngineError).
 
 pub mod artifacts;
 pub mod blocked;

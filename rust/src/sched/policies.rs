@@ -184,7 +184,7 @@ mod tests {
         use crate::bfs::bitmap::{run_bfs, BitmapEngine, TrafficConfig};
         use crate::bfs::reference;
         use crate::graph::{generators, Partitioning};
-        let g = generators::rmat_graph500(9, 8, 17);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 17));
         let root = reference::sample_roots(&g, 1, 17)[0];
         let truth = reference::bfs(&g, root);
         let part = Partitioning::new(4, 2);
@@ -204,7 +204,7 @@ mod tests {
                 &mut DegreeAware::default() as &mut dyn ModePolicy,
                 &mut FrontierFraction::default(),
             ] {
-                let run = BitmapEngine::new(&g, part)
+                let run = BitmapEngine::new(g.clone(), part)
                     .with_config(cfg)
                     .run(root, policy);
                 assert_eq!(run.levels, truth.levels, "{}", policy.name());

@@ -1,0 +1,148 @@
+//! LRU cache of per-root level arrays, keyed by graph epoch.
+
+use crate::graph::VertexId;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key: one BFS tree. The key deliberately contains **no tier or
+/// policy**: every engine and every mode schedule produces bit-identical
+/// levels (the differential property `tests/engine_equivalence.rs`
+/// enforces), so one entry serves all of them byte-identically. The
+/// `epoch` is the staleness guard — after a catalog swap the new epoch
+/// never matches old entries, so stale levels are unreachable rather
+/// than "hopefully invalidated".
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Catalog name of the graph.
+    pub graph: String,
+    /// Catalog epoch the levels were computed against.
+    pub epoch: u64,
+    /// BFS root.
+    pub root: VertexId,
+}
+
+struct Entry {
+    levels: Arc<Vec<u32>>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    tick: u64,
+}
+
+/// Bounded LRU cache of level arrays. Entries are `Arc`-shared with
+/// responses, so a hit is refcount traffic, not a copy, and eviction
+/// never invalidates an array a caller is still reading. Capacity 0
+/// disables caching entirely (every lookup misses, inserts are
+/// dropped) — useful for load generators that want to measure the
+/// uncached path.
+pub struct LevelCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl LevelCache {
+    /// Cache holding at most `capacity` level arrays.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Look up a BFS tree, refreshing its recency on a hit.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<Vec<u32>>> {
+        let mut inner = self.inner.lock().expect("cache lock poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.levels)
+        })
+    }
+
+    /// Insert a BFS tree, evicting least-recently-used entries while
+    /// over capacity.
+    pub fn insert(&self, key: CacheKey, levels: Arc<Vec<u32>>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("cache lock poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { levels, last_used: tick });
+        while inner.map.len() > self.capacity {
+            // O(n) victim scan: service caches hold at most a few
+            // thousand entries, and insert is already off the cache-hit
+            // fast path.
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has a minimum");
+            inner.map.remove(&victim);
+        }
+    }
+
+    /// Number of cached level arrays.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache lock poisoned").map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(graph: &str, epoch: u64, root: VertexId) -> CacheKey {
+        CacheKey {
+            graph: graph.into(),
+            epoch,
+            root,
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_same_allocation() {
+        let cache = LevelCache::new(4);
+        let levels = Arc::new(vec![0, 1, 2]);
+        cache.insert(key("g", 0, 0), Arc::clone(&levels));
+        let hit = cache.get(&key("g", 0, 0)).unwrap();
+        assert!(Arc::ptr_eq(&hit, &levels));
+        assert!(cache.get(&key("g", 1, 0)).is_none(), "epoch is in the key");
+        assert!(cache.get(&key("g", 0, 1)).is_none(), "root is in the key");
+        assert!(cache.get(&key("h", 0, 0)).is_none(), "name is in the key");
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let cache = LevelCache::new(2);
+        cache.insert(key("g", 0, 0), Arc::new(vec![0]));
+        cache.insert(key("g", 0, 1), Arc::new(vec![1]));
+        // Touch root 0 so root 1 becomes the LRU victim.
+        assert!(cache.get(&key("g", 0, 0)).is_some());
+        cache.insert(key("g", 0, 2), Arc::new(vec![2]));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key("g", 0, 0)).is_some());
+        assert!(cache.get(&key("g", 0, 1)).is_none(), "LRU entry evicted");
+        assert!(cache.get(&key("g", 0, 2)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = LevelCache::new(0);
+        cache.insert(key("g", 0, 0), Arc::new(vec![0]));
+        assert!(cache.is_empty());
+        assert!(cache.get(&key("g", 0, 0)).is_none());
+    }
+}

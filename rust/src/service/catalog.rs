@@ -1,0 +1,137 @@
+//! Named resident graphs with swap-safe epochs.
+
+use crate::graph::Graph;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A catalog lookup result: the graph plus the epoch it was installed
+/// at. Holding a `Resident` keeps the graph alive even if the catalog
+/// swaps or removes the name afterwards — in-flight queries finish on
+/// the graph they resolved, and their responses carry this epoch so
+/// the caller can tell which version answered.
+#[derive(Clone, Debug)]
+pub struct Resident {
+    /// Catalog name the graph is registered under.
+    pub name: String,
+    /// Epoch assigned when this graph was inserted (monotonic across
+    /// the whole catalog; a swap under the same name gets a new one).
+    pub epoch: u64,
+    /// The resident graph.
+    pub graph: Arc<Graph>,
+}
+
+/// Registry of resident graphs keyed by name. Inserting under an
+/// existing name *swaps* the graph and bumps the epoch; readers that
+/// resolved the old `Resident` keep it alive via its `Arc`, and every
+/// cache entry keyed by the old epoch becomes unreachable (see
+/// [`LevelCache`](super::LevelCache)) — stale levels are never served.
+#[derive(Debug, Default)]
+pub struct GraphCatalog {
+    inner: RwLock<HashMap<String, Resident>>,
+    next_epoch: AtomicU64,
+}
+
+impl GraphCatalog {
+    /// Empty catalog.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install (or swap) a graph under `name`, returning the epoch it
+    /// was assigned.
+    pub fn insert(&self, name: impl Into<String>, graph: impl Into<Arc<Graph>>) -> u64 {
+        let name = name.into();
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed);
+        let resident = Resident {
+            name: name.clone(),
+            epoch,
+            graph: graph.into(),
+        };
+        self.inner
+            .write()
+            .expect("catalog lock poisoned")
+            .insert(name, resident);
+        epoch
+    }
+
+    /// Resolve a name to its current resident graph.
+    pub fn get(&self, name: &str) -> Option<Resident> {
+        self.inner
+            .read()
+            .expect("catalog lock poisoned")
+            .get(name)
+            .cloned()
+    }
+
+    /// Evict a name. Returns the evicted resident, if any; its graph
+    /// stays alive for whoever still holds an `Arc`.
+    pub fn remove(&self, name: &str) -> Option<Resident> {
+        self.inner
+            .write()
+            .expect("catalog lock poisoned")
+            .remove(name)
+    }
+
+    /// Registered names, sorted for stable output.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .inner
+            .read()
+            .expect("catalog lock poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    /// Number of resident graphs.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("catalog lock poisoned").len()
+    }
+
+    /// Whether the catalog is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let cat = GraphCatalog::new();
+        assert!(cat.is_empty());
+        let e0 = cat.insert("chain", generators::chain(8));
+        let e1 = cat.insert("star", generators::star(5));
+        assert!(e1 > e0);
+        assert_eq!(cat.len(), 2);
+        assert_eq!(cat.names(), vec!["chain".to_string(), "star".to_string()]);
+        let r = cat.get("chain").unwrap();
+        assert_eq!(r.epoch, e0);
+        assert_eq!(r.graph.num_vertices(), 8);
+        assert!(cat.get("nope").is_none());
+        assert!(cat.remove("chain").is_some());
+        assert!(cat.get("chain").is_none());
+        assert!(cat.remove("chain").is_none());
+    }
+
+    #[test]
+    fn swap_bumps_epoch_and_keeps_old_graph_alive() {
+        let cat = GraphCatalog::new();
+        cat.insert("g", generators::chain(8));
+        let old = cat.get("g").unwrap();
+        let e_new = cat.insert("g", generators::star(5));
+        let new = cat.get("g").unwrap();
+        assert!(e_new > old.epoch);
+        assert_eq!(new.epoch, e_new);
+        assert_eq!(new.graph.num_vertices(), 5);
+        // The pre-swap resident still works: in-flight queries finish
+        // on the graph they resolved.
+        assert_eq!(old.graph.num_vertices(), 8);
+    }
+}

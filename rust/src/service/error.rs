@@ -1,0 +1,108 @@
+//! Typed service failures.
+
+use super::query::Tier;
+use crate::exec::EngineError;
+use crate::graph::VertexId;
+use std::fmt;
+
+/// Everything that can go wrong between submitting a [`Query`] and
+/// receiving a [`QueryResponse`]. Admission failures
+/// ([`Overloaded`](Self::Overloaded)) surface synchronously from
+/// `submit`; the rest arrive through the ticket.
+///
+/// [`Query`]: super::Query
+/// [`QueryResponse`]: super::QueryResponse
+#[derive(Debug)]
+pub enum ServiceError {
+    /// The tier's bounded queue is full: the service sheds load at
+    /// admission instead of growing an unbounded backlog. Retry with
+    /// backoff, or lower the offered rate.
+    Overloaded {
+        /// The tier that refused admission.
+        tier: Tier,
+        /// Its configured queue capacity.
+        capacity: usize,
+    },
+    /// No graph registered under this catalog name.
+    UnknownGraph {
+        /// The name that failed to resolve.
+        name: String,
+    },
+    /// The root is outside the resolved graph's vertex range.
+    InvalidRoot {
+        /// The rejected root.
+        root: VertexId,
+        /// The graph's vertex count at resolution time.
+        vertices: usize,
+    },
+    /// Binding the tier's engine to the graph failed.
+    Engine(EngineError),
+    /// The engine ran but failed mid-search (e.g. a cycle-budget
+    /// non-convergence), stringified for transport across the reply
+    /// channel.
+    Failed {
+        /// The underlying error's message.
+        message: String,
+    },
+    /// The service shut down before the query completed.
+    ShutDown,
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Overloaded { tier, capacity } => write!(
+                f,
+                "{} tier overloaded (queue capacity {capacity}); retry with backoff",
+                tier.label()
+            ),
+            ServiceError::UnknownGraph { name } => {
+                write!(f, "no graph named '{name}' in the catalog")
+            }
+            ServiceError::InvalidRoot { root, vertices } => {
+                write!(f, "root {root} out of range (graph has {vertices} vertices)")
+            }
+            ServiceError::Engine(e) => write!(f, "engine bind failed: {e}"),
+            ServiceError::Failed { message } => write!(f, "query failed: {message}"),
+            ServiceError::ShutDown => write!(f, "service shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServiceError::Engine(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<EngineError> for ServiceError {
+    fn from(e: EngineError) -> Self {
+        ServiceError::Engine(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_name_the_failure() {
+        let e = ServiceError::Overloaded {
+            tier: Tier::Accurate,
+            capacity: 4,
+        };
+        assert!(e.to_string().contains("accurate"));
+        assert!(e.to_string().contains('4'));
+        let e = ServiceError::UnknownGraph { name: "LJ".into() };
+        assert!(e.to_string().contains("LJ"));
+        let e: ServiceError = EngineError::UnknownEngine {
+            name: "warp".into(),
+        }
+        .into();
+        assert!(matches!(e, ServiceError::Engine(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

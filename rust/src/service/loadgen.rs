@@ -1,0 +1,250 @@
+//! Open-loop load generator: offered load is fixed up front, not
+//! paced by completions, so queue pressure and tail latency are
+//! visible instead of hidden by a closed feedback loop.
+//!
+//! Shared by the `loadgen` CLI command and the `perf_service` bench
+//! section — both drive an in-process [`BfsService`] with a mixed
+//! bitmap/cycle query stream and report q/s plus p50/p99 latency.
+
+use super::query::{Query, Tier};
+use super::server::BfsService;
+use super::ServiceError;
+use crate::bfs::reference;
+use crate::util::rng::Xoshiro256;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Load-generation knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Catalog name of the graph to query.
+    pub graph: String,
+    /// Total queries to offer.
+    pub queries: usize,
+    /// Every Nth query goes to the accurate (cycle-sim) tier; 0 sends
+    /// everything to the fast tier.
+    pub accurate_every: usize,
+    /// Size of the root pool queries draw from — the cache-hit-ratio
+    /// knob (a pool smaller than `queries` forces repeats).
+    pub root_pool: usize,
+    /// RNG seed for root selection.
+    pub seed: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self {
+            graph: "g".into(),
+            queries: 200,
+            accurate_every: 16,
+            root_pool: 32,
+            seed: 42,
+        }
+    }
+}
+
+/// Latency distribution for one tier, in milliseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierLatency {
+    /// Queries that completed successfully on this tier.
+    pub completed: u64,
+    /// Median submit-to-completion latency.
+    pub p50_ms: f64,
+    /// 99th-percentile submit-to-completion latency.
+    pub p99_ms: f64,
+    /// Worst observed latency.
+    pub max_ms: f64,
+}
+
+/// What one open-loop run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Queries admitted.
+    pub submitted: u64,
+    /// Queries refused at admission (queue full).
+    pub rejected: u64,
+    /// Queries that completed with an error.
+    pub errors: u64,
+    /// Wall time from first submit to last completion.
+    pub wall_seconds: f64,
+    /// Completed queries per second of wall time.
+    pub qps: f64,
+    /// Fast-tier latency distribution.
+    pub fast: TierLatency,
+    /// Accurate-tier latency distribution.
+    pub accurate: TierLatency,
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn tier_latency(mut samples_ms: Vec<f64>) -> TierLatency {
+    samples_ms.sort_by(|a, b| a.partial_cmp(b).expect("latency is finite"));
+    TierLatency {
+        completed: samples_ms.len() as u64,
+        p50_ms: percentile(&samples_ms, 50.0),
+        p99_ms: percentile(&samples_ms, 99.0),
+        max_ms: samples_ms.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Offer `opts.queries` queries as fast as the admission path accepts
+/// them, then wait for everything in flight. One collector thread per
+/// tier times each ticket from submit to completion, so a slow cycle
+/// query inflates only accurate-tier latencies, never fast-tier ones.
+pub fn run(service: &BfsService, opts: &LoadgenOptions) -> Result<LoadReport, ServiceError> {
+    let resident = service
+        .catalog()
+        .get(&opts.graph)
+        .ok_or_else(|| ServiceError::UnknownGraph {
+            name: opts.graph.clone(),
+        })?;
+    let pool = reference::sample_roots(&resident.graph, opts.root_pool.max(1), opts.seed);
+    if pool.is_empty() {
+        return Err(ServiceError::InvalidRoot {
+            root: 0,
+            vertices: resident.graph.num_vertices(),
+        });
+    }
+    let mut rng = Xoshiro256::seed_from(opts.seed);
+    let mut submitted = 0u64;
+    let mut rejected = 0u64;
+
+    type Pending = (Instant, super::server::Ticket);
+    let collect = |rx: mpsc::Receiver<Pending>| {
+        move || {
+            let mut samples_ms = Vec::new();
+            let mut errors = 0u64;
+            while let Ok((t0, ticket)) = rx.recv() {
+                match ticket.wait() {
+                    Ok(_) => samples_ms.push(t0.elapsed().as_secs_f64() * 1e3),
+                    Err(_) => errors += 1,
+                }
+            }
+            (samples_ms, errors)
+        }
+    };
+
+    let t_start = Instant::now();
+    let (fast_samples, fast_errors, acc_samples, acc_errors) = std::thread::scope(|scope| {
+        let (fast_tx, fast_rx) = mpsc::channel::<Pending>();
+        let (acc_tx, acc_rx) = mpsc::channel::<Pending>();
+        let fast_collector = scope.spawn(collect(fast_rx));
+        let acc_collector = scope.spawn(collect(acc_rx));
+        for i in 0..opts.queries {
+            let root = pool[rng.next_below(pool.len() as u64) as usize];
+            let accurate = opts.accurate_every > 0 && i % opts.accurate_every == 0;
+            let query = if accurate {
+                Query::levels(&*opts.graph, root).with_tier(Tier::Accurate)
+            } else {
+                Query::levels(&*opts.graph, root)
+            };
+            match service.submit(query) {
+                Ok(ticket) => {
+                    submitted += 1;
+                    let tx = if accurate { &acc_tx } else { &fast_tx };
+                    tx.send((Instant::now(), ticket))
+                        .expect("collector outlives submission");
+                }
+                Err(ServiceError::Overloaded { .. }) => rejected += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        drop(fast_tx);
+        drop(acc_tx);
+        let (fast_samples, fast_errors) = fast_collector.join().expect("fast collector");
+        let (acc_samples, acc_errors) = acc_collector.join().expect("accurate collector");
+        Ok((fast_samples, fast_errors, acc_samples, acc_errors))
+    })?;
+    let wall_seconds = t_start.elapsed().as_secs_f64();
+    let errors = fast_errors + acc_errors;
+    let completed = (fast_samples.len() + acc_samples.len()) as u64;
+    Ok(LoadReport {
+        submitted,
+        rejected,
+        errors,
+        wall_seconds,
+        qps: completed as f64 / wall_seconds.max(1e-9),
+        fast: tier_latency(fast_samples),
+        accurate: tier_latency(acc_samples),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::service::{GraphCatalog, ServiceConfig};
+    use crate::sim::config::SimConfig;
+    use std::sync::Arc;
+
+    #[test]
+    fn open_loop_run_accounts_for_every_query() {
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("g", generators::rmat_graph500(9, 8, 11));
+        let service = BfsService::start(
+            Arc::clone(&catalog),
+            ServiceConfig {
+                sim: SimConfig::u280(2, 4),
+                ..ServiceConfig::default()
+            },
+        );
+        let opts = LoadgenOptions {
+            graph: "g".into(),
+            queries: 40,
+            accurate_every: 20,
+            root_pool: 4,
+            seed: 11,
+        };
+        let report = run(&service, &opts).unwrap();
+        assert_eq!(report.submitted + report.rejected, 40);
+        assert_eq!(
+            report.fast.completed + report.accurate.completed + report.errors,
+            report.submitted
+        );
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.accurate.completed, 2, "queries 0 and 20");
+        assert!(report.qps > 0.0);
+        assert!(report.fast.p50_ms <= report.fast.p99_ms);
+        assert!(report.fast.p99_ms <= report.fast.max_ms + 1e-12);
+        // A 4-root pool under 38 fast queries must hit the cache.
+        assert!(service.stats().cache_hits > 0);
+    }
+
+    #[test]
+    fn unknown_graph_is_a_typed_error() {
+        let service = BfsService::start(
+            Arc::new(GraphCatalog::new()),
+            ServiceConfig {
+                sim: SimConfig::u280(1, 1),
+                ..ServiceConfig::default()
+            },
+        );
+        let opts = LoadgenOptions {
+            graph: "missing".into(),
+            queries: 1,
+            ..LoadgenOptions::default()
+        };
+        assert!(matches!(
+            run(&service, &opts),
+            Err(ServiceError::UnknownGraph { .. })
+        ));
+    }
+
+    #[test]
+    fn percentiles_are_order_statistics() {
+        let t = tier_latency(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(t.completed, 4);
+        assert_eq!(t.p50_ms, 3.0); // round(0.5 * 3) = index 2 of [1,2,3,4]
+        assert_eq!(t.p99_ms, 4.0);
+        assert_eq!(t.max_ms, 4.0);
+        let empty = tier_latency(Vec::new());
+        assert_eq!(empty.completed, 0);
+        assert_eq!(empty.p50_ms, 0.0);
+    }
+}

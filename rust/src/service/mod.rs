@@ -1,0 +1,55 @@
+//! Long-lived BFS query service: the accelerator as a shared resource.
+//!
+//! The paper's deployment model is an offload card: the host keeps one
+//! or more graphs resident in HBM and fires BFS queries at them for as
+//! long as the process lives. This module is that shape in host code —
+//! and it is what the lifetime-free [`BfsEngine`](crate::exec::BfsEngine)
+//! redesign exists to serve: a bound engine owns an `Arc` handle to its
+//! graph, so it can be parked on a worker thread indefinitely, with no
+//! borrow tying it to the stack frame that created it.
+//!
+//! The pieces:
+//!
+//! * [`GraphCatalog`] — named resident graphs. Every insert (including
+//!   a swap under an existing name) assigns a fresh monotonically
+//!   increasing *epoch*, so downstream consumers can tell "the LJ that
+//!   was loaded this morning" from "the LJ that replaced it".
+//! * [`Query`] / [`QueryResponse`] — the intake surface: full level
+//!   arrays, reachability probes, and point distances, each against a
+//!   named graph at whatever epoch is current when the query runs.
+//! * [`LevelCache`] — per-root level arrays keyed by `(graph, epoch,
+//!   root)` with LRU eviction. The epoch in the key makes stale entries
+//!   unreachable the moment a catalog swap lands: nothing is flushed,
+//!   the old keys simply never match again.
+//! * [`BfsService`] — two-tier admission and execution. The **fast**
+//!   tier answers from the host bitmap engine, coalescing concurrently
+//!   queued roots for the same `(graph, policy)` into one
+//!   [`BatchDriver`](crate::bfs::batch::BatchDriver) batch; the
+//!   **accurate** tier runs the cycle-stepped simulator for queries
+//!   that want modeled timing. Each tier has its own bounded queue and
+//!   its own worker thread, so a minutes-long cycle simulation can
+//!   never starve bitmap traffic, and a full queue is a typed
+//!   [`ServiceError::Overloaded`] at submit time, not an unbounded
+//!   backlog.
+//! * [`loadgen`] — open-loop mixed-tier load generator behind the
+//!   `scalabfs loadgen` CLI and `benches/perf_service.rs`: offered
+//!   load is submitted without waiting, completions are timed per
+//!   tier, and the report carries q/s plus p50/p99/max latency.
+//!
+//! Everything is plain `std` threading (`Mutex`/`Condvar`/`mpsc`);
+//! there is no async runtime in the dependency set, and none is needed
+//! for a queue-per-tier design.
+
+pub mod cache;
+pub mod catalog;
+pub mod error;
+pub mod loadgen;
+pub mod query;
+pub mod server;
+
+pub use cache::{CacheKey, LevelCache};
+pub use catalog::{GraphCatalog, Resident};
+pub use error::ServiceError;
+pub use loadgen::{LoadReport, LoadgenOptions};
+pub use query::{Policy, Query, QueryKind, QueryOutput, QueryResponse, Tier};
+pub use server::{BfsService, ServiceConfig, ServiceStats, Ticket};

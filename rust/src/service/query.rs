@@ -1,0 +1,256 @@
+//! Query intake types: what callers submit and what they get back.
+
+use crate::bfs::{Mode, INF};
+use crate::graph::VertexId;
+use crate::sched::{Fixed, Hybrid, ModePolicy};
+use std::sync::Arc;
+
+/// Which execution tier a query is admitted to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Host bitmap engine, batched: answers in milliseconds and
+    /// coalesces with concurrent queries on the same graph.
+    Fast,
+    /// Cycle-stepped simulator: models the accelerator's timing but is
+    /// orders of magnitude slower, so it queues separately.
+    Accurate,
+}
+
+impl Tier {
+    /// Both tiers, in admission order.
+    pub const ALL: [Tier; 2] = [Tier::Fast, Tier::Accurate];
+
+    /// Stable label for logs and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Fast => "fast",
+            Tier::Accurate => "accurate",
+        }
+    }
+
+    /// Parse a CLI/REPL label.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fast" | "bitmap" => Some(Tier::Fast),
+            "accurate" | "cycle" => Some(Tier::Accurate),
+            _ => None,
+        }
+    }
+}
+
+/// Mode-scheduling policy for a query, as a closed enum rather than a
+/// free-form string: it is part of the fast tier's coalescing key, and
+/// two queries coalesce only if they would run the identical schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Direction-optimizing hybrid (the paper's default).
+    Hybrid,
+    /// Push-only.
+    Push,
+    /// Pull-only.
+    Pull,
+}
+
+impl Policy {
+    /// Stable label for logs and reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Policy::Hybrid => "hybrid",
+            Policy::Push => "push",
+            Policy::Pull => "pull",
+        }
+    }
+
+    /// Parse a CLI/REPL label.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hybrid" => Some(Policy::Hybrid),
+            "push" => Some(Policy::Push),
+            "pull" => Some(Policy::Pull),
+            _ => None,
+        }
+    }
+
+    /// Instantiate a fresh (stateful) scheduling policy.
+    pub fn build(self) -> Box<dyn ModePolicy> {
+        match self {
+            Policy::Hybrid => Box::new(Hybrid::default()),
+            Policy::Push => Box::new(Fixed(Mode::Push)),
+            Policy::Pull => Box::new(Fixed(Mode::Pull)),
+        }
+    }
+}
+
+/// What the caller wants computed from the BFS tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    /// The full per-vertex level array.
+    Levels,
+    /// Is `target` reachable from the root?
+    Reachable {
+        /// Vertex probed for reachability.
+        target: VertexId,
+    },
+    /// Hop distance from the root to `target` (`None` if unreachable).
+    Distance {
+        /// Vertex whose BFS level is requested.
+        target: VertexId,
+    },
+}
+
+/// One query against a named catalog graph. Built with the
+/// constructors below; `tier` and `policy` default to
+/// [`Tier::Fast`] + [`Policy::Hybrid`].
+#[derive(Clone, Debug)]
+pub struct Query {
+    /// Catalog name of the graph to search.
+    pub graph: String,
+    /// BFS root vertex.
+    pub root: VertexId,
+    /// What to compute from the resulting level array.
+    pub kind: QueryKind,
+    /// Which execution tier to admit to.
+    pub tier: Tier,
+    /// Mode-scheduling policy (part of the coalescing key).
+    pub policy: Policy,
+}
+
+impl Query {
+    /// Full level array from `root`.
+    pub fn levels(graph: impl Into<String>, root: VertexId) -> Self {
+        Self {
+            graph: graph.into(),
+            root,
+            kind: QueryKind::Levels,
+            tier: Tier::Fast,
+            policy: Policy::Hybrid,
+        }
+    }
+
+    /// Reachability probe `root -> target`.
+    pub fn reachable(graph: impl Into<String>, root: VertexId, target: VertexId) -> Self {
+        Self {
+            kind: QueryKind::Reachable { target },
+            ..Self::levels(graph, root)
+        }
+    }
+
+    /// Hop distance `root -> target`.
+    pub fn distance(graph: impl Into<String>, root: VertexId, target: VertexId) -> Self {
+        Self {
+            kind: QueryKind::Distance { target },
+            ..Self::levels(graph, root)
+        }
+    }
+
+    /// Select the execution tier.
+    pub fn with_tier(mut self, tier: Tier) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// Select the scheduling policy.
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// What a query computed.
+#[derive(Clone, Debug)]
+pub enum QueryOutput {
+    /// Full level array (shared with the cache — cloning is refcount
+    /// traffic, not a copy).
+    Levels(Arc<Vec<u32>>),
+    /// Reachability verdict. A target beyond the graph's vertex range
+    /// is reported unreachable, not an error.
+    Reachable(bool),
+    /// Hop distance (`None` when unreachable or out of range).
+    Distance(Option<u32>),
+}
+
+impl QueryOutput {
+    /// Derive the requested output from a finished level array.
+    pub fn derive(kind: QueryKind, levels: &Arc<Vec<u32>>) -> Self {
+        match kind {
+            QueryKind::Levels => QueryOutput::Levels(Arc::clone(levels)),
+            QueryKind::Reachable { target } => QueryOutput::Reachable(
+                levels.get(target as usize).is_some_and(|&l| l != INF),
+            ),
+            QueryKind::Distance { target } => QueryOutput::Distance(
+                levels.get(target as usize).copied().filter(|&l| l != INF),
+            ),
+        }
+    }
+}
+
+/// A completed query, with enough provenance to audit what served it.
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    /// The computed output.
+    pub output: QueryOutput,
+    /// Epoch of the catalog graph that served the query — the epoch
+    /// current at *execution* time, never a stale one.
+    pub epoch: u64,
+    /// Whether the level array came from the cache.
+    pub cache_hit: bool,
+    /// Distinct roots in the coalesced batch that computed this answer
+    /// (0 for cache hits and accurate-tier runs).
+    pub batched_roots: usize,
+    /// Tier that executed the query.
+    pub tier: Tier,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_and_labels_round_trip() {
+        let q = Query::levels("LJ", 3)
+            .with_tier(Tier::Accurate)
+            .with_policy(Policy::Pull);
+        assert_eq!(q.graph, "LJ");
+        assert_eq!(q.root, 3);
+        assert_eq!(q.tier, Tier::Accurate);
+        assert_eq!(q.policy, Policy::Pull);
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.label()), Some(t));
+        }
+        for p in [Policy::Hybrid, Policy::Push, Policy::Pull] {
+            assert_eq!(Policy::parse(p.label()), Some(p));
+        }
+        assert_eq!(Tier::parse("warp"), None);
+        assert_eq!(Policy::parse("warp"), None);
+    }
+
+    #[test]
+    fn outputs_derive_from_levels() {
+        let levels = Arc::new(vec![0u32, 1, INF, 2]);
+        match QueryOutput::derive(QueryKind::Levels, &levels) {
+            QueryOutput::Levels(l) => assert!(Arc::ptr_eq(&l, &levels)),
+            other => panic!("{other:?}"),
+        }
+        match QueryOutput::derive(QueryKind::Reachable { target: 1 }, &levels) {
+            QueryOutput::Reachable(true) => {}
+            other => panic!("{other:?}"),
+        }
+        match QueryOutput::derive(QueryKind::Reachable { target: 2 }, &levels) {
+            QueryOutput::Reachable(false) => {}
+            other => panic!("{other:?}"),
+        }
+        // Out-of-range targets are unreachable, not errors.
+        match QueryOutput::derive(QueryKind::Reachable { target: 99 }, &levels) {
+            QueryOutput::Reachable(false) => {}
+            other => panic!("{other:?}"),
+        }
+        match QueryOutput::derive(QueryKind::Distance { target: 3 }, &levels) {
+            QueryOutput::Distance(Some(2)) => {}
+            other => panic!("{other:?}"),
+        }
+        match QueryOutput::derive(QueryKind::Distance { target: 2 }, &levels) {
+            QueryOutput::Distance(None) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

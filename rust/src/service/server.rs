@@ -1,0 +1,726 @@
+//! The two-tier query server: bounded admission, per-tier workers,
+//! batch coalescing, and the epoch-keyed level cache.
+
+use super::cache::{CacheKey, LevelCache};
+use super::catalog::GraphCatalog;
+use super::error::ServiceError;
+use super::query::{Policy, Query, QueryOutput, QueryResponse, Tier};
+use crate::bfs::batch::BatchDriver;
+use crate::exec::{build_engine, BfsEngine};
+use crate::graph::VertexId;
+use crate::sim::config::SimConfig;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Service tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Simulator/partitioning config every engine is bound with.
+    pub sim: SimConfig,
+    /// Fast-tier queue capacity (admission bound, not a batch size).
+    pub fast_queue: usize,
+    /// Accurate-tier queue capacity. Deliberately small: cycle
+    /// simulations are minutes-long, and a deep queue of them is load
+    /// the service should shed, not accept.
+    pub accurate_queue: usize,
+    /// Level-cache capacity in entries (0 disables caching).
+    pub cache_entries: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            // A modest 4-PC/8-PE analog keeps the accurate tier's
+            // cycle simulations tractable; `serve --pcs/--pes`
+            // overrides it.
+            sim: SimConfig::u280(4, 8),
+            fast_queue: 256,
+            accurate_queue: 8,
+            cache_entries: 1024,
+        }
+    }
+}
+
+/// Counters the service keeps while running (snapshot via
+/// [`BfsService::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Queries admitted past the queue bound.
+    pub submitted: u64,
+    /// Queries answered successfully.
+    pub completed: u64,
+    /// Queries refused at admission ([`ServiceError::Overloaded`]).
+    pub rejected: u64,
+    /// Queries answered from the level cache.
+    pub cache_hits: u64,
+    /// Coalesced fast-tier batches executed.
+    pub batches: u64,
+    /// Distinct roots computed across those batches.
+    pub batched_roots: u64,
+    /// Queries answered with an error.
+    pub errors: u64,
+}
+
+#[derive(Default)]
+struct AtomicStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    cache_hits: AtomicU64,
+    batches: AtomicU64,
+    batched_roots: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_roots: self.batched_roots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+type Reply = mpsc::Sender<Result<QueryResponse, ServiceError>>;
+
+struct Job {
+    query: Query,
+    reply: Reply,
+}
+
+/// Bounded MPSC queue for one tier: `push` refuses (typed) when full,
+/// `pop_all` blocks until work or shutdown and then drains everything —
+/// the drain is what the fast tier coalesces over.
+struct TierQueue {
+    tier: Tier,
+    capacity: usize,
+    state: Mutex<(VecDeque<Job>, bool)>,
+    ready: Condvar,
+}
+
+impl TierQueue {
+    fn new(tier: Tier, capacity: usize) -> Self {
+        Self {
+            tier,
+            capacity,
+            state: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) -> Result<(), ServiceError> {
+        let mut state = self.state.lock().expect("queue lock poisoned");
+        if state.1 {
+            return Err(ServiceError::ShutDown);
+        }
+        if state.0.len() >= self.capacity {
+            return Err(ServiceError::Overloaded {
+                tier: self.tier,
+                capacity: self.capacity,
+            });
+        }
+        state.0.push_back(job);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until jobs exist, then take all of them. Pending jobs are
+    /// drained even after `close`; `None` means closed *and* empty.
+    fn pop_all(&self) -> Option<Vec<Job>> {
+        let mut state = self.state.lock().expect("queue lock poisoned");
+        loop {
+            if !state.0.is_empty() {
+                return Some(state.0.drain(..).collect());
+            }
+            if state.1 {
+                return None;
+            }
+            state = self.ready.wait(state).expect("queue lock poisoned");
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().expect("queue lock poisoned").1 = true;
+        self.ready.notify_all();
+    }
+}
+
+/// Everything a worker thread needs, cheaply cloneable.
+#[derive(Clone)]
+struct WorkerCtx {
+    catalog: Arc<GraphCatalog>,
+    cache: Arc<LevelCache>,
+    stats: Arc<AtomicStats>,
+    sim: SimConfig,
+}
+
+/// Pending-result handle returned by [`BfsService::submit`].
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<QueryResponse, ServiceError>>,
+}
+
+impl Ticket {
+    /// Block until the query completes (or the service shuts down).
+    pub fn wait(self) -> Result<QueryResponse, ServiceError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServiceError::ShutDown),
+        }
+    }
+}
+
+/// The long-lived BFS query service. Construction spawns one worker
+/// thread per tier; drop closes the queues, drains what was already
+/// admitted, and joins the workers.
+pub struct BfsService {
+    catalog: Arc<GraphCatalog>,
+    cache: Arc<LevelCache>,
+    stats: Arc<AtomicStats>,
+    fast: Arc<TierQueue>,
+    accurate: Arc<TierQueue>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl BfsService {
+    /// Start the service over a (possibly shared) catalog.
+    pub fn start(catalog: Arc<GraphCatalog>, cfg: ServiceConfig) -> Self {
+        let cache = Arc::new(LevelCache::new(cfg.cache_entries));
+        let stats = Arc::new(AtomicStats::default());
+        let fast = Arc::new(TierQueue::new(Tier::Fast, cfg.fast_queue));
+        let accurate = Arc::new(TierQueue::new(Tier::Accurate, cfg.accurate_queue));
+        let ctx = WorkerCtx {
+            catalog: Arc::clone(&catalog),
+            cache: Arc::clone(&cache),
+            stats: Arc::clone(&stats),
+            sim: cfg.sim,
+        };
+        let workers = vec![
+            spawn_worker("bfs-service-fast", ctx.clone(), Arc::clone(&fast), true),
+            spawn_worker(
+                "bfs-service-accurate",
+                ctx,
+                Arc::clone(&accurate),
+                false,
+            ),
+        ];
+        Self {
+            catalog,
+            cache,
+            stats,
+            fast,
+            accurate,
+            workers,
+        }
+    }
+
+    /// The catalog queries resolve against (shared — inserts and swaps
+    /// take effect for every query admitted after them).
+    pub fn catalog(&self) -> &Arc<GraphCatalog> {
+        &self.catalog
+    }
+
+    /// Admit a query, returning a [`Ticket`] for its result. Fails
+    /// *synchronously* with [`ServiceError::Overloaded`] when the
+    /// tier's queue is full.
+    pub fn submit(&self, query: Query) -> Result<Ticket, ServiceError> {
+        let (tx, rx) = mpsc::channel();
+        let queue = match query.tier {
+            Tier::Fast => &self.fast,
+            Tier::Accurate => &self.accurate,
+        };
+        match queue.push(Job { query, reply: tx }) {
+            Ok(()) => {
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket { rx })
+            }
+            Err(e) => {
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn query(&self, query: Query) -> Result<QueryResponse, ServiceError> {
+        self.submit(query)?.wait()
+    }
+
+    /// Snapshot the service counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.stats.snapshot()
+    }
+
+    /// Number of level arrays currently cached.
+    pub fn cached_entries(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl Drop for BfsService {
+    fn drop(&mut self) {
+        self.fast.close();
+        self.accurate.close();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn spawn_worker(
+    name: &str,
+    ctx: WorkerCtx,
+    queue: Arc<TierQueue>,
+    coalesce: bool,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            while let Some(jobs) = queue.pop_all() {
+                if coalesce {
+                    serve_fast(&ctx, jobs);
+                } else {
+                    for job in jobs {
+                        serve_accurate(&ctx, job);
+                    }
+                }
+            }
+        })
+        .expect("spawn service worker")
+}
+
+fn finish(ctx: &WorkerCtx, job: Job, response: QueryResponse) {
+    ctx.stats.completed.fetch_add(1, Ordering::Relaxed);
+    // A caller that dropped its ticket is not an error.
+    let _ = job.reply.send(Ok(response));
+}
+
+fn fail(ctx: &WorkerCtx, job: Job, error: ServiceError) {
+    ctx.stats.errors.fetch_add(1, Ordering::Relaxed);
+    let _ = job.reply.send(Err(error));
+}
+
+/// Fast tier: group the drained queue by `(graph, policy)` and run each
+/// group's cache-missing roots as ONE [`BatchDriver`] batch.
+fn serve_fast(ctx: &WorkerCtx, jobs: Vec<Job>) {
+    let mut groups: HashMap<(String, Policy), Vec<Job>> = HashMap::new();
+    for job in jobs {
+        groups
+            .entry((job.query.graph.clone(), job.query.policy))
+            .or_default()
+            .push(job);
+    }
+    for ((name, policy), group) in groups {
+        serve_fast_group(ctx, &name, policy, group);
+    }
+}
+
+fn serve_fast_group(ctx: &WorkerCtx, name: &str, policy: Policy, jobs: Vec<Job>) {
+    let Some(resident) = ctx.catalog.get(name) else {
+        for job in jobs {
+            fail(ctx, job, ServiceError::UnknownGraph { name: name.into() });
+        }
+        return;
+    };
+    let n = resident.graph.num_vertices();
+    let mut misses: Vec<Job> = Vec::new();
+    let mut roots: Vec<VertexId> = Vec::new();
+    for job in jobs {
+        let root = job.query.root;
+        if root as usize >= n {
+            fail(ctx, job, ServiceError::InvalidRoot { root, vertices: n });
+            continue;
+        }
+        let key = CacheKey {
+            graph: name.into(),
+            epoch: resident.epoch,
+            root,
+        };
+        if let Some(levels) = ctx.cache.get(&key) {
+            ctx.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let response = QueryResponse {
+                output: QueryOutput::derive(job.query.kind, &levels),
+                epoch: resident.epoch,
+                cache_hit: true,
+                batched_roots: 0,
+                tier: Tier::Fast,
+            };
+            finish(ctx, job, response);
+        } else {
+            if !roots.contains(&root) {
+                roots.push(root);
+            }
+            misses.push(job);
+        }
+    }
+    if misses.is_empty() {
+        return;
+    }
+    // Concurrent queries for the same (graph, policy) become one
+    // multi-root batch: the driver shards the distinct roots over its
+    // rayon pool, and every waiter is answered from the shared result.
+    let batch = BatchDriver::new(Arc::clone(&resident.graph), ctx.sim.part).run_batch(
+        &roots,
+        &ctx.sim,
+        || policy.build(),
+    );
+    ctx.stats.batches.fetch_add(1, Ordering::Relaxed);
+    ctx.stats
+        .batched_roots
+        .fetch_add(roots.len() as u64, Ordering::Relaxed);
+    let mut by_root: HashMap<VertexId, Arc<Vec<u32>>> = HashMap::new();
+    for (run, &root) in batch.runs.into_iter().zip(&roots) {
+        let levels = Arc::new(run.levels);
+        ctx.cache.insert(
+            CacheKey {
+                graph: name.into(),
+                epoch: resident.epoch,
+                root,
+            },
+            Arc::clone(&levels),
+        );
+        by_root.insert(root, levels);
+    }
+    for job in misses {
+        let levels = &by_root[&job.query.root];
+        let response = QueryResponse {
+            output: QueryOutput::derive(job.query.kind, levels),
+            epoch: resident.epoch,
+            cache_hit: false,
+            batched_roots: roots.len(),
+            tier: Tier::Fast,
+        };
+        finish(ctx, job, response);
+    }
+}
+
+/// Accurate tier: one cycle-simulated search at a time, on its own
+/// worker thread so its runtime never blocks fast-tier admission or
+/// execution.
+fn serve_accurate(ctx: &WorkerCtx, job: Job) {
+    let Some(resident) = ctx.catalog.get(&job.query.graph) else {
+        let name = job.query.graph.clone();
+        fail(ctx, job, ServiceError::UnknownGraph { name });
+        return;
+    };
+    let n = resident.graph.num_vertices();
+    let root = job.query.root;
+    if root as usize >= n {
+        fail(ctx, job, ServiceError::InvalidRoot { root, vertices: n });
+        return;
+    }
+    let key = CacheKey {
+        graph: job.query.graph.clone(),
+        epoch: resident.epoch,
+        root,
+    };
+    // Levels are engine-invariant (the equivalence property), so a
+    // fast-tier entry legitimately serves an accurate query — the
+    // caller asked for a BFS tree, not for the simulator's wall time.
+    if let Some(levels) = ctx.cache.get(&key) {
+        ctx.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        let response = QueryResponse {
+            output: QueryOutput::derive(job.query.kind, &levels),
+            epoch: resident.epoch,
+            cache_hit: true,
+            batched_roots: 0,
+            tier: Tier::Accurate,
+        };
+        finish(ctx, job, response);
+        return;
+    }
+    let mut engine = match build_engine("cycle", &resident.graph, &ctx.sim) {
+        Ok(engine) => engine,
+        Err(e) => {
+            fail(ctx, job, ServiceError::Engine(e));
+            return;
+        }
+    };
+    let mut policy = job.query.policy.build();
+    match engine.run(root, policy.as_mut()) {
+        Ok(run) => {
+            let levels = Arc::new(run.levels);
+            ctx.cache.insert(key, Arc::clone(&levels));
+            let response = QueryResponse {
+                output: QueryOutput::derive(job.query.kind, &levels),
+                epoch: resident.epoch,
+                cache_hit: false,
+                batched_roots: 0,
+                tier: Tier::Accurate,
+            };
+            finish(ctx, job, response);
+        }
+        Err(e) => {
+            let message = e.to_string();
+            fail(ctx, job, ServiceError::Failed { message });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::service::QueryKind;
+
+    fn small_service(cache_entries: usize) -> BfsService {
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("rmat", generators::rmat_graph500(9, 8, 5));
+        BfsService::start(
+            catalog,
+            ServiceConfig {
+                sim: SimConfig::u280(2, 4),
+                cache_entries,
+                ..ServiceConfig::default()
+            },
+        )
+    }
+
+    fn levels_of(response: &QueryResponse) -> Arc<Vec<u32>> {
+        match &response.output {
+            QueryOutput::Levels(l) => Arc::clone(l),
+            other => panic!("expected levels, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fast_tier_matches_reference_and_caches() {
+        let service = small_service(64);
+        let g = service.catalog().get("rmat").unwrap().graph;
+        let root = reference::sample_roots(&g, 1, 5)[0];
+        let truth = reference::bfs(&g, root);
+
+        let first = service.query(Query::levels("rmat", root)).unwrap();
+        assert!(!first.cache_hit);
+        assert_eq!(*levels_of(&first), truth.levels);
+
+        // Second query: served byte-identically from the cache — the
+        // very same allocation.
+        let second = service.query(Query::levels("rmat", root)).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(second.batched_roots, 0);
+        assert!(Arc::ptr_eq(&levels_of(&first), &levels_of(&second)));
+
+        // Derived kinds answer from the same tree.
+        let target = truth
+            .levels
+            .iter()
+            .position(|&l| l != crate::bfs::INF && l > 0)
+            .unwrap() as VertexId;
+        match service
+            .query(Query::distance("rmat", root, target))
+            .unwrap()
+            .output
+        {
+            QueryOutput::Distance(Some(d)) => assert_eq!(d, truth.levels[target as usize]),
+            other => panic!("{other:?}"),
+        }
+        match service
+            .query(Query::reachable("rmat", root, target))
+            .unwrap()
+            .output
+        {
+            QueryOutput::Reachable(true) => {}
+            other => panic!("{other:?}"),
+        }
+
+        let stats = service.stats();
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.cache_hits, 3);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn coalescing_shares_one_batch_across_waiters() {
+        // Drive the group handler directly: deterministic coalescing
+        // without racing the worker's drain timing.
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("g", generators::rmat_graph500(9, 8, 7));
+        let resident = catalog.get("g").unwrap();
+        let ctx = WorkerCtx {
+            catalog,
+            cache: Arc::new(LevelCache::new(64)),
+            stats: Arc::new(AtomicStats::default()),
+            sim: SimConfig::u280(2, 4),
+        };
+        let roots = reference::sample_roots(&resident.graph, 3, 7);
+        // Five concurrent waiters over three distinct roots (one
+        // duplicated) — plus one out-of-range root rejected inline.
+        let mut queries: Vec<Query> = roots
+            .iter()
+            .map(|&r| Query::levels("g", r))
+            .collect();
+        queries.push(Query::levels("g", roots[0]));
+        queries.push(Query::reachable("g", roots[1], roots[0]));
+        queries.push(Query::levels("g", u32::MAX));
+        let mut rxs = Vec::new();
+        let jobs: Vec<Job> = queries
+            .into_iter()
+            .map(|query| {
+                let (tx, rx) = mpsc::channel();
+                rxs.push((query.clone(), rx));
+                Job { query, reply: tx }
+            })
+            .collect();
+        serve_fast(&ctx, jobs);
+        for (query, rx) in rxs {
+            let result = rx.recv().unwrap();
+            if query.root == u32::MAX {
+                assert!(matches!(result, Err(ServiceError::InvalidRoot { .. })));
+                continue;
+            }
+            let response = result.unwrap();
+            assert!(!response.cache_hit);
+            // Every waiter sees the SAME coalesced batch of 3 roots.
+            assert_eq!(response.batched_roots, 3);
+            if let QueryOutput::Levels(levels) = &response.output {
+                let truth = reference::bfs(&resident.graph, query.root);
+                assert_eq!(**levels, truth.levels);
+            }
+        }
+        let stats = ctx.stats.snapshot();
+        assert_eq!(stats.batches, 1, "one batch served all waiters");
+        assert_eq!(stats.batched_roots, 3);
+        assert_eq!(ctx.cache.len(), 3);
+    }
+
+    #[test]
+    fn swap_changes_epoch_and_never_serves_stale_levels() {
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("g", generators::chain(16));
+        let service = BfsService::start(
+            Arc::clone(&catalog),
+            ServiceConfig {
+                sim: SimConfig::u280(1, 2),
+                ..ServiceConfig::default()
+            },
+        );
+        let before = service.query(Query::levels("g", 0)).unwrap();
+        let chain_truth = reference::bfs(&catalog.get("g").unwrap().graph, 0);
+        assert_eq!(*levels_of(&before), chain_truth.levels);
+
+        // Swap the name to a structurally different graph.
+        catalog.insert("g", generators::star(16));
+        let after = service.query(Query::levels("g", 0)).unwrap();
+        assert!(after.epoch > before.epoch, "swap must bump the epoch");
+        assert!(!after.cache_hit, "stale-epoch entries must not match");
+        let star_truth = reference::bfs(&catalog.get("g").unwrap().graph, 0);
+        assert_eq!(*levels_of(&after), star_truth.levels);
+        assert_ne!(*levels_of(&after), *levels_of(&before));
+    }
+
+    #[test]
+    fn accurate_tier_is_byte_identical_to_fast() {
+        // Cache disabled so both tiers actually compute.
+        let service = small_service(0);
+        let g = service.catalog().get("rmat").unwrap().graph;
+        let root = reference::sample_roots(&g, 1, 9)[0];
+        let fast = service.query(Query::levels("rmat", root)).unwrap();
+        let accurate = service
+            .query(Query::levels("rmat", root).with_tier(Tier::Accurate))
+            .unwrap();
+        assert!(!accurate.cache_hit);
+        assert_eq!(accurate.tier, Tier::Accurate);
+        assert_eq!(*levels_of(&fast), *levels_of(&accurate));
+        assert_eq!(*levels_of(&fast), reference::bfs(&g, root).levels);
+    }
+
+    #[test]
+    fn admission_errors_are_typed() {
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("g", generators::chain(8));
+        let service = BfsService::start(
+            catalog,
+            ServiceConfig {
+                sim: SimConfig::u280(1, 1),
+                fast_queue: 0,
+                ..ServiceConfig::default()
+            },
+        );
+        // Full (zero-capacity) fast queue refuses synchronously.
+        match service.submit(Query::levels("g", 0)) {
+            Err(ServiceError::Overloaded { tier, capacity }) => {
+                assert_eq!(tier, Tier::Fast);
+                assert_eq!(capacity, 0);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(service.stats().rejected, 1);
+        // The accurate queue is independent: same query admits there.
+        let response = service
+            .query(Query::levels("g", 0).with_tier(Tier::Accurate))
+            .unwrap();
+        assert_eq!(response.tier, Tier::Accurate);
+
+        // Unknown graphs and bad roots come back through the ticket.
+        match service
+            .query(Query::levels("nope", 0).with_tier(Tier::Accurate))
+            .unwrap_err()
+        {
+            ServiceError::UnknownGraph { name } => assert_eq!(name, "nope"),
+            other => panic!("{other:?}"),
+        }
+        match service
+            .query(Query::levels("g", 999).with_tier(Tier::Accurate))
+            .unwrap_err()
+        {
+            ServiceError::InvalidRoot { root, vertices } => {
+                assert_eq!(root, 999);
+                assert_eq!(vertices, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn slow_accurate_queries_do_not_block_fast_traffic() {
+        // Structural starvation test: park a cycle-sim query on the
+        // accurate worker, then push fast queries through to
+        // completion while it runs.
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("big", generators::rmat_graph500(11, 8, 3));
+        catalog.insert("small", generators::rmat_graph500(8, 4, 3));
+        let service = BfsService::start(
+            catalog,
+            ServiceConfig {
+                sim: SimConfig::u280(2, 4),
+                ..ServiceConfig::default()
+            },
+        );
+        let g = service.catalog().get("big").unwrap().graph;
+        let slow_root = reference::sample_roots(&g, 1, 3)[0];
+        let slow = service
+            .submit(Query::levels("big", slow_root).with_tier(Tier::Accurate))
+            .unwrap();
+        let small = service.catalog().get("small").unwrap().graph;
+        for &root in &reference::sample_roots(&small, 6, 3) {
+            let response = service.query(Query::levels("small", root)).unwrap();
+            assert_eq!(*levels_of(&response), reference::bfs(&small, root).levels);
+        }
+        let slow_response = slow.wait().unwrap();
+        assert_eq!(*levels_of(&slow_response), reference::bfs(&g, slow_root).levels);
+        let stats = service.stats();
+        assert_eq!(stats.completed, 7);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_work() {
+        let service = small_service(16);
+        let g = service.catalog().get("rmat").unwrap().graph;
+        let root = reference::sample_roots(&g, 1, 1)[0];
+        let ticket = service.submit(Query::levels("rmat", root)).unwrap();
+        drop(service); // close + join: admitted work still completes
+        let response = ticket.wait().unwrap();
+        assert_eq!(*levels_of(&response), reference::bfs(&g, root).levels);
+    }
+}

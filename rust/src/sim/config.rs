@@ -131,6 +131,15 @@ pub struct SimConfig {
     /// Chunked pull-mode early exit (ablation; the paper's reader
     /// streams whole lists — see [`crate::bfs::bitmap::TrafficConfig`]).
     pub pull_early_exit: bool,
+    /// Word-parallel host pull datapath (PR-6 AND-scan pull). Mirrors
+    /// [`TrafficConfig::pull_word_parallel`](crate::bfs::bitmap::TrafficConfig);
+    /// `false` falls back to the scalar per-vertex pull oracle.
+    pub pull_word_parallel: bool,
+    /// Tiled dense-push datapath: `Some(bits)` buckets dense-frontier
+    /// pushes into `2^bits`-vertex destination tiles
+    /// ([`TrafficConfig::push_tile_bits`](crate::bfs::bitmap::TrafficConfig));
+    /// `None` pushes straight through.
+    pub push_tile_bits: Option<u32>,
 }
 
 impl SimConfig {
@@ -153,6 +162,8 @@ impl SimConfig {
             iter_sync_cycles: 32,
             max_cycles_per_iter: 500_000_000,
             pull_early_exit: false,
+            pull_word_parallel: true,
+            push_tile_bits: Some(crate::bfs::bitmap::DEFAULT_PUSH_TILE_BITS),
         }
     }
 
@@ -217,6 +228,19 @@ impl SimConfig {
                 )?)
             }
         }
+    }
+
+    /// The full host-datapath [`TrafficConfig`](crate::bfs::bitmap::TrafficConfig)
+    /// this config implies — every knob, not just `pull_early_exit`.
+    /// The engine factory and the throughput engine both build their
+    /// bitmap walkers from this, so a `SimConfig` knob can never be
+    /// silently dropped on the way into an engine again.
+    pub fn traffic_config(&self) -> crate::bfs::bitmap::TrafficConfig {
+        let mut tc = crate::bfs::bitmap::TrafficConfig::for_partitioning(self.part)
+            .with_pull_word_parallel(self.pull_word_parallel)
+            .with_push_tiling(self.push_tile_bits);
+        tc.pull_early_exit = self.pull_early_exit;
+        tc
     }
 
     /// AXI data width per Eq 1.
@@ -294,6 +318,28 @@ mod tests {
         let ml = DispatcherKind::MultiLayer(vec![4, 4]).build_fabric(16, 2, 1);
         assert_eq!(ml.hops(), 2);
         assert_eq!(ml.capacity(), 2 * 16 * 2);
+    }
+
+    #[test]
+    fn traffic_config_threads_every_host_datapath_knob() {
+        // Regression: the factory used to copy only `pull_early_exit`
+        // into the bitmap TrafficConfig, silently dropping the PR-6
+        // word-parallel-pull and push-tiling knobs.
+        let mut cfg = SimConfig::u280(4, 8);
+        cfg.pull_early_exit = true;
+        cfg.pull_word_parallel = false;
+        cfg.push_tile_bits = Some(12);
+        let tc = cfg.traffic_config();
+        assert!(tc.pull_early_exit);
+        assert!(!tc.pull_word_parallel);
+        assert_eq!(tc.push_tile_bits, Some(12));
+        assert_eq!(tc.dw_bytes, cfg.dw_bytes());
+        // Defaults agree with TrafficConfig::for_partitioning.
+        let def = SimConfig::u280(4, 8).traffic_config();
+        let base = crate::bfs::bitmap::TrafficConfig::for_partitioning(cfg.part);
+        assert_eq!(def.pull_early_exit, base.pull_early_exit);
+        assert_eq!(def.pull_word_parallel, base.pull_word_parallel);
+        assert_eq!(def.push_tile_bits, base.push_tile_bits);
     }
 
     #[test]

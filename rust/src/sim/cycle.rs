@@ -79,8 +79,8 @@ pub struct CycleResult {
 }
 
 /// The cycle-stepped simulator.
-pub struct CycleSim<'g> {
-    graph: &'g Graph,
+pub struct CycleSim {
+    graph: std::sync::Arc<Graph>,
     cfg: SimConfig,
     map: AddressMap,
 }
@@ -90,22 +90,24 @@ pub struct CycleSim<'g> {
 /// split across the pool.
 const SCAN_CHUNK_WORDS: usize = 4096;
 
-impl<'g> CycleSim<'g> {
+impl CycleSim {
     /// New simulator for a graph + config. The HBM address map (which
     /// PC serves each PG's shard) is fixed here; an unpartitioned
     /// placement that does not fit the configured PCs panics — use
-    /// [`CycleSim::try_new`] (what [`crate::exec::make_engine`] goes
+    /// [`CycleSim::try_new`] (what
+    /// [`EngineSpec::bind`](crate::exec::EngineSpec::bind) goes
     /// through) to propagate the typed
     /// [`HbmError`](crate::hbm::HbmError) instead.
-    pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
+    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Self {
         Self::try_new(graph, cfg).expect("graph does not fit the configured HBM PCs")
     }
 
     /// Fallible constructor: surfaces the address map's
     /// [`HbmError::CapacityExceeded`](crate::hbm::HbmError) when a
     /// packed (unpartitioned) placement overflows the in-service PCs.
-    pub fn try_new(graph: &'g Graph, cfg: SimConfig) -> Result<Self> {
-        let map = cfg.address_map(graph)?;
+    pub fn try_new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Result<Self> {
+        let graph = graph.into();
+        let map = cfg.address_map(&graph)?;
         Ok(Self { graph, cfg, map })
     }
 
@@ -153,7 +155,7 @@ impl<'g> CycleSim<'g> {
     ) -> Vec<Vec<(VertexId, usize)>> {
         let part = self.cfg.part;
         let npgs = part.num_pgs;
-        let graph = self.graph;
+        let graph = self.graph.as_ref();
         let early_exit = self.cfg.pull_early_exit;
         if mode == Mode::Push {
             if let Some(verts) = state.current.sparse_verts() {
@@ -254,16 +256,9 @@ impl<'g> CycleSim<'g> {
     }
 }
 
-impl<'g> BfsEngine<'g> for CycleSim<'g> {
-    fn prepare(&mut self, graph: &'g Graph, part: Partitioning) -> Result<()> {
-        self.graph = graph;
-        self.cfg.part = part;
-        self.map = self.cfg.address_map(graph)?;
-        Ok(())
-    }
-
-    fn graph(&self) -> &'g Graph {
-        self.graph
+impl BfsEngine for CycleSim {
+    fn graph(&self) -> &Graph {
+        &self.graph
     }
 
     fn partitioning(&self) -> Partitioning {
@@ -280,7 +275,8 @@ impl<'g> BfsEngine<'g> for CycleSim<'g> {
         let dw = self.cfg.dw_bytes();
         let sv = self.cfg.sv_bytes;
         let verts_per_beat = (dw / sv).max(1) as usize;
-        let graph = self.graph;
+        let graph = std::sync::Arc::clone(&self.graph);
+        let graph = graph.as_ref();
 
         // ---- Build this iteration's fetch lists per PG (parallel). ----
         let fetches = self.build_fetch_lists(state, mode, verts_per_beat);
@@ -509,9 +505,9 @@ mod tests {
 
     #[test]
     fn cycle_sim_levels_match_reference_push() {
-        let g = generators::rmat_graph500(8, 8, 21);
+        let g = std::sync::Arc::new(generators::rmat_graph500(8, 8, 21));
         let root = reference::sample_roots(&g, 1, 21)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+        let res = CycleSim::new(g.clone(), SimConfig::u280(4, 8))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         let r = reference::bfs(&g, root);
@@ -520,9 +516,9 @@ mod tests {
 
     #[test]
     fn cycle_sim_levels_match_reference_hybrid() {
-        let g = generators::rmat_graph500(9, 8, 22);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 22));
         let root = reference::sample_roots(&g, 1, 22)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+        let res = CycleSim::new(g.clone(), SimConfig::u280(4, 8))
             .run(root, &mut Hybrid::default())
             .unwrap();
         let r = reference::bfs(&g, root);
@@ -532,12 +528,12 @@ mod tests {
 
     #[test]
     fn more_pcs_fewer_cycles() {
-        let g = generators::rmat_graph500(9, 16, 23);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 16, 23));
         let root = reference::sample_roots(&g, 1, 23)[0];
-        let slow = CycleSim::new(&g, SimConfig::u280(1, 2))
+        let slow = CycleSim::new(g.clone(), SimConfig::u280(1, 2))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
-        let fast = CycleSim::new(&g, SimConfig::u280(8, 16))
+        let fast = CycleSim::new(g.clone(), SimConfig::u280(8, 16))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         // Fixed per-iteration costs (latency fill, sync) don't scale, so
@@ -555,13 +551,13 @@ mod tests {
         // Same PG/PE topology, but all eight PGs share ONE PC: the
         // shared beat-per-cycle output must cost cycles, and the
         // functional result must not change at all.
-        let g = generators::rmat_graph500(9, 8, 31);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 31));
         let root = reference::sample_roots(&g, 1, 31)[0];
         let truth = reference::bfs(&g, root);
-        let free = CycleSim::new(&g, SimConfig::u280(8, 8))
+        let free = CycleSim::new(g.clone(), SimConfig::u280(8, 8))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
-        let contended = CycleSim::new(&g, SimConfig::u280(8, 8).with_hbm_pcs(1))
+        let contended = CycleSim::new(g.clone(), SimConfig::u280(8, 8).with_hbm_pcs(1))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         assert_eq!(free.levels, truth.levels);
@@ -582,9 +578,9 @@ mod tests {
 
     #[test]
     fn pc_stats_are_measured_and_sane() {
-        let g = generators::rmat_graph500(9, 8, 22);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 22));
         let root = reference::sample_roots(&g, 1, 22)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+        let res = CycleSim::new(g.clone(), SimConfig::u280(4, 8))
             .run(root, &mut Hybrid::default())
             .unwrap();
         assert_eq!(res.pc_stats.len(), 4);
@@ -601,9 +597,9 @@ mod tests {
         // Push-only: every out-neighbor of every reached vertex is
         // routed through the fabric exactly once, so delivered ==
         // Graph500 traversed edges; every delivery is one P2 check.
-        let g = generators::rmat_graph500(9, 8, 41);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 41));
         let root = reference::sample_roots(&g, 1, 41)[0];
-        let res = CycleSim::new(&g, SimConfig::u280(4, 8))
+        let res = CycleSim::new(g.clone(), SimConfig::u280(4, 8))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         assert_eq!(res.dispatcher.delivered, res.traversed_edges);
@@ -627,11 +623,11 @@ mod tests {
 
     #[test]
     fn tiny_cycle_budget_fails_typed_not_aborts() {
-        let g = generators::rmat_graph500(8, 8, 21);
+        let g = std::sync::Arc::new(generators::rmat_graph500(8, 8, 21));
         let root = reference::sample_roots(&g, 1, 21)[0];
         let mut cfg = SimConfig::u280(2, 4);
         cfg.max_cycles_per_iter = 3; // no iteration can drain this fast
-        let err = CycleSim::new(&g, cfg)
+        let err = CycleSim::new(g.clone(), cfg)
             .run(root, &mut Fixed(Mode::Push))
             .unwrap_err();
         match err.downcast_ref::<SimError>() {
@@ -645,14 +641,14 @@ mod tests {
         // Fig 11, cycle-accurate: packing every shard into PC0 funnels
         // all eight PGs' traffic through one queue plus the lateral
         // switch, and must cost real cycles.
-        let g = generators::rmat_graph500(9, 8, 17);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 17));
         let root = reference::sample_roots(&g, 1, 17)[0];
-        let part = CycleSim::new(&g, SimConfig::u280(8, 8))
+        let part = CycleSim::new(g.clone(), SimConfig::u280(8, 8))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         let mut base_cfg = SimConfig::u280(8, 8);
         base_cfg.placement = crate::sim::config::Placement::Unpartitioned;
-        let base = CycleSim::new(&g, base_cfg)
+        let base = CycleSim::new(g.clone(), base_cfg)
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         assert_eq!(part.levels, base.levels, "placement must not change results");
@@ -666,9 +662,9 @@ mod tests {
 
     #[test]
     fn sharded_fetch_lists_preserve_vertex_order() {
-        let g = generators::rmat_graph500(10, 8, 24);
+        let g = std::sync::Arc::new(generators::rmat_graph500(10, 8, 24));
         let cfg = SimConfig::u280(4, 8);
-        let sim = CycleSim::new(&g, cfg);
+        let sim = CycleSim::new(g.clone(), cfg);
         let mut state = SearchState::new(g.num_vertices());
         // Mark a spread of frontier vertices; a |V|-sized cap keeps the
         // frontier in sparse (FIFO) form.
@@ -698,13 +694,13 @@ mod tests {
     fn small_link_fifos_backpressure_but_stay_exact() {
         // Depth-2 link FIFOs force fabric stalls all the way into the
         // HBM stream; the search result must not move.
-        let g = generators::rmat_graph500(9, 16, 51);
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 16, 51));
         let root = reference::sample_roots(&g, 1, 51)[0];
         let truth = reference::bfs(&g, root);
-        let deep = CycleSim::new(&g, SimConfig::u280(2, 8))
+        let deep = CycleSim::new(g.clone(), SimConfig::u280(2, 8))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
-        let shallow = CycleSim::new(&g, SimConfig::u280(2, 8).with_xbar_fifo_depth(2))
+        let shallow = CycleSim::new(g.clone(), SimConfig::u280(2, 8).with_xbar_fifo_depth(2))
             .run(root, &mut Fixed(Mode::Push))
             .unwrap();
         assert_eq!(deep.levels, truth.levels);

@@ -182,8 +182,8 @@ mod tests {
     use crate::sched::Hybrid;
     use crate::sim::throughput::ThroughputSim;
 
-    fn workload() -> (crate::graph::Graph, BfsRun, SimConfig) {
-        let g = generators::rmat_graph500(12, 16, 4);
+    fn workload() -> (std::sync::Arc<crate::graph::Graph>, BfsRun, SimConfig) {
+        let g = std::sync::Arc::new(generators::rmat_graph500(12, 16, 4));
         let root = reference::sample_roots(&g, 1, 4)[0];
         let cfg = SimConfig::u280(8, 16);
         let run = run_bfs(&g, cfg.part, root, &mut Hybrid::default());

@@ -285,25 +285,25 @@ impl ThroughputSim {
 /// [`ThroughputSim::probe_iteration`]'s P1 pricing consumes — sparse
 /// iterations are charged O(frontier) pops, dense ones the full BRAM
 /// scan, mirroring the cycle simulator's floor.
-pub struct ThroughputEngine<'g> {
-    inner: crate::bfs::bitmap::BitmapEngine<'g>,
+pub struct ThroughputEngine {
+    inner: crate::bfs::bitmap::BitmapEngine,
     cfg: SimConfig,
     graph_name: String,
     graph_bytes: u64,
 }
 
-impl<'g> ThroughputEngine<'g> {
-    /// New engine over `graph` with the full simulator config (the
-    /// partitioning and the pull-early-exit knob come from `cfg`).
-    pub fn new(graph: &'g Graph, cfg: SimConfig) -> Self {
-        use crate::bfs::bitmap::{BitmapEngine, TrafficConfig};
-        let mut tc = TrafficConfig::for_partitioning(cfg.part);
-        tc.pull_early_exit = cfg.pull_early_exit;
+impl ThroughputEngine {
+    /// New engine over `graph` with the full simulator config. The
+    /// partitioning and *every* host-datapath knob come from `cfg` via
+    /// [`SimConfig::traffic_config`] — nothing is dropped on the way in.
+    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Self {
+        use crate::bfs::bitmap::BitmapEngine;
+        let graph = graph.into();
         Self {
-            inner: BitmapEngine::new(graph, cfg.part).with_config(tc),
             graph_name: graph.name.clone(),
             graph_bytes: graph.csr.footprint_bytes(cfg.sv_bytes as usize)
                 + graph.csc.footprint_bytes(cfg.sv_bytes as usize),
+            inner: BitmapEngine::new(graph, cfg.part).with_config(cfg.traffic_config()),
             cfg,
         }
     }
@@ -326,16 +326,8 @@ impl<'g> ThroughputEngine<'g> {
     }
 }
 
-impl<'g> BfsEngine<'g> for ThroughputEngine<'g> {
-    fn prepare(&mut self, graph: &'g Graph, part: crate::graph::Partitioning) -> crate::Result<()> {
-        self.cfg.part = part;
-        self.graph_name = graph.name.clone();
-        self.graph_bytes = graph.csr.footprint_bytes(self.cfg.sv_bytes as usize)
-            + graph.csc.footprint_bytes(self.cfg.sv_bytes as usize);
-        self.inner.prepare(graph, part)
-    }
-
-    fn graph(&self) -> &'g Graph {
+impl BfsEngine for ThroughputEngine {
+    fn graph(&self) -> &Graph {
         self.inner.graph()
     }
 
@@ -389,14 +381,15 @@ pub fn time_run(
     }
 }
 
-/// End-to-end helper: run the functional engine then time it.
+/// End-to-end helper: run the functional engine then time it. Clones
+/// only the `Arc` handle, never the graph.
 pub fn simulate_bfs(
-    graph: &crate::graph::Graph,
+    graph: &std::sync::Arc<Graph>,
     cfg: SimConfig,
     root: crate::graph::VertexId,
     policy: &mut dyn crate::sched::ModePolicy,
 ) -> (BfsRun, SimResult) {
-    ThroughputEngine::new(graph, cfg).run_timed(root, policy)
+    ThroughputEngine::new(std::sync::Arc::clone(graph), cfg).run_timed(root, policy)
 }
 
 #[cfg(test)]
@@ -408,7 +401,7 @@ mod tests {
     use crate::sim::config::SimConfig;
 
     fn run_on(cfg: SimConfig, scale: u32, degree: u64, seed: u64) -> SimResult {
-        let g = generators::rmat_graph500(scale, degree, seed);
+        let g = std::sync::Arc::new(generators::rmat_graph500(scale, degree, seed));
         let root = reference::sample_roots(&g, 1, seed)[0];
         let (_, res) = simulate_bfs(&g, cfg, root, &mut Hybrid::default());
         res

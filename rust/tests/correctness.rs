@@ -11,15 +11,16 @@ use scalabfs::sim::config::SimConfig;
 use scalabfs::sim::cycle::CycleSim;
 use scalabfs::util::prop;
 use scalabfs::util::rng::Xoshiro256;
+use std::sync::Arc;
 
-fn graphs() -> Vec<Graph> {
+fn graphs() -> Vec<Arc<Graph>> {
     vec![
-        generators::chain(64),
-        generators::star(65),
-        generators::complete(20),
-        generators::erdos_renyi(512, 4096, 1),
-        generators::rmat_graph500(10, 8, 2),
-        generators::rmat_graph500(11, 16, 3),
+        Arc::new(generators::chain(64)),
+        Arc::new(generators::star(65)),
+        Arc::new(generators::complete(20)),
+        Arc::new(generators::erdos_renyi(512, 4096, 1)),
+        Arc::new(generators::rmat_graph500(10, 8, 2)),
+        Arc::new(generators::rmat_graph500(11, 16, 3)),
     ]
 }
 
@@ -72,7 +73,7 @@ fn cycle_sim_matches_reference() {
                 &mut Fixed(Mode::Push) as &mut dyn ModePolicy,
                 &mut Hybrid::default(),
             ] {
-                let res = CycleSim::new(g, cfg.clone()).run(root, policy).unwrap();
+                let res = CycleSim::new(g.clone(), cfg.clone()).run(root, policy).unwrap();
                 assert_eq!(
                     res.levels, truth.levels,
                     "graph={} pcs={pcs} pes={pes}",
@@ -85,7 +86,7 @@ fn cycle_sim_matches_reference() {
 
 #[test]
 fn traversed_edges_equal_across_engines() {
-    let g = generators::rmat_graph500(10, 8, 9);
+    let g = Arc::new(generators::rmat_graph500(10, 8, 9));
     let root = reference::sample_roots(&g, 1, 9)[0];
     let part = Partitioning::new(8, 4);
     let a = run_bfs(&g, part, root, &mut Fixed(Mode::Push));
@@ -94,7 +95,9 @@ fn traversed_edges_equal_across_engines() {
     // GTEPS numerator is mode-independent (each edge once).
     assert_eq!(a.traversed_edges, b.traversed_edges);
     assert_eq!(a.traversed_edges, c.traversed_edges);
-    let cyc = CycleSim::new(&g, SimConfig::u280(4, 8)).run(root, &mut Hybrid::default()).unwrap();
+    let cyc = CycleSim::new(g.clone(), SimConfig::u280(4, 8))
+        .run(root, &mut Hybrid::default())
+        .unwrap();
     assert_eq!(cyc.traversed_edges, a.traversed_edges);
 }
 
@@ -103,7 +106,7 @@ fn property_random_graphs_random_policies() {
     prop::check("levels match reference on random graphs", |rng: &mut Xoshiro256| {
         let scale = 7 + (rng.next_below(3) as u32); // 128..512 vertices
         let degree = 2 + rng.next_below(12);
-        let g = generators::rmat_graph500(scale, degree, rng.next_u64());
+        let g = Arc::new(generators::rmat_graph500(scale, degree, rng.next_u64()));
         let roots = reference::sample_roots(&g, 1, rng.next_u64());
         if roots.is_empty() {
             return Ok(());
@@ -131,7 +134,7 @@ fn disconnected_and_degenerate_graphs() {
     // Isolated root: BFS of size 1.
     let mut b = scalabfs::graph::GraphBuilder::new(10);
     b.add_edge(1, 2);
-    let g = b.build("isolated-root");
+    let g = Arc::new(b.build("isolated-root"));
     let run = run_bfs(&g, Partitioning::new(2, 1), 0, &mut Hybrid::default());
     assert_eq!(run.reached, 1);
     assert_eq!(run.levels[0], 0);
@@ -140,7 +143,7 @@ fn disconnected_and_degenerate_graphs() {
     // Two components: only the root's is reached.
     let mut b = scalabfs::graph::GraphBuilder::new(6);
     b.extend([(0, 1), (1, 2), (3, 4), (4, 5)]);
-    let g = b.build("two-components");
+    let g = Arc::new(b.build("two-components"));
     let run = run_bfs(&g, Partitioning::new(4, 4), 0, &mut Hybrid::default());
     assert_eq!(run.reached, 3);
 }

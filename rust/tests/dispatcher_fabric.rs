@@ -5,7 +5,7 @@
 
 use scalabfs::bfs::reference;
 use scalabfs::coordinator::sweep::pe_scaling;
-use scalabfs::exec::make_engine;
+use scalabfs::exec::{build_engine, BfsEngine};
 use scalabfs::graph::generators;
 use scalabfs::sched::{Fixed, Hybrid};
 use scalabfs::sim::config::SimConfig;
@@ -19,7 +19,7 @@ use scalabfs::sim::SimError;
 /// along the way.
 #[test]
 fn pe_scaling_rises_to_a_break_point_then_declines() {
-    let g = generators::rmat_graph500(13, 16, 7);
+    let g = std::sync::Arc::new(generators::rmat_graph500(13, 16, 7));
     let curve = pe_scaling(&g, "cycle", 1, &[2, 8, 64], 7).unwrap();
     assert_eq!(curve.points.len(), 3);
     let gteps: Vec<f64> = curve.points.iter().map(|p| p.gteps).collect();
@@ -58,12 +58,14 @@ fn pe_scaling_rises_to_a_break_point_then_declines() {
 /// run-level high-water mark can never exceed Σ layer capacities.
 #[test]
 fn fabric_occupancy_bounded_by_fifo_capacities() {
-    let g = generators::rmat_graph500(10, 16, 19);
+    let g = std::sync::Arc::new(generators::rmat_graph500(10, 16, 19));
     let root = reference::sample_roots(&g, 1, 19)[0];
     let depth = 4usize;
     let cfg = SimConfig::u280(2, 8).with_xbar_fifo_depth(depth);
-    let mut engine = make_engine("cycle", &g, &cfg).unwrap();
-    let run = engine.run(root, &mut Fixed(scalabfs::bfs::Mode::Push)).unwrap();
+    let mut engine = build_engine("cycle", &g, &cfg).unwrap();
+    let run = engine
+        .run(root, &mut Fixed(scalabfs::bfs::Mode::Push))
+        .unwrap();
     // 8 PEs <= 32 ports: the paper default is a full crossbar — one
     // layer of 8 link FIFOs.
     let capacity = 8 * depth;
@@ -77,15 +79,15 @@ fn fabric_occupancy_bounded_by_fifo_capacities() {
 }
 
 /// A cycle budget too small to drain an iteration surfaces as the
-/// typed [`SimError::NonConvergence`] through `make_engine` → driver →
+/// typed [`SimError::NonConvergence`] through `build_engine` → driver →
 /// `run`, not as a panic/abort.
 #[test]
 fn non_convergence_is_a_typed_driver_error() {
-    let g = generators::rmat_graph500(9, 8, 3);
+    let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 3));
     let root = reference::sample_roots(&g, 1, 3)[0];
     let mut cfg = SimConfig::u280(2, 4);
     cfg.max_cycles_per_iter = 2;
-    let mut engine = make_engine("cycle", &g, &cfg).unwrap();
+    let mut engine = build_engine("cycle", &g, &cfg).unwrap();
     let err = engine.run(root, &mut Hybrid::default()).unwrap_err();
     match err.downcast_ref::<SimError>() {
         Some(SimError::NonConvergence { iteration, limit }) => {

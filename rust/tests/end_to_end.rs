@@ -67,7 +67,7 @@ fn mode_ordering_hybrid_ge_push_ge_pull() {
 
 #[test]
 fn multi_root_graph500_aggregation() {
-    let g = datasets::by_name("RMAT18-16", 8, 3).unwrap();
+    let g = std::sync::Arc::new(datasets::by_name("RMAT18-16", 8, 3).unwrap());
     let cfg = SimConfig::u280(16, 32);
     let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
     let sim = ThroughputSim::new(cfg.clone());
@@ -88,11 +88,11 @@ fn batched_multi_root_matches_loop_of_single_runs() {
     // The sharded BatchDriver is the production path for Graph500
     // batches; it must agree bit-exactly with one-at-a-time runs.
     use scalabfs::bfs::batch::BatchDriver;
-    let g = datasets::by_name("RMAT18-16", 16, 3).unwrap();
+    let g = std::sync::Arc::new(datasets::by_name("RMAT18-16", 16, 3).unwrap());
     let cfg = SimConfig::u280(16, 32);
     let roots = reference::sample_roots(&g, 8, 9);
-    let batch =
-        BatchDriver::new(&g, cfg.part).run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+    let batch = BatchDriver::new(g.clone(), cfg.part)
+        .run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
     assert_eq!(batch.runs.len(), roots.len());
     for (i, &root) in roots.iter().enumerate() {
         let single = run_bfs(&g, cfg.part, root, &mut Hybrid::default());
@@ -114,10 +114,12 @@ fn xla_path_composes_with_dataset_pipeline() {
         return;
     }
     // Tiny analog of a Table-I dataset through the XLA path.
-    let tiny = datasets::by_name("RMAT18-8", 1024, 11).unwrap();
-    let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+    use scalabfs::graph::Partitioning;
+    let tiny = std::sync::Arc::new(datasets::by_name("RMAT18-8", 1024, 11).unwrap());
+    let mut engine =
+        XlaBfsEngine::with_store(store, tiny.clone(), Partitioning::new(1, 1)).expect("engine");
     let root = reference::sample_roots(&tiny, 1, 11)[0];
-    let res = engine.run(&tiny, root).expect("xla");
+    let res = engine.run(root).expect("xla");
     let truth = reference::bfs(&tiny, root);
     assert_eq!(res.levels, truth.levels);
     assert!(res.iterations > 0);

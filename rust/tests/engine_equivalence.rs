@@ -8,8 +8,9 @@
 use scalabfs::bfs::batch::BatchDriver;
 use scalabfs::bfs::reference;
 use scalabfs::bfs::Mode;
-use scalabfs::exec::{drive, make_engine, BfsEngine, SearchState, ENGINE_NAMES};
+use scalabfs::exec::{build_engine, drive, BfsEngine, SearchState, ENGINE_NAMES};
 use scalabfs::graph::{generators, Graph};
+use std::sync::Arc;
 use scalabfs::sched::{Fixed, Hybrid, ModePolicy, ReprPolicy, WithRepr};
 use scalabfs::sim::config::SimConfig;
 use scalabfs::util::rng::Xoshiro256;
@@ -41,10 +42,10 @@ fn policies() -> Vec<Box<dyn ModePolicy>> {
     all
 }
 
-fn random_graph(rng: &mut Xoshiro256) -> Graph {
+fn random_graph(rng: &mut Xoshiro256) -> Arc<Graph> {
     let scale = 7 + rng.next_below(3) as u32; // 128..512 vertices
     let degree = 2 + rng.next_below(10);
-    generators::rmat_graph500(scale, degree, rng.next_u64())
+    Arc::new(generators::rmat_graph500(scale, degree, rng.next_u64()))
 }
 
 /// Every engine × mode policy × PC/PE config on random RMAT graphs.
@@ -60,7 +61,7 @@ fn all_engines_match_reference_across_random_graphs() {
             let cfg = SimConfig::u280(pcs, pes);
             for engine_name in ENGINE_NAMES {
                 for policy in policies().iter_mut() {
-                    let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+                    let mut engine = build_engine(engine_name, &g, &cfg).expect(engine_name);
                     let run = engine.run(root, policy.as_mut()).expect(engine_name);
                     assert_eq!(
                         run.levels,
@@ -92,13 +93,13 @@ fn all_engines_match_reference_across_random_graphs() {
 /// `reset_for_root` must leave no residue from the previous search.
 #[test]
 fn shared_state_reused_across_roots_and_engines_is_clean() {
-    let g = generators::rmat_graph500(9, 8, 42);
+    let g = Arc::new(generators::rmat_graph500(9, 8, 42));
     let cfg = SimConfig::u280(4, 8);
     let mut state = SearchState::new(g.num_vertices());
     for &root in &reference::sample_roots(&g, 4, 42) {
         let truth = reference::bfs(&g, root);
         for engine_name in ENGINE_NAMES {
-            let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+            let mut engine = build_engine(engine_name, &g, &cfg).expect(engine_name);
             let run =
                 drive(engine.as_mut(), &mut state, root, &mut Hybrid::default()).unwrap();
             assert_eq!(run.levels, truth.levels, "engine={engine_name} root={root}");
@@ -112,14 +113,14 @@ fn shared_state_reused_across_roots_and_engines_is_clean() {
 /// across searches can't leak bits, counters, or stale list entries.
 #[test]
 fn shared_state_survives_representation_round_trips() {
-    let g = generators::rmat_graph500(9, 8, 91);
+    let g = Arc::new(generators::rmat_graph500(9, 8, 91));
     let cfg = SimConfig::u280(2, 4);
     let mut state = SearchState::new(g.num_vertices());
     let roots = reference::sample_roots(&g, 6, 91);
     for (i, &root) in roots.iter().enumerate() {
         let truth = reference::bfs(&g, root);
         let repr = REPRS[i % REPRS.len()];
-        let mut engine = make_engine("bitmap", &g, &cfg).expect("bitmap");
+        let mut engine = build_engine("bitmap", &g, &cfg).expect("bitmap");
         let mut policy = WithRepr {
             inner: Hybrid::default(),
             repr,
@@ -134,10 +135,10 @@ fn shared_state_survives_representation_round_trips() {
 /// root, at 1 worker and at the ambient pool width.
 #[test]
 fn batch_driver_bit_exact_at_any_worker_count() {
-    let g = generators::rmat_graph500(10, 8, 7);
+    let g = Arc::new(generators::rmat_graph500(10, 8, 7));
     let cfg = SimConfig::u280(4, 8);
     let roots = reference::sample_roots(&g, 8, 7);
-    let driver = BatchDriver::new(&g, cfg.part);
+    let driver = BatchDriver::new(g.clone(), cfg.part);
     let wide = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
     let narrow = rayon::ThreadPoolBuilder::new()
         .num_threads(1)
@@ -162,9 +163,10 @@ fn engines_agree_on_degenerate_graphs() {
         generators::star(17),
         generators::complete(9),
     ] {
+        let g = Arc::new(g);
         let truth = reference::bfs(&g, 0);
         for engine_name in ENGINE_NAMES {
-            let mut engine = make_engine(engine_name, &g, &cfg).expect(engine_name);
+            let mut engine = build_engine(engine_name, &g, &cfg).expect(engine_name);
             let run = engine.run(0, &mut Hybrid::default()).expect(engine_name);
             assert_eq!(run.levels, truth.levels, "engine={engine_name} graph={}", g.name);
         }
@@ -180,7 +182,7 @@ fn engines_agree_on_degenerate_graphs() {
 #[test]
 fn cycle_engine_bit_identical_across_dispatcher_fabrics() {
     use scalabfs::sim::config::DispatcherKind;
-    let g = generators::rmat_graph500(9, 8, 77);
+    let g = Arc::new(generators::rmat_graph500(9, 8, 77));
     let root = reference::sample_roots(&g, 1, 77)[0];
     let truth = reference::bfs(&g, root);
     // 16-PE fabrics (4 PCs), then the paper's 64-PE three-layer config.
@@ -198,7 +200,7 @@ fn cycle_engine_bit_identical_across_dispatcher_fabrics() {
             let cfg = SimConfig::u280(pcs, pes)
                 .with_dispatcher(kind.clone())
                 .with_xbar_fifo_depth(depth);
-            let mut engine = make_engine("cycle", &g, &cfg).expect("cycle");
+            let mut engine = build_engine("cycle", &g, &cfg).expect("cycle");
             let run = engine
                 .run(root, &mut Hybrid::default())
                 .expect("cycle run");
@@ -269,7 +271,7 @@ fn host_datapaths_traffic_identical_to_scalar_oracle() {
             let n_policies = policies().len();
             for pi in 0..n_policies {
                 let run_with = |cfg: TrafficConfig| {
-                    let mut engine = BitmapEngine::new(&g, part).with_config(cfg);
+                    let mut engine = BitmapEngine::new(g.clone(), part).with_config(cfg);
                     engine.run(root, policies()[pi].as_mut())
                 };
                 let oracle = run_with(scalar_cfg);
@@ -296,26 +298,156 @@ fn host_datapaths_traffic_identical_to_scalar_oracle() {
     }
 }
 
+/// The service axis: queries answered through the live two-tier
+/// [`BfsService`](scalabfs::service::BfsService) — concurrently, from
+/// multiple client threads, across both tiers and all three mode
+/// policies — are bit-identical to `bfs::reference`. The service adds
+/// queueing, coalescing, and caching between the caller and the
+/// engines; none of that machinery may perturb a single level.
+#[test]
+fn service_concurrent_mixed_tiers_bit_identical_to_reference() {
+    use scalabfs::service::{
+        BfsService, GraphCatalog, Policy, Query, QueryOutput, ServiceConfig, Tier,
+    };
+    let g = Arc::new(generators::rmat_graph500(8, 8, 0xBF5));
+    let roots = reference::sample_roots(&g, 4, 0xBF5);
+    let truths: Vec<Vec<u32>> = roots.iter().map(|&r| reference::bfs(&g, r).levels).collect();
+    let catalog = Arc::new(GraphCatalog::new());
+    catalog.insert("g", Arc::clone(&g));
+    let service = BfsService::start(
+        catalog,
+        ServiceConfig {
+            sim: SimConfig::u280(2, 4),
+            ..ServiceConfig::default()
+        },
+    );
+    const POLICIES: [Policy; 3] = [Policy::Hybrid, Policy::Push, Policy::Pull];
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let (service, roots, truths) = (&service, &roots, &truths);
+            scope.spawn(move || {
+                for (i, &root) in roots.iter().enumerate() {
+                    let tier = if (t + i) % 2 == 0 { Tier::Fast } else { Tier::Accurate };
+                    let query = Query::levels("g", root)
+                        .with_tier(tier)
+                        .with_policy(POLICIES[(t + i) % POLICIES.len()]);
+                    let response = service.query(query).expect("service query");
+                    assert_eq!(response.tier, tier);
+                    match &response.output {
+                        QueryOutput::Levels(levels) => assert_eq!(
+                            **levels, truths[i],
+                            "thread={t} root={root} tier={tier:?} diverged"
+                        ),
+                        other => panic!("levels query answered with {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let stats = service.stats();
+    assert_eq!(stats.completed, 16, "4 threads x 4 roots all answered");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.rejected, 0);
+}
+
+/// Cache hits are byte-identical — the very same allocation — and the
+/// cache serves *across* tiers, because levels are engine-invariant.
+#[test]
+fn service_cache_hits_are_byte_identical_across_tiers() {
+    use scalabfs::service::{BfsService, GraphCatalog, Query, QueryOutput, ServiceConfig, Tier};
+    let g = Arc::new(generators::rmat_graph500(8, 8, 0xCAC4E));
+    let root = reference::sample_roots(&g, 1, 0xCAC4E)[0];
+    let truth = reference::bfs(&g, root);
+    let catalog = Arc::new(GraphCatalog::new());
+    catalog.insert("g", Arc::clone(&g));
+    let service = BfsService::start(
+        catalog,
+        ServiceConfig {
+            sim: SimConfig::u280(2, 4),
+            ..ServiceConfig::default()
+        },
+    );
+    let levels = |q: Query| -> (bool, Arc<Vec<u32>>) {
+        let response = service.query(q).expect("service query");
+        match response.output {
+            QueryOutput::Levels(levels) => (response.cache_hit, levels),
+            other => panic!("levels query answered with {other:?}"),
+        }
+    };
+    let (hit0, computed) = levels(Query::levels("g", root));
+    assert!(!hit0, "first query must compute");
+    assert_eq!(*computed, truth.levels);
+    let (hit1, fast) = levels(Query::levels("g", root));
+    assert!(hit1);
+    assert!(Arc::ptr_eq(&computed, &fast), "fast-tier hit shares the allocation");
+    let (hit2, accurate) = levels(Query::levels("g", root).with_tier(Tier::Accurate));
+    assert!(hit2, "accurate tier hits the fast-computed entry");
+    assert!(Arc::ptr_eq(&computed, &accurate), "cross-tier hit shares the allocation");
+    assert_eq!(service.stats().cache_hits, 2);
+}
+
+/// A catalog swap bumps the epoch, and no query admitted after the swap
+/// can ever be answered from pre-swap levels: the epoch lives in the
+/// cache key, so the stale entries simply stop matching.
+#[test]
+fn service_never_serves_stale_epoch_after_swap() {
+    use scalabfs::service::{BfsService, GraphCatalog, Query, QueryOutput, ServiceConfig, Tier};
+    let catalog = Arc::new(GraphCatalog::new());
+    catalog.insert("g", generators::chain(24));
+    let chain_truth = reference::bfs(&catalog.get("g").unwrap().graph, 0);
+    let service = BfsService::start(
+        Arc::clone(&catalog),
+        ServiceConfig {
+            sim: SimConfig::u280(1, 2),
+            ..ServiceConfig::default()
+        },
+    );
+    let ask = |tier: Tier| {
+        let response = service
+            .query(Query::levels("g", 0).with_tier(tier))
+            .expect("service query");
+        match response.output {
+            QueryOutput::Levels(levels) => (response.epoch, response.cache_hit, levels),
+            other => panic!("levels query answered with {other:?}"),
+        }
+    };
+    let (old_epoch, _, before) = ask(Tier::Fast);
+    assert_eq!(*before, chain_truth.levels);
+
+    catalog.insert("g", generators::star(24));
+    let star_truth = reference::bfs(&catalog.get("g").unwrap().graph, 0);
+    for tier in Tier::ALL {
+        let (epoch, cache_hit, after) = ask(tier);
+        assert!(epoch > old_epoch, "{tier:?}: swap must bump the epoch");
+        assert_eq!(*after, star_truth.levels, "{tier:?}: post-swap levels");
+        assert_ne!(*after, *before, "{tier:?}: stale chain levels leaked through");
+        if cache_hit {
+            // Only a post-swap entry may hit; it carries the new epoch.
+            assert!(epoch > old_epoch);
+        }
+    }
+}
+
 /// The XLA engine joins the differential test when its feature (and the
 /// AOT artifacts) are present.
 #[cfg(feature = "xla")]
 #[test]
 fn xla_engine_matches_reference_when_available() {
+    use scalabfs::graph::Partitioning;
     use scalabfs::runtime::XlaBfsEngine;
     let graphs = [
         generators::rmat_graph500(7, 6, 15),
         generators::chain(50),
     ];
-    let Ok(mut engine) = XlaBfsEngine::new() else {
-        eprintln!("SKIP: no artifacts");
-        return;
-    };
-    for g in &graphs {
-        let root = reference::sample_roots(g, 1, 5)[0];
-        let Ok(res) = engine.run(g, root) else {
+    for g in graphs {
+        let g = Arc::new(g);
+        let root = reference::sample_roots(&g, 1, 5)[0];
+        // Binding fails cleanly when no artifact fits (or none exist).
+        let Ok(mut engine) = XlaBfsEngine::bind(g.clone(), Partitioning::new(1, 1)) else {
             eprintln!("SKIP: no fitting artifact for {}", g.name);
             continue;
         };
-        assert_eq!(res.levels, reference::bfs(g, root).levels, "graph {}", g.name);
+        let res = engine.run(root).expect("xla run");
+        assert_eq!(res.levels, reference::bfs(&g, root).levels, "graph {}", g.name);
     }
 }

@@ -16,7 +16,7 @@ fn pc_scaling_is_monotone_with_measured_utilization() {
     // The acceptance axis (PCs ∈ {8, 16, 32}) at a CI-friendly scale;
     // the full RMAT-18 curve runs in `rmat18_pc_scaling_acceptance`
     // (ignored) and via `scalabfs pcsweep --dataset=RMAT18-16`.
-    let g = generators::rmat_graph500(14, 16, 40);
+    let g = std::sync::Arc::new(generators::rmat_graph500(14, 16, 40));
     let curve = pc_scaling(&g, "throughput", &[8, 16, 32], 1, 40).unwrap();
     assert_eq!(curve.points.len(), 3);
     for w in curve.points.windows(2) {
@@ -47,7 +47,7 @@ fn pc_scaling_is_monotone_with_measured_utilization() {
 #[test]
 fn contention_saturated_config_scales_sublinearly() {
     // Few PCs, many PGs: 32 PGs folded onto 2 PCs vs 32 private PCs.
-    let g = generators::rmat_graph500(13, 16, 41);
+    let g = std::sync::Arc::new(generators::rmat_graph500(13, 16, 41));
     let curve = pc_contention(&g, "throughput", 32, &[2, 8, 32], 41).unwrap();
     let p2 = &curve.points[0];
     let p32 = &curve.points[2];
@@ -67,7 +67,7 @@ fn cycle_levels_bit_identical_under_every_memory_model() {
     // The memory model changes *when* beats arrive, never *what* the
     // search computes: private PCs, folded PCs, and the packed
     // unpartitioned baseline must all reproduce reference levels.
-    let g = generators::rmat_graph500(10, 8, 42);
+    let g = std::sync::Arc::new(generators::rmat_graph500(10, 8, 42));
     let root = reference::sample_roots(&g, 1, 42)[0];
     let truth = reference::bfs(&g, root);
     let mut configs = vec![
@@ -80,7 +80,7 @@ fn cycle_levels_bit_identical_under_every_memory_model() {
     configs.push(("unpartitioned", base));
     let mut cycles = Vec::new();
     for (name, cfg) in configs {
-        let res = CycleSim::new(&g, cfg).run(root, &mut Hybrid::default()).unwrap();
+        let res = CycleSim::new(g.clone(), cfg).run(root, &mut Hybrid::default()).unwrap();
         assert_eq!(res.levels, truth.levels, "{name} diverged");
         assert!(res.cycles > 0);
         cycles.push((name, res.cycles));
@@ -99,12 +99,16 @@ fn cycle_levels_bit_identical_under_every_memory_model() {
 fn cycle_and_analytic_agree_on_the_contention_direction() {
     // Both fidelity levels must tell the same story when PGs fold onto
     // one PC: slower than private, by a comparable factor.
-    let g = generators::rmat_graph500(11, 16, 43);
+    let g = std::sync::Arc::new(generators::rmat_graph500(11, 16, 43));
     let root = reference::sample_roots(&g, 1, 43)[0];
     let slow_cfg = SimConfig::u280(4, 4).with_hbm_pcs(1);
     let fast_cfg = SimConfig::u280(4, 4);
-    let cyc_slow = CycleSim::new(&g, slow_cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
-    let cyc_fast = CycleSim::new(&g, fast_cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
+    let cyc_slow = CycleSim::new(g.clone(), slow_cfg.clone())
+        .run(root, &mut Hybrid::default())
+        .unwrap();
+    let cyc_fast = CycleSim::new(g.clone(), fast_cfg.clone())
+        .run(root, &mut Hybrid::default())
+        .unwrap();
     let cyc_ratio = cyc_slow.cycles as f64 / cyc_fast.cycles as f64;
     let (_, thr_slow) =
         scalabfs::sim::throughput::simulate_bfs(&g, slow_cfg, root, &mut Hybrid::default());
@@ -123,7 +127,7 @@ fn cycle_and_analytic_agree_on_the_contention_direction() {
 #[test]
 #[ignore = "full RMAT-18 acceptance sweep; run with --ignored (or use `scalabfs pcsweep`)"]
 fn rmat18_pc_scaling_acceptance() {
-    let g = generators::rmat_graph500(18, 16, 44);
+    let g = std::sync::Arc::new(generators::rmat_graph500(18, 16, 44));
     let curve = pc_scaling(&g, "throughput", &[8, 16, 32], 1, 44).unwrap();
     for w in curve.points.windows(2) {
         assert!(w[1].gteps > w[0].gteps, "not monotone on RMAT-18");

@@ -34,8 +34,9 @@ fn manifest_lists_expected_variants() {
 mod pjrt {
     use super::store;
     use scalabfs::bfs::reference;
-    use scalabfs::graph::generators;
+    use scalabfs::graph::{generators, Partitioning};
     use scalabfs::runtime::XlaBfsEngine;
+    use std::sync::Arc;
 
     #[test]
     fn xla_bfs_matches_reference_on_families() {
@@ -47,11 +48,16 @@ mod pjrt {
             generators::rmat_graph500(7, 6, 5),
             generators::erdos_renyi(200, 1500, 6),
         ];
-        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-        for g in &graphs {
-            let root = reference::sample_roots(g, 1, 3)[0];
-            let res = engine.run(g, root).expect("xla run");
-            let truth = reference::bfs(g, root);
+        // Engines are born bound to one graph; the store (and its
+        // warm-compiled executables) is shared across bindings.
+        for g in graphs {
+            let g = Arc::new(g);
+            let root = reference::sample_roots(&g, 1, 3)[0];
+            let mut engine =
+                XlaBfsEngine::with_store(store.clone(), g.clone(), Partitioning::new(1, 1))
+                    .expect("engine");
+            let res = engine.run(root).expect("xla run");
+            let truth = reference::bfs(&g, root);
             assert_eq!(res.levels, truth.levels, "graph {}", g.name);
             assert_eq!(res.reached, truth.reached);
         }
@@ -60,10 +66,11 @@ mod pjrt {
     #[test]
     fn xla_bfs_multiple_roots_reuse_executable() {
         let Some(store) = store() else { return };
-        let g = generators::rmat_graph500(7, 8, 9);
-        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
+        let g = Arc::new(generators::rmat_graph500(7, 8, 9));
+        let mut engine =
+            XlaBfsEngine::with_store(store, g.clone(), Partitioning::new(1, 1)).expect("engine");
         for &root in &reference::sample_roots(&g, 4, 1) {
-            let res = engine.run(&g, root).expect("xla run");
+            let res = engine.run(root).expect("xla run");
             let truth = reference::bfs(&g, root);
             assert_eq!(res.levels, truth.levels, "root {root}");
         }
@@ -81,13 +88,16 @@ mod pjrt {
             generators::chain(40),
             generators::star(30),
         ];
-        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-        for g in &graphs {
-            let root = reference::sample_roots(g, 1, 5)[0];
-            let step = engine.run(g, root).expect("per-step");
-            let full = engine.run_full(g, root).expect("while-loop");
+        for g in graphs {
+            let g = Arc::new(g);
+            let root = reference::sample_roots(&g, 1, 5)[0];
+            let mut engine =
+                XlaBfsEngine::with_store(store.clone(), g.clone(), Partitioning::new(1, 1))
+                    .expect("engine");
+            let step = engine.run(root).expect("per-step");
+            let full = engine.run_full(root).expect("while-loop");
             assert_eq!(full.levels, step.levels, "graph {}", g.name);
-            let truth = reference::bfs(g, root);
+            let truth = reference::bfs(&g, root);
             assert_eq!(full.levels, truth.levels);
             // while_loop runs one extra empty-frontier check iteration.
             assert!(full.iterations >= step.iterations.saturating_sub(1));
@@ -98,9 +108,12 @@ mod pjrt {
     fn oversized_graph_is_a_clean_error() {
         let Some(store) = store() else { return };
         let max = store.sizes("bfs_step").into_iter().max().unwrap();
-        let g = generators::chain(max + 1);
-        let mut engine = XlaBfsEngine::with_store(store).expect("engine");
-        let err = engine.run(&g, 0).err().expect("should not fit");
+        let g = Arc::new(generators::chain(max + 1));
+        // Binding fails up front: the unbound state is unrepresentable,
+        // so "no artifact fits" surfaces at construction, not mid-run.
+        let err = XlaBfsEngine::with_store(store, g, Partitioning::new(1, 1))
+            .err()
+            .expect("should not fit");
         assert!(err.to_string().contains("fits"), "{err}");
     }
 }

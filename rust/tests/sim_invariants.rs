@@ -18,7 +18,7 @@ fn iteration_cycles_sum_to_total() {
         PropConfig { cases: 16, seed: 1 },
         "sum(iter cycles) == total cycles; bytes conserved",
         |rng| {
-            let g = generators::rmat_graph500(9, 8, rng.next_u64());
+            let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, rng.next_u64()));
             let root = reference::sample_roots(&g, 1, rng.next_u64())[0];
             let cfg = SimConfig::u280(4, 8);
             let (run, res) = simulate_bfs(&g, cfg, root, &mut Hybrid::default());
@@ -36,7 +36,7 @@ fn iteration_cycles_sum_to_total() {
 
 #[test]
 fn iteration_time_at_least_each_phase() {
-    let g = generators::rmat_graph500(10, 16, 3);
+    let g = std::sync::Arc::new(generators::rmat_graph500(10, 16, 3));
     let root = reference::sample_roots(&g, 1, 3)[0];
     let (_, res) = simulate_bfs(&g, SimConfig::u280(8, 16), root, &mut Hybrid::default());
     for it in &res.iters {
@@ -49,7 +49,7 @@ fn iteration_time_at_least_each_phase() {
 
 #[test]
 fn faster_clock_is_faster() {
-    let g = generators::rmat_graph500(10, 16, 4);
+    let g = std::sync::Arc::new(generators::rmat_graph500(10, 16, 4));
     let root = reference::sample_roots(&g, 1, 4)[0];
     let slow = SimConfig::u280(8, 16);
     let mut fast = SimConfig::u280(8, 16);
@@ -65,7 +65,11 @@ fn partitioned_never_slower_than_baseline() {
         PropConfig { cases: 12, seed: 11 },
         "ScalaBFS placement dominates the unpartitioned baseline",
         |rng| {
-            let g = generators::rmat_graph500(10, 8 + rng.next_below(24), rng.next_u64());
+            let g = std::sync::Arc::new(generators::rmat_graph500(
+                10,
+                8 + rng.next_below(24),
+                rng.next_u64(),
+            ));
             let root = reference::sample_roots(&g, 1, rng.next_u64())[0];
             let cfg = SimConfig::u280(8, 16);
             let mut base = cfg.clone();
@@ -91,7 +95,7 @@ fn aggregate_bw_bounded_by_physical_limit() {
         |rng| {
             let pcs = 1usize << rng.next_below(6);
             let pes = pcs * (1 << rng.next_below(3));
-            let g = generators::rmat_graph500(10, 16, rng.next_u64());
+            let g = std::sync::Arc::new(generators::rmat_graph500(10, 16, rng.next_u64()));
             let root = reference::sample_roots(&g, 1, rng.next_u64())[0];
             let cfg = SimConfig::u280(pcs, pes);
             let cap = pcs as f64 * cfg.hbm.bw_max;
@@ -114,10 +118,12 @@ fn analytic_and_cycle_sims_agree_within_2x() {
     // sim's per-list offset->edge latency round trips dominate and the
     // gap widens; agreement is asserted at a throughput-dominated size.
     for seed in [1u64, 2, 3] {
-        let g = generators::rmat_graph500(11, 16, seed);
+        let g = std::sync::Arc::new(generators::rmat_graph500(11, 16, seed));
         let root = reference::sample_roots(&g, 1, seed)[0];
         let cfg = SimConfig::u280(4, 8);
-        let cyc = CycleSim::new(&g, cfg.clone()).run(root, &mut Hybrid::default()).unwrap();
+        let cyc = CycleSim::new(g.clone(), cfg.clone())
+            .run(root, &mut Hybrid::default())
+            .unwrap();
         let (_, thr) = simulate_bfs(&g, cfg, root, &mut Hybrid::default());
         let ratio = cyc.cycles as f64 / thr.total_cycles as f64;
         assert!(
@@ -134,7 +140,7 @@ fn empty_frontier_terminates_immediately() {
     // A root with no outgoing edges: one push iteration, no panic.
     let mut b = scalabfs::graph::GraphBuilder::new(8);
     b.add_edge(1, 2);
-    let g = b.build("sink-root");
+    let g = std::sync::Arc::new(b.build("sink-root"));
     let cfg = SimConfig::u280(2, 4);
     let run = run_bfs(&g, cfg.part, 0, &mut Hybrid::default());
     let sim = ThroughputSim::new(cfg);
