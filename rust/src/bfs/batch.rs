@@ -19,8 +19,15 @@
 //! same catalog graph into one batch without copying or borrowing
 //! across threads.
 //!
-//! Serial behaviour (for A/B timing) is just the same driver run inside
-//! a one-thread rayon pool — see `benches/perf_batch.rs`.
+//! Worker count is a driver knob ([`BatchDriver::with_threads`]):
+//! `None` shards roots on the ambient rayon pool (one worker per host
+//! core, rayon's `available_parallelism` default), `Some(n)` builds a
+//! private n-thread pool — `Some(1)` is the explicit serial baseline
+//! the benches A/B against (see `benches/perf_batch.rs`). Batch
+//! parallelism composes with the intra-query sharded walks
+//! ([`TrafficConfig::threads`]): a worker whose engine config asks for
+//! intra-query threads runs each level's expansion on that engine's
+//! own pool.
 
 use super::bitmap::{BfsRun, BitmapEngine, TrafficConfig};
 use super::gteps::harmonic_mean;
@@ -49,6 +56,8 @@ pub struct BatchDriver {
     graph: Arc<Graph>,
     part: Partitioning,
     cfg: Option<TrafficConfig>,
+    /// Private batch pool; `None` = the ambient rayon pool.
+    pool: Option<Arc<rayon::ThreadPool>>,
 }
 
 impl BatchDriver {
@@ -58,6 +67,7 @@ impl BatchDriver {
             graph: graph.into(),
             part,
             cfg: None,
+            pool: None,
         }
     }
 
@@ -67,16 +77,47 @@ impl BatchDriver {
         self
     }
 
+    /// Set the batch worker count. `None` (the default) shards roots on
+    /// the ambient rayon pool — one worker per host core, rayon's
+    /// `available_parallelism` sizing. `Some(n)` builds a private
+    /// n-thread pool, reused by every subsequent `run_batch`;
+    /// `Some(1)` is the explicit serial baseline the benches measure
+    /// against. Per-root results are bit-identical whatever the count.
+    #[must_use]
+    pub fn with_threads(mut self, threads: Option<usize>) -> Self {
+        self.pool = threads.map(|n| {
+            Arc::new(
+                rayon::ThreadPoolBuilder::new()
+                    .num_threads(n.max(1))
+                    .build()
+                    .expect("batch pool construction"),
+            )
+        });
+        self
+    }
+
     /// Run BFS from every root, timing each with `sim_cfg`. Roots are
-    /// sharded across the ambient rayon pool (wrap the call in
-    /// `ThreadPool::install` to control the worker count).
-    /// `make_policy` constructs a fresh policy per root (policies are
-    /// stateful), so it must be callable from any worker.
+    /// sharded across the driver's pool (see
+    /// [`with_threads`](Self::with_threads)). `make_policy` constructs
+    /// a fresh policy per root (policies are stateful), so it must be
+    /// callable from any worker.
     pub fn run_batch(
         &self,
         roots: &[VertexId],
         sim_cfg: &SimConfig,
         make_policy: impl Fn() -> Box<dyn ModePolicy> + Sync,
+    ) -> BatchResult {
+        match self.pool.clone() {
+            Some(pool) => pool.install(|| self.run_batch_inner(roots, sim_cfg, &make_policy)),
+            None => self.run_batch_inner(roots, sim_cfg, &make_policy),
+        }
+    }
+
+    fn run_batch_inner(
+        &self,
+        roots: &[VertexId],
+        sim_cfg: &SimConfig,
+        make_policy: &(impl Fn() -> Box<dyn ModePolicy> + Sync),
     ) -> BatchResult {
         let bytes = self.graph.csr.footprint_bytes(sim_cfg.sv_bytes as usize)
             + self.graph.csc.footprint_bytes(sim_cfg.sv_bytes as usize);
@@ -144,19 +185,39 @@ mod tests {
         let g = Arc::new(generators::rmat_graph500(10, 8, 17));
         let cfg = SimConfig::u280(4, 8);
         let roots = reference::sample_roots(&g, 8, 17);
-        let driver = BatchDriver::new(g, cfg.part);
-        let serial = rayon::ThreadPoolBuilder::new()
-            .num_threads(1)
-            .build()
-            .unwrap()
-            .install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
-        let parallel = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        let serial = BatchDriver::new(g.clone(), cfg.part)
+            .with_threads(Some(1))
+            .run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        let parallel = BatchDriver::new(g, cfg.part).run_batch(&roots, &cfg, || {
+            Box::new(Hybrid::default())
+        });
         assert_eq!(serial.runs.len(), parallel.runs.len());
         for (s, p) in serial.runs.iter().zip(&parallel.runs) {
             assert_eq!(s.levels, p.levels);
             assert_eq!(s.traversed_edges, p.traversed_edges);
         }
         assert_eq!(serial.gteps, parallel.gteps);
+    }
+
+    #[test]
+    fn batch_composes_with_intra_query_threads() {
+        // Batch-level workers × intra-query shards: results must stay
+        // bit-identical to the fully serial baseline.
+        let g = Arc::new(generators::rmat_graph500(10, 8, 29));
+        let cfg = SimConfig::u280(4, 8).with_threads(3);
+        let roots = reference::sample_roots(&g, 6, 29);
+        let baseline = BatchDriver::new(g.clone(), cfg.part)
+            .with_threads(Some(1))
+            .run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        let composed = BatchDriver::new(g, cfg.part)
+            .with_config(cfg.traffic_config())
+            .with_threads(Some(2))
+            .run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
+        for (b, c) in baseline.runs.iter().zip(&composed.runs) {
+            assert_eq!(b.levels, c.levels);
+            assert_eq!(b.traversed_edges, c.traversed_edges);
+        }
+        assert_eq!(baseline.gteps, composed.gteps);
     }
 
     #[test]

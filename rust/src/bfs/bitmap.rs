@@ -44,7 +44,7 @@ use crate::graph::{Graph, Partitioning, VertexId};
 use crate::sched::ModePolicy;
 use crate::util::mem;
 use crate::util::units::round_up;
-use crate::util::Bitset;
+use crate::util::{shard_word_ranges, Bitset};
 use crate::Result;
 
 pub use crate::exec::BfsRun;
@@ -92,6 +92,14 @@ pub struct TrafficConfig {
     /// engaged when the graph spans more than one tile. Bit-identical
     /// results and traffic either way.
     pub push_tile_bits: Option<u32>,
+    /// Host datapath: intra-query worker count for the sharded parallel
+    /// pull/push walks. `1` (the default) is the serial datapath; above
+    /// 1 the engine builds a private rayon pool and expands each dense
+    /// iteration across word-range shards (see DESIGN.md §8). Like the
+    /// other host knobs this affects only wall-clock: levels, traffic
+    /// counters and discovery bitmaps stay bit-identical at every
+    /// thread count.
+    pub threads: usize,
 }
 
 impl TrafficConfig {
@@ -104,6 +112,7 @@ impl TrafficConfig {
             pull_early_exit: false,
             pull_word_parallel: true,
             push_tile_bits: Some(DEFAULT_PUSH_TILE_BITS),
+            threads: 1,
         }
     }
 
@@ -115,12 +124,14 @@ impl TrafficConfig {
     }
 
     /// The scalar host datapath (per-vertex pull scan, untiled and
-    /// unprefetched push): the oracle the word-parallel paths are
-    /// pinned against in tests and measured against in `perf_hotpath`.
+    /// unprefetched push, single-threaded): the oracle the word- and
+    /// thread-parallel paths are pinned against in tests and measured
+    /// against in `perf_hotpath`.
     #[must_use]
     pub fn host_scalar(mut self) -> Self {
         self.pull_word_parallel = false;
         self.push_tile_bits = None;
+        self.threads = 1;
         self
     }
 
@@ -135,6 +146,13 @@ impl TrafficConfig {
     #[must_use]
     pub fn with_push_tiling(mut self, tile_bits: Option<u32>) -> Self {
         self.push_tile_bits = tile_bits;
+        self
+    }
+
+    /// Set the intra-query worker count (values below 1 clamp to 1).
+    #[must_use]
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -171,6 +189,103 @@ fn account_push_source(
     it.neighbors_streamed += list_len;
 }
 
+/// Build the intra-query worker pool for `threads` workers, or `None`
+/// for the serial datapath. Pool construction failing (thread-spawn
+/// resource exhaustion) degrades gracefully to serial — the parallel
+/// walks are wall-clock optimizations, never correctness.
+pub(crate) fn intra_query_pool(threads: usize) -> Option<Arc<rayon::ThreadPool>> {
+    if threads <= 1 {
+        return None;
+    }
+    rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .thread_name(|i| format!("scalabfs-shard-{i}"))
+        .build()
+        .ok()
+        .map(Arc::new)
+}
+
+/// One word of the pull P1/P2 datapath, shared verbatim by the serial
+/// ([`BitmapEngine::pull_words`]) and sharded
+/// ([`BitmapEngine::pull_words_sharded`]) walks so the two can never
+/// diverge: walk the still-unvisited candidates of `todo` (word `wi`),
+/// stream each one's in-neighbor list with full reader/dispatcher
+/// accounting into `it`, and return the mask of discovered bits.
+/// Level writes land at `levels[v - levels_base]` — the serial walk
+/// passes the whole array with base 0, a shard passes its disjoint
+/// chunk with the chunk's first vertex as base.
+#[allow(clippy::too_many_arguments)] // the P1/P2 datapath state, spelled out
+#[inline(always)]
+fn pull_word(
+    cfg: TrafficConfig,
+    part: Partitioning,
+    graph: &Graph,
+    current: &Frontier,
+    it: &mut IterTraffic,
+    wi: usize,
+    todo: u64,
+    levels: &mut [u32],
+    levels_base: usize,
+) -> u64 {
+    let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
+    let mut discovered = 0u64;
+    let mut m = todo;
+    while m != 0 {
+        let bit = m.trailing_zeros();
+        m &= m - 1;
+        let v = ((wi << 6) + bit as usize) as VertexId;
+        let list = graph.in_neighbors(v);
+        if list.is_empty() {
+            continue;
+        }
+        let pe = part.pe_of(v);
+        let pg = part.pg_of_pe(pe);
+        it.list_fetches += 1;
+        it.per_pe_fetches[pe] += 1;
+        it.per_pg_offset_bytes[pg] += cfg.dw_bytes;
+        let (hit, fetched) = if cfg.pull_early_exit {
+            // Chunked reader: scan to the first active parent, fetch
+            // through its chunk — identical to the scalar oracle.
+            let mut hit_at = None;
+            for (i, &u) in list.iter().enumerate() {
+                if current.contains(u as usize) {
+                    hit_at = Some(i);
+                    break;
+                }
+            }
+            let fetched = match hit_at {
+                Some(i) => round_up(i as u64 + 1, chunk_verts).min(list.len() as u64),
+                None => list.len() as u64,
+            };
+            for &u in &list[..fetched as usize] {
+                it.per_pe_recv[part.pe_of(u)] += 1;
+            }
+            (hit_at.is_some(), fetched)
+        } else {
+            // Full-list reader: fuse dispatcher routing and the
+            // frontier check into one branchless pass.
+            let cur = current.bits();
+            let mut any = false;
+            for &u in list {
+                it.per_pe_recv[part.pe_of(u)] += 1;
+                any |= cur.get(u as usize);
+            }
+            (any, list.len() as u64)
+        };
+        it.per_pg_edge_bytes[pg] += round_up(fetched * cfg.sv_bytes, cfg.dw_bytes);
+        it.neighbors_streamed += fetched;
+        if hit {
+            // Soft crossbar: the (child) result returns to v's PE; the
+            // next-frontier bit is batched into the staged word.
+            it.crossbar_results += 1;
+            discovered |= 1u64 << bit;
+            levels[v as usize - levels_base] = it.iteration + 1;
+            it.newly_visited += 1;
+        }
+    }
+    discovered
+}
+
 /// P2/P3 at the destination PE: visited test-and-set, next-frontier
 /// staging, level write.
 #[inline(always)]
@@ -200,6 +315,10 @@ pub struct BitmapEngine {
     /// Scratch only — retained across iterations so the steady state
     /// never allocates.
     tile_bufs: Vec<Vec<VertexId>>,
+    /// Intra-query worker pool for the sharded parallel walks; `None`
+    /// (`cfg.threads <= 1`) selects the serial datapath. Shared by the
+    /// pull and push shards of every iteration this engine runs.
+    pool: Option<Arc<rayon::ThreadPool>>,
 }
 
 impl BitmapEngine {
@@ -214,13 +333,16 @@ impl BitmapEngine {
             part,
             cfg: TrafficConfig::for_partitioning(part),
             tile_bufs: Vec::new(),
+            pool: None,
         }
     }
 
-    /// Override the traffic config (tests, ablations).
+    /// Override the traffic config (tests, ablations, `--threads`).
+    /// Rebuilds the intra-query pool to match `cfg.threads`.
     #[must_use]
     pub fn with_config(mut self, cfg: TrafficConfig) -> Self {
         self.cfg = cfg;
+        self.pool = intra_query_pool(cfg.threads);
         self
     }
 
@@ -250,6 +372,13 @@ impl BitmapEngine {
         } else {
             let n = state.current.num_vertices();
             it.scanned_bits = n as u64;
+            // The sharded walk subsumes tiling when a pool is present
+            // (each shard's working set is already a slice); serial
+            // engines keep the tiled/direct choice.
+            if let Some(pool) = self.pool.clone() {
+                self.push_dense_sharded(state, it, &pool);
+                return;
+            }
             match self.cfg.push_tile_bits {
                 Some(tb) if tb < 63 && n > (1usize << tb) => {
                     self.push_dense_tiled(state, it, tb);
@@ -382,6 +511,93 @@ impl BitmapEngine {
         }
     }
 
+    /// Sharded dense push: the frontier's words split into disjoint,
+    /// ascending source shards on the intra-query pool. Each shard
+    /// streams its sources' neighbor lists with full reader/dispatcher
+    /// accounting into a private [`IterTraffic`], and claims
+    /// destination vertices through the **atomic** visited view
+    /// ([`crate::util::AtomicBitset`]): `fetch_or` hands every fresh
+    /// bit to exactly one shard, so the concurrent test-and-sets can
+    /// never double-count a discovery or race a word update. Winners
+    /// are staged in per-shard buffers; the serial merge absorbs shard
+    /// traffic in shard order and replays the level writes and
+    /// next-frontier inserts.
+    ///
+    /// Determinism: every counter is a sum over the same multiset of
+    /// (source, neighbor) pairs the serial walk streams, level values
+    /// are per-vertex constants of the iteration, and the set of
+    /// winners is exactly the serial walk's discovery set — which shard
+    /// claims a vertex can vary between runs, but no counter, level,
+    /// bitmap, or count-based frontier decision can observe that (the
+    /// sparse list's internal order is the only thing that moves, and
+    /// nothing accounts by it). Pinned against the scalar oracle in
+    /// `sharded_push_is_bit_identical_to_scalar` and
+    /// `engine_equivalence`.
+    fn push_dense_sharded(
+        &self,
+        state: &mut SearchState,
+        it: &mut IterTraffic,
+        pool: &rayon::ThreadPool,
+    ) {
+        use rayon::prelude::*;
+        let cfg = self.cfg;
+        let part = self.part;
+        let graph = self.graph.as_ref();
+        let (iteration, mode) = (it.iteration, it.mode);
+        let SearchState {
+            current,
+            next,
+            visited,
+            levels,
+            ..
+        } = state;
+        let frontier_bits = (*current).bits();
+        let ranges = shard_word_ranges(frontier_bits.num_words(), cfg.threads);
+        let visited_view = visited.as_atomic();
+        type PushShardOut = (IterTraffic, Vec<VertexId>);
+        let results: Vec<PushShardOut> = pool.install(|| {
+            ranges
+                .par_iter()
+                .map(|&(ws, we)| {
+                    let mut local = IterTraffic::new(iteration, mode, part.num_pes, part.num_pgs);
+                    local.p1_words_scanned = (we - ws) as u64;
+                    let mut winners: Vec<VertexId> = Vec::new();
+                    for wi in ws..we {
+                        let mut w = frontier_bits.word(wi);
+                        if w == 0 {
+                            continue;
+                        }
+                        local.p1_bits_set += u64::from(w.count_ones());
+                        while w != 0 {
+                            let v = ((wi << 6) + w.trailing_zeros() as usize) as VertexId;
+                            w &= w - 1;
+                            let list = graph.out_neighbors(v);
+                            account_push_source(cfg, part, &mut local, v, list.len() as u64);
+                            for &nb in list {
+                                local.per_pe_recv[part.pe_of(nb)] += 1;
+                                if !visited_view.test_and_set_atomic(nb as usize) {
+                                    winners.push(nb);
+                                    local.newly_visited += 1;
+                                }
+                            }
+                        }
+                    }
+                    (local, winners)
+                })
+                .collect()
+        });
+        drop(visited_view);
+        // Serial merge in shard order: level writes and frontier
+        // inserts for each claimed vertex, exactly once.
+        for (local, winners) in &results {
+            it.absorb(local);
+            for &nb in winners {
+                next.insert(nb, graph.csr.degree(nb));
+                levels[nb as usize] = iteration + 1;
+            }
+        }
+    }
+
     /// Pull iteration (Algorithm 2 lines 15-22): scan unvisited vertices,
     /// stream incoming lists (chunked early exit), check the current
     /// frontier at the parent's PE, forward hits back to the child's PE.
@@ -390,7 +606,10 @@ impl BitmapEngine {
     /// membership test, which both representations provide.
     fn pull_iteration(&self, state: &mut SearchState, it: &mut IterTraffic) {
         if self.cfg.pull_word_parallel {
-            self.pull_words(state, it);
+            match &self.pool {
+                Some(pool) => self.pull_words_sharded(state, it, pool),
+                None => self.pull_words(state, it),
+            }
         } else {
             self.pull_scalar(state, it);
         }
@@ -413,7 +632,6 @@ impl BitmapEngine {
         let part = self.part;
         let graph = self.graph.as_ref();
         it.scanned_bits = state.visited.len() as u64;
-        let chunk_verts = (cfg.dw_bytes / cfg.sv_bytes).max(1);
         {
             let SearchState {
                 current,
@@ -432,65 +650,7 @@ impl BitmapEngine {
                     continue;
                 }
                 it.p1_bits_set += u64::from(todo.count_ones());
-                let mut discovered = 0u64;
-                let mut m = todo;
-                while m != 0 {
-                    let bit = m.trailing_zeros();
-                    m &= m - 1;
-                    let v = ((wi << 6) + bit as usize) as VertexId;
-                    let list = graph.in_neighbors(v);
-                    if list.is_empty() {
-                        continue;
-                    }
-                    let pe = part.pe_of(v);
-                    let pg = part.pg_of_pe(pe);
-                    it.list_fetches += 1;
-                    it.per_pe_fetches[pe] += 1;
-                    it.per_pg_offset_bytes[pg] += cfg.dw_bytes;
-                    let (hit, fetched) = if cfg.pull_early_exit {
-                        // Chunked reader: scan to the first active
-                        // parent, fetch through its chunk — identical
-                        // to the scalar oracle.
-                        let mut hit_at = None;
-                        for (i, &u) in list.iter().enumerate() {
-                            if current.contains(u as usize) {
-                                hit_at = Some(i);
-                                break;
-                            }
-                        }
-                        let fetched = match hit_at {
-                            Some(i) => {
-                                round_up(i as u64 + 1, chunk_verts).min(list.len() as u64)
-                            }
-                            None => list.len() as u64,
-                        };
-                        for &u in &list[..fetched as usize] {
-                            it.per_pe_recv[part.pe_of(u)] += 1;
-                        }
-                        (hit_at.is_some(), fetched)
-                    } else {
-                        // Full-list reader: fuse dispatcher routing and
-                        // the frontier check into one branchless pass.
-                        let cur = current.bits();
-                        let mut any = false;
-                        for &u in list {
-                            it.per_pe_recv[part.pe_of(u)] += 1;
-                            any |= cur.get(u as usize);
-                        }
-                        (any, list.len() as u64)
-                    };
-                    it.per_pg_edge_bytes[pg] += round_up(fetched * cfg.sv_bytes, cfg.dw_bytes);
-                    it.neighbors_streamed += fetched;
-                    if hit {
-                        // Soft crossbar: the (child) result returns to
-                        // v's PE; the next-frontier bit is batched into
-                        // the word staged below.
-                        it.crossbar_results += 1;
-                        discovered |= 1u64 << bit;
-                        levels[v as usize] = it.iteration + 1;
-                        it.newly_visited += 1;
-                    }
-                }
+                let discovered = pull_word(cfg, part, graph, current, it, wi, todo, levels, 0);
                 if discovered != 0 {
                     let newly = next.insert_word(wi, discovered, |u| graph.csr.degree(u));
                     debug_assert_eq!(newly, discovered, "pull rediscovered a staged vertex");
@@ -500,6 +660,105 @@ impl BitmapEngine {
         // P3 commit: fold the staged discoveries into the visited map a
         // word at a time (deferred, so the scan above never observes
         // its own writes — same staging discipline as the scalar walk).
+        state.visited.or_assign_from(state.next.bits());
+    }
+
+    /// Sharded word-parallel pull: the word scan of
+    /// [`pull_words`](Self::pull_words) split across disjoint,
+    /// ascending word-range shards on the intra-query pool.
+    ///
+    /// During the scan `visited` and `current` are **read-only** (the
+    /// visited commit is deferred, exactly as in the serial walk), so
+    /// each shard independently runs the same per-word body
+    /// ([`pull_word`]) against its own private [`IterTraffic`], writes
+    /// levels only inside its own word-aligned `levels` chunk (disjoint
+    /// `split_at_mut` slices — no synchronization, no atomics), and
+    /// stages its discovered `(word, mask)` pairs locally. The serial
+    /// merge then absorbs shard traffic and replays the staged
+    /// `insert_word`s in ascending shard order — the identical word
+    /// order the serial walk produces — so levels, counters, frontier
+    /// contents and the visited commit are bit-identical at every
+    /// thread count.
+    #[allow(clippy::needless_range_loop)]
+    fn pull_words_sharded(
+        &self,
+        state: &mut SearchState,
+        it: &mut IterTraffic,
+        pool: &rayon::ThreadPool,
+    ) {
+        use rayon::prelude::*;
+        let cfg = self.cfg;
+        let part = self.part;
+        let graph = self.graph.as_ref();
+        it.scanned_bits = state.visited.len() as u64;
+        let (iteration, mode) = (it.iteration, it.mode);
+        let SearchState {
+            current,
+            next,
+            visited,
+            levels,
+            ..
+        } = state;
+        let current = &*current;
+        let visited = &*visited;
+        let ranges = shard_word_ranges(visited.num_words(), cfg.threads);
+        // Word-aligned shard ranges cut the level array into disjoint
+        // chunks: shard s owns exactly the vertices of its words.
+        let mut shards: Vec<((usize, usize), &mut [u32])> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [u32] = levels;
+        let mut consumed = 0usize;
+        for &(ws, we) in &ranges {
+            let end = (we << 6).min(consumed + rest.len());
+            let (chunk, tail) = rest.split_at_mut(end - consumed);
+            shards.push(((ws, we), chunk));
+            rest = tail;
+            consumed = end;
+        }
+        type PullShardOut = (IterTraffic, Vec<(usize, u64)>);
+        let results: Vec<PullShardOut> = pool.install(|| {
+            shards
+                .into_par_iter()
+                .map(|((ws, we), levels_chunk)| {
+                    let mut local = IterTraffic::new(iteration, mode, part.num_pes, part.num_pgs);
+                    local.p1_words_scanned = (we - ws) as u64;
+                    let mut staged: Vec<(usize, u64)> = Vec::new();
+                    let base = ws << 6;
+                    for wi in ws..we {
+                        let todo = visited.zeros_word(wi);
+                        if todo == 0 {
+                            continue;
+                        }
+                        local.p1_bits_set += u64::from(todo.count_ones());
+                        let discovered = pull_word(
+                            cfg,
+                            part,
+                            graph,
+                            current,
+                            &mut local,
+                            wi,
+                            todo,
+                            levels_chunk,
+                            base,
+                        );
+                        if discovered != 0 {
+                            staged.push((wi, discovered));
+                        }
+                    }
+                    (local, staged)
+                })
+                .collect()
+        });
+        // Deterministic merge: ascending shard order is ascending word
+        // order, so the staged insert_words replay in exactly the
+        // serial walk's order; counter absorption is a sum over
+        // disjoint shares.
+        for (local, staged) in &results {
+            it.absorb(local);
+            for &(wi, mask) in staged {
+                let newly = next.insert_word(wi, mask, |u| graph.csr.degree(u));
+                debug_assert_eq!(newly, mask, "pull rediscovered a staged vertex");
+            }
+        }
         state.visited.or_assign_from(state.next.bits());
     }
 
@@ -856,6 +1115,95 @@ mod tests {
         assert_traffic_identical(&tiled, &direct, "tiled-vs-direct");
         let reference = reference::bfs(&g, root);
         assert_eq!(tiled.levels, reference.levels);
+    }
+
+    #[test]
+    fn sharded_pull_is_bit_identical_to_scalar() {
+        // The intra-query parallel pull must be observationally
+        // identical to the serial scalar oracle at every thread count,
+        // with and without the early-exit reader.
+        for (early, seed) in [(false, 21u64), (true, 22)] {
+            let g = Arc::new(generators::rmat_graph500(10, 16, seed));
+            let root = reference::sample_roots(&g, 1, seed)[0];
+            let part = Partitioning::new(4, 2);
+            let base = TrafficConfig::for_partitioning(part);
+            let base = if early { base.with_early_exit() } else { base };
+            let scalar = BitmapEngine::new(g.clone(), part)
+                .with_config(base.host_scalar())
+                .run(root, &mut Fixed(Mode::Pull));
+            for threads in [2usize, 7] {
+                let sharded = BitmapEngine::new(g.clone(), part)
+                    .with_config(base.with_threads(threads))
+                    .run(root, &mut Fixed(Mode::Pull));
+                let label = format!("sharded pull t={threads} early={early}");
+                assert_traffic_identical(&sharded, &scalar, &label);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_push_is_bit_identical_to_scalar() {
+        let g = Arc::new(generators::rmat_graph500(11, 8, 23));
+        let root = reference::sample_roots(&g, 1, 23)[0];
+        let part = Partitioning::new(4, 2);
+        let base = TrafficConfig::for_partitioning(part);
+        let mut dense_policy = WithRepr {
+            inner: Fixed(Mode::Push),
+            repr: ReprPolicy::Dense,
+        };
+        let scalar = BitmapEngine::new(g.clone(), part)
+            .with_config(base.host_scalar())
+            .run(root, &mut dense_policy);
+        for threads in [2usize, 7] {
+            let mut dense_policy = WithRepr {
+                inner: Fixed(Mode::Push),
+                repr: ReprPolicy::Dense,
+            };
+            let sharded = BitmapEngine::new(g.clone(), part)
+                .with_config(base.with_threads(threads))
+                .run(root, &mut dense_policy);
+            let label = format!("sharded push t={threads}");
+            assert_traffic_identical(&sharded, &scalar, &label);
+        }
+        assert_eq!(scalar.levels, reference::bfs(&g, root).levels);
+    }
+
+    #[test]
+    fn sharded_hybrid_adaptive_matches_scalar_oracle() {
+        // Full hybrid run (direction + representation switching) at
+        // several thread counts: the parallel walks engage only on the
+        // dense iterations, and the whole trajectory — mode choices
+        // included — must match the serial scalar oracle.
+        let g = Arc::new(generators::rmat_graph500(11, 16, 24));
+        let root = reference::sample_roots(&g, 1, 24)[0];
+        let part = Partitioning::new(4, 2);
+        let base = TrafficConfig::for_partitioning(part);
+        let scalar = BitmapEngine::new(g.clone(), part)
+            .with_config(base.host_scalar())
+            .run(root, &mut Hybrid::default());
+        for threads in [2usize, 4, 7] {
+            let sharded = BitmapEngine::new(g.clone(), part)
+                .with_config(base.with_threads(threads))
+                .run(root, &mut Hybrid::default());
+            let label = format!("sharded hybrid t={threads}");
+            assert_traffic_identical(&sharded, &scalar, &label);
+        }
+    }
+
+    #[test]
+    fn threads_clamp_and_scalar_oracle_stays_serial() {
+        let part = Partitioning::new(2, 1);
+        let cfg = TrafficConfig::for_partitioning(part).with_threads(0);
+        assert_eq!(cfg.threads, 1, "with_threads clamps 0 to serial");
+        let cfg = TrafficConfig::for_partitioning(part)
+            .with_threads(8)
+            .host_scalar();
+        assert_eq!(cfg.threads, 1, "the oracle datapath is serial");
+        // rebind keeps the threads knob like every other policy flag.
+        let cfg = TrafficConfig::for_partitioning(part)
+            .with_threads(6)
+            .rebind(Partitioning::new(4, 2));
+        assert_eq!(cfg.threads, 6);
     }
 
     #[test]

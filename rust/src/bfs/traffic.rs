@@ -84,6 +84,43 @@ impl IterTraffic {
         }
     }
 
+    /// Fold another record's **additive** counters into this one — the
+    /// deterministic merge step of a sharded parallel iteration, where
+    /// each shard tallied its disjoint slice of the work into a private
+    /// record. Every merged field is a sum over disjoint contributions,
+    /// so the merge is order-insensitive (u64 addition is exact and
+    /// commutative) and the merged totals are bit-identical to what a
+    /// serial walk over the same work would have tallied.
+    ///
+    /// Identity fields (`iteration`, `mode`) and caller-set per-iteration
+    /// facts (`frontier_size`, `scanned_bits`) are **not** touched: they
+    /// describe the iteration, not a shard's share of it. The per-PE /
+    /// per-PG vectors are summed elementwise and must have matching
+    /// shapes (debug-asserted).
+    pub fn absorb(&mut self, shard: &IterTraffic) {
+        debug_assert_eq!(self.per_pe_fetches.len(), shard.per_pe_fetches.len());
+        debug_assert_eq!(self.per_pg_offset_bytes.len(), shard.per_pg_offset_bytes.len());
+        self.list_fetches += shard.list_fetches;
+        self.neighbors_streamed += shard.neighbors_streamed;
+        self.newly_visited += shard.newly_visited;
+        self.frontier_fifo_pops += shard.frontier_fifo_pops;
+        self.crossbar_results += shard.crossbar_results;
+        self.p1_words_scanned += shard.p1_words_scanned;
+        self.p1_bits_set += shard.p1_bits_set;
+        for (dst, src) in self.per_pe_fetches.iter_mut().zip(&shard.per_pe_fetches) {
+            *dst += src;
+        }
+        for (dst, src) in self.per_pe_recv.iter_mut().zip(&shard.per_pe_recv) {
+            *dst += src;
+        }
+        for (dst, src) in self.per_pg_offset_bytes.iter_mut().zip(&shard.per_pg_offset_bytes) {
+            *dst += src;
+        }
+        for (dst, src) in self.per_pg_edge_bytes.iter_mut().zip(&shard.per_pg_edge_bytes) {
+            *dst += src;
+        }
+    }
+
     /// Total bytes this iteration reads from HBM.
     pub fn total_bytes(&self) -> u64 {
         self.per_pg_offset_bytes.iter().sum::<u64>()
@@ -167,6 +204,43 @@ mod tests {
         assert_eq!(r.total_bytes(), 150);
         assert_eq!(r.total_neighbors(), 15);
         assert_eq!(r.mode_counts(), (1, 1));
+    }
+
+    #[test]
+    fn absorb_sums_additive_counters_only() {
+        let mut total = IterTraffic::new(3, Mode::Push, 2, 2);
+        total.frontier_size = 7;
+        total.scanned_bits = 128;
+        let mut shard = IterTraffic::new(3, Mode::Push, 2, 2);
+        shard.list_fetches = 2;
+        shard.neighbors_streamed = 9;
+        shard.newly_visited = 4;
+        shard.crossbar_results = 1;
+        shard.p1_words_scanned = 2;
+        shard.p1_bits_set = 5;
+        shard.per_pe_fetches = vec![1, 1];
+        shard.per_pe_recv = vec![4, 5];
+        shard.per_pg_offset_bytes = vec![16, 0];
+        shard.per_pg_edge_bytes = vec![32, 64];
+        // Shard-local facts that describe the *iteration* must not be
+        // summed into the merged record.
+        shard.frontier_size = 999;
+        shard.scanned_bits = 999;
+        total.absorb(&shard);
+        total.absorb(&shard);
+        assert_eq!(total.list_fetches, 4);
+        assert_eq!(total.neighbors_streamed, 18);
+        assert_eq!(total.newly_visited, 8);
+        assert_eq!(total.crossbar_results, 2);
+        assert_eq!(total.p1_words_scanned, 4);
+        assert_eq!(total.p1_bits_set, 10);
+        assert_eq!(total.per_pe_fetches, vec![2, 2]);
+        assert_eq!(total.per_pe_recv, vec![8, 10]);
+        assert_eq!(total.per_pg_offset_bytes, vec![32, 0]);
+        assert_eq!(total.per_pg_edge_bytes, vec![64, 128]);
+        assert_eq!(total.frontier_size, 7, "identity field must survive");
+        assert_eq!(total.scanned_bits, 128, "identity field must survive");
+        assert_eq!(total.iteration, 3);
     }
 
     #[test]

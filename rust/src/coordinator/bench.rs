@@ -67,6 +67,9 @@ pub struct BenchOptions {
     pub smoke: bool,
     /// PR number stamped into the document.
     pub pr: u32,
+    /// Thread count for the `parallel` section's sharded side
+    /// (`None` = the host's available parallelism).
+    pub threads: Option<usize>,
 }
 
 /// One measured (or expected) quantity.
@@ -290,17 +293,15 @@ fn batch_section(smoke: bool) -> Section {
     let g = Arc::new(generators::rmat_graph500(scale, 16, 1));
     let cfg = SimConfig::u280_full();
     let roots = reference::sample_roots(&g, num_roots, 1);
-    let driver = BatchDriver::new(g, cfg.part);
-
-    let serial_pool = rayon::ThreadPoolBuilder::new()
-        .num_threads(1)
-        .build()
-        .expect("single-thread pool");
+    // The explicit serial baseline is the driver's own `--threads=1`
+    // knob; the parallel side is the default ambient pool (one worker
+    // per host core).
+    let serial_driver = BatchDriver::new(g.clone(), cfg.part).with_threads(Some(1));
     let t0 = Instant::now();
-    let serial =
-        serial_pool.install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+    let serial = serial_driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
     let t_serial = t0.elapsed().as_secs_f64();
 
+    let driver = BatchDriver::new(g, cfg.part);
     let t0 = Instant::now();
     let parallel = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
     let t_parallel = t0.elapsed().as_secs_f64();
@@ -322,6 +323,120 @@ fn batch_section(smoke: bool) -> Section {
             ),
         ],
     }
+}
+
+/// `perf_parallel` in measured mode: the intra-query sharded datapath —
+/// pull/push wall-clock speedup of `--threads=N` over the serial
+/// baseline (bit-identity asserted on the way), and fast-tier worker
+/// scaling of the query service (q/s at 1 vs 4 workers, same offered
+/// load). Smoke floors are deliberately loose: CI runners have few
+/// cores, and the full-mode floors (2.0x pull) are the real target.
+fn parallel_section(smoke: bool, threads: Option<usize>) -> Result<Section> {
+    use crate::service::{loadgen, BfsService, GraphCatalog, LoadgenOptions, ServiceConfig};
+    let (scale, reps) = if smoke { (14u32, 2usize) } else { (18, 3) };
+    let n = threads
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(8, usize::from))
+        .max(2);
+    println!("[bench] parallel: RMAT-{scale} d16, {n} intra-query threads ...");
+    let tag = format!("rmat{scale}");
+    let g = Arc::new(generators::rmat_graph500(scale, 16, 1));
+    let root = reference::sample_roots(&g, 1, 1)[0];
+    let part = Partitioning::new(64, 32);
+    let base = TrafficConfig::for_partitioning(part);
+    let mut state = SearchState::new(g.num_vertices());
+
+    let mut serial = BitmapEngine::new(g.clone(), part).with_config(base);
+    let mut sharded = BitmapEngine::new(g.clone(), part).with_config(base.with_threads(n));
+
+    // Sharded results must be bit-identical to serial before any timing
+    // of them means anything.
+    for mut policy in [pull_dense(), push_dense()] {
+        let a = serial
+            .run_with_state(&mut state, root, &mut policy)
+            .expect("the functional bitmap step is infallible");
+        let b = sharded
+            .run_with_state(&mut state, root, &mut policy)
+            .expect("the functional bitmap step is infallible");
+        anyhow::ensure!(a.levels == b.levels, "sharded levels diverged from serial");
+        anyhow::ensure!(
+            a.traffic.total_bytes() == b.traffic.total_bytes()
+                && a.traffic.total_neighbors() == b.traffic.total_neighbors(),
+            "sharded traffic counters diverged from serial"
+        );
+    }
+
+    let t_pull_1 = time_best(reps, || {
+        let _ = serial.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    let t_pull_n = time_best(reps, || {
+        let _ = sharded.run_with_state(&mut state, root, &mut pull_dense());
+    });
+    let t_push_1 = time_best(reps, || {
+        let _ = serial.run_with_state(&mut state, root, &mut push_dense());
+    });
+    let t_push_n = time_best(reps, || {
+        let _ = sharded.run_with_state(&mut state, root, &mut push_dense());
+    });
+
+    let (svc_scale, queries) = if smoke { (10u32, 96usize) } else { (12, 512) };
+    let qps_at = |workers: usize| -> Result<f64> {
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("bench", generators::rmat_graph500(svc_scale, 8, 21));
+        let service = BfsService::start(
+            catalog,
+            ServiceConfig {
+                sim: SimConfig::u280(2, 4),
+                cache_entries: 0, // every query computes: worker scaling, not cache scaling
+                fast_workers: workers,
+                ..ServiceConfig::default()
+            },
+        );
+        let lopts = LoadgenOptions {
+            graph: "bench".into(),
+            queries,
+            accurate_every: 0, // fast tier only
+            root_pool: 64,
+            seed: 21,
+        };
+        let report = loadgen::run(&service, &lopts).map_err(anyhow::Error::new)?;
+        anyhow::ensure!(report.errors == 0, "worker-scaling load run reported errors");
+        Ok(report.qps)
+    };
+    let qps_1w = qps_at(1)?;
+    let qps_4w = qps_at(4)?;
+
+    let (pull_floor, push_floor, svc_floor) = if smoke {
+        (0.4, 0.4, 0.4)
+    } else {
+        (2.0, 1.2, 0.8)
+    };
+    Ok(Section {
+        name: "parallel",
+        metrics: vec![
+            wall(format!("parallel_threads_{tag}"), n as f64, "threads"),
+            wall(format!("pull_serial_ms_{tag}"), t_pull_1 * 1e3, "ms"),
+            wall(format!("pull_sharded_ms_{tag}"), t_pull_n * 1e3, "ms"),
+            ratio(
+                format!("pull_shard_speedup_{tag}"),
+                t_pull_1 / t_pull_n,
+                pull_floor,
+            ),
+            wall(format!("push_serial_ms_{tag}"), t_push_1 * 1e3, "ms"),
+            wall(format!("push_sharded_ms_{tag}"), t_push_n * 1e3, "ms"),
+            ratio(
+                format!("push_shard_speedup_{tag}"),
+                t_push_1 / t_push_n,
+                push_floor,
+            ),
+            wall(format!("service_qps_1w_rmat{svc_scale}"), qps_1w, "q/s"),
+            wall(format!("service_qps_4w_rmat{svc_scale}"), qps_4w, "q/s"),
+            ratio(
+                format!("service_worker_scaling_rmat{svc_scale}"),
+                qps_4w / qps_1w.max(1e-9),
+                svc_floor,
+            ),
+        ],
+    })
 }
 
 /// `perf_cycle` in measured mode: the cycle-stepped simulator's host
@@ -501,6 +616,7 @@ pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
         hotpath_section(opts.smoke),
         frontier_section(opts.smoke),
         batch_section(opts.smoke),
+        parallel_section(opts.smoke, opts.threads)?,
         cycle_section(opts.smoke)?,
         graphs_section(opts.smoke),
         service_section(opts.smoke)?,

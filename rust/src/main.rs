@@ -40,17 +40,21 @@ Experiment commands (regenerate paper tables/figures):
                    --engine=cycle --json=FILE]
 
 System commands:
-  run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid --engine=bitmap]
+  run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid
+                   --engine=bitmap --threads=N (intra-query host shards, default 1)]
   serve           long-lived BFS query service, REPL on stdin
-                  [--pcs=4 --pes=8 --fast-queue=256 --accurate-queue=8 --cache=1024]
+                  [--pcs=4 --pes=8 --fast-queue=256 --accurate-queue=8 --cache=1024
+                   --fast-workers=1 --threads=1]
                   REPL: load <name> <dataset> [scale] | query <graph> <root> [tier] [policy]
                         reach <graph> <root> <target> | dist <graph> <root> <target>
                         graphs | stats | quit
   loadgen         open-loop mixed-tier load against an in-process service
                   [--dataset=RMAT18-8 --queries=200 --accurate-every=16
-                   --root-pool=32 --cache=1024 --pcs=4 --pes=8]
+                   --root-pool=32 --cache=1024 --pcs=4 --pes=8
+                   --fast-workers=1 --threads=1]
   bench           measured perf suite -> scalabfs-bench-v1 JSON
-                  [--smoke --pr=7 --json=FILE]
+                  [--smoke --pr=8 --json=FILE --threads=N (parallel-section
+                   thread count, default: host cores)]
   bench-compare   regression gate: --old=BENCH_7.json --new=new.json
                   [--tolerance=0.3] (floors always; exact/ratio bands vs a
                   measured same-mode baseline; exits non-zero on regression)
@@ -134,10 +138,11 @@ fn service_from_kv(kv: &std::collections::HashMap<String, String>) -> scalabfs::
     let get = |k: &str, d: usize| kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
     let defaults = ServiceConfig::default();
     let cfg = ServiceConfig {
-        sim: SimConfig::u280(get("pcs", 4), get("pes", 8)),
+        sim: SimConfig::u280(get("pcs", 4), get("pes", 8)).with_threads(get("threads", 1)),
         fast_queue: get("fast-queue", defaults.fast_queue),
         accurate_queue: get("accurate-queue", defaults.accurate_queue),
         cache_entries: get("cache", defaults.cache_entries),
+        fast_workers: get("fast-workers", defaults.fast_workers),
     };
     BfsService::start(std::sync::Arc::new(GraphCatalog::new()), cfg)
 }
@@ -245,9 +250,15 @@ fn run_serve(
             }
             ["stats"] => {
                 let s = service.stats();
+                let per_worker = service
+                    .fast_worker_batches()
+                    .iter()
+                    .map(u64::to_string)
+                    .collect::<Vec<_>>()
+                    .join("/");
                 println!(
                     "submitted {} completed {} rejected {} cache hits {} \
-                     batches {} ({} roots) errors {} | {} cached levels",
+                     batches {} ({} roots, per worker {per_worker}) errors {} | {} cached levels",
                     s.submitted,
                     s.completed,
                     s.rejected,
@@ -303,8 +314,14 @@ fn run_loadgen(
         );
     }
     let stats = service.stats();
+    let per_worker = service
+        .fast_worker_batches()
+        .iter()
+        .map(u64::to_string)
+        .collect::<Vec<_>>()
+        .join("/");
     println!(
-        "service: {} cache hits, {} batches over {} roots",
+        "service: {} cache hits, {} batches over {} roots (per worker {per_worker})",
         stats.cache_hits, stats.batches, stats.batched_roots
     );
     Ok(())
@@ -456,7 +473,8 @@ fn main() -> anyhow::Result<()> {
         "bench" => {
             let bopts = scalabfs::coordinator::BenchOptions {
                 smoke: kv.get("smoke").is_some(),
-                pr: get_u32("pr", 7),
+                pr: get_u32("pr", 8),
+                threads: kv.get("threads").and_then(|v| v.parse().ok()),
             };
             let doc = scalabfs::coordinator::bench::run_suite(&bopts)?;
             if let Some(path) = kv.get("json") {
@@ -493,7 +511,8 @@ fn main() -> anyhow::Result<()> {
                 .get("dataset")
                 .cloned()
                 .unwrap_or_else(|| "RMAT18-16".into());
-            let cfg = SimConfig::u280(get_usize("pcs", 32), get_usize("pes", 64));
+            let cfg = SimConfig::u280(get_usize("pcs", 32), get_usize("pes", 64))
+                .with_threads(get_usize("threads", 1));
             let dopts = DriverOptions {
                 scale_factor: opts.scale_factor,
                 num_roots: opts.num_roots,

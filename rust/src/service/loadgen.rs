@@ -247,4 +247,21 @@ mod tests {
         assert_eq!(empty.completed, 0);
         assert_eq!(empty.p50_ms, 0.0);
     }
+
+    #[test]
+    fn percentile_handles_empty_and_single_sample() {
+        // Empty: every percentile is 0.0 (no panic on len - 1).
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+        // Single sample: every percentile is that sample.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+        let t = tier_latency(vec![7.5]);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.p50_ms, 7.5);
+        assert_eq!(t.p99_ms, 7.5);
+        assert_eq!(t.max_ms, 7.5);
+    }
 }

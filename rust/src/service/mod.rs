@@ -27,8 +27,9 @@
 //!   [`BatchDriver`](crate::bfs::batch::BatchDriver) batch; the
 //!   **accurate** tier runs the cycle-stepped simulator for queries
 //!   that want modeled timing. Each tier has its own bounded queue and
-//!   its own worker thread, so a minutes-long cycle simulation can
-//!   never starve bitmap traffic, and a full queue is a typed
+//!   its own workers ([`ServiceConfig::fast_workers`] fast, one
+//!   accurate), so a minutes-long cycle simulation can never starve
+//!   bitmap traffic, and a full queue is a typed
 //!   [`ServiceError::Overloaded`] at submit time, not an unbounded
 //!   backlog.
 //! * [`loadgen`] — open-loop mixed-tier load generator behind the

@@ -28,6 +28,13 @@ pub struct ServiceConfig {
     pub accurate_queue: usize,
     /// Level-cache capacity in entries (0 disables caching).
     pub cache_entries: usize,
+    /// Fast-tier worker threads pulling from the shared bounded queue
+    /// (values below 1 clamp to 1). The queue's `pop_all` drain is
+    /// multi-consumer safe, so N workers coalesce N concurrent batches:
+    /// each drain becomes one worker's batch while the others keep
+    /// draining what arrives behind it — intra-query parallelism
+    /// ([`SimConfig::threads`]) and cross-query batching compose.
+    pub fast_workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -40,6 +47,7 @@ impl Default for ServiceConfig {
             fast_queue: 256,
             accurate_queue: 8,
             cache_entries: 1024,
+            fast_workers: 1,
         }
     }
 }
@@ -160,6 +168,13 @@ struct WorkerCtx {
     cache: Arc<LevelCache>,
     stats: Arc<AtomicStats>,
     sim: SimConfig,
+    /// One batch counter per fast-tier worker (index = worker id);
+    /// shared so [`BfsService::fast_worker_batches`] can snapshot the
+    /// per-worker split that `stats.batches` sums.
+    worker_batches: Arc<Vec<AtomicU64>>,
+    /// This thread's slot in `worker_batches`. The accurate worker
+    /// carries 0 but never executes fast batches, so it never bumps.
+    worker: usize,
 }
 
 /// Pending-result handle returned by [`BfsService::submit`].
@@ -177,13 +192,15 @@ impl Ticket {
     }
 }
 
-/// The long-lived BFS query service. Construction spawns one worker
-/// thread per tier; drop closes the queues, drains what was already
-/// admitted, and joins the workers.
+/// The long-lived BFS query service. Construction spawns
+/// [`ServiceConfig::fast_workers`] fast-tier workers plus one accurate
+/// worker; drop closes the queues, drains what was already admitted,
+/// and joins the workers.
 pub struct BfsService {
     catalog: Arc<GraphCatalog>,
     cache: Arc<LevelCache>,
     stats: Arc<AtomicStats>,
+    worker_batches: Arc<Vec<AtomicU64>>,
     fast: Arc<TierQueue>,
     accurate: Arc<TierQueue>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -196,25 +213,39 @@ impl BfsService {
         let stats = Arc::new(AtomicStats::default());
         let fast = Arc::new(TierQueue::new(Tier::Fast, cfg.fast_queue));
         let accurate = Arc::new(TierQueue::new(Tier::Accurate, cfg.accurate_queue));
+        let fast_workers = cfg.fast_workers.max(1);
+        let worker_batches: Arc<Vec<AtomicU64>> =
+            Arc::new((0..fast_workers).map(|_| AtomicU64::new(0)).collect());
         let ctx = WorkerCtx {
             catalog: Arc::clone(&catalog),
             cache: Arc::clone(&cache),
             stats: Arc::clone(&stats),
             sim: cfg.sim,
+            worker_batches: Arc::clone(&worker_batches),
+            worker: 0,
         };
-        let workers = vec![
-            spawn_worker("bfs-service-fast", ctx.clone(), Arc::clone(&fast), true),
-            spawn_worker(
-                "bfs-service-accurate",
-                ctx,
-                Arc::clone(&accurate),
-                false,
-            ),
-        ];
+        let mut workers = Vec::with_capacity(fast_workers + 1);
+        for i in 0..fast_workers {
+            let mut worker_ctx = ctx.clone();
+            worker_ctx.worker = i;
+            workers.push(spawn_worker(
+                &format!("bfs-service-fast-{i}"),
+                worker_ctx,
+                Arc::clone(&fast),
+                true,
+            ));
+        }
+        workers.push(spawn_worker(
+            "bfs-service-accurate",
+            ctx,
+            Arc::clone(&accurate),
+            false,
+        ));
         Self {
             catalog,
             cache,
             stats,
+            worker_batches,
             fast,
             accurate,
             workers,
@@ -256,6 +287,17 @@ impl BfsService {
     /// Snapshot the service counters.
     pub fn stats(&self) -> ServiceStats {
         self.stats.snapshot()
+    }
+
+    /// Coalesced batches executed by each fast-tier worker, indexed by
+    /// worker id. The entries sum to [`ServiceStats::batches`]; the
+    /// split shows whether concurrent drains actually spread across
+    /// workers or one worker absorbed the whole queue.
+    pub fn fast_worker_batches(&self) -> Vec<u64> {
+        self.worker_batches
+            .iter()
+            .map(|counter| counter.load(Ordering::Relaxed))
+            .collect()
     }
 
     /// Number of level arrays currently cached.
@@ -366,12 +408,15 @@ fn serve_fast_group(ctx: &WorkerCtx, name: &str, policy: Policy, jobs: Vec<Job>)
     // Concurrent queries for the same (graph, policy) become one
     // multi-root batch: the driver shards the distinct roots over its
     // rayon pool, and every waiter is answered from the shared result.
-    let batch = BatchDriver::new(Arc::clone(&resident.graph), ctx.sim.part).run_batch(
-        &roots,
-        &ctx.sim,
-        || policy.build(),
-    );
+    // Binding the sim's traffic config forwards the host-datapath knobs
+    // (including intra-query `threads`) into the batch's engines.
+    let batch = BatchDriver::new(Arc::clone(&resident.graph), ctx.sim.part)
+        .with_config(ctx.sim.traffic_config())
+        .run_batch(&roots, &ctx.sim, || policy.build());
     ctx.stats.batches.fetch_add(1, Ordering::Relaxed);
+    if let Some(slot) = ctx.worker_batches.get(ctx.worker) {
+        slot.fetch_add(1, Ordering::Relaxed);
+    }
     ctx.stats
         .batched_roots
         .fetch_add(roots.len() as u64, Ordering::Relaxed);
@@ -551,6 +596,8 @@ mod tests {
             cache: Arc::new(LevelCache::new(64)),
             stats: Arc::new(AtomicStats::default()),
             sim: SimConfig::u280(2, 4),
+            worker_batches: Arc::new(vec![AtomicU64::new(0)]),
+            worker: 0,
         };
         let roots = reference::sample_roots(&resident.graph, 3, 7);
         // Five concurrent waiters over three distinct roots (one
@@ -591,6 +638,43 @@ mod tests {
         assert_eq!(stats.batches, 1, "one batch served all waiters");
         assert_eq!(stats.batched_roots, 3);
         assert_eq!(ctx.cache.len(), 3);
+        assert_eq!(ctx.worker_batches[0].load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn multi_worker_fast_tier_is_correct_and_accounted() {
+        // Four fast workers over the shared queue, intra-query threads
+        // on: every query still answers the reference tree, and the
+        // per-worker batch split sums to the aggregate counter.
+        let catalog = Arc::new(GraphCatalog::new());
+        catalog.insert("rmat", generators::rmat_graph500(9, 8, 31));
+        let service = BfsService::start(
+            catalog,
+            ServiceConfig {
+                sim: SimConfig::u280(2, 4).with_threads(2),
+                cache_entries: 0, // force every query to compute
+                fast_workers: 4,
+                ..ServiceConfig::default()
+            },
+        );
+        assert_eq!(service.fast_worker_batches().len(), 4);
+        let g = service.catalog().get("rmat").unwrap().graph;
+        let roots = reference::sample_roots(&g, 8, 31);
+        let tickets: Vec<(VertexId, Ticket)> = roots
+            .iter()
+            .map(|&root| (root, service.submit(Query::levels("rmat", root)).unwrap()))
+            .collect();
+        for (root, ticket) in tickets {
+            let response = ticket.wait().unwrap();
+            assert!(!response.cache_hit);
+            assert_eq!(*levels_of(&response), reference::bfs(&g, root).levels);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.completed, roots.len() as u64);
+        assert_eq!(stats.errors, 0);
+        let per_worker = service.fast_worker_batches();
+        assert_eq!(per_worker.iter().sum::<u64>(), stats.batches);
+        assert!(stats.batches >= 1);
     }
 
     #[test]

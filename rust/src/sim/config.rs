@@ -140,6 +140,13 @@ pub struct SimConfig {
     /// ([`TrafficConfig::push_tile_bits`](crate::bfs::bitmap::TrafficConfig));
     /// `None` pushes straight through.
     pub push_tile_bits: Option<u32>,
+    /// Intra-query host worker count
+    /// ([`TrafficConfig::threads`](crate::bfs::bitmap::TrafficConfig)):
+    /// above 1 each dense pull/push iteration expands across word-range
+    /// shards on a private rayon pool (DESIGN.md §8). Host wall-clock
+    /// only — results and every traffic counter the timing models read
+    /// are bit-identical at any value. Default 1 (serial).
+    pub threads: usize,
 }
 
 impl SimConfig {
@@ -164,6 +171,7 @@ impl SimConfig {
             pull_early_exit: false,
             pull_word_parallel: true,
             push_tile_bits: Some(crate::bfs::bitmap::DEFAULT_PUSH_TILE_BITS),
+            threads: 1,
         }
     }
 
@@ -192,6 +200,13 @@ impl SimConfig {
     pub fn with_xbar_fifo_depth(mut self, depth: usize) -> Self {
         assert!(depth >= 1);
         self.xbar_fifo_depth = depth;
+        self
+    }
+
+    /// Override the intra-query host worker count (values below 1
+    /// clamp to the serial datapath).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -238,7 +253,8 @@ impl SimConfig {
     pub fn traffic_config(&self) -> crate::bfs::bitmap::TrafficConfig {
         let mut tc = crate::bfs::bitmap::TrafficConfig::for_partitioning(self.part)
             .with_pull_word_parallel(self.pull_word_parallel)
-            .with_push_tiling(self.push_tile_bits);
+            .with_push_tiling(self.push_tile_bits)
+            .with_threads(self.threads);
         tc.pull_early_exit = self.pull_early_exit;
         tc
     }
@@ -329,10 +345,12 @@ mod tests {
         cfg.pull_early_exit = true;
         cfg.pull_word_parallel = false;
         cfg.push_tile_bits = Some(12);
+        cfg.threads = 5;
         let tc = cfg.traffic_config();
         assert!(tc.pull_early_exit);
         assert!(!tc.pull_word_parallel);
         assert_eq!(tc.push_tile_bits, Some(12));
+        assert_eq!(tc.threads, 5);
         assert_eq!(tc.dw_bytes, cfg.dw_bytes());
         // Defaults agree with TrafficConfig::for_partitioning.
         let def = SimConfig::u280(4, 8).traffic_config();
@@ -340,6 +358,10 @@ mod tests {
         assert_eq!(def.pull_early_exit, base.pull_early_exit);
         assert_eq!(def.pull_word_parallel, base.pull_word_parallel);
         assert_eq!(def.push_tile_bits, base.push_tile_bits);
+        assert_eq!(def.threads, base.threads);
+        // The builder clamps and u280 defaults to serial.
+        assert_eq!(base.threads, 1);
+        assert_eq!(SimConfig::u280(4, 8).with_threads(0).threads, 1);
     }
 
     #[test]

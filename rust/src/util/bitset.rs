@@ -6,6 +6,8 @@
 //! words, which is what makes the Rust functional engine fast enough to
 //! drive the timing simulator over hundreds of millions of edges.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// A fixed-capacity bitset over `u64` words.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Bitset {
@@ -198,6 +200,31 @@ impl Bitset {
         newly
     }
 
+    /// Reborrow the backing words as an [`AtomicBitset`] view so
+    /// concurrent shards can test-and-set visited bits without racing.
+    ///
+    /// Taking `&mut self` guarantees the borrow is exclusive: for the
+    /// lifetime of the view no plain (non-atomic) access to the words
+    /// can coexist with the atomic one, which is exactly the aliasing
+    /// condition `AtomicU64::from_mut`-style casts require. The view is
+    /// zero-copy — dropping it leaves the words in place, so a
+    /// sharded parallel phase can run atomically and the serial code
+    /// around it keeps using the ordinary word API.
+    pub fn as_atomic(&mut self) -> AtomicBitset<'_> {
+        // SAFETY: `AtomicU64` has the same size and alignment as `u64`
+        // (guaranteed by std: "This type has the same size and bit
+        // validity as the underlying integer type"), and `&mut self`
+        // makes this borrow exclusive, so no non-atomic access can
+        // overlap the view's lifetime.
+        let words = unsafe {
+            std::slice::from_raw_parts(self.bits.as_ptr() as *const AtomicU64, self.bits.len())
+        };
+        AtomicBitset {
+            words,
+            len: self.len,
+        }
+    }
+
     /// Visit every set bit whose index falls in words
     /// `[word_start, word_end)` (clamped to the bit length), in ascending
     /// order. This is the primitive behind sharded parallel scans: each
@@ -263,6 +290,98 @@ impl Bitset {
             cur: !self.bits.first().copied().unwrap_or(0),
         }
     }
+}
+
+/// Atomic view over a [`Bitset`]'s backing words, obtained via
+/// [`Bitset::as_atomic`].
+///
+/// This is the concurrency primitive behind the sharded parallel push:
+/// many shards race to claim destination vertices, and
+/// [`test_and_set_word_atomic`](Self::test_and_set_word_atomic) makes
+/// each bit claimable exactly once (`fetch_or` returns the prior word,
+/// so the winner — and only the winner — sees its bit as newly set).
+/// All operations use `Relaxed` ordering: the bits themselves are the
+/// data (no other memory is published through them), and the rayon
+/// join at the end of a parallel phase provides the happens-before
+/// edge the serial merge needs.
+pub struct AtomicBitset<'a> {
+    words: &'a [AtomicU64],
+    len: usize,
+}
+
+impl AtomicBitset<'_> {
+    /// Number of addressable bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when `len() == 0`.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of backing `u64` words.
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Atomically read backing word `wi` (0 for out-of-range indices).
+    #[inline]
+    pub fn load_word(&self, wi: usize) -> u64 {
+        self.words.get(wi).map_or(0, |w| w.load(Ordering::Relaxed))
+    }
+
+    /// Atomic chunked test-and-set: OR `mask` into word `wi` and return
+    /// the bits of `mask` that this caller **newly** set. Concurrent
+    /// callers targeting the same word partition `mask`'s fresh bits
+    /// among themselves — each bit is reported newly-set to exactly one
+    /// caller, which is what keeps `newly_visited` an exact count (not
+    /// an over-count) under parallel expansion.
+    #[inline]
+    pub fn test_and_set_word_atomic(&self, wi: usize, mask: u64) -> u64 {
+        let prev = self.words[wi].fetch_or(mask, Ordering::Relaxed);
+        mask & !prev
+    }
+
+    /// Atomic single-bit test-and-set; returns the **previous** value,
+    /// like the serial [`Bitset::test_and_set`].
+    #[inline]
+    pub fn test_and_set_atomic(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let m = 1u64 << (i & 63);
+        self.words[i >> 6].fetch_or(m, Ordering::Relaxed) & m != 0
+    }
+}
+
+/// Split `num_words` backing words into at most `shards` contiguous,
+/// disjoint, ascending `(word_start, word_end)` ranges that cover
+/// `[0, num_words)`.
+///
+/// This is the unit of work distribution for every sharded parallel
+/// scan: workers take ranges, and because the ranges are word-aligned
+/// and ascending, per-shard results concatenate back in vertex order —
+/// the property the deterministic merge relies on. Ranges differ in
+/// length by at most one word; empty ranges are never produced (fewer
+/// than `shards` ranges come back when `num_words < shards`).
+pub fn shard_word_ranges(num_words: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.max(1).min(num_words.max(1));
+    if num_words == 0 {
+        return Vec::new();
+    }
+    let base = num_words / shards;
+    let extra = num_words % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, num_words);
+    ranges
 }
 
 /// Iterator over set bits.
@@ -529,5 +648,108 @@ mod tests {
         assert_eq!(b.count_ones(), 4);
         // Second application: nothing new.
         assert_eq!(b.test_and_set_word(0, 0b1111), 0);
+    }
+
+    #[test]
+    fn atomic_view_round_trips_through_plain_words() {
+        let mut b = Bitset::new(130);
+        b.set(0);
+        b.set(129);
+        {
+            let a = b.as_atomic();
+            assert_eq!(a.len(), 130);
+            assert_eq!(a.num_words(), 3);
+            assert_eq!(a.load_word(0), 1);
+            assert_eq!(a.load_word(2), 1 << 1);
+            assert_eq!(a.load_word(99), 0);
+            // Mutations through the view land in the backing words.
+            assert_eq!(a.test_and_set_word_atomic(1, 0b10), 0b10);
+        }
+        assert!(b.get(65));
+        assert_eq!(b.count_ones(), 3);
+    }
+
+    #[test]
+    fn atomic_test_and_set_word_matches_serial_semantics() {
+        let mut serial = Bitset::new(128);
+        let mut atomic = Bitset::new(128);
+        let masks = [(0usize, 0b1111u64), (0, 0b0110), (1, !0u64), (1, 1)];
+        for &(wi, m) in &masks {
+            let want = serial.test_and_set_word(wi, m);
+            let got = atomic.as_atomic().test_and_set_word_atomic(wi, m);
+            assert_eq!(got, want);
+        }
+        assert_eq!(serial, atomic);
+    }
+
+    #[test]
+    fn atomic_single_bit_reports_previous() {
+        let mut b = Bitset::new(70);
+        let a = b.as_atomic();
+        assert!(!a.test_and_set_atomic(69));
+        assert!(a.test_and_set_atomic(69));
+    }
+
+    #[test]
+    fn concurrent_fetch_or_claims_each_bit_exactly_once() {
+        // N threads race to claim every bit of the same words; fetch_or
+        // must hand each bit to exactly one claimant and the union of
+        // "newly" masks must be the full word — the invariant the
+        // parallel push's newly_visited accounting rests on.
+        const THREADS: usize = 8;
+        const WORDS: usize = 16;
+        let mut b = Bitset::new(WORDS * 64);
+        let view = b.as_atomic();
+        let claimed: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let view = &view;
+                    s.spawn(move || {
+                        (0..WORDS)
+                            .map(|wi| view.test_and_set_word_atomic(wi, !0u64))
+                            .collect::<Vec<u64>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Each bit of each word was claimed by exactly one thread: the
+        // per-thread "newly" masks are pairwise disjoint and union to
+        // all-ones, word by word.
+        for wi in 0..WORDS {
+            let mut union = 0u64;
+            for thread_masks in &claimed {
+                assert_eq!(union & thread_masks[wi], 0, "bit claimed twice");
+                union |= thread_masks[wi];
+            }
+            assert_eq!(union, !0u64, "every bit claimed exactly once");
+        }
+        drop(view);
+        assert_eq!(b.count_ones(), WORDS * 64);
+    }
+
+    #[test]
+    fn shard_word_ranges_cover_disjoint_ascending() {
+        for num_words in [0usize, 1, 2, 7, 64, 100] {
+            for shards in [1usize, 2, 3, 8, 200] {
+                let ranges = shard_word_ranges(num_words, shards);
+                if num_words == 0 {
+                    assert!(ranges.is_empty());
+                    continue;
+                }
+                assert!(ranges.len() <= shards);
+                let mut next = 0;
+                for &(s, e) in &ranges {
+                    assert_eq!(s, next, "contiguous ascending");
+                    assert!(e > s, "no empty ranges");
+                    next = e;
+                }
+                assert_eq!(next, num_words, "full cover");
+                // Balanced: lengths differ by at most one.
+                let lens: Vec<usize> = ranges.iter().map(|&(s, e)| e - s).collect();
+                let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(max - min <= 1);
+            }
+        }
     }
 }

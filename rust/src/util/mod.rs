@@ -12,6 +12,6 @@ pub mod tables;
 pub mod prop;
 pub mod units;
 
-pub use bitset::Bitset;
+pub use bitset::{shard_word_ranges, AtomicBitset, Bitset};
 pub use rng::SplitMix64;
 pub use rng::Xoshiro256;

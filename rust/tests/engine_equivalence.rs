@@ -48,6 +48,33 @@ fn random_graph(rng: &mut Xoshiro256) -> Arc<Graph> {
     Arc::new(generators::rmat_graph500(scale, degree, rng.next_u64()))
 }
 
+/// Field-by-field equality of every timing-relevant traffic counter.
+/// `p1_words_scanned` / `p1_bits_set` are host-attribution only and
+/// legitimately differ between datapaths, so they are not compared.
+fn assert_traffic_identical(
+    a: &scalabfs::bfs::traffic::RunTraffic,
+    b: &scalabfs::bfs::traffic::RunTraffic,
+    label: &str,
+) {
+    assert_eq!(a.iters.len(), b.iters.len(), "{label}: iteration counts");
+    for (x, y) in a.iters.iter().zip(&b.iters) {
+        let i = x.iteration;
+        assert_eq!(x.iteration, y.iteration, "{label}");
+        assert_eq!(x.mode, y.mode, "{label} iter {i}");
+        assert_eq!(x.list_fetches, y.list_fetches, "{label} iter {i}");
+        assert_eq!(x.neighbors_streamed, y.neighbors_streamed, "{label} iter {i}");
+        assert_eq!(x.newly_visited, y.newly_visited, "{label} iter {i}");
+        assert_eq!(x.frontier_size, y.frontier_size, "{label} iter {i}");
+        assert_eq!(x.scanned_bits, y.scanned_bits, "{label} iter {i}");
+        assert_eq!(x.frontier_fifo_pops, y.frontier_fifo_pops, "{label} iter {i}");
+        assert_eq!(x.per_pe_fetches, y.per_pe_fetches, "{label} iter {i}");
+        assert_eq!(x.per_pe_recv, y.per_pe_recv, "{label} iter {i}");
+        assert_eq!(x.per_pg_offset_bytes, y.per_pg_offset_bytes, "{label} iter {i}");
+        assert_eq!(x.per_pg_edge_bytes, y.per_pg_edge_bytes, "{label} iter {i}");
+        assert_eq!(x.crossbar_results, y.crossbar_results, "{label} iter {i}");
+    }
+}
+
 /// Every engine × mode policy × PC/PE config on random RMAT graphs.
 #[test]
 fn all_engines_match_reference_across_random_graphs() {
@@ -140,11 +167,9 @@ fn batch_driver_bit_exact_at_any_worker_count() {
     let roots = reference::sample_roots(&g, 8, 7);
     let driver = BatchDriver::new(g.clone(), cfg.part);
     let wide = driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
-    let narrow = rayon::ThreadPoolBuilder::new()
-        .num_threads(1)
-        .build()
-        .unwrap()
-        .install(|| driver.run_batch(&roots, &cfg, || Box::new(Hybrid::default())));
+    let narrow = BatchDriver::new(g.clone(), cfg.part)
+        .with_threads(Some(1))
+        .run_batch(&roots, &cfg, || Box::new(Hybrid::default()));
     for (i, &root) in roots.iter().enumerate() {
         let truth = reference::bfs(&g, root);
         assert_eq!(wide.runs[i].levels, truth.levels, "root {root} (wide)");
@@ -229,30 +254,7 @@ fn cycle_engine_bit_identical_across_dispatcher_fabrics() {
 #[test]
 fn host_datapaths_traffic_identical_to_scalar_oracle() {
     use scalabfs::bfs::bitmap::{BitmapEngine, TrafficConfig};
-    use scalabfs::bfs::traffic::RunTraffic;
     use scalabfs::graph::Partitioning;
-
-    fn assert_traffic_identical(a: &RunTraffic, b: &RunTraffic, label: &str) {
-        assert_eq!(a.iters.len(), b.iters.len(), "{label}: iteration counts");
-        for (x, y) in a.iters.iter().zip(&b.iters) {
-            let i = x.iteration;
-            assert_eq!(x.iteration, y.iteration, "{label}");
-            assert_eq!(x.mode, y.mode, "{label} iter {i}");
-            assert_eq!(x.list_fetches, y.list_fetches, "{label} iter {i}");
-            assert_eq!(x.neighbors_streamed, y.neighbors_streamed, "{label} iter {i}");
-            assert_eq!(x.newly_visited, y.newly_visited, "{label} iter {i}");
-            assert_eq!(x.frontier_size, y.frontier_size, "{label} iter {i}");
-            assert_eq!(x.scanned_bits, y.scanned_bits, "{label} iter {i}");
-            assert_eq!(x.frontier_fifo_pops, y.frontier_fifo_pops, "{label} iter {i}");
-            assert_eq!(x.per_pe_fetches, y.per_pe_fetches, "{label} iter {i}");
-            assert_eq!(x.per_pe_recv, y.per_pe_recv, "{label} iter {i}");
-            assert_eq!(x.per_pg_offset_bytes, y.per_pg_offset_bytes, "{label} iter {i}");
-            assert_eq!(x.per_pg_edge_bytes, y.per_pg_edge_bytes, "{label} iter {i}");
-            assert_eq!(x.crossbar_results, y.crossbar_results, "{label} iter {i}");
-            // p1_words_scanned / p1_bits_set are host-attribution only
-            // and legitimately differ between datapaths.
-        }
-    }
 
     let mut rng = Xoshiro256::seed_from(0x60D5EED);
     for case in 0..4 {
@@ -292,6 +294,63 @@ fn host_datapaths_traffic_identical_to_scalar_oracle() {
                         "{label}: traversed edges"
                     );
                     assert_traffic_identical(&oracle.traffic, &fast.traffic, &label);
+                }
+            }
+        }
+    }
+}
+
+/// The PR-8 thread-count axis: the sharded parallel pull and the
+/// atomic-claim parallel push must be *traffic*-identical — not just
+/// level-identical — to the scalar oracle at every tested thread count,
+/// across forced pull/push × sparse/dense representations. Same
+/// discipline as the word-parallel axis above: the timing simulators
+/// price cycles from these counters, so intra-query parallelism must be
+/// order-unobservable.
+#[test]
+fn sharded_datapaths_traffic_identical_at_every_thread_count() {
+    use scalabfs::bfs::bitmap::{BitmapEngine, TrafficConfig};
+    use scalabfs::graph::Partitioning;
+
+    let mut rng = Xoshiro256::seed_from(0x5AA5D8);
+    for case in 0..3 {
+        let g = random_graph(&mut rng);
+        let root = reference::sample_roots(&g, 1, rng.next_u64())[0];
+        let truth = reference::bfs(&g, root);
+        let part = Partitioning::new(8, 4);
+        let base = TrafficConfig::for_partitioning(part);
+        for mode in [Mode::Push, Mode::Pull] {
+            for repr in [ReprPolicy::Sparse, ReprPolicy::Dense] {
+                let mut oracle_engine =
+                    BitmapEngine::new(g.clone(), part).with_config(base.host_scalar());
+                let mut policy = WithRepr {
+                    inner: Fixed(mode),
+                    repr,
+                };
+                let oracle = oracle_engine.run(root, &mut policy);
+                assert_eq!(
+                    oracle.levels, truth.levels,
+                    "case={case} scalar oracle diverged from reference"
+                );
+                for threads in [1usize, 2, 7] {
+                    let mut engine =
+                        BitmapEngine::new(g.clone(), part).with_config(base.with_threads(threads));
+                    let mut policy = WithRepr {
+                        inner: Fixed(mode),
+                        repr,
+                    };
+                    let run = engine.run(root, &mut policy);
+                    let label = format!(
+                        "case={case} root={root} mode={mode:?} repr={} threads={threads}",
+                        repr.label()
+                    );
+                    assert_eq!(run.levels, oracle.levels, "{label}: levels");
+                    assert_eq!(run.reached, oracle.reached, "{label}: reached");
+                    assert_eq!(
+                        run.traversed_edges, oracle.traversed_edges,
+                        "{label}: traversed edges"
+                    );
+                    assert_traffic_identical(&oracle.traffic, &run.traffic, &label);
                 }
             }
         }
