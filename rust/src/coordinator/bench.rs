@@ -607,6 +607,63 @@ fn service_section(smoke: bool) -> Result<Section> {
     })
 }
 
+/// Multi-card scale-out: the cycle-stepped `multicard` engine on one
+/// vs two simulated U280s. Bit-identity against the reference BFS is
+/// asserted before any throughput claim, the 2-over-1 GTEPS ratio is
+/// floor-gated (scale-out must beat one card even after link pricing),
+/// and the 2-card run's link counters are persisted exactly — they are
+/// deterministic simulator outputs.
+fn cards_section(smoke: bool) -> Result<Section> {
+    let (scale, pcs_per_card, pes_per_card) = if smoke {
+        (14u32, 2usize, 4usize)
+    } else {
+        (18, 8, 16)
+    };
+    println!("[bench] cards: RMAT-{scale} d16, 1 vs 2 cards x {pcs_per_card} PC ...");
+    let tag = format!("rmat{scale}");
+    let g = Arc::new(generators::rmat_graph500(scale, 16, 5));
+    let root = reference::sample_roots(&g, 1, 5)[0];
+    let truth = reference::bfs(&g, root);
+    let bytes = g.csr.footprint_bytes(4) + g.csc.footprint_bytes(4);
+    let mut gteps = Vec::new();
+    let mut host_ms = Vec::new();
+    let mut link = (0u64, 0u64);
+    for cards in [1usize, 2] {
+        let cfg = SimConfig::multi_card(cards, pcs_per_card, pes_per_card);
+        let mut engine = crate::exec::build_engine("multicard", &g, &cfg)?;
+        let mut state = SearchState::new(g.num_vertices());
+        let t0 = Instant::now();
+        let run = engine.run_with_state(&mut state, root, &mut Hybrid::default())?;
+        host_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        anyhow::ensure!(
+            run.levels == truth.levels,
+            "{cards}-card multicard run diverged from the reference BFS"
+        );
+        let res = crate::sim::throughput::time_run(&run, &cfg, &g.name, bytes)?;
+        if cards == 2 {
+            link = (res.total_link_msgs(), res.total_link_stalls());
+        }
+        gteps.push(res.gteps);
+    }
+    let floor = if smoke { 1.05 } else { 1.3 };
+    Ok(Section {
+        name: "cards",
+        metrics: vec![
+            exact(format!("cards1_gteps_{tag}"), gteps[0], "GTEPS"),
+            exact(format!("cards2_gteps_{tag}"), gteps[1], "GTEPS"),
+            ratio(
+                format!("cards2_vs_1_gteps_{tag}"),
+                gteps[1] / gteps[0].max(1e-12),
+                floor,
+            ),
+            exact(format!("cards2_link_msgs_{tag}"), link.0 as f64, "msgs"),
+            exact(format!("cards2_link_stalls_{tag}"), link.1 as f64, "stalls"),
+            wall(format!("cards1_host_ms_{tag}"), host_ms[0], "ms"),
+            wall(format!("cards2_host_ms_{tag}"), host_ms[1], "ms"),
+        ],
+    })
+}
+
 /// Run the whole suite and return the `scalabfs-bench-v1` document
 /// (provenance `"measured"`).
 pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
@@ -620,6 +677,7 @@ pub fn run_suite(opts: &BenchOptions) -> Result<Json> {
         cycle_section(opts.smoke)?,
         graphs_section(opts.smoke),
         service_section(opts.smoke)?,
+        cards_section(opts.smoke)?,
     ];
     Ok(Json::obj(vec![
         ("schema", Json::Str(SCHEMA.into())),

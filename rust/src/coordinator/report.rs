@@ -327,6 +327,25 @@ pub fn sim_result_json(r: &SimResult) -> Json {
             ),
         ),
         (
+            "links",
+            Json::Arr(
+                r.link_stats
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("src", Json::Num(s.src as f64)),
+                            ("dst", Json::Num(s.dst as f64)),
+                            ("sent", Json::Num(s.sent as f64)),
+                            ("delivered", Json::Num(s.delivered as f64)),
+                            ("stalls", Json::Num(s.stall_cycles as f64)),
+                            ("avg_occupancy", Json::Num(s.avg_occupancy())),
+                            ("max_occupancy", Json::Num(s.max_occupancy as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
             "iterations",
             Json::Arr(
                 r.iters
@@ -418,6 +437,45 @@ pub fn pe_scaling_json(c: &crate::coordinator::sweep::PeScalingCurve) -> Json {
                             ("disp_stalls", Json::Num(p.disp_stalls as f64)),
                             ("disp_avg_occupancy", Json::Num(p.disp_avg_occupancy)),
                             ("bram_stalls", Json::Num(p.bram_stalls as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Serialize a [`CardScalingCurve`](crate::coordinator::sweep::CardScalingCurve)
+/// — the multi-card scale-out record, V100 crossing included.
+pub fn card_scaling_json(c: &crate::coordinator::sweep::CardScalingCurve) -> Json {
+    Json::obj(vec![
+        ("engine", Json::Str(c.engine.clone())),
+        ("graph", Json::Str(c.graph.clone())),
+        ("pcs_per_card", Json::Num(c.pcs_per_card as f64)),
+        ("pes_per_card", Json::Num(c.pes_per_card as f64)),
+        ("v100_gteps", Json::Num(c.v100_gteps)),
+        (
+            "v100_crossing_cards",
+            match c.v100_crossing() {
+                Some(k) => Json::Num(k as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "points",
+            Json::Arr(
+                c.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("cards", Json::Num(p.cards as f64)),
+                            ("pcs", Json::Num(p.pcs as f64)),
+                            ("pes", Json::Num(p.pes as f64)),
+                            ("gteps", Json::Num(p.gteps)),
+                            ("speedup", Json::Num(p.speedup)),
+                            ("link_msgs", Json::Num(p.link_msgs as f64)),
+                            ("link_stalls", Json::Num(p.link_stalls as f64)),
+                            ("link_avg_occupancy", Json::Num(p.link_avg_occupancy)),
                         ])
                     })
                     .collect(),
@@ -571,6 +629,35 @@ mod tests {
         assert!(json.contains("\"break_point_pes_per_pc\":16"));
         assert!(json.contains("\"disp_conflicts\":11"));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn card_scaling_curve_serializes_with_crossing() {
+        use crate::coordinator::sweep::{CardScalingCurve, CardScalingPoint};
+        let mk = |cards: usize, gteps: f64| CardScalingPoint {
+            cards,
+            pcs: cards * 8,
+            pes: cards * 16,
+            gteps,
+            speedup: 1.0,
+            link_msgs: 1234,
+            link_stalls: 9,
+            link_avg_occupancy: 1.5,
+        };
+        let c = CardScalingCurve {
+            engine: "multicard".into(),
+            graph: "RMAT18-16".into(),
+            pcs_per_card: 8,
+            pes_per_card: 16,
+            v100_gteps: 12.0,
+            points: vec![mk(1, 8.0), mk(2, 13.0), mk(4, 20.0)],
+        };
+        let json = card_scaling_json(&c).render();
+        assert!(json.contains("\"v100_crossing_cards\":2"));
+        assert!(json.contains("\"link_msgs\":1234"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let back = Json::parse(&json).unwrap();
+        assert_eq!(back.render(), json);
     }
 
     #[test]

@@ -271,6 +271,150 @@ pub fn pe_scaling(
     })
 }
 
+/// One point of the multi-card scale-out curve: a card count with its
+/// aggregate throughput and the inter-card link telemetry that explains
+/// where the scaling bends.
+#[derive(Clone, Debug)]
+pub struct CardScalingPoint {
+    /// Simulated U280 cards.
+    pub cards: usize,
+    /// Total HBM PCs across the cards.
+    pub pcs: usize,
+    /// Total PEs across the cards.
+    pub pes: usize,
+    /// Aggregate GTEPS.
+    pub gteps: f64,
+    /// Speedup over the curve's first point.
+    pub speedup: f64,
+    /// Messages that crossed the card mesh.
+    pub link_msgs: u64,
+    /// Link back-pressure events (sends refused by full FIFOs).
+    pub link_stalls: u64,
+    /// Mean in-flight messages per link per cycle.
+    pub link_avg_occupancy: f64,
+}
+
+/// A GTEPS-vs-cards curve with the V100 comparison line the scale-out
+/// question is really about: at how many cards does the aggregate cross
+/// a single V100 ([`crate::model::gpu`])?
+#[derive(Clone, Debug)]
+pub struct CardScalingCurve {
+    /// Engine that produced the curve.
+    pub engine: String,
+    /// Graph it ran on.
+    pub graph: String,
+    /// HBM PCs per card, held fixed across the curve.
+    pub pcs_per_card: usize,
+    /// PEs per card, held fixed across the curve.
+    pub pes_per_card: usize,
+    /// The single-V100 roofline GTEPS the curve is compared against.
+    pub v100_gteps: f64,
+    /// Points in ascending card order.
+    pub points: Vec<CardScalingPoint>,
+}
+
+impl CardScalingCurve {
+    /// First card count whose aggregate GTEPS meets or beats the V100
+    /// line, `None` if the curve never crosses it.
+    pub fn v100_crossing(&self) -> Option<usize> {
+        self.points
+            .iter()
+            .find(|p| p.gteps >= self.v100_gteps)
+            .map(|p| p.cards)
+    }
+
+    /// Render the curve as report lines (one per point, plus the V100
+    /// line and where the curve crosses it).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "Card scaling [{}] on {} ({} PC x {} PE per card; cards -> GTEPS, link msgs/stalls, occupancy):\n",
+            self.engine, self.graph, self.pcs_per_card, self.pes_per_card
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "  {:>2} card ({:>3} PC, {:>3} PE): {:>7.3} GTEPS  x{:<5.2} link {:>9}/{:<7} occ {:>5.1}\n",
+                p.cards,
+                p.pcs,
+                p.pes,
+                p.gteps,
+                p.speedup,
+                p.link_msgs,
+                p.link_stalls,
+                p.link_avg_occupancy
+            ));
+        }
+        out.push_str(&format!("  V100 line: {:.3} GTEPS\n", self.v100_gteps));
+        match self.v100_crossing() {
+            Some(c) => out.push_str(&format!("  crosses the V100 line at {c} card(s)\n")),
+            None => out.push_str("  never crosses the V100 line\n"),
+        }
+        out
+    }
+}
+
+/// The multi-card scale-out axis: per-card shape pinned at
+/// `pcs_per_card` x `pes_per_card`, card count swept through
+/// `cards_list` on the [`MultiCardSim`](crate::sim::MultiCardSim)
+/// engine. Every point re-runs the same root and carries the mesh's
+/// measured message/stall counts, so the curve prices inter-card
+/// traffic instead of assuming linear scaling. The V100 comparison line
+/// comes from the bandwidth roofline
+/// ([`crate::model::gpu::v100_roofline_gteps`]) at the graph's own
+/// average degree.
+pub fn card_scaling(
+    graph: &Arc<Graph>,
+    cards_list: &[usize],
+    pcs_per_card: usize,
+    pes_per_card: usize,
+    seed: u64,
+) -> Result<CardScalingCurve> {
+    for &cards in cards_list {
+        anyhow::ensure!(
+            cards >= 1 && cards.is_power_of_two(),
+            "card count must be a power of two (got {cards})"
+        );
+    }
+    let roots = crate::bfs::reference::sample_roots(graph, 1, seed);
+    anyhow::ensure!(!roots.is_empty(), "no roots");
+    let root = roots[0];
+    let bytes = graph.csr.footprint_bytes(4) + graph.csc.footprint_bytes(4);
+    let mut state = SearchState::new(graph.num_vertices());
+    let mut points: Vec<CardScalingPoint> = Vec::new();
+    for &cards in cards_list {
+        let cfg = SimConfig::multi_card(cards, pcs_per_card, pes_per_card);
+        let mut engine = build_engine("multicard", graph, &cfg)?;
+        let mut policy = make_policy("hybrid");
+        let run = engine.run_with_state(&mut state, root, policy.as_mut())?;
+        let res = time_run(&run, &cfg, &graph.name, bytes)?;
+        let base = points.first().map(|p| p.gteps).unwrap_or(res.gteps);
+        let occ_cycles: u64 = res.link_stats.iter().map(|s| s.cycles).sum();
+        let occ_sum: u64 = res.link_stats.iter().map(|s| s.occupancy_sum).sum();
+        points.push(CardScalingPoint {
+            cards,
+            pcs: cards * pcs_per_card,
+            pes: cards * pes_per_card,
+            gteps: res.gteps,
+            speedup: if base > 0.0 { res.gteps / base } else { 1.0 },
+            link_msgs: res.total_link_msgs(),
+            link_stalls: res.total_link_stalls(),
+            link_avg_occupancy: if occ_cycles == 0 {
+                0.0
+            } else {
+                occ_sum as f64 / occ_cycles as f64
+            },
+        });
+    }
+    let avg_degree = graph.num_edges() as f64 / graph.num_vertices().max(1) as f64;
+    Ok(CardScalingCurve {
+        engine: "multicard".into(),
+        graph: graph.name.clone(),
+        pcs_per_card,
+        pes_per_card,
+        v100_gteps: crate::model::gpu::v100_roofline_gteps(avg_degree, 8.0, 0.85),
+        points,
+    })
+}
+
 /// One point of a PC-axis curve.
 #[derive(Clone, Debug)]
 pub struct PcScalingPoint {
@@ -591,6 +735,54 @@ mod tests {
         };
         assert_eq!(saturating.knee(), Some(4));
         assert!(saturating.render().contains("knee"));
+    }
+
+    #[test]
+    fn card_scaling_curve_aggregates_and_prices_links() {
+        // 1 -> 2 cards on the multi-card cycle engine: the single-card
+        // point has no mesh, the two-card point must have measured
+        // cross-card traffic, and both carry real throughput.
+        let g = Arc::new(generators::rmat_graph500(9, 8, 77));
+        let curve = card_scaling(&g, &[1, 2], 2, 4, 77).unwrap();
+        assert_eq!(curve.points.len(), 2);
+        assert_eq!(curve.points[0].cards, 1);
+        assert_eq!(curve.points[0].link_msgs, 0, "no links at one card");
+        assert!(curve.points[1].link_msgs > 0, "2 cards must exchange");
+        assert_eq!(curve.points[1].pcs, 4);
+        assert_eq!(curve.points[1].pes, 8);
+        for p in &curve.points {
+            assert!(p.gteps > 0.0, "{} cards", p.cards);
+        }
+        assert!(curve.v100_gteps > 0.0);
+        assert!(curve.render().contains("Card scaling"));
+        assert!(curve.render().contains("V100 line"));
+    }
+
+    #[test]
+    fn v100_crossing_detection() {
+        let mk = |cards: usize, gteps: f64| CardScalingPoint {
+            cards,
+            pcs: cards,
+            pes: cards,
+            gteps,
+            speedup: 1.0,
+            link_msgs: 0,
+            link_stalls: 0,
+            link_avg_occupancy: 0.0,
+        };
+        let mut curve = CardScalingCurve {
+            engine: "multicard".into(),
+            graph: "g".into(),
+            pcs_per_card: 1,
+            pes_per_card: 1,
+            v100_gteps: 10.0,
+            points: vec![mk(1, 4.0), mk(2, 8.0), mk(4, 15.0)],
+        };
+        assert_eq!(curve.v100_crossing(), Some(4));
+        assert!(curve.render().contains("crosses the V100 line at 4"));
+        curve.v100_gteps = 100.0;
+        assert_eq!(curve.v100_crossing(), None);
+        assert!(curve.render().contains("never crosses"));
     }
 
     #[test]

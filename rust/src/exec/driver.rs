@@ -18,6 +18,7 @@ use crate::dispatcher::DispatcherStats;
 use crate::graph::VertexId;
 use crate::hbm::pc::merge_pc_stats;
 use crate::pe::merge_pe_stats;
+use crate::sim::link::merge_link_stats;
 use crate::sched::ModePolicy;
 use crate::Result;
 
@@ -70,6 +71,7 @@ pub fn drive<E: BfsEngine + ?Sized>(
     let mut pc_stats = Vec::new();
     let mut dispatcher = DispatcherStats::default();
     let mut pe_stats = Vec::new();
+    let mut link_stats = Vec::new();
 
     while state.frontier_size > 0 {
         let mode = policy.decide(
@@ -96,6 +98,7 @@ pub fn drive<E: BfsEngine + ?Sized>(
         merge_pc_stats(&mut pc_stats, &stats.pc_stats);
         dispatcher.merge(&stats.dispatcher);
         merge_pe_stats(&mut pe_stats, &stats.pe_stats);
+        merge_link_stats(&mut link_stats, &stats.link_stats);
         state.finish_iteration(stats.newly_visited);
     }
 
@@ -111,6 +114,7 @@ pub fn drive<E: BfsEngine + ?Sized>(
         pc_stats,
         dispatcher,
         pe_stats,
+        link_stats,
     })
 }
 

@@ -23,6 +23,7 @@ use crate::hbm::pc::PcStats;
 use crate::pe::PeStats;
 use crate::sched::ModePolicy;
 use crate::sim::config::SimConfig;
+use crate::sim::link::LinkStats;
 use crate::Result;
 
 /// What one [`BfsEngine::step`] call reports back to the shared driver.
@@ -56,6 +57,9 @@ pub struct StepStats {
     /// Per-PE pipeline stats measured this iteration (cycle engine;
     /// empty otherwise), merged into [`BfsRun::pe_stats`].
     pub pe_stats: Vec<PeStats>,
+    /// Per-link inter-card stats measured this iteration (multi-card
+    /// engine; empty otherwise), merged into [`BfsRun::link_stats`].
+    pub link_stats: Vec<LinkStats>,
 }
 
 /// Complete result of a BFS run through the shared driver. This is the
@@ -91,6 +95,9 @@ pub struct BfsRun {
     /// Per-PE pipeline stats merged over the run (empty unless the
     /// engine steps the PE pipelines).
     pub pe_stats: Vec<PeStats>,
+    /// Per-link inter-card stats merged over the run (empty unless the
+    /// engine steps a card mesh).
+    pub link_stats: Vec<LinkStats>,
 }
 
 /// A level-synchronous BFS engine over partitioned bitmap state.
@@ -240,6 +247,20 @@ fn build_cycle(
     }
 }
 
+fn build_multicard(
+    spec: &EngineSpec,
+    graph: Arc<Graph>,
+) -> std::result::Result<Box<dyn BfsEngine>, EngineError> {
+    use crate::sim::multicard::MultiCardSim;
+    match MultiCardSim::try_new(graph, spec.cfg.clone()) {
+        Ok(e) => Ok(Box::new(e)),
+        Err(source) => Err(EngineError::BadPartitioning {
+            name: "multicard",
+            source,
+        }),
+    }
+}
+
 fn build_edge_centric(
     _spec: &EngineSpec,
     graph: Arc<Graph>,
@@ -280,6 +301,10 @@ const REGISTRY: &[Entry] = &[
     Entry {
         name: "cycle",
         build: build_cycle,
+    },
+    Entry {
+        name: "multicard",
+        build: build_multicard,
     },
     Entry {
         name: "edge-centric",

@@ -10,7 +10,7 @@
 
 use super::csr::{Csr, Graph, VertexId};
 
-/// Assignment of vertices to PEs (and PEs to PGs/PCs).
+/// Assignment of vertices to PEs (and PEs to PGs/PCs/cards).
 #[derive(Clone, Copy, Debug)]
 pub struct Partitioning {
     /// Total number of PEs, `Q`. Must be a power of two in ScalaBFS
@@ -18,11 +18,19 @@ pub struct Partitioning {
     pub num_pes: usize,
     /// Number of processing groups == HBM pseudo channels in use.
     pub num_pgs: usize,
+    /// Number of cards the PGs are sharded across (multi-card
+    /// scale-out axis above PC/PG; 1 = the paper's single U280).
+    pub num_cards: usize,
     /// `num_pes - 1`: `VID % Q` as a mask (Q is a power of two). The
     /// modulo is the per-neighbor hot operation of the dispatcher.
     pe_mask: usize,
     /// log2(pes_per_pg): PG of a PE as a shift.
     ppg_shift: u32,
+    /// log2(pgs_per_card): card of a PG as a shift. Cards own
+    /// *contiguous* PG (and therefore PE) ranges, so within a card the
+    /// local PE lane is `global_pe & (pes_per_card - 1)` — exactly the
+    /// `VID % n` routing an unmodified per-card dispatcher computes.
+    cpg_shift: u32,
 }
 
 impl Partitioning {
@@ -41,15 +49,60 @@ impl Partitioning {
         Self {
             num_pes,
             num_pgs,
+            num_cards: 1,
             pe_mask: num_pes - 1,
             ppg_shift: (num_pes / num_pgs).trailing_zeros(),
+            cpg_shift: num_pgs.trailing_zeros(),
         }
+    }
+
+    /// Shard the PGs across `num_cards` simulated cards (contiguous PG
+    /// ranges, so each card owns a power-of-two aligned PE interval).
+    /// `num_cards` must be a power of two dividing the PG count.
+    pub fn with_cards(mut self, num_cards: usize) -> Self {
+        assert!(
+            num_cards > 0 && num_cards.is_power_of_two(),
+            "card count must be a power of two ({num_cards})"
+        );
+        assert!(
+            self.num_pgs % num_cards == 0,
+            "PGs ({}) must divide evenly across cards ({num_cards})",
+            self.num_pgs
+        );
+        self.num_cards = num_cards;
+        self.cpg_shift = (self.num_pgs / num_cards).trailing_zeros();
+        self
     }
 
     /// PEs per PG.
     #[inline]
     pub fn pes_per_pg(&self) -> usize {
         self.num_pes / self.num_pgs
+    }
+
+    /// PGs hosted by each card.
+    #[inline]
+    pub fn pgs_per_card(&self) -> usize {
+        self.num_pgs / self.num_cards
+    }
+
+    /// PEs hosted by each card.
+    #[inline]
+    pub fn pes_per_card(&self) -> usize {
+        self.num_pes / self.num_cards
+    }
+
+    /// Card hosting a PG: contiguous runs of PGs fold onto one card.
+    #[inline]
+    pub fn card_of_pg(&self, pg: usize) -> usize {
+        debug_assert!(pg < self.num_pgs);
+        pg >> self.cpg_shift
+    }
+
+    /// Card owning a vertex's subgraph slice (through its PG).
+    #[inline]
+    pub fn card_of(&self, v: VertexId) -> usize {
+        self.card_of_pg(self.pg_of(v))
     }
 
     /// Owning PE of a vertex: `VID % Q` (mask — Q is a power of two).
@@ -198,6 +251,18 @@ pub fn pg_footprint_bytes(graph: &Graph, p: Partitioning, sv_bytes: usize) -> Ve
     per_pg
 }
 
+/// Per-card shard sizes: the PG footprints of
+/// [`pg_footprint_bytes`] folded along the card axis. Per-card totals
+/// sum to the global footprint by construction — the property the
+/// multi-card partition tests pin.
+pub fn card_footprint_bytes(graph: &Graph, p: Partitioning, sv_bytes: usize) -> Vec<u64> {
+    let mut per_card = vec![0u64; p.num_cards];
+    for (pg, bytes) in pg_footprint_bytes(graph, p, sv_bytes).into_iter().enumerate() {
+        per_card[p.card_of_pg(pg)] += bytes;
+    }
+    per_card
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +322,58 @@ mod tests {
     #[should_panic]
     fn pes_must_divide_into_pgs() {
         let _ = Partitioning::new(6, 4);
+    }
+
+    #[test]
+    fn card_axis_defaults_to_single_card() {
+        let p = Partitioning::new(8, 4);
+        assert_eq!(p.num_cards, 1);
+        assert_eq!(p.pgs_per_card(), 4);
+        assert_eq!(p.pes_per_card(), 8);
+        for pg in 0..4 {
+            assert_eq!(p.card_of_pg(pg), 0);
+        }
+        for v in 0..64u32 {
+            assert_eq!(p.card_of(v), 0);
+        }
+    }
+
+    #[test]
+    fn cards_own_contiguous_pg_and_pe_ranges() {
+        let p = Partitioning::new(16, 8).with_cards(4);
+        assert_eq!(p.pgs_per_card(), 2);
+        assert_eq!(p.pes_per_card(), 4);
+        // Contiguous PG runs per card.
+        assert_eq!(p.card_of_pg(0), 0);
+        assert_eq!(p.card_of_pg(1), 0);
+        assert_eq!(p.card_of_pg(2), 1);
+        assert_eq!(p.card_of_pg(7), 3);
+        // Every vertex's card agrees with its PE's card, and the local
+        // PE lane is the low bits the per-card dispatcher routes on.
+        for v in 0..256u32 {
+            let pe = p.pe_of(v);
+            assert_eq!(p.card_of(v), pe / p.pes_per_card());
+            assert_eq!(pe & (p.pes_per_card() - 1), (v as usize) % p.pes_per_card());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn cards_must_divide_into_pgs() {
+        let _ = Partitioning::new(8, 4).with_cards(8);
+    }
+
+    #[test]
+    fn card_footprints_sum_to_global() {
+        let g = generators::rmat_graph500(8, 4, 3);
+        for cards in [1usize, 2, 4] {
+            let p = Partitioning::new(8, 4).with_cards(cards);
+            let per_card = card_footprint_bytes(&g, p, 4);
+            assert_eq!(per_card.len(), cards);
+            let total: u64 = per_card.iter().sum();
+            let global: u64 = pg_footprint_bytes(&g, p, 4).iter().sum();
+            assert_eq!(total, global);
+        }
     }
 
     #[test]

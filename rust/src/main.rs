@@ -38,6 +38,11 @@ Experiment commands (regenerate paper tables/figures):
                   measured dispatcher conflict/stall and BRAM-pressure stats
                   --dataset=NAME [--pcs=1 --pes-per-pc=1,2,4,8,16,32,64
                    --engine=cycle --json=FILE]
+  cardsweep       multi-card scale-out: aggregate GTEPS vs simulated U280
+                  cards on the multicard engine, link traffic priced, V100
+                  roofline crossing reported
+                  --dataset=NAME [--cards=1,2,4 --pcs-per-card=8
+                   --pes-per-card=16 --json=FILE]
 
 System commands:
   run             run one dataset   --dataset=NAME [--pcs=32 --pes=64 --policy=hybrid
@@ -53,9 +58,9 @@ System commands:
                    --root-pool=32 --cache=1024 --pcs=4 --pes=8
                    --fast-workers=1 --threads=1]
   bench           measured perf suite -> scalabfs-bench-v1 JSON
-                  [--smoke --pr=8 --json=FILE --threads=N (parallel-section
+                  [--smoke --pr=9 --json=FILE --threads=N (parallel-section
                    thread count, default: host cores)]
-  bench-compare   regression gate: --old=BENCH_7.json --new=new.json
+  bench-compare   regression gate: --old=BENCH_9.json --new=new.json
                   [--tolerance=0.3] (floors always; exact/ratio bands vs a
                   measured same-mode baseline; exits non-zero on regression)
   datasets        list Table-I datasets
@@ -372,8 +377,10 @@ fn main() -> anyhow::Result<()> {
                 .get("dataset")
                 .cloned()
                 .unwrap_or_else(|| "RMAT18-16".into());
-            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let graph = std::sync::Arc::new(
+                datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+            );
             let mut spec = scalabfs::coordinator::sweep::SweepSpec::default();
             if let Some(engines) = kv.get("engines") {
                 spec.engines = engines.split(',').map(str::to_string).collect();
@@ -412,8 +419,10 @@ fn main() -> anyhow::Result<()> {
                 .get("dataset")
                 .cloned()
                 .unwrap_or_else(|| "RMAT18-16".into());
-            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let graph = std::sync::Arc::new(
+                datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+            );
             let engine = kv.get("engine").cloned().unwrap_or_else(|| "cycle".into());
             let pcs: Vec<usize> = kv
                 .get("pcs")
@@ -445,8 +454,10 @@ fn main() -> anyhow::Result<()> {
                 .get("dataset")
                 .cloned()
                 .unwrap_or_else(|| "RMAT18-16".into());
-            let graph = datasets::by_name(&dataset, opts.scale_factor, opts.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let graph = std::sync::Arc::new(
+                datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+            );
             let engine = kv.get("engine").cloned().unwrap_or_else(|| "cycle".into());
             let pcs = get_usize("pcs", 1);
             let ppc: Vec<usize> = match kv.get("pes-per-pc") {
@@ -470,10 +481,45 @@ fn main() -> anyhow::Result<()> {
                 println!("wrote {path}");
             }
         }
+        "cardsweep" => {
+            let dataset = kv
+                .get("dataset")
+                .cloned()
+                .unwrap_or_else(|| "RMAT18-16".into());
+            let graph = std::sync::Arc::new(
+                datasets::by_name(&dataset, opts.scale_factor, opts.seed)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?,
+            );
+            let cards: Vec<usize> = match kv.get("cards") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| {
+                        x.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("bad --cards entry '{x}' (expected e.g. 1,2,4)")
+                        })
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+                None => vec![1, 2, 4],
+            };
+            anyhow::ensure!(!cards.is_empty(), "--cards parsed to an empty list");
+            let curve = scalabfs::coordinator::sweep::card_scaling(
+                &graph,
+                &cards,
+                get_usize("pcs-per-card", 8),
+                get_usize("pes-per-card", 16),
+                opts.seed,
+            )?;
+            print!("{}", curve.render());
+            if let Some(path) = kv.get("json") {
+                let json = scalabfs::coordinator::report::card_scaling_json(&curve);
+                scalabfs::coordinator::report::write_json(std::path::Path::new(path), &json)?;
+                println!("wrote {path}");
+            }
+        }
         "bench" => {
             let bopts = scalabfs::coordinator::BenchOptions {
                 smoke: kv.get("smoke").is_some(),
-                pr: get_u32("pr", 8),
+                pr: get_u32("pr", 9),
                 threads: kv.get("threads").and_then(|v| v.parse().ok()),
             };
             let doc = scalabfs::coordinator::bench::run_suite(&bopts)?;

@@ -8,6 +8,7 @@ use crate::hbm::map::AddressMap;
 use crate::hbm::pc::HbmConfig;
 use crate::hbm::switch::{SwitchModel, SwitchTiming};
 use crate::pe::pe::PeConfig;
+use crate::sim::link::LinkConfig;
 
 /// Which dispatcher design the build uses.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -113,8 +114,12 @@ pub struct SimConfig {
     pub pc_queue_capacity: usize,
     /// PE stage parameters.
     pub pe: PeConfig,
-    /// Dispatcher design.
+    /// Dispatcher design (per card: each card gets its own fabric over
+    /// its local PEs when `part.num_cards > 1`).
     pub dispatcher: DispatcherKind,
+    /// Inter-card link parameters (ignored at one card; see
+    /// [`crate::sim::link`]).
+    pub link: LinkConfig,
     /// Link FIFO depth of the cycle-stepped dispatcher fabric (paper
     /// example: 16). Small depths back-pressure sooner; the
     /// functional result is identical either way.
@@ -164,6 +169,7 @@ impl SimConfig {
             pc_queue_capacity: 64,
             pe: PeConfig::default(),
             dispatcher: DispatcherKind::paper_default(num_pes),
+            link: LinkConfig::default(),
             xbar_fifo_depth: 16,
             placement: Placement::Partitioned,
             iter_sync_cycles: 32,
@@ -178,6 +184,46 @@ impl SimConfig {
     /// The headline 32-PC / 64-PE configuration.
     pub fn u280_full() -> Self {
         Self::u280(32, 64)
+    }
+
+    /// A `cards`-card mesh of identical U280s: `cards * pcs_per_card`
+    /// PCs and `cards * pes_per_card` PEs globally, the partitioning
+    /// sharded along the card axis, and each card's *local* dispatcher
+    /// sized for its own PE count (board-level traffic rides the
+    /// inter-card links, not the on-chip fabric).
+    pub fn multi_card(cards: usize, pcs_per_card: usize, pes_per_card: usize) -> Self {
+        let mut cfg = Self::u280(cards * pcs_per_card, cards * pes_per_card);
+        cfg.part = cfg.part.with_cards(cards);
+        cfg.dispatcher = DispatcherKind::paper_default(pes_per_card);
+        cfg
+    }
+
+    /// Override every inter-card link parameter at once.
+    pub fn with_link(mut self, link: LinkConfig) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// Override the inter-card link FIFO depth (the card axis of
+    /// `tests/engine_equivalence.rs`).
+    pub fn with_link_fifo_depth(mut self, depth: usize) -> Self {
+        assert!(depth >= 1);
+        self.link.fifo_depth = depth;
+        self
+    }
+
+    /// Override the inter-card link latency in cycles.
+    pub fn with_link_latency(mut self, cycles: u64) -> Self {
+        self.link.latency_cycles = cycles;
+        self
+    }
+
+    /// Override the per-cycle inter-card message budget (0 = dead
+    /// link; a run that needs it fails with
+    /// [`SimError::NonConvergence`](crate::sim::SimError)).
+    pub fn with_link_msgs_per_cycle(mut self, msgs: usize) -> Self {
+        self.link.msgs_per_cycle = msgs;
+        self
     }
 
     /// Same topology, but only `n` HBM PCs in service — the contention
@@ -362,6 +408,29 @@ mod tests {
         // The builder clamps and u280 defaults to serial.
         assert_eq!(base.threads, 1);
         assert_eq!(SimConfig::u280(4, 8).with_threads(0).threads, 1);
+    }
+
+    #[test]
+    fn multi_card_shards_topology_and_sizes_local_dispatcher() {
+        let c = SimConfig::multi_card(4, 8, 16);
+        assert_eq!(c.part.num_cards, 4);
+        assert_eq!(c.part.num_pgs, 32);
+        assert_eq!(c.part.num_pes, 64);
+        assert_eq!(c.part.pes_per_card(), 16);
+        assert_eq!(c.num_hbm_pcs, 32);
+        // Local fabric sized for 16 PEs, not 64: full crossbar.
+        assert_eq!(c.dispatcher, DispatcherKind::Full);
+        // One card degenerates to the plain u280 topology.
+        let one = SimConfig::multi_card(1, 4, 8);
+        assert_eq!(one.part.num_cards, 1);
+        assert_eq!(one.part.num_pes, 8);
+        // Link knob builders round-trip.
+        let l = SimConfig::u280(4, 8)
+            .with_link_fifo_depth(2)
+            .with_link_latency(7)
+            .with_link_msgs_per_cycle(0)
+            .link;
+        assert_eq!((l.fifo_depth, l.latency_cycles, l.msgs_per_cycle), (2, 7, 0));
     }
 
     #[test]

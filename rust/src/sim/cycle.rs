@@ -76,6 +76,9 @@ pub struct CycleResult {
     pub dispatcher: DispatcherStats,
     /// Per-PE pipeline statistics over the run.
     pub pe_stats: Vec<PeStats>,
+    /// Per-link inter-card statistics (empty on single-card engines;
+    /// filled by [`MultiCardSim`](super::multicard::MultiCardSim)).
+    pub link_stats: Vec<crate::sim::link::LinkStats>,
 }
 
 /// The cycle-stepped simulator.
@@ -89,6 +92,132 @@ pub struct CycleSim {
 /// vertices per shard: small graphs stay single-task, big frontiers
 /// split across the pool.
 const SCAN_CHUNK_WORDS: usize = 4096;
+
+/// Build one iteration's per-PG fetch lists: `(vertex, entries to
+/// stream)` in ascending vertex order. Pull mode applies the same
+/// chunked early exit as the functional engine.
+///
+/// A sparse push frontier skips the bitmap scan entirely: the
+/// hardware pops the frontier FIFO, so the per-PG lists are
+/// bucketed straight from the vertex list (then sorted per PG to
+/// the ascending order the in-order HBM readers consume). A dense
+/// frontier keeps the sharded scan: rayon workers take disjoint
+/// word ranges and the per-range buckets concatenate back in
+/// vertex order.
+///
+/// Shared by [`CycleSim`] and
+/// [`MultiCardSim`](super::multicard::MultiCardSim) — PG indices are
+/// global, so the multi-card engine slices the result per card.
+pub(crate) fn build_fetch_lists(
+    graph: &Graph,
+    part: Partitioning,
+    pull_early_exit: bool,
+    state: &SearchState,
+    mode: Mode,
+    verts_per_beat: usize,
+) -> Vec<Vec<(VertexId, usize)>> {
+    let npgs = part.num_pgs;
+    let early_exit = pull_early_exit;
+    if mode == Mode::Push {
+        if let Some(verts) = state.current.sparse_verts() {
+            let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+            for &v in verts {
+                fetches[part.pg_of(v)].push((v, graph.out_neighbors(v).len()));
+            }
+            for pg_list in &mut fetches {
+                pg_list.sort_unstable_by_key(|&(v, _)| v);
+            }
+            return fetches;
+        }
+    }
+    let current = state.current.bits();
+    let visited = &state.visited;
+    let scanned_words = match mode {
+        Mode::Push => current.num_words(),
+        Mode::Pull => visited.num_words(),
+    };
+    let nchunks = scanned_words.div_ceil(SCAN_CHUNK_WORDS);
+    let buckets: Vec<Vec<Vec<(VertexId, usize)>>> = (0..nchunks)
+        .into_par_iter()
+        .map(|ci| {
+            let ws = ci * SCAN_CHUNK_WORDS;
+            let we = ws + SCAN_CHUNK_WORDS;
+            let mut local: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+            match mode {
+                Mode::Push => current.for_ones_in_word_range(ws, we, |v| {
+                    let v = v as VertexId;
+                    let len = graph.out_neighbors(v).len();
+                    local[part.pg_of(v)].push((v, len));
+                }),
+                Mode::Pull => visited.for_zeros_in_word_range(ws, we, |v| {
+                    let v = v as VertexId;
+                    let list = graph.in_neighbors(v);
+                    if list.is_empty() {
+                        return;
+                    }
+                    let fetched = if early_exit {
+                        match list.iter().position(|&u| current.get(u as usize)) {
+                            Some(i) => ((i + verts_per_beat) / verts_per_beat
+                                * verts_per_beat)
+                                .min(list.len()),
+                            None => list.len(),
+                        }
+                    } else {
+                        list.len()
+                    };
+                    local[part.pg_of(v)].push((v, fetched));
+                }),
+            }
+            local
+        })
+        .collect();
+    let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
+    for mut bucket in buckets {
+        for (pg, shard) in bucket.iter_mut().enumerate() {
+            fetches[pg].append(shard);
+        }
+    }
+    fetches
+}
+
+/// Fill each PG's P1 issue schedule from its fetch list: the cycle
+/// at which the owning PE's frontier-FIFO pop (sparse push, one pop
+/// per PE per cycle) or bitmap-interval scan (dense push / pull,
+/// [`scan_bits_per_cycle`](crate::pe::PeConfig::scan_bits_per_cycle)
+/// bits per PE per cycle) actually reaches the vertex. The fetch
+/// enters the HBM port's pending list only then — P1 runs
+/// *concurrently* with P2/P3 instead of being charged as an
+/// end-of-iteration floor.
+///
+/// `pgs` is the flat global PG list; shared by [`CycleSim`] and the
+/// multi-card engine.
+pub(crate) fn schedule_p1(
+    part: Partitioning,
+    scan_bits_per_cycle: u32,
+    pgs: &mut [ProcessingGroup],
+    fetches: &[Vec<(VertexId, usize)>],
+    sparse_pop: bool,
+) {
+    let ppg = part.pes_per_pg();
+    let sbpc = scan_bits_per_cycle as u64;
+    for (pgi, pg_fetches) in fetches.iter().enumerate() {
+        let mut sched: Vec<(u64, VertexId, usize)> = Vec::with_capacity(pg_fetches.len());
+        let mut pops = vec![0u64; ppg];
+        for &(v, len) in pg_fetches {
+            let lpe = part.pe_of(v) % ppg;
+            pgs[pgi].pes[lpe].stats.fetches += 1;
+            let ready = if sparse_pop {
+                pops[lpe] += 1;
+                pops[lpe]
+            } else {
+                part.local_index(v) as u64 / sbpc + 1
+            };
+            sched.push((ready, v, len));
+        }
+        sched.sort_unstable_by_key(|&(ready, v, _)| (ready, v));
+        pgs[pgi].issue = sched.into();
+    }
+}
 
 impl CycleSim {
     /// New simulator for a graph + config. The HBM address map (which
@@ -133,126 +262,8 @@ impl CycleSim {
             pc_stats: run.pc_stats,
             dispatcher: run.dispatcher,
             pe_stats: run.pe_stats,
+            link_stats: run.link_stats,
         })
-    }
-
-    /// Build this iteration's per-PG fetch lists: `(vertex, entries to
-    /// stream)` in ascending vertex order. Pull mode applies the same
-    /// chunked early exit as the functional engine.
-    ///
-    /// A sparse push frontier skips the bitmap scan entirely: the
-    /// hardware pops the frontier FIFO, so the per-PG lists are
-    /// bucketed straight from the vertex list (then sorted per PG to
-    /// the ascending order the in-order HBM readers consume). A dense
-    /// frontier keeps the sharded scan: rayon workers take disjoint
-    /// word ranges and the per-range buckets concatenate back in
-    /// vertex order.
-    fn build_fetch_lists(
-        &self,
-        state: &SearchState,
-        mode: Mode,
-        verts_per_beat: usize,
-    ) -> Vec<Vec<(VertexId, usize)>> {
-        let part = self.cfg.part;
-        let npgs = part.num_pgs;
-        let graph = self.graph.as_ref();
-        let early_exit = self.cfg.pull_early_exit;
-        if mode == Mode::Push {
-            if let Some(verts) = state.current.sparse_verts() {
-                let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-                for &v in verts {
-                    fetches[part.pg_of(v)].push((v, graph.out_neighbors(v).len()));
-                }
-                for pg_list in &mut fetches {
-                    pg_list.sort_unstable_by_key(|&(v, _)| v);
-                }
-                return fetches;
-            }
-        }
-        let current = state.current.bits();
-        let visited = &state.visited;
-        let scanned_words = match mode {
-            Mode::Push => current.num_words(),
-            Mode::Pull => visited.num_words(),
-        };
-        let nchunks = scanned_words.div_ceil(SCAN_CHUNK_WORDS);
-        let buckets: Vec<Vec<Vec<(VertexId, usize)>>> = (0..nchunks)
-            .into_par_iter()
-            .map(|ci| {
-                let ws = ci * SCAN_CHUNK_WORDS;
-                let we = ws + SCAN_CHUNK_WORDS;
-                let mut local: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-                match mode {
-                    Mode::Push => current.for_ones_in_word_range(ws, we, |v| {
-                        let v = v as VertexId;
-                        let len = graph.out_neighbors(v).len();
-                        local[part.pg_of(v)].push((v, len));
-                    }),
-                    Mode::Pull => visited.for_zeros_in_word_range(ws, we, |v| {
-                        let v = v as VertexId;
-                        let list = graph.in_neighbors(v);
-                        if list.is_empty() {
-                            return;
-                        }
-                        let fetched = if early_exit {
-                            match list.iter().position(|&u| current.get(u as usize)) {
-                                Some(i) => ((i + verts_per_beat) / verts_per_beat
-                                    * verts_per_beat)
-                                    .min(list.len()),
-                                None => list.len(),
-                            }
-                        } else {
-                            list.len()
-                        };
-                        local[part.pg_of(v)].push((v, fetched));
-                    }),
-                }
-                local
-            })
-            .collect();
-        let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-        for mut bucket in buckets {
-            for (pg, shard) in bucket.iter_mut().enumerate() {
-                fetches[pg].append(shard);
-            }
-        }
-        fetches
-    }
-
-    /// Fill each PG's P1 issue schedule from its fetch list: the cycle
-    /// at which the owning PE's frontier-FIFO pop (sparse push, one pop
-    /// per PE per cycle) or bitmap-interval scan (dense push / pull,
-    /// [`scan_bits_per_cycle`](crate::pe::PeConfig::scan_bits_per_cycle)
-    /// bits per PE per cycle) actually reaches the vertex. The fetch
-    /// enters the HBM port's pending list only then — P1 runs
-    /// *concurrently* with P2/P3 instead of being charged as an
-    /// end-of-iteration floor.
-    fn schedule_p1(
-        &self,
-        pgs: &mut [ProcessingGroup],
-        fetches: &[Vec<(VertexId, usize)>],
-        sparse_pop: bool,
-    ) {
-        let part = self.cfg.part;
-        let ppg = part.pes_per_pg();
-        let sbpc = self.cfg.pe.scan_bits_per_cycle as u64;
-        for (pgi, pg_fetches) in fetches.iter().enumerate() {
-            let mut sched: Vec<(u64, VertexId, usize)> = Vec::with_capacity(pg_fetches.len());
-            let mut pops = vec![0u64; ppg];
-            for &(v, len) in pg_fetches {
-                let lpe = part.pe_of(v) % ppg;
-                pgs[pgi].pes[lpe].stats.fetches += 1;
-                let ready = if sparse_pop {
-                    pops[lpe] += 1;
-                    pops[lpe]
-                } else {
-                    part.local_index(v) as u64 / sbpc + 1
-                };
-                sched.push((ready, v, len));
-            }
-            sched.sort_unstable_by_key(|&(ready, v, _)| (ready, v));
-            pgs[pgi].issue = sched.into();
-        }
     }
 }
 
@@ -279,7 +290,14 @@ impl BfsEngine for CycleSim {
         let graph = graph.as_ref();
 
         // ---- Build this iteration's fetch lists per PG (parallel). ----
-        let fetches = self.build_fetch_lists(state, mode, verts_per_beat);
+        let fetches = build_fetch_lists(
+            graph,
+            part,
+            self.cfg.pull_early_exit,
+            state,
+            mode,
+            verts_per_beat,
+        );
 
         // ---- The three contended subsystems. ----
         // One *shared* HBM subsystem: per-PC bounded queues behind the
@@ -318,7 +336,13 @@ impl BfsEngine for CycleSim {
             .collect();
 
         let sparse_pop = mode == Mode::Push && state.current.is_sparse();
-        self.schedule_p1(&mut pgs, &fetches, sparse_pop);
+        schedule_p1(
+            part,
+            self.cfg.pe.scan_bits_per_cycle,
+            &mut pgs,
+            &fetches,
+            sparse_pop,
+        );
 
         // P1 completion floor: even when the schedule drains early, the
         // scanner still walks its whole interval (dense) or pops the
@@ -488,6 +512,7 @@ impl BfsEngine for CycleSim {
             pc_stats: hbm.stats(),
             dispatcher: fabric.stats.clone(),
             pe_stats,
+            link_stats: Vec::new(),
         })
     }
 
@@ -664,7 +689,6 @@ mod tests {
     fn sharded_fetch_lists_preserve_vertex_order() {
         let g = std::sync::Arc::new(generators::rmat_graph500(10, 8, 24));
         let cfg = SimConfig::u280(4, 8);
-        let sim = CycleSim::new(g.clone(), cfg);
         let mut state = SearchState::new(g.num_vertices());
         // Mark a spread of frontier vertices; a |V|-sized cap keeps the
         // frontier in sparse (FIFO) form.
@@ -673,11 +697,11 @@ mod tests {
             state.current.insert(v as VertexId, 0);
         }
         assert!(state.current.is_sparse());
-        let sparse = sim.build_fetch_lists(&state, Mode::Push, 4);
+        let sparse = build_fetch_lists(&g, cfg.part, false, &state, Mode::Push, 4);
         // The dense (sharded bitmap scan) path over the same membership
         // must produce identical lists.
         state.current.to_dense();
-        let dense = sim.build_fetch_lists(&state, Mode::Push, 4);
+        let dense = build_fetch_lists(&g, cfg.part, false, &state, Mode::Push, 4);
         assert_eq!(sparse, dense);
         assert_eq!(sparse.len(), 4);
         for pg_list in &sparse {

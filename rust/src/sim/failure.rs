@@ -155,6 +155,7 @@ impl DegradedSim {
             pc_stats: Vec::new(),
             dispatcher: Default::default(),
             pe_stats: Vec::new(),
+            link_stats: Vec::new(),
         }
     }
 }

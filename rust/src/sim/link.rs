@@ -1,0 +1,495 @@
+//! Inter-card link layer: bounded FIFOs joining simulated U280s.
+//!
+//! Multi-card scale-out (DESIGN.md §9) shards the CSR across 2–4 cards;
+//! a frontier update whose destination vertex lives on another card
+//! must cross a board-level link instead of the on-chip dispatcher.
+//! Each ordered card pair gets one [`CardLink`]: a bounded FIFO with
+//! its own latency and per-cycle message budget, following the same
+//! bounded-queue discipline as the PC request queues
+//! ([`crate::hbm::pc::PcQueue`]) — a full FIFO back-pressures the
+//! sender with the typed [`LinkError::Full`] (retry next cycle, never
+//! drop), stalls are counted, and per-link [`LinkStats`] flow to
+//! [`SimResult`](crate::sim::SimResult) the way `PcStats` do.
+//!
+//! The link is timing-only: it decides *when* a frontier update reaches
+//! the remote card, never *whether*. Discoveries are idempotent
+//! visited-set claims inside a level-synchronous driver, so BFS levels
+//! stay bit-identical to `bfs::reference` at any depth, latency, or
+//! bandwidth — the cross-card differential-test wall pins this.
+
+use crate::dispatcher::VertexMsg;
+use std::collections::VecDeque;
+
+/// Static configuration shared by every inter-card link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkConfig {
+    /// FIFO capacity per ordered card pair; [`CardLink::try_send`]
+    /// back-pressures beyond it.
+    pub fifo_depth: usize,
+    /// Cycles a message spends on the wire before it is deliverable
+    /// (board-level links are far slower than the on-chip fabric).
+    pub latency_cycles: u64,
+    /// Messages each link may deliver per cycle — the link's bandwidth.
+    /// Zero models a dead link: nothing ever drains, so a run that
+    /// needs the link fails with the typed
+    /// [`SimError::NonConvergence`](crate::sim::SimError) instead of
+    /// hanging.
+    pub msgs_per_cycle: usize,
+}
+
+impl Default for LinkConfig {
+    /// Defaults model an aggregated board-to-board cable: 32 4-byte
+    /// messages per cycle is ~28 GB/s at 225 MHz — a fraction of one
+    /// card's HBM bandwidth, but wide enough that a two-card scale-out
+    /// is not throttled to the wire. Bursts still stall: CSR neighbor
+    /// lists are vid-sorted, so a hub scan streams beats toward a
+    /// single destination card faster than one link drains.
+    fn default() -> Self {
+        Self {
+            fifo_depth: 64,
+            latency_cycles: 32,
+            msgs_per_cycle: 32,
+        }
+    }
+}
+
+/// Typed error for link operations — the back-pressure signal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LinkError {
+    /// A bounded link FIFO refused a send; the sender must retry next
+    /// cycle (the message is *not* dropped).
+    Full {
+        /// Sending card.
+        src: usize,
+        /// Receiving card.
+        dst: usize,
+        /// The FIFO's capacity in messages.
+        capacity: usize,
+    },
+}
+
+impl std::fmt::Display for LinkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinkError::Full { src, dst, capacity } => {
+                write!(f, "link {src}->{dst} FIFO full ({capacity} entries)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LinkError {}
+
+/// Per-link service statistics, reported like
+/// [`PcStats`](crate::hbm::pc::PcStats).
+#[derive(Clone, Debug, Default)]
+pub struct LinkStats {
+    /// Sending card.
+    pub src: usize,
+    /// Receiving card.
+    pub dst: usize,
+    /// Messages accepted into the FIFO.
+    pub sent: u64,
+    /// Messages handed to the receiving card.
+    pub delivered: u64,
+    /// Sends refused because the FIFO was full (back-pressure events).
+    pub stall_cycles: u64,
+    /// Sum of FIFO occupancy over all observed cycles.
+    pub occupancy_sum: u64,
+    /// Largest FIFO occupancy observed.
+    pub max_occupancy: usize,
+    /// Cycles the link was observed for.
+    pub cycles: u64,
+}
+
+impl LinkStats {
+    /// Mean FIFO occupancy over the observed cycles.
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.cycles as f64
+        }
+    }
+
+    /// Fold another observation window of the *same* link into this one.
+    pub fn merge(&mut self, other: &LinkStats) {
+        debug_assert!(self.src == other.src && self.dst == other.dst);
+        self.sent += other.sent;
+        self.delivered += other.delivered;
+        self.stall_cycles += other.stall_cycles;
+        self.occupancy_sum += other.occupancy_sum;
+        self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+        self.cycles += other.cycles;
+    }
+}
+
+/// Merge a step's per-link stats into a run-level accumulator (growing
+/// it on first use), the [`merge_pc_stats`](crate::hbm::pc::merge_pc_stats)
+/// pattern. Both slices enumerate the same mesh in the same order.
+pub fn merge_link_stats(acc: &mut Vec<LinkStats>, step: &[LinkStats]) {
+    if acc.len() < step.len() {
+        for s in &step[acc.len()..] {
+            acc.push(LinkStats {
+                src: s.src,
+                dst: s.dst,
+                ..LinkStats::default()
+            });
+        }
+    }
+    for (a, s) in acc.iter_mut().zip(step) {
+        a.merge(s);
+    }
+}
+
+/// One direction of a card-to-card link: a bounded FIFO of in-flight
+/// messages, each stamped with the cycle it becomes deliverable.
+#[derive(Clone, Debug)]
+pub struct CardLink {
+    cfg: LinkConfig,
+    /// `(ready_at, (destination PE lane, message))`, oldest first.
+    fifo: VecDeque<(u64, (usize, VertexMsg))>,
+    /// Service statistics for this link.
+    pub stats: LinkStats,
+}
+
+impl CardLink {
+    /// A fresh, empty link from `src` to `dst`.
+    pub fn new(src: usize, dst: usize, cfg: LinkConfig) -> Self {
+        Self {
+            cfg,
+            fifo: VecDeque::new(),
+            stats: LinkStats {
+                src,
+                dst,
+                ..LinkStats::default()
+            },
+        }
+    }
+
+    /// Messages currently in flight on this link.
+    pub fn occupancy(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// True when nothing is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    /// Enqueue a message at cycle `now`, or back-pressure with
+    /// [`LinkError::Full`] when the FIFO is at capacity (the stall is
+    /// counted; the caller retries next cycle — nothing is dropped).
+    /// `lane` is the destination PE index *global to the mesh*; the
+    /// receiving card maps it to a local fabric port.
+    pub fn try_send(&mut self, now: u64, lane: usize, msg: VertexMsg) -> Result<(), LinkError> {
+        if self.fifo.len() >= self.cfg.fifo_depth {
+            self.stats.stall_cycles += 1;
+            return Err(LinkError::Full {
+                src: self.stats.src,
+                dst: self.stats.dst,
+                capacity: self.cfg.fifo_depth,
+            });
+        }
+        self.fifo
+            .push_back((now + self.cfg.latency_cycles, (lane, msg)));
+        self.stats.sent += 1;
+        Ok(())
+    }
+
+    /// Pop up to `min(msgs_per_cycle, room)` messages whose latency has
+    /// elapsed into `out`, returning how many moved. With
+    /// `msgs_per_cycle == 0` nothing ever moves — the dead-link case.
+    pub fn deliver(
+        &mut self,
+        now: u64,
+        out: &mut VecDeque<(usize, VertexMsg)>,
+        room: usize,
+    ) -> usize {
+        let budget = self.cfg.msgs_per_cycle.min(room);
+        let mut moved = 0;
+        while moved < budget {
+            match self.fifo.front() {
+                Some(&(ready_at, _)) if ready_at <= now => {
+                    let (_, payload) = self.fifo.pop_front().expect("front exists");
+                    out.push_back(payload);
+                    moved += 1;
+                }
+                _ => break,
+            }
+        }
+        self.stats.delivered += moved as u64;
+        moved
+    }
+
+    /// Record the end-of-cycle occupancy sample.
+    pub fn end_cycle(&mut self) {
+        let occ = self.fifo.len();
+        self.stats.cycles += 1;
+        self.stats.occupancy_sum += occ as u64;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(occ);
+    }
+}
+
+/// The full mesh: one [`CardLink`] per ordered card pair,
+/// `C·(C−1)` links for `C` cards (none for a single card).
+#[derive(Clone, Debug)]
+pub struct CardMesh {
+    num_cards: usize,
+    links: Vec<CardLink>,
+}
+
+impl CardMesh {
+    /// Build the mesh for `num_cards` cards, every link sharing `cfg`.
+    pub fn new(num_cards: usize, cfg: LinkConfig) -> Self {
+        assert!(num_cards >= 1);
+        let mut links = Vec::with_capacity(num_cards * num_cards.saturating_sub(1));
+        for src in 0..num_cards {
+            for dst in 0..num_cards {
+                if src != dst {
+                    links.push(CardLink::new(src, dst, cfg));
+                }
+            }
+        }
+        Self { num_cards, links }
+    }
+
+    /// Number of cards the mesh joins.
+    pub fn num_cards(&self) -> usize {
+        self.num_cards
+    }
+
+    /// Index of the `src → dst` link in the flattened link vector.
+    fn idx(&self, src: usize, dst: usize) -> usize {
+        debug_assert!(src != dst && src < self.num_cards && dst < self.num_cards);
+        src * (self.num_cards - 1) + dst - usize::from(dst > src)
+    }
+
+    /// The `src → dst` link.
+    pub fn link_mut(&mut self, src: usize, dst: usize) -> &mut CardLink {
+        let i = self.idx(src, dst);
+        &mut self.links[i]
+    }
+
+    /// Total messages in flight across every link — the
+    /// bounded-occupancy tests pin this at ≤ [`Self::capacity`].
+    pub fn in_flight(&self) -> usize {
+        self.links.iter().map(CardLink::occupancy).sum()
+    }
+
+    /// Σ link FIFO capacities: the hard bound on in-flight messages.
+    pub fn capacity(&self) -> usize {
+        self.links.len() * self.links.first().map_or(0, |l| l.cfg.fifo_depth)
+    }
+
+    /// True when no link holds an in-flight message.
+    pub fn is_empty(&self) -> bool {
+        self.links.iter().all(CardLink::is_empty)
+    }
+
+    /// Drain every link targeting `dst` into `out`, at most `room`
+    /// messages in total (the receiving card's inbox headroom). Source
+    /// cards are served in index order for determinism.
+    pub fn deliver_into(
+        &mut self,
+        now: u64,
+        dst: usize,
+        out: &mut VecDeque<(usize, VertexMsg)>,
+        room: usize,
+    ) -> usize {
+        let mut moved = 0;
+        for src in 0..self.num_cards {
+            if src == dst || moved >= room {
+                continue;
+            }
+            let i = self.idx(src, dst);
+            moved += self.links[i].deliver(now, out, room - moved);
+        }
+        moved
+    }
+
+    /// Record the end-of-cycle occupancy sample on every link.
+    pub fn end_cycle(&mut self) {
+        for l in &mut self.links {
+            l.end_cycle();
+        }
+    }
+
+    /// Snapshot every link's stats, mesh order (src-major).
+    pub fn stats(&self) -> Vec<LinkStats> {
+        self.links.iter().map(|l| l.stats.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(vid: u32) -> VertexMsg {
+        VertexMsg { vid, child: vid }
+    }
+
+    #[test]
+    fn full_link_backpressures_without_dropping() {
+        let cfg = LinkConfig {
+            fifo_depth: 2,
+            latency_cycles: 0,
+            msgs_per_cycle: 4,
+        };
+        let mut l = CardLink::new(0, 1, cfg);
+        assert!(l.try_send(0, 0, msg(1)).is_ok());
+        assert!(l.try_send(0, 1, msg(2)).is_ok());
+        let err = l.try_send(0, 2, msg(3));
+        assert_eq!(
+            err,
+            Err(LinkError::Full {
+                src: 0,
+                dst: 1,
+                capacity: 2
+            })
+        );
+        assert_eq!(l.occupancy(), 2);
+        assert_eq!(l.stats.sent, 2);
+        assert_eq!(l.stats.stall_cycles, 1);
+        // Both accepted messages are eventually delivered in order.
+        let mut out = VecDeque::new();
+        assert_eq!(l.deliver(0, &mut out, usize::MAX), 2);
+        assert_eq!(out[0].1.vid, 1);
+        assert_eq!(out[1].1.vid, 2);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn latency_holds_messages_until_ready() {
+        let cfg = LinkConfig {
+            fifo_depth: 8,
+            latency_cycles: 5,
+            msgs_per_cycle: 4,
+        };
+        let mut l = CardLink::new(0, 1, cfg);
+        l.try_send(10, 3, msg(7)).unwrap();
+        let mut out = VecDeque::new();
+        assert_eq!(l.deliver(14, &mut out, usize::MAX), 0, "still in flight");
+        assert_eq!(l.deliver(15, &mut out, usize::MAX), 1, "latency elapsed");
+        assert_eq!(out[0], (3, msg(7)));
+    }
+
+    #[test]
+    fn bandwidth_budget_and_room_both_cap_delivery() {
+        let cfg = LinkConfig {
+            fifo_depth: 16,
+            latency_cycles: 0,
+            msgs_per_cycle: 2,
+        };
+        let mut l = CardLink::new(1, 0, cfg);
+        for v in 0..6 {
+            l.try_send(0, 0, msg(v)).unwrap();
+        }
+        let mut out = VecDeque::new();
+        assert_eq!(l.deliver(0, &mut out, usize::MAX), 2, "bandwidth cap");
+        assert_eq!(l.deliver(0, &mut out, 1), 1, "receiver room cap");
+        assert_eq!(l.occupancy(), 3);
+        assert_eq!(l.stats.delivered, 3);
+    }
+
+    #[test]
+    fn zero_bandwidth_link_never_drains() {
+        let cfg = LinkConfig {
+            fifo_depth: 4,
+            latency_cycles: 0,
+            msgs_per_cycle: 0,
+        };
+        let mut l = CardLink::new(0, 1, cfg);
+        l.try_send(0, 0, msg(1)).unwrap();
+        let mut out = VecDeque::new();
+        for now in 0..1000 {
+            assert_eq!(l.deliver(now, &mut out, usize::MAX), 0);
+        }
+        assert_eq!(l.occupancy(), 1, "message parked forever");
+    }
+
+    #[test]
+    fn mesh_enumerates_ordered_pairs() {
+        let mesh = CardMesh::new(4, LinkConfig::default());
+        let stats = mesh.stats();
+        assert_eq!(stats.len(), 12, "4 cards -> 12 ordered pairs");
+        let pairs: Vec<(usize, usize)> = stats.iter().map(|s| (s.src, s.dst)).collect();
+        for src in 0..4 {
+            for dst in 0..4 {
+                assert_eq!(pairs.contains(&(src, dst)), src != dst);
+            }
+        }
+        // Single card: no links at all.
+        assert_eq!(CardMesh::new(1, LinkConfig::default()).stats().len(), 0);
+    }
+
+    #[test]
+    fn mesh_in_flight_bounded_by_capacity() {
+        let cfg = LinkConfig {
+            fifo_depth: 3,
+            latency_cycles: 1000,
+            msgs_per_cycle: 1,
+        };
+        let mut mesh = CardMesh::new(2, cfg);
+        assert_eq!(mesh.capacity(), 2 * 3);
+        // Saturate both directions; every extra send must be refused.
+        let mut refused = 0;
+        for v in 0..10u32 {
+            for (s, d) in [(0usize, 1usize), (1, 0)] {
+                if mesh.link_mut(s, d).try_send(0, 0, msg(v)).is_err() {
+                    refused += 1;
+                }
+            }
+            assert!(mesh.in_flight() <= mesh.capacity());
+        }
+        assert_eq!(mesh.in_flight(), mesh.capacity());
+        assert_eq!(refused, 2 * 10 - mesh.capacity());
+    }
+
+    #[test]
+    fn mesh_delivers_from_all_sources_in_order() {
+        let cfg = LinkConfig {
+            fifo_depth: 8,
+            latency_cycles: 0,
+            msgs_per_cycle: 8,
+        };
+        let mut mesh = CardMesh::new(3, cfg);
+        mesh.link_mut(1, 0).try_send(0, 0, msg(10)).unwrap();
+        mesh.link_mut(2, 0).try_send(0, 0, msg(20)).unwrap();
+        mesh.link_mut(1, 2).try_send(0, 0, msg(99)).unwrap();
+        let mut out = VecDeque::new();
+        assert_eq!(mesh.deliver_into(0, 0, &mut out, usize::MAX), 2);
+        let vids: Vec<u32> = out.iter().map(|(_, m)| m.vid).collect();
+        assert_eq!(vids, vec![10, 20], "src index order");
+        assert_eq!(mesh.in_flight(), 1, "the 1->2 message is untouched");
+    }
+
+    #[test]
+    fn merge_link_stats_accumulates_by_position() {
+        let mut acc = Vec::new();
+        let step = vec![
+            LinkStats {
+                src: 0,
+                dst: 1,
+                sent: 3,
+                delivered: 2,
+                max_occupancy: 5,
+                ..LinkStats::default()
+            },
+            LinkStats {
+                src: 1,
+                dst: 0,
+                sent: 1,
+                delivered: 1,
+                ..LinkStats::default()
+            },
+        ];
+        merge_link_stats(&mut acc, &step);
+        merge_link_stats(&mut acc, &step);
+        assert_eq!(acc.len(), 2);
+        assert_eq!(acc[0].sent, 6);
+        assert_eq!(acc[0].max_occupancy, 5);
+        assert_eq!(acc[1].delivered, 2);
+        assert_eq!((acc[1].src, acc[1].dst), (1, 0));
+    }
+}

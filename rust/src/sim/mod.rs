@@ -21,17 +21,27 @@
 //! * [`config`] / [`results`] — shared configuration and result types,
 //!   including the per-PC, per-PE, and dispatcher stats the simulators
 //!   report.
+//! * [`link`] / [`multicard`] — multi-card scale-out: bounded
+//!   inter-card link FIFOs with latency/bandwidth budgets and typed
+//!   back-pressure ([`link::CardMesh`]), and the cycle-stepped
+//!   multi-card engine ([`multicard::MultiCardSim`]) that shards the
+//!   CSR across 2–4 simulated U280s and exchanges frontier updates
+//!   through the mesh so inter-card traffic is priced in cycles.
 //! * [`failure`] — typed simulation errors ([`failure::SimError`])
 //!   plus the degraded-PC straggler study.
 
 pub mod config;
 pub mod throughput;
 pub mod cycle;
+pub mod link;
+pub mod multicard;
 pub mod results;
 pub mod failure;
 
 pub use config::{DispatcherKind, Placement, SimConfig};
 pub use failure::SimError;
+pub use link::{CardLink, CardMesh, LinkConfig, LinkError, LinkStats};
+pub use multicard::MultiCardSim;
 pub use results::{IterBreakdown, SimResult};
 pub use throughput::{ThroughputEngine, ThroughputSim};
 pub use cycle::CycleSim;

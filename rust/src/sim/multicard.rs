@@ -1,0 +1,527 @@
+//! Cycle-stepped multi-card simulator: 2–4 U280s joined by bounded
+//! inter-card links.
+//!
+//! Each card is a full instance of the single-card machinery — its own
+//! [`HbmSubsystem`] over its local PCs and its own
+//! [`DispatcherFabric`](crate::dispatcher::DispatcherFabric) over its
+//! local PEs — and the cards exchange frontier updates through the
+//! [`CardMesh`](super::link::CardMesh): one bounded FIFO per ordered
+//! card pair with its own latency and per-cycle message budget, so
+//! inter-card traffic is priced in cycles instead of assumed free.
+//!
+//! The partitioning's card axis ([`Partitioning::with_cards`]) gives
+//! every card a *contiguous power-of-two PE range*, so a message's
+//! local lane inside its destination card is `vid % pes_per_card` —
+//! exactly what the unmodified per-card fabric routes on. A message
+//! decoded from an edge beat therefore takes one of two paths:
+//!
+//! * **local** (destination vertex on the producing card): into the
+//!   producing PG's staging and through the card's own fabric, as in
+//!   [`CycleSim`](super::CycleSim);
+//! * **remote**: into the PG's outbox, across the `src → dst` link
+//!   (paying link latency, bounded by FIFO depth and the per-cycle
+//!   budget), into the destination card's inbox, and only then into
+//!   that card's fabric.
+//!
+//! Back-pressure composes end to end: a full link FIFO parks the
+//! outbox, a grown outbox gates the PG's HBM port
+//! ([`HbmSubsystem::tick_gated`]), and a full destination fabric
+//! leaves messages in the inbox, which caps what the mesh may deliver.
+//! A zero-bandwidth link never drains, so a run that needs it exceeds
+//! [`SimConfig::max_cycles_per_iter`] and fails with the typed
+//! [`SimError::NonConvergence`] instead of hanging.
+//!
+//! Like every timing layer in this repo, none of it can change what
+//! the search computes: discoveries are idempotent visited-set claims
+//! inside a level-synchronous driver, so levels stay bit-identical to
+//! `bfs::reference` at every card count, depth, and latency — the
+//! cross-card differential-test wall pins this.
+
+use super::config::{Placement, SimConfig};
+use super::cycle::{build_fetch_lists, schedule_p1, CycleResult};
+use super::failure::SimError;
+use super::link::{CardMesh, LinkStats};
+use crate::bfs::Mode;
+use crate::dispatcher::{DispatcherFabric, DispatcherStats, VertexMsg};
+use crate::exec::{BfsEngine, SearchState, StepStats};
+use crate::graph::{Graph, Partitioning, VertexId};
+use crate::hbm::axi::{AxiConfig, ReadKind};
+use crate::hbm::map::AddressMap;
+use crate::hbm::pc::PcStats;
+use crate::hbm::subsystem::{HbmSubsystem, HbmSubsystemConfig};
+use crate::pe::{PeStats, ProcessingGroup};
+use crate::sched::ModePolicy;
+use crate::Result;
+use std::collections::VecDeque;
+
+/// The multi-card cycle-stepped simulator.
+pub struct MultiCardSim {
+    graph: std::sync::Arc<Graph>,
+    cfg: SimConfig,
+    /// One *local* address map per card (local PGs → local PCs).
+    card_map: AddressMap,
+}
+
+impl MultiCardSim {
+    /// New simulator; panics where [`MultiCardSim::try_new`] errors.
+    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Self {
+        Self::try_new(graph, cfg).expect("invalid multi-card configuration")
+    }
+
+    /// Fallible constructor. The config's PC count must shard evenly
+    /// across the partitioning's cards, and only the partitioned
+    /// placement is supported (each card owns its shard privately —
+    /// there is no cross-card HBM switch to pack through).
+    pub fn try_new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Result<Self> {
+        let graph = graph.into();
+        let cards = cfg.part.num_cards;
+        anyhow::ensure!(
+            cfg.placement == Placement::Partitioned,
+            "multi-card simulation requires the partitioned placement"
+        );
+        anyhow::ensure!(
+            cfg.num_hbm_pcs % cards == 0,
+            "{} HBM PCs do not shard evenly across {cards} cards",
+            cfg.num_hbm_pcs
+        );
+        let local_part = Partitioning::new(cfg.part.pes_per_card(), cfg.part.pgs_per_card());
+        let card_map = AddressMap::partitioned(local_part, cfg.num_hbm_pcs / cards);
+        Ok(Self {
+            graph,
+            cfg,
+            card_map,
+        })
+    }
+
+    /// Run BFS from `root` cycle-accurately across the card mesh.
+    pub fn run(&mut self, root: VertexId, policy: &mut dyn ModePolicy) -> Result<CycleResult> {
+        let mut state = SearchState::new(self.graph.num_vertices());
+        let run = crate::exec::drive(self, &mut state, root, policy)?;
+        let seconds = self.cfg.cycles_to_seconds(run.cycles);
+        Ok(CycleResult {
+            cycles: run.cycles,
+            iter_cycles: run.iter_cycles,
+            seconds,
+            levels: run.levels,
+            traversed_edges: run.traversed_edges,
+            gteps: if seconds > 0.0 {
+                run.traversed_edges as f64 / seconds / 1e9
+            } else {
+                0.0
+            },
+            backpressure: run.backpressure,
+            pc_stats: run.pc_stats,
+            dispatcher: run.dispatcher,
+            pe_stats: run.pe_stats,
+            link_stats: run.link_stats,
+        })
+    }
+}
+
+impl BfsEngine for MultiCardSim {
+    fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    fn partitioning(&self) -> Partitioning {
+        self.cfg.part
+    }
+
+    /// Simulate one iteration cycle-by-cycle across every card and the
+    /// link mesh between them.
+    fn step(&mut self, state: &mut SearchState, mode: Mode) -> Result<StepStats> {
+        let n = self.graph.num_vertices();
+        let part = self.cfg.part;
+        let cards = part.num_cards;
+        let npes = part.num_pes;
+        let npgs = part.num_pgs;
+        let ppg = part.pes_per_pg();
+        let pes_per_card = part.pes_per_card();
+        let pgs_per_card = part.pgs_per_card();
+        let pcs_per_card = self.cfg.num_hbm_pcs / cards;
+        let dw = self.cfg.dw_bytes();
+        let sv = self.cfg.sv_bytes;
+        let verts_per_beat = (dw / sv).max(1) as usize;
+        let graph = std::sync::Arc::clone(&self.graph);
+        let graph = graph.as_ref();
+
+        // ---- Fetch lists per (global) PG, shared with CycleSim. ----
+        let fetches = build_fetch_lists(
+            graph,
+            part,
+            self.cfg.pull_early_exit,
+            state,
+            mode,
+            verts_per_beat,
+        );
+
+        // ---- Per-card subsystems + the mesh joining them. ----
+        let hbm_cfg = HbmSubsystemConfig {
+            axi: AxiConfig {
+                data_width: dw,
+                max_burst: 64,
+                outstanding: (self.cfg.hbm.latency_cycles as usize * 2).max(64),
+            },
+            latency_cycles: self.cfg.hbm.latency_cycles,
+            switch: self.cfg.switch_timing,
+            queue_capacity: self.cfg.pc_queue_capacity,
+            beats_per_cycle: self.cfg.hbm_beats_per_cycle(),
+        };
+        let mut hbms: Vec<HbmSubsystem> = (0..cards)
+            .map(|_| HbmSubsystem::new(self.card_map.clone(), hbm_cfg))
+            .collect();
+        let mut fabrics: Vec<DispatcherFabric> = (0..cards)
+            .map(|_| {
+                self.cfg.dispatcher.build_fabric(
+                    pes_per_card,
+                    self.cfg.xbar_fifo_depth,
+                    self.cfg.pe.p2_msgs_per_cycle,
+                )
+            })
+            .collect();
+        let mut pgs: Vec<ProcessingGroup> = (0..npgs)
+            .map(|id| ProcessingGroup::new(id, ppg, self.cfg.pe, self.cfg.hbm, sv))
+            .collect();
+        let mut mesh = CardMesh::new(cards, self.cfg.link);
+        // Remote messages a PG decoded but has not pushed onto a link
+        // yet: `(dst_card, (local entry lane on dst, msg))`.
+        let mut outboxes: Vec<VecDeque<(usize, (usize, VertexMsg))>> =
+            (0..npgs).map(|_| VecDeque::new()).collect();
+        // Messages a card received but has not injected into its
+        // fabric yet.
+        let mut inboxes: Vec<VecDeque<(usize, VertexMsg)>> =
+            (0..cards).map(|_| VecDeque::new()).collect();
+
+        let sparse_pop = mode == Mode::Push && state.current.is_sparse();
+        schedule_p1(
+            part,
+            self.cfg.pe.scan_bits_per_cycle,
+            &mut pgs,
+            &fetches,
+            sparse_pop,
+        );
+
+        let scan_floor = if sparse_pop {
+            state.current.len().div_ceil(npes as u64)
+        } else {
+            let interval_bits = (n as u64).div_ceil(npes as u64);
+            interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64)
+        };
+
+        let staging_cap = 2 * verts_per_beat;
+        let mut blocked = vec![false; pgs_per_card];
+        let mut cycle = 0u64;
+        let mut newly = 0u64;
+        loop {
+            cycle += 1;
+            for f in &mut fabrics {
+                f.begin_cycle();
+            }
+
+            // ---- PEs drain their card-local fabric output FIFOs. ----
+            for pe in 0..npes {
+                let card = pe / pes_per_card;
+                let lane = pe % pes_per_card;
+                let pgi = part.pg_of_pe(pe);
+                let elem = &mut pgs[pgi].pes[pe % ppg];
+                elem.begin_cycle();
+                if !elem.retire_pending_writes() {
+                    continue;
+                }
+                loop {
+                    let Some(&msg) = fabrics[card].peek_output(lane) else {
+                        break;
+                    };
+                    if !elem.try_check() {
+                        break;
+                    }
+                    fabrics[card].pop_output(lane);
+                    match mode {
+                        Mode::Push => {
+                            let w = msg.vid as usize;
+                            if !state.visited.get(w) {
+                                state.visited.set(w);
+                                state.next.insert(msg.vid, graph.csr.degree(msg.vid));
+                                state.levels[w] = state.bfs_level + 1;
+                                newly += 1;
+                                elem.stage_result();
+                            }
+                        }
+                        Mode::Pull => {
+                            let u = msg.vid as usize;
+                            let c = msg.child as usize;
+                            if state.current.contains(u) && !state.visited.get(c) {
+                                state.visited.set(c);
+                                state.next.insert(msg.child, graph.csr.degree(msg.child));
+                                state.levels[c] = state.bfs_level + 1;
+                                newly += 1;
+                                elem.stage_result();
+                            }
+                        }
+                    }
+                }
+            }
+
+            for f in &mut fabrics {
+                f.tick();
+            }
+
+            // ---- Outboxes → links (typed back-pressure: a refused
+            // head parks the outbox until next cycle). ----
+            for (pgi, outbox) in outboxes.iter_mut().enumerate() {
+                let src_card = part.card_of_pg(pgi);
+                while let Some(&(dst_card, (lane, msg))) = outbox.front() {
+                    if mesh
+                        .link_mut(src_card, dst_card)
+                        .try_send(cycle, lane, msg)
+                        .is_err()
+                    {
+                        break;
+                    }
+                    outbox.pop_front();
+                }
+            }
+
+            // ---- Links → inboxes, capped by latency, the per-cycle
+            // budget, and the inbox's headroom. ----
+            for (card, inbox) in inboxes.iter_mut().enumerate() {
+                let room = staging_cap.saturating_sub(inbox.len());
+                mesh.deliver_into(cycle, card, inbox, room);
+            }
+
+            // ---- Injection: local staging and the card inbox both
+            // offer to the card's fabric entry rank. ----
+            for (pgi, pg) in pgs.iter_mut().enumerate() {
+                fabrics[part.card_of_pg(pgi)].inject(&mut pg.staging, verts_per_beat as u32);
+            }
+            for (card, inbox) in inboxes.iter_mut().enumerate() {
+                fabrics[card].inject(inbox, verts_per_beat as u32);
+            }
+
+            // ---- P1 issue into each card's HBM subsystem. ----
+            for (pgi, pg) in pgs.iter_mut().enumerate() {
+                let card = part.card_of_pg(pgi);
+                let local_pg = pgi % pgs_per_card;
+                while let Some(&(ready, v, len)) = pg.issue.front() {
+                    if ready > cycle {
+                        break;
+                    }
+                    pg.issue.pop_front();
+                    hbms[card].request_list(local_pg, part.pe_of(v) % ppg, len as u64 * sv);
+                    if len > 0 {
+                        pg.list_queue.push_back((v, len));
+                    }
+                }
+            }
+
+            // ---- HBM per card: stream beats, gating ports whose
+            // staging *or outbox* cannot absorb a full beat — link
+            // back-pressure reaching the memory side. ----
+            for card in 0..cards {
+                for local_pg in 0..pgs_per_card {
+                    let pgi = card * pgs_per_card + local_pg;
+                    blocked[local_pg] = pgs[pgi].staging.len()
+                        + outboxes[pgi].len()
+                        + verts_per_beat
+                        > staging_cap;
+                }
+                for beat in hbms[card].tick_gated(&blocked) {
+                    let pgi = card * pgs_per_card + beat.port;
+                    let pg = &mut pgs[pgi];
+                    match beat.kind {
+                        ReadKind::Offset => {
+                            pg.select_next_stream();
+                        }
+                        ReadKind::Edges => {
+                            pg.select_next_stream();
+                            if let Some((v, fetch_len)) = pg.stream {
+                                let list = match mode {
+                                    Mode::Push => graph.out_neighbors(v),
+                                    Mode::Pull => graph.in_neighbors(v),
+                                };
+                                let src_lane = part.pe_of(v) % pes_per_card;
+                                let end = (pg.stream_pos + verts_per_beat).min(fetch_len);
+                                for &u in &list[pg.stream_pos..end] {
+                                    let msg = match mode {
+                                        Mode::Push => VertexMsg { vid: u, child: u },
+                                        Mode::Pull => VertexMsg { vid: u, child: v },
+                                    };
+                                    let dst_card = part.pe_of(msg.vid) / pes_per_card;
+                                    if dst_card == card {
+                                        pg.staging.push_back((src_lane, msg));
+                                    } else {
+                                        outboxes[pgi].push_back((dst_card, (src_lane, msg)));
+                                    }
+                                }
+                                pg.stream_pos = end;
+                                if end >= fetch_len {
+                                    pg.stream = None;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            mesh.end_cycle();
+
+            // ---- Termination: every card and every link drained. ----
+            let mem_idle = hbms.iter().all(HbmSubsystem::idle)
+                && pgs.iter().all(ProcessingGroup::stream_idle);
+            let pes_idle = pgs
+                .iter()
+                .all(|pg| pg.pes.iter().all(crate::pe::ProcessingElement::idle));
+            let links_idle = mesh.is_empty()
+                && outboxes.iter().all(VecDeque::is_empty)
+                && inboxes.iter().all(VecDeque::is_empty);
+            if mem_idle && pes_idle && links_idle && fabrics.iter().all(DispatcherFabric::is_empty)
+            {
+                break;
+            }
+            if cycle > self.cfg.max_cycles_per_iter {
+                return Err(SimError::NonConvergence {
+                    iteration: state.bfs_level,
+                    limit: self.cfg.max_cycles_per_iter,
+                }
+                .into());
+            }
+        }
+
+        // ---- Collect stats in global order. ----
+        let mut pe_stats: Vec<PeStats> = Vec::with_capacity(npes);
+        for pg in pgs.iter_mut() {
+            for elem in pg.pes.iter_mut() {
+                elem.finish_window();
+                let mut s = elem.stats.clone();
+                s.pe = pe_stats.len();
+                pe_stats.push(s);
+            }
+        }
+        // Per-card PC stats re-indexed to global PC ids.
+        let mut pc_stats: Vec<PcStats> = Vec::with_capacity(self.cfg.num_hbm_pcs);
+        for (card, hbm) in hbms.iter().enumerate() {
+            for mut s in hbm.stats() {
+                s.pc += card * pcs_per_card;
+                pc_stats.push(s);
+            }
+        }
+        let mut dispatcher = DispatcherStats::default();
+        for f in &fabrics {
+            dispatcher.merge(&f.stats);
+        }
+        let link_stats: Vec<LinkStats> = mesh.stats();
+
+        let it_cycles = cycle.max(scan_floor) + self.cfg.iter_sync_cycles;
+        let backpressure = dispatcher.stalls + dispatcher.inject_stalls;
+        Ok(StepStats {
+            newly_visited: newly,
+            traffic: None,
+            cycles: it_cycles,
+            backpressure,
+            pc_stats,
+            dispatcher,
+            pe_stats,
+            link_stats,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "multicard"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfs::reference;
+    use crate::graph::generators;
+    use crate::sched::{Fixed, Hybrid};
+
+    fn multi(cards: usize, pcs_per_card: usize, pes_per_card: usize) -> SimConfig {
+        SimConfig::multi_card(cards, pcs_per_card, pes_per_card)
+    }
+
+    #[test]
+    fn one_card_matches_reference() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(8, 8, 21));
+        let root = reference::sample_roots(&g, 1, 21)[0];
+        let res = MultiCardSim::new(g.clone(), multi(1, 4, 8))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        let r = reference::bfs(&g, root);
+        assert_eq!(res.levels, r.levels);
+        assert!(res.link_stats.is_empty(), "no links at one card");
+    }
+
+    #[test]
+    fn two_cards_match_reference_and_cross_traffic_is_priced() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 22));
+        let root = reference::sample_roots(&g, 1, 22)[0];
+        let truth = reference::bfs(&g, root);
+        let res = MultiCardSim::new(g.clone(), multi(2, 2, 4))
+            .run(root, &mut Hybrid::default())
+            .unwrap();
+        assert_eq!(res.levels, truth.levels);
+        assert_eq!(res.link_stats.len(), 2, "one link per direction");
+        let sent: u64 = res.link_stats.iter().map(|l| l.sent).sum();
+        let delivered: u64 = res.link_stats.iter().map(|l| l.delivered).sum();
+        assert!(sent > 0, "an RMAT graph must cross cards");
+        assert_eq!(sent, delivered, "every sent message arrives");
+    }
+
+    #[test]
+    fn four_cards_match_reference_push_and_pull() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 23));
+        let root = reference::sample_roots(&g, 1, 23)[0];
+        let truth = reference::bfs(&g, root);
+        for mode in [Mode::Push, Mode::Pull] {
+            let res = MultiCardSim::new(g.clone(), multi(4, 1, 2))
+                .run(root, &mut Fixed(mode))
+                .unwrap();
+            assert_eq!(res.levels, truth.levels, "{mode:?}");
+            assert_eq!(res.link_stats.len(), 12);
+        }
+    }
+
+    #[test]
+    fn link_latency_costs_cycles_but_not_results() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 24));
+        let root = reference::sample_roots(&g, 1, 24)[0];
+        let fast = MultiCardSim::new(g.clone(), multi(2, 2, 4).with_link_latency(1))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        let slow = MultiCardSim::new(g.clone(), multi(2, 2, 4).with_link_latency(500))
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap();
+        assert_eq!(fast.levels, slow.levels);
+        assert!(
+            slow.cycles > fast.cycles,
+            "500-cycle links {} !> 1-cycle links {}",
+            slow.cycles,
+            fast.cycles
+        );
+    }
+
+    #[test]
+    fn zero_bandwidth_link_fails_typed_not_hangs() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(8, 8, 25));
+        let root = reference::sample_roots(&g, 1, 25)[0];
+        let mut cfg = multi(2, 2, 4).with_link_msgs_per_cycle(0);
+        cfg.max_cycles_per_iter = 50_000; // bound the doomed run
+        let err = MultiCardSim::new(g.clone(), cfg)
+            .run(root, &mut Fixed(Mode::Push))
+            .unwrap_err();
+        match err.downcast_ref::<SimError>() {
+            Some(SimError::NonConvergence { limit, .. }) => assert_eq!(*limit, 50_000),
+            other => panic!("expected NonConvergence, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn uneven_pc_sharding_is_rejected() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(8, 8, 26));
+        let mut cfg = multi(4, 1, 2);
+        cfg.num_hbm_pcs = 2; // 2 PCs cannot shard across 4 cards
+        assert!(MultiCardSim::try_new(g, cfg).is_err());
+    }
+}

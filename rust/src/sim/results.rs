@@ -7,6 +7,7 @@ use crate::bfs::Mode;
 use crate::dispatcher::DispatcherStats;
 use crate::hbm::pc::PcStats;
 use crate::pe::PeStats;
+use crate::sim::link::LinkStats;
 
 /// Which pipeline phase bounded an iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +90,9 @@ pub struct SimResult {
     /// Per-PE pipeline stats (measured by the cycle engine; empty
     /// otherwise).
     pub pe_stats: Vec<PeStats>,
+    /// Per-link inter-card stats (measured by the multi-card engine;
+    /// empty for single-card runs).
+    pub link_stats: Vec<LinkStats>,
 }
 
 impl SimResult {
@@ -103,6 +107,7 @@ impl SimResult {
         pc_stats: Vec<PcStats>,
         dispatcher: DispatcherStats,
         pe_stats: Vec<PeStats>,
+        link_stats: Vec<LinkStats>,
     ) -> Self {
         Self {
             graph: graph.to_string(),
@@ -119,7 +124,19 @@ impl SimResult {
             pc_stats,
             dispatcher,
             pe_stats,
+            link_stats,
         }
+    }
+
+    /// Total inter-card link back-pressure events (0 unless a card
+    /// mesh was stepped).
+    pub fn total_link_stalls(&self) -> u64 {
+        self.link_stats.iter().map(|s| s.stall_cycles).sum()
+    }
+
+    /// Messages that crossed the card mesh (0 on single-card runs).
+    pub fn total_link_msgs(&self) -> u64 {
+        self.link_stats.iter().map(|s| s.delivered).sum()
     }
 
     /// Total BRAM-port saturation cycles across the PEs (0 unless the
@@ -195,8 +212,17 @@ impl SimResult {
                 self.dispatcher.avg_occupancy()
             )
         };
+        let links = if self.link_stats.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", links {} msgs ({} stalls)",
+                self.total_link_msgs(),
+                self.total_link_stalls()
+            )
+        };
         format!(
-            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}{}{}",
+            "{}: {} iters, {:.3} ms, {:.2} GTEPS, {:.2} GB/s agg, bottlenecks mem/pe/xbar = {}/{}/{}{}{}{}",
             self.graph,
             self.iters.len(),
             self.seconds * 1e3,
@@ -206,7 +232,8 @@ impl SimResult {
             p,
             d,
             pc,
-            xbar
+            xbar,
+            links
         )
     }
 }
@@ -244,6 +271,7 @@ mod tests {
             pc_stats: Vec::new(),
             dispatcher: DispatcherStats::default(),
             pe_stats: Vec::new(),
+            link_stats: Vec::new(),
         };
         assert_eq!(r.total_bytes(), 300);
         assert_eq!(r.bottleneck_counts(), (2, 1, 0));
@@ -274,6 +302,7 @@ mod tests {
             pc_stats: vec![mk_pc(0, 80), mk_pc(1, 40)],
             dispatcher: DispatcherStats::default(),
             pe_stats: Vec::new(),
+            link_stats: Vec::new(),
         };
         assert!((r.avg_pc_utilization() - 0.6).abs() < 1e-12);
         assert!((r.max_pc_utilization() - 0.8).abs() < 1e-12);

@@ -269,6 +269,7 @@ impl ThroughputSim {
             pc_stats,
             dispatcher: Default::default(),
             pe_stats: Vec::new(),
+            link_stats: Vec::new(),
         }
     }
 }
@@ -371,6 +372,7 @@ pub fn time_run(
             run.pc_stats.clone(),
             run.dispatcher.clone(),
             run.pe_stats.clone(),
+            run.link_stats.clone(),
         ))
     } else {
         anyhow::bail!(

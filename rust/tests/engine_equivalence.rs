@@ -487,6 +487,98 @@ fn service_never_serves_stale_epoch_after_swap() {
     }
 }
 
+/// The PR-9 card axis: the multi-card engine must be bit-identical to
+/// the reference at every card count, link FIFO depth, and link
+/// latency, across forced push/pull × sparse/dense representations and
+/// the hybrid policy. And the *amount* of cross-card traffic is a
+/// property of the partition and the search alone: total link messages
+/// must not move when the link's timing knobs (depth, latency) do —
+/// contention decides when frontier updates cross, never whether.
+#[test]
+fn multicard_bit_identical_across_cards_and_link_shapes() {
+    let g = Arc::new(generators::rmat_graph500(9, 8, 0xCA4D));
+    let root = reference::sample_roots(&g, 1, 0xCA4D)[0];
+    let truth = reference::bfs(&g, root);
+    for cards in [1usize, 2, 4] {
+        for policy_idx in 0..policies().len() {
+            let mut crossings: Option<(u64, u64)> = None;
+            for (depth, latency) in [(2usize, 32u64), (64, 32), (64, 1), (64, 300)] {
+                let cfg = SimConfig::multi_card(cards, 2, 4)
+                    .with_link_fifo_depth(depth)
+                    .with_link_latency(latency);
+                let mut engine = build_engine("multicard", &g, &cfg).expect("multicard");
+                let run = engine
+                    .run(root, policies()[policy_idx].as_mut())
+                    .expect("multicard run");
+                assert_eq!(
+                    run.levels, truth.levels,
+                    "cards={cards} depth={depth} latency={latency} policy={policy_idx}"
+                );
+                assert_eq!(run.reached, truth.reached);
+                let sent: u64 = run.link_stats.iter().map(|l| l.sent).sum();
+                let delivered: u64 = run.link_stats.iter().map(|l| l.delivered).sum();
+                assert_eq!(sent, delivered, "messages left in flight at termination");
+                for l in &run.link_stats {
+                    assert!(
+                        l.max_occupancy <= depth,
+                        "cards={cards}: link occupancy {} exceeds FIFO depth {depth}",
+                        l.max_occupancy
+                    );
+                }
+                if cards == 1 {
+                    assert_eq!(sent, 0, "one card must never use the links");
+                }
+                match crossings {
+                    None => crossings = Some((sent, delivered)),
+                    Some(expect) => assert_eq!(
+                        (sent, delivered),
+                        expect,
+                        "cards={cards} depth={depth} latency={latency} policy={policy_idx}: \
+                         link timing knobs moved the cross-card traffic"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// A starved link FIFO (depth 2 under 32-cycle latency: at most two
+/// messages in flight per ordered card pair) back-pressures all the way
+/// into the sending card's HBM scheduler. The run must slow down — more
+/// cycles, real stall counts — while computing the very same levels.
+#[test]
+fn multicard_starved_links_slow_down_but_never_diverge() {
+    let g = Arc::new(generators::rmat_graph500(9, 8, 0xBACC));
+    let root = reference::sample_roots(&g, 1, 0xBACC)[0];
+    let truth = reference::bfs(&g, root);
+    let run_at = |depth: usize| {
+        let cfg = SimConfig::multi_card(2, 2, 4).with_link_fifo_depth(depth);
+        let mut engine = build_engine("multicard", &g, &cfg).expect("multicard");
+        engine
+            .run(root, &mut Hybrid::default())
+            .expect("multicard run")
+    };
+    let starved = run_at(2);
+    let roomy = run_at(64);
+    assert_eq!(starved.levels, truth.levels);
+    assert_eq!(roomy.levels, truth.levels);
+    let stalls = |run: &scalabfs::exec::BfsRun| -> u64 {
+        run.link_stats.iter().map(|l| l.stall_cycles).sum()
+    };
+    assert!(
+        stalls(&starved) > stalls(&roomy),
+        "depth-2 links must stall more: {} !> {}",
+        stalls(&starved),
+        stalls(&roomy)
+    );
+    assert!(
+        starved.cycles > roomy.cycles,
+        "starved links must cost cycles: {} !> {}",
+        starved.cycles,
+        roomy.cycles
+    );
+}
+
 /// The XLA engine joins the differential test when its feature (and the
 /// AOT artifacts) are present.
 #[cfg(feature = "xla")]

@@ -2,7 +2,9 @@
 //! state invariants): modulo ownership, edge conservation, footprint
 //! accounting, and the CSR/CSC transpose contract.
 
-use scalabfs::graph::partition::{partition, pg_footprints};
+use scalabfs::graph::partition::{
+    card_footprint_bytes, partition, pg_footprint_bytes, pg_footprints,
+};
 use scalabfs::graph::{generators, Partitioning, VertexId};
 use scalabfs::util::prop::{self, PropConfig};
 use scalabfs::{prop_assert, prop_assert_eq};
@@ -117,6 +119,105 @@ fn pg_footprints_cover_whole_graph() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn card_axis_ownership_is_unique_and_total() {
+    prop::check("every vertex lands on exactly one (card, PG)", |rng| {
+        let cards = 1usize << rng.next_below(3); // 1, 2, 4
+        let pgs = cards << rng.next_below(3);
+        let pes = pgs << rng.next_below(3);
+        let p = Partitioning::new(pes, pgs).with_cards(cards);
+        let n = 1 + rng.next_below(4000) as usize;
+        let mut per_card = vec![0usize; cards];
+        for v in 0..n {
+            let v = v as VertexId;
+            let card = p.card_of(v);
+            prop_assert!(card < cards, "card {card} out of range for {cards}");
+            prop_assert_eq!(card, p.card_of_pg(p.pg_of(v)));
+            prop_assert_eq!(card, p.pe_of(v) / p.pes_per_card());
+            per_card[card] += 1;
+        }
+        prop_assert_eq!(per_card.iter().sum::<usize>(), n);
+        // Card PG ranges are contiguous: PGs [c*k, (c+1)*k) are card c's.
+        let k = p.pgs_per_card();
+        for pg in 0..pgs {
+            prop_assert_eq!(p.card_of_pg(pg), pg / k);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn card_footprints_partition_the_pg_footprints() {
+    prop::for_all(
+        PropConfig { cases: 12, seed: 0x9CA8 },
+        "per-card footprints sum to the global footprint, card by card",
+        |rng| {
+            let g = generators::rmat_graph500(8 + rng.next_below(2) as u32, 6, rng.next_u64());
+            let cards = 1usize << rng.next_below(3);
+            let pgs = cards << rng.next_below(2);
+            let pes = pgs << rng.next_below(2);
+            let p = Partitioning::new(pes, pgs).with_cards(cards);
+            let per_pg = pg_footprint_bytes(&g, p, 4);
+            let per_card = card_footprint_bytes(&g, p, 4);
+            prop_assert_eq!(per_card.len(), cards);
+            prop_assert_eq!(per_card.iter().sum::<u64>(), per_pg.iter().sum::<u64>());
+            // Each card's bytes are exactly its contiguous PG range's.
+            let k = p.pgs_per_card();
+            for (c, &bytes) in per_card.iter().enumerate() {
+                let expect: u64 = per_pg[c * k..(c + 1) * k].iter().sum();
+                prop_assert!(bytes == expect, "card {c}: {bytes} != {expect}");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Degenerate card shapes: one card collapses the axis entirely; more
+/// cards than vertices leaves the tail cards owning nothing; a
+/// single-vertex graph still round-trips the footprint accounting.
+#[test]
+fn degenerate_card_shapes_round_trip() {
+    // One card: every vertex on card 0, one footprint bucket = total.
+    let g = generators::rmat_graph500(8, 4, 11);
+    let p1 = Partitioning::new(8, 4).with_cards(1);
+    for v in 0..g.num_vertices() as VertexId {
+        assert_eq!(p1.card_of(v), 0);
+    }
+    let per_pg = pg_footprint_bytes(&g, p1, 4);
+    assert_eq!(
+        card_footprint_bytes(&g, p1, 4),
+        vec![per_pg.iter().sum::<u64>()]
+    );
+
+    // Fewer vertices than cards: vertices 0..3 use only cards 0 and 1
+    // of four (modulo PEs, contiguous PE ranges per card).
+    let tiny = generators::chain(3);
+    let p4 = Partitioning::new(8, 8).with_cards(4);
+    for v in 0..tiny.num_vertices() as VertexId {
+        assert!(p4.card_of(v) < 2, "vertex {v} on card {}", p4.card_of(v));
+    }
+    let per_card = card_footprint_bytes(&tiny, p4, 4);
+    assert_eq!(per_card.len(), 4);
+    assert_eq!(
+        per_card.iter().sum::<u64>(),
+        pg_footprint_bytes(&tiny, p4, 4).iter().sum::<u64>()
+    );
+
+    // A single-vertex graph survives every card count that its PG
+    // shape admits.
+    let unit = generators::chain(1);
+    for cards in [1usize, 2, 4] {
+        let p = Partitioning::new(4, 4).with_cards(cards);
+        assert_eq!(p.card_of(0), 0);
+        let fp = card_footprint_bytes(&unit, p, 4);
+        assert_eq!(fp.len(), cards);
+        assert_eq!(
+            fp.iter().sum::<u64>(),
+            pg_footprint_bytes(&unit, p, 4).iter().sum::<u64>()
+        );
+    }
 }
 
 #[test]
