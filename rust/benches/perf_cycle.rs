@@ -55,5 +55,41 @@ fn main() -> anyhow::Result<()> {
             res.dispatcher.stalls + res.dispatcher.inject_stalls,
         );
     }
+
+    // Event-horizon fast-forward vs the unit-tick oracle (DESIGN.md §10):
+    // same machine state, same stats, different wall clock only. The
+    // bit-identity assert is the functional gate, the ratio is the point.
+    println!("\n--- fast-forward vs unit-tick oracle (8 PC x 16 PE) ---");
+    let cfg = SimConfig::u280(8, 16);
+    let timed = |cfg: SimConfig| -> anyhow::Result<(f64, scalabfs::sim::cycle::CycleResult)> {
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let res = CycleSim::new(g.clone(), cfg.clone()).run(root, &mut Hybrid::default())?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(res);
+        }
+        Ok((best, last.expect("reps >= 1")))
+    };
+    let (t_ff, ff) = timed(cfg.clone())?;
+    let (t_oracle, oracle) = timed(cfg.with_fast_forward(false))?;
+    anyhow::ensure!(
+        ff.cycles == oracle.cycles
+            && ff.iter_cycles == oracle.iter_cycles
+            && ff.levels == oracle.levels
+            && ff.pc_stats == oracle.pc_stats
+            && ff.dispatcher == oracle.dispatcher
+            && ff.pe_stats == oracle.pe_stats,
+        "fast-forward diverged from the unit-tick oracle"
+    );
+    println!(
+        "fast-forward {:>7.2} s  oracle {:>7.2} s  speedup {:.2}x  \
+         ({} sim cycles, outputs bit-identical)",
+        t_ff,
+        t_oracle,
+        t_oracle / t_ff,
+        ff.cycles,
+    );
     Ok(())
 }

@@ -52,7 +52,8 @@ use crate::exec::{BfsEngine, SearchState};
 use crate::graph::{generators, Graph, Partitioning};
 use crate::sched::{Fixed, Hybrid, ReprPolicy, WithRepr};
 use crate::sim::config::SimConfig;
-use crate::sim::cycle::CycleSim;
+use crate::sim::cycle::{CycleResult, CycleSim};
+use crate::sim::multicard::MultiCardSim;
 use crate::sim::throughput::ThroughputSim;
 use crate::Result;
 use std::sync::Arc;
@@ -440,7 +441,10 @@ fn parallel_section(smoke: bool, threads: Option<usize>) -> Result<Section> {
 }
 
 /// `perf_cycle` in measured mode: the cycle-stepped simulator's host
-/// loop rate plus its (deterministic) simulated outputs.
+/// loop rate plus its (deterministic) simulated outputs, the
+/// event-horizon fast-forward speedup over the unit-tick oracle
+/// (bit-identity asserted before any timing claim — DESIGN.md §10), and
+/// the per-card parallel-ticking speedup of the 2-card engine.
 fn cycle_section(smoke: bool) -> Result<Section> {
     let (scale, reps) = if smoke { (12u32, 1usize) } else { (16, 3) };
     println!("[bench] cycle: RMAT-{scale} d16, 8 PC x 16 PE ...");
@@ -458,6 +462,53 @@ fn cycle_section(smoke: bool) -> Result<Section> {
             .run(root, &mut Hybrid::default())
             .expect("cycle sim step");
     });
+
+    // Fast-forward must change wall-clock only: every simulated quantity
+    // matches the unit-tick oracle before the speedup means anything.
+    let oracle_cfg = cfg.clone().with_fast_forward(false);
+    let oracle = CycleSim::new(g.clone(), oracle_cfg.clone()).run(root, &mut Hybrid::default())?;
+    anyhow::ensure!(
+        oracle.cycles == res.cycles
+            && oracle.iter_cycles == res.iter_cycles
+            && oracle.levels == res.levels
+            && oracle.pc_stats == res.pc_stats
+            && oracle.dispatcher == res.dispatcher
+            && oracle.pe_stats == res.pe_stats,
+        "fast-forward diverged from the unit-tick oracle"
+    );
+    let t_oracle = time_best(reps, || {
+        let _ = CycleSim::new(g.clone(), oracle_cfg.clone())
+            .run(root, &mut Hybrid::default())
+            .expect("cycle sim step");
+    });
+
+    // Per-card parallel ticking: 2 cards, 2 worker threads vs serial.
+    let (mc_pcs, mc_pes) = if smoke { (2usize, 4usize) } else { (4, 8) };
+    let mc_cfg = SimConfig::multi_card(2, mc_pcs, mc_pes);
+    let run_mc = |threads: usize| -> Result<CycleResult> {
+        MultiCardSim::try_new(g.clone(), mc_cfg.clone().with_threads(threads))?
+            .run(root, &mut Hybrid::default())
+    };
+    let mc_serial = run_mc(1)?;
+    let mc_parallel = run_mc(2)?;
+    anyhow::ensure!(
+        mc_serial.cycles == mc_parallel.cycles
+            && mc_serial.levels == mc_parallel.levels
+            && mc_serial.pc_stats == mc_parallel.pc_stats
+            && mc_serial.link_stats == mc_parallel.link_stats,
+        "parallel per-card ticking diverged from the serial schedule"
+    );
+    let t_mc_1 = time_best(reps, || {
+        run_mc(1).expect("multicard run");
+    });
+    let t_mc_2 = time_best(reps, || {
+        run_mc(2).expect("multicard run");
+    });
+
+    // Smoke floors are loose (RMAT-12 has proportionally more non-idle
+    // cycles to fast-forward over, and CI runners have few cores); the
+    // full-mode floors are the real target.
+    let (ff_floor, par_floor) = if smoke { (0.75, 0.4) } else { (2.0, 1.0) };
     Ok(Section {
         name: "cycle",
         metrics: vec![
@@ -467,6 +518,24 @@ fn cycle_section(smoke: bool) -> Result<Section> {
                 format!("cycle_host_mcps_{tag}"),
                 res.cycles as f64 / t / 1e6,
                 "Mcycle/s",
+            ),
+            wall(
+                format!("cycle_oracle_host_mcps_{tag}"),
+                oracle.cycles as f64 / t_oracle / 1e6,
+                "Mcycle/s",
+            ),
+            ratio(format!("cycle_ff_speedup_{tag}"), t_oracle / t, ff_floor),
+            exact(
+                format!("cycle_mc2_sim_cycles_{tag}"),
+                mc_serial.cycles as f64,
+                "cycles",
+            ),
+            wall(format!("cycle_mc2_serial_ms_{tag}"), t_mc_1 * 1e3, "ms"),
+            wall(format!("cycle_mc2_parallel_ms_{tag}"), t_mc_2 * 1e3, "ms"),
+            ratio(
+                format!("cycle_mc_par_speedup_{tag}"),
+                t_mc_1 / t_mc_2,
+                par_floor,
             ),
         ],
     })

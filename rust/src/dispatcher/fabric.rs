@@ -48,7 +48,7 @@ pub struct VertexMsg {
 /// Measured dispatcher behaviour over an observation window (one
 /// iteration for [`crate::exec::StepStats`], a whole run once the
 /// driver has [`merge`](DispatcherStats::merge)d the iterations).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct DispatcherStats {
     /// Messages delivered out of the final layer into the PE FIFOs.
     pub delivered: u64,
@@ -302,6 +302,30 @@ impl DispatcherFabric {
     /// True when no message is queued in any rank.
     pub fn is_empty(&self) -> bool {
         self.total_queued() == 0
+    }
+
+    /// Lower bound on the cycles until the fabric can next change
+    /// externally observable state on its own: `Some(1)` while any
+    /// message is queued (it moves, conflicts, or stalls next tick),
+    /// `None` when empty — an empty fabric only changes state when
+    /// something is injected.
+    pub fn next_event_in(&self) -> Option<u64> {
+        (!self.is_empty()).then_some(1)
+    }
+
+    /// Bulk-advance `k` cycles of an **empty** fabric, bit-identical to
+    /// `k` repetitions of [`begin_cycle`](Self::begin_cycle) +
+    /// [`tick`](Self::tick) with nothing queued: the occupancy integral
+    /// gains `k` zero samples and each layer boundary's round-robin
+    /// offset rotates once per skipped cycle (the tick rotates it
+    /// unconditionally, queued or not).
+    pub fn advance(&mut self, k: u64) {
+        debug_assert!(self.is_empty(), "advance() on a non-empty fabric");
+        self.stats.cycles += k;
+        let kk = (k % self.n as u64) as usize;
+        for i in 0..self.factors.len().saturating_sub(1) {
+            self.rr[i] = (self.rr[i] + kk) % self.n;
+        }
     }
 }
 

@@ -149,7 +149,7 @@ impl PseudoChannel {
 /// [`crate::sim::throughput::ThroughputSim`] derives the byte/busy
 /// fields from its per-iteration traffic (queue-depth fields stay 0
 /// there — the analytic model has no queues).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PcStats {
     /// PC index within the subsystem.
     pub pc: usize,
@@ -407,6 +407,91 @@ impl PcQueue {
     /// True when no work remains in the queue or in flight.
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.inflight.is_empty()
+    }
+
+    /// Lower bound on the cycles until this PC can next change
+    /// externally observable state (admit a request, stream a beat, or
+    /// record a stall), given the current destination-port gates.
+    /// `None` means no future event can come from this component alone.
+    ///
+    /// The bound is conservative: advancing by *strictly less* than the
+    /// returned value is always equivalent to that many unit ticks (see
+    /// [`advance`](Self::advance)); advancing by exactly the bound and
+    /// then unit-ticking once observes the event (or idleness).
+    pub fn next_event_in(&self, now: u64, blocked: &[bool]) -> Option<u64> {
+        if !self.queue.is_empty() && self.inflight.len() < self.max_outstanding {
+            // A queued request would be admitted on the next tick.
+            return Some(1);
+        }
+        let mut best: Option<u64> = None;
+        let mut ready_unblocked = false;
+        for t in &self.inflight {
+            if blocked.get(t.port).copied().unwrap_or(false) {
+                continue;
+            }
+            if t.ready_at <= now {
+                ready_unblocked = true;
+            } else {
+                let d = t.ready_at - now;
+                best = Some(best.map_or(d, |b| b.min(d)));
+            }
+        }
+        if ready_unblocked {
+            // A ready transaction streams as soon as accrued credit
+            // completes one beat. Mirror the tick's exact float update
+            // so the count is bit-faithful, capping the walk (a smaller
+            // bound is always safe).
+            let mut credit = self.beat_credit;
+            let mut n = 1u64;
+            loop {
+                credit = (credit + self.beats_per_cycle).min(1.0);
+                if credit >= 1.0 || n >= 64 {
+                    break;
+                }
+                n += 1;
+            }
+            best = Some(best.map_or(n, |b| b.min(n)));
+        }
+        best
+    }
+
+    /// Bulk-advance `k` cycles in one step, bit-identical to `k` calls
+    /// of [`tick_gated`](Self::tick_gated) under the caller's contract
+    /// that `k` is strictly below every bound
+    /// [`next_event_in`](Self::next_event_in) could report in the
+    /// window: no admission, no readiness crossing, no beat completion,
+    /// and a constant `blocked` view. Within such a window each unit
+    /// tick only samples queue-depth stats, accrues beat credit, and
+    /// books a busy cycle iff a ready unblocked transaction is waiting
+    /// on credit — all of which fold into closed forms here.
+    pub fn advance(&mut self, now: u64, k: u64, blocked: &[bool]) {
+        debug_assert!(
+            self.queue.is_empty() || self.inflight.len() >= self.max_outstanding,
+            "advance() across a pending admission"
+        );
+        self.stats.cycles += k;
+        self.stats.queue_depth_sum += self.queue.len() as u64 * k;
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.queue.len());
+        let ready_unblocked = self
+            .inflight
+            .iter()
+            .any(|t| t.ready_at <= now && !blocked.get(t.port).copied().unwrap_or(false));
+        if ready_unblocked {
+            self.stats.busy_cycles += k;
+        }
+        // Iterate the exact per-tick credit update rather than
+        // multiplying: float addition is not associative, and once the
+        // cap is hit further ticks are fixed points.
+        for _ in 0..k {
+            if self.beat_credit >= 1.0 {
+                break;
+            }
+            self.beat_credit = (self.beat_credit + self.beats_per_cycle).min(1.0);
+        }
+        debug_assert!(
+            !ready_unblocked || self.beat_credit < 1.0,
+            "advance() across a beat completion"
+        );
     }
 }
 

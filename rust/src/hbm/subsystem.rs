@@ -28,6 +28,7 @@ use super::map::AddressMap;
 use super::pc::{PcBeat, PcQueue, PcRequest, PcStats};
 use super::switch::SwitchTiming;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Knobs of the shared subsystem (see [`crate::sim::config::SimConfig`]
 /// for the experiment-facing defaults).
@@ -52,7 +53,7 @@ pub struct HbmSubsystemConfig {
 /// The shared HBM subsystem: `num_pcs` contended [`PcQueue`]s behind an
 /// [`AddressMap`], fed by per-port pending lists.
 pub struct HbmSubsystem {
-    map: AddressMap,
+    map: Arc<AddressMap>,
     axi: AxiConfig,
     /// Per-port crossing latency (fixed per port: a PG's whole shard
     /// lives on one PC).
@@ -64,7 +65,11 @@ pub struct HbmSubsystem {
 
 impl HbmSubsystem {
     /// New subsystem over `map` (one pending list per mapped port).
-    pub fn new(map: AddressMap, cfg: HbmSubsystemConfig) -> Self {
+    /// Accepts the map by value or as a shared [`Arc`] — engines that
+    /// rebuild the subsystem every BFS level pass an `Arc` clone
+    /// instead of deep-copying the map.
+    pub fn new(map: impl Into<Arc<AddressMap>>, cfg: HbmSubsystemConfig) -> Self {
+        let map = map.into();
         let num_ports = map.num_ports();
         let extra_latency: Vec<u64> = (0..num_ports)
             .map(|pg| {
@@ -173,6 +178,42 @@ impl HbmSubsystem {
     /// Back-pressure stalls summed over the PCs.
     pub fn total_stalls(&self) -> u64 {
         self.pcs.iter().map(|pc| pc.stats.stall_cycles).sum()
+    }
+
+    /// Lower bound on the cycles until the subsystem can next change
+    /// externally observable state: `Some(1)` while any port still has
+    /// a pending request to issue (issuing — or stalling on a full PC
+    /// queue — is a per-cycle state change), else the minimum of the
+    /// per-PC bounds. `None` when every PC is idle too.
+    pub fn next_event_in(&self, blocked: &[bool]) -> Option<u64> {
+        if self.pending.iter().any(|p| !p.is_empty()) {
+            return Some(1);
+        }
+        let mut best: Option<u64> = None;
+        for pc in &self.pcs {
+            if let Some(d) = pc.next_event_in(self.now, blocked) {
+                best = Some(best.map_or(d, |b| b.min(d)));
+            }
+        }
+        best
+    }
+
+    /// Bulk-advance `k` cycles, bit-identical to `k` beat-less
+    /// [`tick_gated`](Self::tick_gated) calls under the caller's
+    /// contract that `k` is strictly below
+    /// [`next_event_in`](Self::next_event_in) and `blocked` is
+    /// constant over the window.
+    pub fn advance(&mut self, k: u64, blocked: &[bool]) {
+        debug_assert!(
+            self.pending.iter().all(VecDeque::is_empty),
+            "advance() across a pending issue"
+        );
+        for pc in self.pcs.iter_mut() {
+            // Readiness classification is stable across the window, so
+            // the pre-advance `now` is the correct reference point.
+            pc.advance(self.now, k, blocked);
+        }
+        self.now += k;
     }
 }
 

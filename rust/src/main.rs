@@ -58,9 +58,9 @@ System commands:
                    --root-pool=32 --cache=1024 --pcs=4 --pes=8
                    --fast-workers=1 --threads=1]
   bench           measured perf suite -> scalabfs-bench-v1 JSON
-                  [--smoke --pr=9 --json=FILE --threads=N (parallel-section
+                  [--smoke --pr=10 --json=FILE --threads=N (parallel-section
                    thread count, default: host cores)]
-  bench-compare   regression gate: --old=BENCH_9.json --new=new.json
+  bench-compare   regression gate: --old=BENCH_10.json --new=new.json
                   [--tolerance=0.3] (floors always; exact/ratio bands vs a
                   measured same-mode baseline; exits non-zero on regression)
   datasets        list Table-I datasets
@@ -519,7 +519,7 @@ fn main() -> anyhow::Result<()> {
         "bench" => {
             let bopts = scalabfs::coordinator::BenchOptions {
                 smoke: kv.get("smoke").is_some(),
-                pr: get_u32("pr", 9),
+                pr: get_u32("pr", 10),
                 threads: kv.get("threads").and_then(|v| v.parse().ok()),
             };
             let doc = scalabfs::coordinator::bench::run_suite(&bopts)?;

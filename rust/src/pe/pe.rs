@@ -68,7 +68,7 @@ pub enum P1Work {
 /// Per-iteration (or per-run, once merged) work counters for one PE.
 /// The cycle simulator measures them; the analytic engine derives them
 /// from its traffic counters.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct PeStats {
     /// Global PE index.
     pub pe: usize,
@@ -215,6 +215,18 @@ impl ProcessingElement {
     /// True when no P3 write is outstanding.
     pub fn idle(&self) -> bool {
         self.pending_writes == 0
+    }
+
+    /// Lower bound on the cycles until this PE can next change
+    /// externally observable state on its own: `Some(1)` while a P3
+    /// write is pending (it retires next cycle), `None` when idle. An
+    /// idle PE only acts when a message reaches its input FIFO, and
+    /// its deferred busy/stall booking for the last active cycle is a
+    /// one-shot that [`begin_cycle`](Self::begin_cycle) performs
+    /// identically whether the next cycle comes immediately or after a
+    /// bulk skip — so no `advance` method is needed.
+    pub fn next_event_in(&self) -> Option<u64> {
+        (self.pending_writes > 0).then_some(1)
     }
 
     /// Close an observation window: the window's last cycle never gets

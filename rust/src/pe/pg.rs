@@ -118,6 +118,23 @@ impl ProcessingGroup {
             && self.list_queue.is_empty()
             && self.staging.is_empty()
     }
+
+    /// Lower bound on the cycles (from `cycle`) until this PG's
+    /// memory-side pipeline can next change externally observable
+    /// state: staged messages inject next cycle; otherwise the head of
+    /// the P1 issue schedule fires at its ready cycle. Queued or
+    /// streaming lists are deliberately *not* bounded here — their edge
+    /// beats ride on HBM transactions the
+    /// [`crate::hbm::HbmSubsystem`] already accounts for, so the
+    /// subsystem's own bound covers them.
+    pub fn next_event_in(&self, cycle: u64) -> Option<u64> {
+        if !self.staging.is_empty() {
+            return Some(1);
+        }
+        self.issue
+            .front()
+            .map(|&(ready, _, _)| ready.saturating_sub(cycle).max(1))
+    }
 }
 
 #[cfg(test)]

@@ -148,10 +148,22 @@ pub struct SimConfig {
     /// Intra-query host worker count
     /// ([`TrafficConfig::threads`](crate::bfs::bitmap::TrafficConfig)):
     /// above 1 each dense pull/push iteration expands across word-range
-    /// shards on a private rayon pool (DESIGN.md §8). Host wall-clock
+    /// shards on a private rayon pool (DESIGN.md §8), and the
+    /// multi-card cycle simulator additionally ticks its per-card
+    /// timing state on the same pool (DESIGN.md §10). Host wall-clock
     /// only — results and every traffic counter the timing models read
     /// are bit-identical at any value. Default 1 (serial).
     pub threads: usize,
+    /// Event-horizon fast-forward in the cycle simulators (DESIGN.md
+    /// §10): when the whole machine is provably waiting on
+    /// known-latency events (HBM readiness, beat-credit refill,
+    /// inter-card latency), bulk-advance every counter and stats
+    /// integral to the horizon instead of unit-ticking through the
+    /// wait. Host wall-clock only — levels, total cycles, and every
+    /// `Pc`/`Dispatcher`/`Pe`/`Link` stat are bit-identical with it on
+    /// or off (the `fastforward_equiv` suite pins this). `false` is
+    /// the unit-tick oracle. Default `true`.
+    pub fast_forward: bool,
 }
 
 impl SimConfig {
@@ -178,6 +190,7 @@ impl SimConfig {
             pull_word_parallel: true,
             push_tile_bits: Some(crate::bfs::bitmap::DEFAULT_PUSH_TILE_BITS),
             threads: 1,
+            fast_forward: true,
         }
     }
 
@@ -253,6 +266,14 @@ impl SimConfig {
     /// clamp to the serial datapath).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Toggle event-horizon fast-forward in the cycle simulators
+    /// (`false` = the unit-tick oracle the differential suite compares
+    /// against).
+    pub fn with_fast_forward(mut self, on: bool) -> Self {
+        self.fast_forward = on;
         self
     }
 

@@ -85,7 +85,9 @@ pub struct CycleResult {
 pub struct CycleSim {
     graph: std::sync::Arc<Graph>,
     cfg: SimConfig,
-    map: AddressMap,
+    map: std::sync::Arc<AddressMap>,
+    scratch: FetchScratch,
+    blocked: Vec<bool>,
 }
 
 /// Words per rayon task in the sharded P1 scan. 4096 words = 256 Ki
@@ -93,91 +95,117 @@ pub struct CycleSim {
 /// split across the pool.
 const SCAN_CHUNK_WORDS: usize = 4096;
 
-/// Build one iteration's per-PG fetch lists: `(vertex, entries to
-/// stream)` in ascending vertex order. Pull mode applies the same
-/// chunked early exit as the functional engine.
+/// Reusable scratch for building one iteration's per-PG fetch lists:
+/// `(vertex, entries to stream)` in ascending vertex order. Pull mode
+/// applies the same chunked early exit as the functional engine.
 ///
-/// A sparse push frontier skips the bitmap scan entirely: the
-/// hardware pops the frontier FIFO, so the per-PG lists are
-/// bucketed straight from the vertex list (then sorted per PG to
-/// the ascending order the in-order HBM readers consume). A dense
-/// frontier keeps the sharded scan: rayon workers take disjoint
-/// word ranges and the per-range buckets concatenate back in
-/// vertex order.
+/// A sparse push frontier skips the bitmap scan entirely: the hardware
+/// pops the frontier FIFO, so the per-PG lists are bucketed straight
+/// from the vertex list (then sorted per PG to the ascending order the
+/// in-order HBM readers consume). A dense frontier keeps the sharded
+/// scan: rayon workers take disjoint word ranges (chunk index fixes
+/// each worker's bucket set, so reuse stays deterministic) and the
+/// per-range buckets concatenate back in vertex order.
 ///
-/// Shared by [`CycleSim`] and
+/// All nested `Vec`s — the per-chunk bucket sets and the merged lists —
+/// persist across iterations, replacing the former per-step
+/// `vec![Vec::new(); npgs]` allocations. Shared by [`CycleSim`] and
 /// [`MultiCardSim`](super::multicard::MultiCardSim) — PG indices are
-/// global, so the multi-card engine slices the result per card.
-pub(crate) fn build_fetch_lists(
-    graph: &Graph,
-    part: Partitioning,
-    pull_early_exit: bool,
-    state: &SearchState,
-    mode: Mode,
-    verts_per_beat: usize,
-) -> Vec<Vec<(VertexId, usize)>> {
-    let npgs = part.num_pgs;
-    let early_exit = pull_early_exit;
-    if mode == Mode::Push {
-        if let Some(verts) = state.current.sparse_verts() {
-            let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-            for &v in verts {
-                fetches[part.pg_of(v)].push((v, graph.out_neighbors(v).len()));
-            }
-            for pg_list in &mut fetches {
-                pg_list.sort_unstable_by_key(|&(v, _)| v);
-            }
-            return fetches;
+/// global, so the multi-card engine slices [`Self::fetches`] per card.
+#[derive(Default)]
+pub(crate) struct FetchScratch {
+    /// Per-rayon-chunk bucket sets (`chunks[ci][pg]`), cleared — not
+    /// freed — between iterations.
+    chunks: Vec<Vec<Vec<(VertexId, usize)>>>,
+    /// The merged per-PG fetch lists of the most recent
+    /// [`build`](Self::build) call.
+    pub(crate) fetches: Vec<Vec<(VertexId, usize)>>,
+}
+
+impl FetchScratch {
+    /// Rebuild [`Self::fetches`] for one iteration.
+    pub(crate) fn build(
+        &mut self,
+        graph: &Graph,
+        part: Partitioning,
+        pull_early_exit: bool,
+        state: &SearchState,
+        mode: Mode,
+        verts_per_beat: usize,
+    ) {
+        let npgs = part.num_pgs;
+        let early_exit = pull_early_exit;
+        if self.fetches.len() != npgs {
+            self.fetches.resize_with(npgs, Vec::new);
         }
-    }
-    let current = state.current.bits();
-    let visited = &state.visited;
-    let scanned_words = match mode {
-        Mode::Push => current.num_words(),
-        Mode::Pull => visited.num_words(),
-    };
-    let nchunks = scanned_words.div_ceil(SCAN_CHUNK_WORDS);
-    let buckets: Vec<Vec<Vec<(VertexId, usize)>>> = (0..nchunks)
-        .into_par_iter()
-        .map(|ci| {
-            let ws = ci * SCAN_CHUNK_WORDS;
-            let we = ws + SCAN_CHUNK_WORDS;
-            let mut local: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-            match mode {
-                Mode::Push => current.for_ones_in_word_range(ws, we, |v| {
-                    let v = v as VertexId;
-                    let len = graph.out_neighbors(v).len();
-                    local[part.pg_of(v)].push((v, len));
-                }),
-                Mode::Pull => visited.for_zeros_in_word_range(ws, we, |v| {
-                    let v = v as VertexId;
-                    let list = graph.in_neighbors(v);
-                    if list.is_empty() {
-                        return;
-                    }
-                    let fetched = if early_exit {
-                        match list.iter().position(|&u| current.get(u as usize)) {
-                            Some(i) => ((i + verts_per_beat) / verts_per_beat
-                                * verts_per_beat)
-                                .min(list.len()),
-                            None => list.len(),
+        for pg_list in &mut self.fetches {
+            pg_list.clear();
+        }
+        if mode == Mode::Push {
+            if let Some(verts) = state.current.sparse_verts() {
+                for &v in verts {
+                    self.fetches[part.pg_of(v)].push((v, graph.out_neighbors(v).len()));
+                }
+                for pg_list in &mut self.fetches {
+                    pg_list.sort_unstable_by_key(|&(v, _)| v);
+                }
+                return;
+            }
+        }
+        let current = state.current.bits();
+        let visited = &state.visited;
+        let scanned_words = match mode {
+            Mode::Push => current.num_words(),
+            Mode::Pull => visited.num_words(),
+        };
+        let nchunks = scanned_words.div_ceil(SCAN_CHUNK_WORDS);
+        if self.chunks.len() < nchunks {
+            self.chunks.resize_with(nchunks, Vec::new);
+        }
+        self.chunks[..nchunks]
+            .par_iter_mut()
+            .enumerate()
+            .for_each(|(ci, local)| {
+                if local.len() != npgs {
+                    local.resize_with(npgs, Vec::new);
+                }
+                for bucket in local.iter_mut() {
+                    bucket.clear();
+                }
+                let ws = ci * SCAN_CHUNK_WORDS;
+                let we = ws + SCAN_CHUNK_WORDS;
+                match mode {
+                    Mode::Push => current.for_ones_in_word_range(ws, we, |v| {
+                        let v = v as VertexId;
+                        let len = graph.out_neighbors(v).len();
+                        local[part.pg_of(v)].push((v, len));
+                    }),
+                    Mode::Pull => visited.for_zeros_in_word_range(ws, we, |v| {
+                        let v = v as VertexId;
+                        let list = graph.in_neighbors(v);
+                        if list.is_empty() {
+                            return;
                         }
-                    } else {
-                        list.len()
-                    };
-                    local[part.pg_of(v)].push((v, fetched));
-                }),
+                        let fetched = if early_exit {
+                            match list.iter().position(|&u| current.get(u as usize)) {
+                                Some(i) => ((i + verts_per_beat) / verts_per_beat
+                                    * verts_per_beat)
+                                    .min(list.len()),
+                                None => list.len(),
+                            }
+                        } else {
+                            list.len()
+                        };
+                        local[part.pg_of(v)].push((v, fetched));
+                    }),
+                }
+            });
+        for bucket in &mut self.chunks[..nchunks] {
+            for (pg, shard) in bucket.iter_mut().enumerate() {
+                self.fetches[pg].append(shard);
             }
-            local
-        })
-        .collect();
-    let mut fetches: Vec<Vec<(VertexId, usize)>> = vec![Vec::new(); npgs];
-    for mut bucket in buckets {
-        for (pg, shard) in bucket.iter_mut().enumerate() {
-            fetches[pg].append(shard);
         }
     }
-    fetches
 }
 
 /// Fill each PG's P1 issue schedule from its fetch list: the cycle
@@ -236,8 +264,14 @@ impl CycleSim {
     /// packed (unpartitioned) placement overflows the in-service PCs.
     pub fn try_new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Result<Self> {
         let graph = graph.into();
-        let map = cfg.address_map(&graph)?;
-        Ok(Self { graph, cfg, map })
+        let map = std::sync::Arc::new(cfg.address_map(&graph)?);
+        Ok(Self {
+            graph,
+            cfg,
+            map,
+            scratch: FetchScratch::default(),
+            blocked: Vec::new(),
+        })
     }
 
     /// Run BFS from `root` cycle-accurately (fresh state; the shared
@@ -289,8 +323,9 @@ impl BfsEngine for CycleSim {
         let graph = std::sync::Arc::clone(&self.graph);
         let graph = graph.as_ref();
 
-        // ---- Build this iteration's fetch lists per PG (parallel). ----
-        let fetches = build_fetch_lists(
+        // ---- Build this iteration's fetch lists per PG (parallel,
+        // into the engine's reusable scratch). ----
+        self.scratch.build(
             graph,
             part,
             self.cfg.pull_early_exit,
@@ -298,6 +333,7 @@ impl BfsEngine for CycleSim {
             mode,
             verts_per_beat,
         );
+        let fetches = &self.scratch.fetches;
 
         // ---- The three contended subsystems. ----
         // One *shared* HBM subsystem: per-PC bounded queues behind the
@@ -308,7 +344,7 @@ impl BfsEngine for CycleSim {
         // one per cycle once the AXI demand DW·F exceeds the physical
         // ceiling (wide-bus configs).
         let mut hbm = HbmSubsystem::new(
-            self.map.clone(),
+            std::sync::Arc::clone(&self.map),
             HbmSubsystemConfig {
                 axi: AxiConfig {
                     data_width: dw,
@@ -340,7 +376,7 @@ impl BfsEngine for CycleSim {
             part,
             self.cfg.pe.scan_bits_per_cycle,
             &mut pgs,
-            &fetches,
+            fetches,
             sparse_pop,
         );
 
@@ -357,7 +393,9 @@ impl BfsEngine for CycleSim {
         // A PG's staging holds at most two beats' worth of decoded
         // messages; beyond that its HBM port is gated.
         let staging_cap = 2 * verts_per_beat;
-        let mut blocked = vec![false; npgs];
+        self.blocked.clear();
+        self.blocked.resize(npgs, false);
+        let blocked = &mut self.blocked;
         let mut cycle = 0u64;
         let mut newly = 0u64;
         loop {
@@ -479,7 +517,8 @@ impl BfsEngine for CycleSim {
             let pes_idle = pgs
                 .iter()
                 .all(|pg| pg.pes.iter().all(crate::pe::ProcessingElement::idle));
-            if mem_idle && pes_idle && fabric.is_empty() {
+            let fabric_empty = fabric.is_empty();
+            if mem_idle && pes_idle && fabric_empty {
                 break;
             }
             if cycle > self.cfg.max_cycles_per_iter {
@@ -488,6 +527,46 @@ impl BfsEngine for CycleSim {
                     limit: self.cfg.max_cycles_per_iter,
                 }
                 .into());
+            }
+
+            // ---- Event-horizon fast-forward (DESIGN.md §10). ----
+            // When the machine is *quiet* — every PE idle, the fabric
+            // and every staging buffer empty — the only future events
+            // are known-latency expiries (HBM readiness, beat-credit
+            // refill, P1 issue schedules). Skip to one cycle before the
+            // earliest of them, bulk-advancing every counter and stats
+            // integral; the next unit tick then observes the event
+            // exactly as it would have. Quietness also means every HBM
+            // gate is provably open (an empty staging never blocks), so
+            // the no-gates view `&[]` is exact for the whole window.
+            if self.cfg.fast_forward
+                && pes_idle
+                && fabric_empty
+                && pgs.iter().all(|pg| pg.staging.is_empty())
+            {
+                let mut horizon = u64::MAX;
+                for pg in pgs.iter() {
+                    if let Some(d) = pg.next_event_in(cycle) {
+                        horizon = horizon.min(d);
+                    }
+                }
+                if horizon > 1 {
+                    if let Some(d) = hbm.next_event_in(&[]) {
+                        horizon = horizon.min(d);
+                    }
+                }
+                // horizon == u64::MAX: a non-terminated machine with no
+                // future event (e.g. a stream waiting on beats that can
+                // never come). Unit mode would tick fruitlessly to the
+                // budget; jump straight there and fail identically.
+                let skip = horizon
+                    .saturating_sub(1)
+                    .min(self.cfg.max_cycles_per_iter.saturating_sub(cycle));
+                if skip > 0 {
+                    cycle += skip;
+                    fabric.advance(skip);
+                    hbm.advance(skip, &[]);
+                }
             }
         }
 
@@ -697,11 +776,15 @@ mod tests {
             state.current.insert(v as VertexId, 0);
         }
         assert!(state.current.is_sparse());
-        let sparse = build_fetch_lists(&g, cfg.part, false, &state, Mode::Push, 4);
+        let mut scratch = FetchScratch::default();
+        scratch.build(&g, cfg.part, false, &state, Mode::Push, 4);
+        let sparse = scratch.fetches.clone();
         // The dense (sharded bitmap scan) path over the same membership
-        // must produce identical lists.
+        // must produce identical lists — including through the *same*
+        // reused scratch, which must not leak earlier contents.
         state.current.to_dense();
-        let dense = build_fetch_lists(&g, cfg.part, false, &state, Mode::Push, 4);
+        scratch.build(&g, cfg.part, false, &state, Mode::Push, 4);
+        let dense = scratch.fetches.clone();
         assert_eq!(sparse, dense);
         assert_eq!(sparse.len(), 4);
         for pg_list in &sparse {

@@ -82,7 +82,7 @@ impl std::error::Error for LinkError {}
 
 /// Per-link service statistics, reported like
 /// [`PcStats`](crate::hbm::pc::PcStats).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LinkStats {
     /// Sending card.
     pub src: usize,
@@ -229,6 +229,31 @@ impl CardLink {
         self.stats.occupancy_sum += occ as u64;
         self.stats.max_occupancy = self.stats.max_occupancy.max(occ);
     }
+
+    /// Lower bound on the cycles (from `now`) until this link can next
+    /// change externally observable state on its own: the head of the
+    /// FIFO becomes deliverable at its latency stamp (stamps are
+    /// monotone, so the head is the earliest). `None` for an empty
+    /// link, and for a dead (`msgs_per_cycle == 0`) link — its parked
+    /// messages never drain.
+    pub fn next_event_in(&self, now: u64) -> Option<u64> {
+        if self.cfg.msgs_per_cycle == 0 {
+            return None;
+        }
+        let &(ready_at, _) = self.fifo.front()?;
+        Some(ready_at.saturating_sub(now).max(1))
+    }
+
+    /// Bulk-advance `k` cycles, bit-identical to `k`
+    /// [`end_cycle`](Self::end_cycle) calls with no sends or deliveries
+    /// in between (the caller's fast-forward contract): occupancy is
+    /// constant over the window, so the integral gains `len·k`.
+    pub fn advance(&mut self, k: u64) {
+        let occ = self.fifo.len();
+        self.stats.cycles += k;
+        self.stats.occupancy_sum += occ as u64 * k;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(occ);
+    }
 }
 
 /// The full mesh: one [`CardLink`] per ordered card pair,
@@ -313,6 +338,35 @@ impl CardMesh {
         for l in &mut self.links {
             l.end_cycle();
         }
+    }
+
+    /// Lower bound on the cycles (from `now`) until any link can next
+    /// deliver a message — the minimum of the per-link bounds.
+    pub fn next_event_in(&self, now: u64) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for l in &self.links {
+            if let Some(d) = l.next_event_in(now) {
+                best = Some(best.map_or(d, |b| b.min(d)));
+            }
+        }
+        best
+    }
+
+    /// Bulk-advance every link by `k` cycles (see
+    /// [`CardLink::advance`]).
+    pub fn advance(&mut self, k: u64) {
+        for l in &mut self.links {
+            l.advance(k);
+        }
+    }
+
+    /// Mutable view of the flattened link vector, **src-major**: links
+    /// `[src·(C−1) .. (src+1)·(C−1)]` all originate at `src`, ordered
+    /// by destination (destinations above `src` shifted down by one).
+    /// Chunking by `C−1` therefore yields disjoint per-source slices —
+    /// what the multi-card simulator's parallel send phase relies on.
+    pub(crate) fn links_mut(&mut self) -> &mut [CardLink] {
+        &mut self.links
     }
 
     /// Snapshot every link's stats, mesh order (src-major).

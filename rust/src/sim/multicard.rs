@@ -31,16 +31,44 @@
 //! [`SimConfig::max_cycles_per_iter`] and fails with the typed
 //! [`SimError::NonConvergence`] instead of hanging.
 //!
+//! # Execution structure (DESIGN.md §10)
+//!
+//! Every simulated cycle decomposes into five phases. Two of them only
+//! touch one card's private [`CardState`], so with
+//! [`SimConfig::with_threads`] > 1 they run on a rayon pool, one task
+//! per card; the phases that touch shared state (the search state the
+//! PEs claim discoveries in, the mesh delivery order) stay serial and
+//! run the cards in index order, which keeps serial and parallel
+//! ticking bit-identical:
+//!
+//! 1. **drain** (serial, cards in order): fabric `begin_cycle`, PEs
+//!    claim discoveries in global PE order;
+//! 2. **tick + send** (per-card parallel): fabric tick, outbox heads
+//!    onto this card's outgoing links — the mesh's src-major layout
+//!    gives each card a disjoint link slice;
+//! 3. **deliver** (serial, strictly after *all* sends — a zero-latency
+//!    message sent this cycle must be deliverable this cycle regardless
+//!    of card order): mesh drains into each card's inbox;
+//! 4. **memory** (per-card parallel): staging/inbox injection, P1
+//!    issue, HBM tick, beat decode into staging or outboxes;
+//! 5. **close** (serial): mesh occupancy sample, termination check,
+//!    and — when the whole machine is quiet — the event-horizon
+//!    fast-forward, which bulk-advances every card *and* the mesh to
+//!    one cycle before the next latency expiry (see
+//!    [`CycleSim`](super::CycleSim); the mesh's in-flight heads join
+//!    the horizon here).
+//!
 //! Like every timing layer in this repo, none of it can change what
 //! the search computes: discoveries are idempotent visited-set claims
 //! inside a level-synchronous driver, so levels stay bit-identical to
-//! `bfs::reference` at every card count, depth, and latency — the
-//! cross-card differential-test wall pins this.
+//! `bfs::reference` at every card count, depth, latency, and thread
+//! count — the cross-card differential-test wall pins this.
 
 use super::config::{Placement, SimConfig};
-use super::cycle::{build_fetch_lists, schedule_p1, CycleResult};
+use super::cycle::{schedule_p1, CycleResult, FetchScratch};
 use super::failure::SimError;
-use super::link::{CardMesh, LinkStats};
+use super::link::{CardLink, CardMesh, LinkStats};
+use crate::bfs::bitmap::intra_query_pool;
 use crate::bfs::Mode;
 use crate::dispatcher::{DispatcherFabric, DispatcherStats, VertexMsg};
 use crate::exec::{BfsEngine, SearchState, StepStats};
@@ -52,19 +80,199 @@ use crate::hbm::subsystem::{HbmSubsystem, HbmSubsystemConfig};
 use crate::pe::{PeStats, ProcessingGroup};
 use crate::sched::ModePolicy;
 use crate::Result;
+use rayon::prelude::*;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// The multi-card cycle-stepped simulator.
 pub struct MultiCardSim {
-    graph: std::sync::Arc<Graph>,
+    graph: Arc<Graph>,
     cfg: SimConfig,
-    /// One *local* address map per card (local PGs → local PCs).
-    card_map: AddressMap,
+    /// One *local* address map per card (local PGs → local PCs),
+    /// shared by every per-step [`HbmSubsystem`] instead of cloned.
+    card_map: Arc<AddressMap>,
+    /// Reusable per-iteration fetch-list scratch (global PG indices;
+    /// handed out per card when the schedules are distributed).
+    scratch: FetchScratch,
+    /// Per-card tick pool ([`SimConfig::threads`] > 1 and > 1 card);
+    /// `None` ticks the cards serially. Construction failure degrades
+    /// to serial — parallel ticking is a wall-clock optimization,
+    /// never a semantic knob.
+    pool: Option<Arc<rayon::ThreadPool>>,
+}
+
+/// Everything one card owns privately: its fabric, its HBM shard, its
+/// PGs, the outboxes feeding its outgoing links, the inbox its
+/// incoming links fill, and the HBM gate scratch. Phases 2 and 4 of
+/// the cycle (see the module doc) touch nothing else, which is what
+/// makes them safe to run one-task-per-card.
+struct CardState {
+    fabric: DispatcherFabric,
+    hbm: HbmSubsystem,
+    /// This card's PGs, local order (global PG order is card-major).
+    pgs: Vec<ProcessingGroup>,
+    /// Per-local-PG remote messages not yet on a link:
+    /// `(dst_card, (local entry lane on dst, msg))`.
+    outboxes: Vec<VecDeque<(usize, (usize, VertexMsg))>>,
+    /// Messages received from the mesh but not yet injected into this
+    /// card's fabric.
+    inbox: VecDeque<(usize, VertexMsg)>,
+    /// Per-local-PG HBM gate flags, rewritten every cycle.
+    blocked: Vec<bool>,
+}
+
+/// Per-cycle immutable context shared by the card phases.
+#[derive(Clone, Copy)]
+struct TickCtx<'a> {
+    graph: &'a Graph,
+    part: Partitioning,
+    mode: Mode,
+    sv: u64,
+    verts_per_beat: usize,
+    staging_cap: usize,
+}
+
+impl CardState {
+    /// Phase 1 (serial): begin the fabric cycle, then this card's PEs
+    /// drain their fabric output FIFOs into the shared search state.
+    /// Ticking cards in index order preserves the single-loop global
+    /// PE order — PE ranges are contiguous per card.
+    fn drain_pes(&mut self, ctx: TickCtx<'_>, state: &mut SearchState, newly: &mut u64) {
+        self.fabric.begin_cycle();
+        let ppg = ctx.part.pes_per_pg();
+        for lane in 0..ctx.part.pes_per_card() {
+            let elem = &mut self.pgs[lane / ppg].pes[lane % ppg];
+            elem.begin_cycle();
+            if !elem.retire_pending_writes() {
+                continue; // carried P3 writes exhausted this cycle's ports
+            }
+            loop {
+                let Some(&msg) = self.fabric.peek_output(lane) else {
+                    break;
+                };
+                if !elem.try_check() {
+                    break; // both BRAM ports spent
+                }
+                self.fabric.pop_output(lane);
+                match ctx.mode {
+                    Mode::Push => {
+                        let w = msg.vid as usize;
+                        if !state.visited.get(w) {
+                            state.visited.set(w);
+                            state.next.insert(msg.vid, ctx.graph.csr.degree(msg.vid));
+                            state.levels[w] = state.bfs_level + 1;
+                            *newly += 1;
+                            elem.stage_result();
+                        }
+                    }
+                    Mode::Pull => {
+                        let u = msg.vid as usize;
+                        let c = msg.child as usize;
+                        if state.current.contains(u) && !state.visited.get(c) {
+                            state.visited.set(c);
+                            state.next.insert(msg.child, ctx.graph.csr.degree(msg.child));
+                            state.levels[c] = state.bfs_level + 1;
+                            *newly += 1;
+                            elem.stage_result();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Phase 2 (card-parallel): advance the fabric one rank and push
+    /// outbox heads onto this card's outgoing links. `links` is this
+    /// source card's src-major slice of the mesh — destinations in
+    /// ascending order with the card itself skipped (empty at one
+    /// card, where outboxes provably stay empty too). A refused head
+    /// parks the outbox until next cycle (typed back-pressure).
+    fn tick_and_send(&mut self, card: usize, links: &mut [CardLink], cycle: u64) {
+        self.fabric.tick();
+        for outbox in self.outboxes.iter_mut() {
+            while let Some(&(dst_card, (lane, msg))) = outbox.front() {
+                let li = dst_card - usize::from(dst_card > card);
+                if links[li].try_send(cycle, lane, msg).is_err() {
+                    break;
+                }
+                outbox.pop_front();
+            }
+        }
+    }
+
+    /// Phase 4 (card-parallel): staging and inbox injection into the
+    /// fabric entry rank, P1 issue into this card's HBM subsystem,
+    /// gate flags (a port whose staging *or outbox* cannot absorb a
+    /// full beat is blocked — link back-pressure reaching the memory
+    /// side), the HBM tick, and edge-beat decode into staging (local
+    /// destination) or the PG's outbox (remote).
+    fn memory_phase(&mut self, card: usize, ctx: TickCtx<'_>, cycle: u64) {
+        let ppg = ctx.part.pes_per_pg();
+        let pes_per_card = ctx.part.pes_per_card();
+        for pg in self.pgs.iter_mut() {
+            self.fabric.inject(&mut pg.staging, ctx.verts_per_beat as u32);
+        }
+        self.fabric.inject(&mut self.inbox, ctx.verts_per_beat as u32);
+        for (local_pg, pg) in self.pgs.iter_mut().enumerate() {
+            while let Some(&(ready, v, len)) = pg.issue.front() {
+                if ready > cycle {
+                    break;
+                }
+                pg.issue.pop_front();
+                self.hbm
+                    .request_list(local_pg, ctx.part.pe_of(v) % ppg, len as u64 * ctx.sv);
+                if len > 0 {
+                    pg.list_queue.push_back((v, len));
+                }
+            }
+        }
+        for (local_pg, gate) in self.blocked.iter_mut().enumerate() {
+            *gate = self.pgs[local_pg].staging.len()
+                + self.outboxes[local_pg].len()
+                + ctx.verts_per_beat
+                > ctx.staging_cap;
+        }
+        for beat in self.hbm.tick_gated(&self.blocked) {
+            let pg = &mut self.pgs[beat.port];
+            match beat.kind {
+                ReadKind::Offset => {
+                    pg.select_next_stream();
+                }
+                ReadKind::Edges => {
+                    pg.select_next_stream();
+                    if let Some((v, fetch_len)) = pg.stream {
+                        let list = match ctx.mode {
+                            Mode::Push => ctx.graph.out_neighbors(v),
+                            Mode::Pull => ctx.graph.in_neighbors(v),
+                        };
+                        let src_lane = ctx.part.pe_of(v) % pes_per_card;
+                        let end = (pg.stream_pos + ctx.verts_per_beat).min(fetch_len);
+                        for &u in &list[pg.stream_pos..end] {
+                            let msg = match ctx.mode {
+                                Mode::Push => VertexMsg { vid: u, child: u },
+                                Mode::Pull => VertexMsg { vid: u, child: v },
+                            };
+                            let dst_card = ctx.part.pe_of(msg.vid) / pes_per_card;
+                            if dst_card == card {
+                                pg.staging.push_back((src_lane, msg));
+                            } else {
+                                self.outboxes[beat.port].push_back((dst_card, (src_lane, msg)));
+                            }
+                        }
+                        pg.stream_pos = end;
+                        if end >= fetch_len {
+                            pg.stream = None;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl MultiCardSim {
     /// New simulator; panics where [`MultiCardSim::try_new`] errors.
-    pub fn new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Self {
+    pub fn new(graph: impl Into<Arc<Graph>>, cfg: SimConfig) -> Self {
         Self::try_new(graph, cfg).expect("invalid multi-card configuration")
     }
 
@@ -72,7 +280,7 @@ impl MultiCardSim {
     /// across the partitioning's cards, and only the partitioned
     /// placement is supported (each card owns its shard privately —
     /// there is no cross-card HBM switch to pack through).
-    pub fn try_new(graph: impl Into<std::sync::Arc<Graph>>, cfg: SimConfig) -> Result<Self> {
+    pub fn try_new(graph: impl Into<Arc<Graph>>, cfg: SimConfig) -> Result<Self> {
         let graph = graph.into();
         let cards = cfg.part.num_cards;
         anyhow::ensure!(
@@ -85,11 +293,19 @@ impl MultiCardSim {
             cfg.num_hbm_pcs
         );
         let local_part = Partitioning::new(cfg.part.pes_per_card(), cfg.part.pgs_per_card());
-        let card_map = AddressMap::partitioned(local_part, cfg.num_hbm_pcs / cards);
+        let card_map = Arc::new(AddressMap::partitioned(local_part, cfg.num_hbm_pcs / cards));
+        // One rayon task per card: more threads than cards cannot help.
+        let pool = if cards > 1 {
+            intra_query_pool(cfg.threads.min(cards))
+        } else {
+            None
+        };
         Ok(Self {
             graph,
             cfg,
             card_map,
+            scratch: FetchScratch::default(),
+            pool,
         })
     }
 
@@ -142,11 +358,13 @@ impl BfsEngine for MultiCardSim {
         let dw = self.cfg.dw_bytes();
         let sv = self.cfg.sv_bytes;
         let verts_per_beat = (dw / sv).max(1) as usize;
-        let graph = std::sync::Arc::clone(&self.graph);
+        let graph = Arc::clone(&self.graph);
         let graph = graph.as_ref();
+        let pool = self.pool.clone();
 
-        // ---- Fetch lists per (global) PG, shared with CycleSim. ----
-        let fetches = build_fetch_lists(
+        // ---- Fetch lists per (global) PG, shared with CycleSim
+        // (parallel, into the engine's reusable scratch). ----
+        self.scratch.build(
             graph,
             part,
             self.cfg.pull_early_exit,
@@ -154,6 +372,7 @@ impl BfsEngine for MultiCardSim {
             mode,
             verts_per_beat,
         );
+        let fetches = &self.scratch.fetches;
 
         // ---- Per-card subsystems + the mesh joining them. ----
         let hbm_cfg = HbmSubsystemConfig {
@@ -167,39 +386,37 @@ impl BfsEngine for MultiCardSim {
             queue_capacity: self.cfg.pc_queue_capacity,
             beats_per_cycle: self.cfg.hbm_beats_per_cycle(),
         };
-        let mut hbms: Vec<HbmSubsystem> = (0..cards)
-            .map(|_| HbmSubsystem::new(self.card_map.clone(), hbm_cfg))
-            .collect();
-        let mut fabrics: Vec<DispatcherFabric> = (0..cards)
-            .map(|_| {
-                self.cfg.dispatcher.build_fabric(
-                    pes_per_card,
-                    self.cfg.xbar_fifo_depth,
-                    self.cfg.pe.p2_msgs_per_cycle,
-                )
-            })
-            .collect();
-        let mut pgs: Vec<ProcessingGroup> = (0..npgs)
+        let mut all_pgs: Vec<ProcessingGroup> = (0..npgs)
             .map(|id| ProcessingGroup::new(id, ppg, self.cfg.pe, self.cfg.hbm, sv))
             .collect();
-        let mut mesh = CardMesh::new(cards, self.cfg.link);
-        // Remote messages a PG decoded but has not pushed onto a link
-        // yet: `(dst_card, (local entry lane on dst, msg))`.
-        let mut outboxes: Vec<VecDeque<(usize, (usize, VertexMsg))>> =
-            (0..npgs).map(|_| VecDeque::new()).collect();
-        // Messages a card received but has not injected into its
-        // fabric yet.
-        let mut inboxes: Vec<VecDeque<(usize, VertexMsg)>> =
-            (0..cards).map(|_| VecDeque::new()).collect();
 
         let sparse_pop = mode == Mode::Push && state.current.is_sparse();
         schedule_p1(
             part,
             self.cfg.pe.scan_bits_per_cycle,
-            &mut pgs,
-            &fetches,
+            &mut all_pgs,
+            fetches,
             sparse_pop,
         );
+
+        let mut pg_iter = all_pgs.into_iter();
+        let mut cards_state: Vec<CardState> = (0..cards)
+            .map(|_| CardState {
+                fabric: self.cfg.dispatcher.build_fabric(
+                    pes_per_card,
+                    self.cfg.xbar_fifo_depth,
+                    self.cfg.pe.p2_msgs_per_cycle,
+                ),
+                hbm: HbmSubsystem::new(Arc::clone(&self.card_map), hbm_cfg),
+                pgs: pg_iter.by_ref().take(pgs_per_card).collect(),
+                outboxes: (0..pgs_per_card).map(|_| VecDeque::new()).collect(),
+                inbox: VecDeque::new(),
+                blocked: vec![false; pgs_per_card],
+            })
+            .collect();
+        let mut mesh = CardMesh::new(cards, self.cfg.link);
+        // Src-major slice width of the mesh's flattened link vector.
+        let links_per_card = cards - 1;
 
         let scan_floor = if sparse_pop {
             state.current.len().div_ceil(npes as u64)
@@ -208,174 +425,89 @@ impl BfsEngine for MultiCardSim {
             interval_bits.div_ceil(self.cfg.pe.scan_bits_per_cycle as u64)
         };
 
-        let staging_cap = 2 * verts_per_beat;
-        let mut blocked = vec![false; pgs_per_card];
+        let ctx = TickCtx {
+            graph,
+            part,
+            mode,
+            sv,
+            verts_per_beat,
+            // A PG's staging holds at most two beats' worth of decoded
+            // messages; beyond that its HBM port is gated.
+            staging_cap: 2 * verts_per_beat,
+        };
         let mut cycle = 0u64;
         let mut newly = 0u64;
         loop {
             cycle += 1;
-            for f in &mut fabrics {
-                f.begin_cycle();
+
+            // ---- Phase 1 (serial): PEs drain their card-local fabric
+            // output FIFOs into the shared search state. ----
+            for cs in cards_state.iter_mut() {
+                cs.drain_pes(ctx, state, &mut newly);
             }
 
-            // ---- PEs drain their card-local fabric output FIFOs. ----
-            for pe in 0..npes {
-                let card = pe / pes_per_card;
-                let lane = pe % pes_per_card;
-                let pgi = part.pg_of_pe(pe);
-                let elem = &mut pgs[pgi].pes[pe % ppg];
-                elem.begin_cycle();
-                if !elem.retire_pending_writes() {
-                    continue;
+            // ---- Phase 2: fabric ticks + outboxes → links. ----
+            match &pool {
+                Some(pool) if links_per_card > 0 => pool.install(|| {
+                    cards_state
+                        .par_iter_mut()
+                        .zip(mesh.links_mut().par_chunks_mut(links_per_card))
+                        .enumerate()
+                        .for_each(|(card, (cs, links))| cs.tick_and_send(card, links, cycle));
+                }),
+                _ if links_per_card == 0 => {
+                    cards_state[0].tick_and_send(0, &mut [], cycle);
                 }
-                loop {
-                    let Some(&msg) = fabrics[card].peek_output(lane) else {
-                        break;
-                    };
-                    if !elem.try_check() {
-                        break;
-                    }
-                    fabrics[card].pop_output(lane);
-                    match mode {
-                        Mode::Push => {
-                            let w = msg.vid as usize;
-                            if !state.visited.get(w) {
-                                state.visited.set(w);
-                                state.next.insert(msg.vid, graph.csr.degree(msg.vid));
-                                state.levels[w] = state.bfs_level + 1;
-                                newly += 1;
-                                elem.stage_result();
-                            }
-                        }
-                        Mode::Pull => {
-                            let u = msg.vid as usize;
-                            let c = msg.child as usize;
-                            if state.current.contains(u) && !state.visited.get(c) {
-                                state.visited.set(c);
-                                state.next.insert(msg.child, graph.csr.degree(msg.child));
-                                state.levels[c] = state.bfs_level + 1;
-                                newly += 1;
-                                elem.stage_result();
-                            }
-                        }
-                    }
-                }
-            }
-
-            for f in &mut fabrics {
-                f.tick();
-            }
-
-            // ---- Outboxes → links (typed back-pressure: a refused
-            // head parks the outbox until next cycle). ----
-            for (pgi, outbox) in outboxes.iter_mut().enumerate() {
-                let src_card = part.card_of_pg(pgi);
-                while let Some(&(dst_card, (lane, msg))) = outbox.front() {
-                    if mesh
-                        .link_mut(src_card, dst_card)
-                        .try_send(cycle, lane, msg)
-                        .is_err()
+                _ => {
+                    for (card, (cs, links)) in cards_state
+                        .iter_mut()
+                        .zip(mesh.links_mut().chunks_mut(links_per_card))
+                        .enumerate()
                     {
-                        break;
-                    }
-                    outbox.pop_front();
-                }
-            }
-
-            // ---- Links → inboxes, capped by latency, the per-cycle
-            // budget, and the inbox's headroom. ----
-            for (card, inbox) in inboxes.iter_mut().enumerate() {
-                let room = staging_cap.saturating_sub(inbox.len());
-                mesh.deliver_into(cycle, card, inbox, room);
-            }
-
-            // ---- Injection: local staging and the card inbox both
-            // offer to the card's fabric entry rank. ----
-            for (pgi, pg) in pgs.iter_mut().enumerate() {
-                fabrics[part.card_of_pg(pgi)].inject(&mut pg.staging, verts_per_beat as u32);
-            }
-            for (card, inbox) in inboxes.iter_mut().enumerate() {
-                fabrics[card].inject(inbox, verts_per_beat as u32);
-            }
-
-            // ---- P1 issue into each card's HBM subsystem. ----
-            for (pgi, pg) in pgs.iter_mut().enumerate() {
-                let card = part.card_of_pg(pgi);
-                let local_pg = pgi % pgs_per_card;
-                while let Some(&(ready, v, len)) = pg.issue.front() {
-                    if ready > cycle {
-                        break;
-                    }
-                    pg.issue.pop_front();
-                    hbms[card].request_list(local_pg, part.pe_of(v) % ppg, len as u64 * sv);
-                    if len > 0 {
-                        pg.list_queue.push_back((v, len));
+                        cs.tick_and_send(card, links, cycle);
                     }
                 }
             }
 
-            // ---- HBM per card: stream beats, gating ports whose
-            // staging *or outbox* cannot absorb a full beat — link
-            // back-pressure reaching the memory side. ----
-            for card in 0..cards {
-                for local_pg in 0..pgs_per_card {
-                    let pgi = card * pgs_per_card + local_pg;
-                    blocked[local_pg] = pgs[pgi].staging.len()
-                        + outboxes[pgi].len()
-                        + verts_per_beat
-                        > staging_cap;
-                }
-                for beat in hbms[card].tick_gated(&blocked) {
-                    let pgi = card * pgs_per_card + beat.port;
-                    let pg = &mut pgs[pgi];
-                    match beat.kind {
-                        ReadKind::Offset => {
-                            pg.select_next_stream();
-                        }
-                        ReadKind::Edges => {
-                            pg.select_next_stream();
-                            if let Some((v, fetch_len)) = pg.stream {
-                                let list = match mode {
-                                    Mode::Push => graph.out_neighbors(v),
-                                    Mode::Pull => graph.in_neighbors(v),
-                                };
-                                let src_lane = part.pe_of(v) % pes_per_card;
-                                let end = (pg.stream_pos + verts_per_beat).min(fetch_len);
-                                for &u in &list[pg.stream_pos..end] {
-                                    let msg = match mode {
-                                        Mode::Push => VertexMsg { vid: u, child: u },
-                                        Mode::Pull => VertexMsg { vid: u, child: v },
-                                    };
-                                    let dst_card = part.pe_of(msg.vid) / pes_per_card;
-                                    if dst_card == card {
-                                        pg.staging.push_back((src_lane, msg));
-                                    } else {
-                                        outboxes[pgi].push_back((dst_card, (src_lane, msg)));
-                                    }
-                                }
-                                pg.stream_pos = end;
-                                if end >= fetch_len {
-                                    pg.stream = None;
-                                }
-                            }
-                        }
+            // ---- Phase 3 (serial, strictly after every send): links →
+            // inboxes, capped by latency, the per-cycle budget, and the
+            // inbox's headroom. ----
+            for (card, cs) in cards_state.iter_mut().enumerate() {
+                let room = ctx.staging_cap.saturating_sub(cs.inbox.len());
+                mesh.deliver_into(cycle, card, &mut cs.inbox, room);
+            }
+
+            // ---- Phase 4: injection, P1 issue, HBM, beat decode. ----
+            match &pool {
+                Some(pool) => pool.install(|| {
+                    cards_state
+                        .par_iter_mut()
+                        .enumerate()
+                        .for_each(|(card, cs)| cs.memory_phase(card, ctx, cycle));
+                }),
+                None => {
+                    for (card, cs) in cards_state.iter_mut().enumerate() {
+                        cs.memory_phase(card, ctx, cycle);
                     }
                 }
             }
 
+            // ---- Phase 5 (serial): mesh sample + termination. ----
             mesh.end_cycle();
 
-            // ---- Termination: every card and every link drained. ----
-            let mem_idle = hbms.iter().all(HbmSubsystem::idle)
-                && pgs.iter().all(ProcessingGroup::stream_idle);
-            let pes_idle = pgs
+            let mem_idle = cards_state
                 .iter()
-                .all(|pg| pg.pes.iter().all(crate::pe::ProcessingElement::idle));
-            let links_idle = mesh.is_empty()
-                && outboxes.iter().all(VecDeque::is_empty)
-                && inboxes.iter().all(VecDeque::is_empty);
-            if mem_idle && pes_idle && links_idle && fabrics.iter().all(DispatcherFabric::is_empty)
-            {
+                .all(|cs| cs.hbm.idle() && cs.pgs.iter().all(ProcessingGroup::stream_idle));
+            let pes_idle = cards_state.iter().all(|cs| {
+                cs.pgs
+                    .iter()
+                    .all(|pg| pg.pes.iter().all(crate::pe::ProcessingElement::idle))
+            });
+            let boxes_empty = cards_state
+                .iter()
+                .all(|cs| cs.inbox.is_empty() && cs.outboxes.iter().all(VecDeque::is_empty));
+            let fabrics_empty = cards_state.iter().all(|cs| cs.fabric.is_empty());
+            if mem_idle && pes_idle && boxes_empty && fabrics_empty && mesh.is_empty() {
                 break;
             }
             if cycle > self.cfg.max_cycles_per_iter {
@@ -385,29 +517,80 @@ impl BfsEngine for MultiCardSim {
                 }
                 .into());
             }
+
+            // ---- Event-horizon fast-forward (DESIGN.md §10). ----
+            // Quiet here additionally requires every outbox and inbox
+            // empty (a parked message sends or injects next cycle), and
+            // the mesh's in-flight latency stamps join the horizon. An
+            // empty staging + empty outbox means every HBM gate is
+            // provably open, so the no-gates view `&[]` is exact.
+            if self.cfg.fast_forward
+                && pes_idle
+                && fabrics_empty
+                && boxes_empty
+                && cards_state
+                    .iter()
+                    .all(|cs| cs.pgs.iter().all(|pg| pg.staging.is_empty()))
+            {
+                let mut horizon = u64::MAX;
+                for cs in &cards_state {
+                    for pg in &cs.pgs {
+                        if let Some(d) = pg.next_event_in(cycle) {
+                            horizon = horizon.min(d);
+                        }
+                    }
+                    if horizon > 1 {
+                        if let Some(d) = cs.hbm.next_event_in(&[]) {
+                            horizon = horizon.min(d);
+                        }
+                    }
+                }
+                if horizon > 1 {
+                    if let Some(d) = mesh.next_event_in(cycle) {
+                        horizon = horizon.min(d);
+                    }
+                }
+                // horizon == u64::MAX: no future event (e.g. a dead
+                // link holding the only remaining messages). Unit mode
+                // would tick fruitlessly to the budget; jump straight
+                // there and fail identically.
+                let skip = horizon
+                    .saturating_sub(1)
+                    .min(self.cfg.max_cycles_per_iter.saturating_sub(cycle));
+                if skip > 0 {
+                    cycle += skip;
+                    for cs in cards_state.iter_mut() {
+                        cs.fabric.advance(skip);
+                        cs.hbm.advance(skip, &[]);
+                    }
+                    mesh.advance(skip);
+                }
+            }
         }
 
-        // ---- Collect stats in global order. ----
+        // ---- Collect stats in global order (cards are contiguous). ----
         let mut pe_stats: Vec<PeStats> = Vec::with_capacity(npes);
-        for pg in pgs.iter_mut() {
-            for elem in pg.pes.iter_mut() {
-                elem.finish_window();
-                let mut s = elem.stats.clone();
-                s.pe = pe_stats.len();
-                pe_stats.push(s);
+        for cs in cards_state.iter_mut() {
+            for pg in cs.pgs.iter_mut() {
+                for elem in pg.pes.iter_mut() {
+                    elem.finish_window();
+                    let mut s = elem.stats.clone();
+                    s.pe = pe_stats.len();
+                    pe_stats.push(s);
+                }
             }
         }
         // Per-card PC stats re-indexed to global PC ids.
         let mut pc_stats: Vec<PcStats> = Vec::with_capacity(self.cfg.num_hbm_pcs);
-        for (card, hbm) in hbms.iter().enumerate() {
-            for mut s in hbm.stats() {
+        for (card, cs) in cards_state.iter().enumerate() {
+            for mut s in cs.hbm.stats() {
                 s.pc += card * pcs_per_card;
                 pc_stats.push(s);
             }
         }
         let mut dispatcher = DispatcherStats::default();
-        for f in &fabrics {
-            dispatcher.merge(&f.stats);
+        for cs in &cards_state {
+            dispatcher.merge(&cs.fabric.stats);
         }
         let link_stats: Vec<LinkStats> = mesh.stats();
 
@@ -523,5 +706,24 @@ mod tests {
         let mut cfg = multi(4, 1, 2);
         cfg.num_hbm_pcs = 2; // 2 PCs cannot shard across 4 cards
         assert!(MultiCardSim::try_new(g, cfg).is_err());
+    }
+
+    #[test]
+    fn parallel_ticking_matches_serial_bit_for_bit() {
+        let g = std::sync::Arc::new(generators::rmat_graph500(9, 8, 28));
+        let root = reference::sample_roots(&g, 1, 28)[0];
+        let serial = MultiCardSim::new(g.clone(), multi(2, 2, 4))
+            .run(root, &mut Hybrid::default())
+            .unwrap();
+        let parallel = MultiCardSim::new(g.clone(), multi(2, 2, 4).with_threads(2))
+            .run(root, &mut Hybrid::default())
+            .unwrap();
+        assert_eq!(serial.levels, parallel.levels);
+        assert_eq!(serial.cycles, parallel.cycles);
+        assert_eq!(serial.iter_cycles, parallel.iter_cycles);
+        assert_eq!(serial.pc_stats, parallel.pc_stats);
+        assert_eq!(serial.dispatcher, parallel.dispatcher);
+        assert_eq!(serial.pe_stats, parallel.pe_stats);
+        assert_eq!(serial.link_stats, parallel.link_stats);
     }
 }

@@ -1,0 +1,343 @@
+//! Differential suite for the event-horizon fast-forward (DESIGN.md §10).
+//!
+//! Fast-forward must be an *optimization only*: with it on (the default)
+//! every simulated quantity — levels, total and per-iteration cycles, and
+//! every PC/dispatcher/PE/link statistic — must be bit-identical to the
+//! unit-tick oracle (`with_fast_forward(false)`). The same holds for the
+//! per-card parallel ticking path (`with_threads > 1`): rayon changes
+//! wall-clock, never results.
+//!
+//! Two component-level property tests pin the `next_event_in()` contract
+//! directly: the bound never overshoots (no externally observable event
+//! strictly inside it) and bulk `advance()` is bit-identical to that many
+//! unit ticks. The bound is allowed to be *conservative* (the PC credit
+//! walk caps at 64 iterations), so the properties assert no-overshoot and
+//! stats identity — not that an event lands exactly at the bound.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use scalabfs::bfs::reference;
+use scalabfs::bfs::Mode;
+use scalabfs::dispatcher::VertexMsg;
+use scalabfs::graph::{generators, Graph, VertexId};
+use scalabfs::hbm::axi::ReadKind;
+use scalabfs::hbm::pc::{PcQueue, PcRequest};
+use scalabfs::prop_assert;
+use scalabfs::sched::{Fixed, Hybrid, ModePolicy};
+use scalabfs::sim::config::SimConfig;
+use scalabfs::sim::cycle::{CycleResult, CycleSim};
+use scalabfs::sim::link::{CardLink, LinkConfig};
+use scalabfs::sim::multicard::MultiCardSim;
+use scalabfs::util::prop::{self, PropConfig};
+
+const MODES: [&str; 3] = ["push", "pull", "hybrid"];
+
+/// Fresh policy per run — policies carry per-run state (mode traces).
+fn policy(mode: &str) -> Box<dyn ModePolicy> {
+    match mode {
+        "push" => Box::new(Fixed(Mode::Push)),
+        "pull" => Box::new(Fixed(Mode::Pull)),
+        "hybrid" => Box::new(Hybrid::default()),
+        other => panic!("unknown mode {other}"),
+    }
+}
+
+/// Every simulated quantity must match, field by field. Wall-clock-derived
+/// values (`seconds`, `gteps`) follow deterministically from `cycles` and
+/// the config, so cycle equality covers them.
+fn assert_identical(tag: &str, a: &CycleResult, b: &CycleResult) {
+    assert_eq!(a.levels, b.levels, "{tag}: levels diverged");
+    assert_eq!(a.cycles, b.cycles, "{tag}: total cycles diverged");
+    assert_eq!(a.iter_cycles, b.iter_cycles, "{tag}: per-iteration cycles diverged");
+    assert_eq!(
+        a.traversed_edges, b.traversed_edges,
+        "{tag}: traversed edges diverged"
+    );
+    assert_eq!(a.backpressure, b.backpressure, "{tag}: backpressure diverged");
+    assert_eq!(a.pc_stats, b.pc_stats, "{tag}: PC stats diverged");
+    assert_eq!(a.dispatcher, b.dispatcher, "{tag}: dispatcher stats diverged");
+    assert_eq!(a.pe_stats, b.pe_stats, "{tag}: PE stats diverged");
+    assert_eq!(a.link_stats, b.link_stats, "{tag}: link stats diverged");
+}
+
+fn run_single(g: &Arc<Graph>, cfg: SimConfig, root: VertexId, mode: &str) -> CycleResult {
+    let mut policy = policy(mode);
+    CycleSim::new(Arc::clone(g), cfg)
+        .run(root, policy.as_mut())
+        .expect("single-card run")
+}
+
+fn run_multi(g: &Arc<Graph>, cfg: SimConfig, root: VertexId, mode: &str) -> CycleResult {
+    let mut policy = policy(mode);
+    MultiCardSim::try_new(Arc::clone(g), cfg)
+        .expect("valid multicard config")
+        .run(root, policy.as_mut())
+        .expect("multicard run")
+}
+
+#[test]
+fn single_card_fast_forward_matches_oracle() {
+    let g = Arc::new(generators::rmat_graph500(9, 8, 42));
+    let root = reference::sample_roots(&g, 1, 42)[0];
+    let deep_latency = {
+        // Long memory round-trips create exactly the idle stretches the
+        // fast-forward is built to skip.
+        let mut c = SimConfig::u280(2, 4);
+        c.hbm.latency_cycles = 500;
+        c
+    };
+    let configs: Vec<(&str, SimConfig)> = vec![
+        ("u280-4x8", SimConfig::u280(4, 8)),
+        ("deep-latency", deep_latency),
+        ("shallow-xbar", SimConfig::u280(4, 8).with_xbar_fifo_depth(2)),
+    ];
+    for (tag, cfg) in &configs {
+        for mode in MODES {
+            let ff = run_single(&g, cfg.clone(), root, mode);
+            let oracle = run_single(&g, cfg.clone().with_fast_forward(false), root, mode);
+            assert_identical(&format!("{tag}/{mode}"), &ff, &oracle);
+        }
+    }
+}
+
+#[test]
+fn one_card_multicard_fast_forward_matches_oracle() {
+    let g = Arc::new(generators::rmat_graph500(9, 8, 7));
+    let root = reference::sample_roots(&g, 1, 7)[0];
+    for mode in MODES {
+        let cfg = SimConfig::multi_card(1, 4, 8);
+        let ff = run_multi(&g, cfg.clone(), root, mode);
+        let oracle = run_multi(&g, cfg.with_fast_forward(false), root, mode);
+        assert_identical(&format!("1card/{mode}"), &ff, &oracle);
+    }
+}
+
+/// The full matrix from the issue: cards × FIFO depth × link latency ×
+/// mode, fast-forward vs oracle, and the parallel per-card ticking path
+/// against the same oracle (folding serial-vs-parallel equivalence in).
+fn multicard_matrix(cards: usize, pcs_per_card: usize, pes_per_card: usize) {
+    let g = Arc::new(generators::rmat_graph500(8, 8, 13));
+    let root = reference::sample_roots(&g, 1, 13)[0];
+    for fifo in [2usize, 64] {
+        for latency in [1u64, 300] {
+            for mode in MODES {
+                let base = SimConfig::multi_card(cards, pcs_per_card, pes_per_card)
+                    .with_link_fifo_depth(fifo)
+                    .with_link_latency(latency);
+                let tag = format!("{cards}card/fifo{fifo}/lat{latency}/{mode}");
+                let oracle = run_multi(&g, base.clone().with_fast_forward(false), root, mode);
+                let ff = run_multi(&g, base.clone(), root, mode);
+                assert_identical(&tag, &ff, &oracle);
+                let parallel = run_multi(&g, base.with_threads(2), root, mode);
+                assert_identical(&format!("{tag}/threads2"), &parallel, &oracle);
+            }
+        }
+    }
+}
+
+#[test]
+fn two_card_matrix_fast_forward_and_parallel_match_oracle() {
+    multicard_matrix(2, 2, 4);
+}
+
+#[test]
+fn four_card_matrix_fast_forward_and_parallel_match_oracle() {
+    multicard_matrix(4, 1, 2);
+}
+
+#[test]
+fn pc_queue_bound_never_overshoots() {
+    prop::for_all(
+        PropConfig {
+            cases: 48,
+            seed: 0xFF10,
+        },
+        "PcQueue::next_event_in is conservative; advance == unit ticks",
+        |rng| {
+            let cap = rng.range(2, 8);
+            let outstanding = rng.range(1, 5);
+            let latency = 1 + rng.next_below(120);
+            let rate = match rng.next_below(3) {
+                0 => 1.0,
+                1 => 0.5,
+                _ => 0.37, // non-dyadic: exercises the exact-float credit walk
+            };
+            let mut q = PcQueue::new(0, cap, outstanding, latency).with_beat_rate(rate);
+            let mut now = 0u64;
+            // Load phase: interleave pushes (back-pressure allowed) with ticks.
+            for _ in 0..30 {
+                let _ = q.try_push(PcRequest {
+                    port: rng.range(0, 2),
+                    pe: rng.range(0, 4),
+                    kind: if rng.bernoulli(0.5) {
+                        ReadKind::Offset
+                    } else {
+                        ReadKind::Edges
+                    },
+                    beats: 1 + rng.next_below(6),
+                    follow_up_bytes: 0,
+                    extra_latency: rng.next_below(16),
+                });
+                if rng.bernoulli(0.5) {
+                    now += 1;
+                    q.tick_gated(now, &[]);
+                }
+            }
+            // Drain under random destination gating. Whenever the bound
+            // permits a jump, race a cloned unit-tick oracle against
+            // bulk advance and demand identical stats and occupancy —
+            // including on the first tick *after* the window.
+            let mut guard = 0u32;
+            loop {
+                guard += 1;
+                prop_assert!(guard < 100_000, "drain did not converge");
+                let blocked: [bool; 2] = if guard > 10_000 {
+                    [false, false]
+                } else {
+                    [rng.bernoulli(0.3), rng.bernoulli(0.3)]
+                };
+                match q.next_event_in(now, &blocked) {
+                    None => {
+                        if !blocked[0] && !blocked[1] {
+                            prop_assert!(
+                                q.idle(),
+                                "bound None with open gates but work remains \
+                                 (queue {}, inflight {})",
+                                q.queue_depth(),
+                                q.inflight_count()
+                            );
+                            break;
+                        }
+                        // Fully parked behind closed gates; retry with a
+                        // fresh gate draw.
+                    }
+                    Some(k) if k >= 2 => {
+                        let mut oracle = q.clone();
+                        for step in 1..k {
+                            let beat = oracle.tick_gated(now + step, &blocked);
+                            prop_assert!(
+                                beat.is_none(),
+                                "beat {beat:?} completed {step} cycles in, inside bound {k}"
+                            );
+                        }
+                        q.advance(now, k - 1, &blocked);
+                        prop_assert!(
+                            q.stats == oracle.stats,
+                            "bulk advance by {} diverged from unit ticks: {:?} vs {:?}",
+                            k - 1,
+                            q.stats,
+                            oracle.stats
+                        );
+                        prop_assert!(
+                            q.queue_depth() == oracle.queue_depth()
+                                && q.inflight_count() == oracle.inflight_count(),
+                            "bulk advance changed occupancy"
+                        );
+                        now += k - 1;
+                        // The cycle after the window must behave identically
+                        // on both paths (this is where the event may land).
+                        let a = q.tick_gated(now + 1, &blocked);
+                        let b = oracle.tick_gated(now + 1, &blocked);
+                        prop_assert!(a == b, "post-window tick diverged: {a:?} vs {b:?}");
+                        prop_assert!(
+                            q.stats == oracle.stats,
+                            "post-window tick stats diverged"
+                        );
+                        now += 1;
+                    }
+                    Some(_) => {
+                        now += 1;
+                        q.tick_gated(now, &blocked);
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn card_link_bound_never_overshoots() {
+    prop::for_all(
+        PropConfig {
+            cases: 48,
+            seed: 0xF11E,
+        },
+        "CardLink::next_event_in is conservative; advance == idle end_cycles",
+        |rng| {
+            let cfg = LinkConfig {
+                fifo_depth: rng.range(1, 9),
+                latency_cycles: rng.next_below(301),
+                msgs_per_cycle: rng.range(0, 5),
+            };
+            let mut link = CardLink::new(0, 1, cfg);
+            let mut out: VecDeque<(usize, VertexMsg)> = VecDeque::new();
+            let mut now = 0u64;
+            // Load phase: random sends with occasional serviced cycles.
+            for _ in 0..40 {
+                if rng.bernoulli(0.6) {
+                    let vid = rng.next_below(1 << 16) as VertexId;
+                    let _ = link.try_send(now, rng.range(0, 8), VertexMsg { vid, child: vid ^ 1 });
+                }
+                if rng.bernoulli(0.5) {
+                    link.deliver(now, &mut out, rng.range(0, 4));
+                    link.end_cycle();
+                    now += 1;
+                }
+            }
+            let mut guard = 0u32;
+            loop {
+                guard += 1;
+                prop_assert!(guard < 10_000, "link drain did not converge");
+                match link.next_event_in(now) {
+                    None => {
+                        prop_assert!(
+                            cfg.msgs_per_cycle == 0 || link.is_empty(),
+                            "bound None on a live link holding {} messages",
+                            link.occupancy()
+                        );
+                        if cfg.msgs_per_cycle == 0 && !link.is_empty() {
+                            // Dead link: parked messages must never drain.
+                            let moved = link.deliver(now + 1_000, &mut out, 64);
+                            prop_assert!(moved == 0, "dead link delivered {moved}");
+                        }
+                        break;
+                    }
+                    Some(k) if k >= 2 => {
+                        let mut oracle = link.clone();
+                        for step in 1..k {
+                            let moved = oracle.deliver(now + step, &mut out, 64);
+                            prop_assert!(
+                                moved == 0,
+                                "{moved} delivered {step} cycles in, inside bound {k}"
+                            );
+                            oracle.end_cycle();
+                        }
+                        link.advance(k - 1);
+                        prop_assert!(
+                            link.stats == oracle.stats,
+                            "bulk advance by {} diverged: {:?} vs {:?}",
+                            k - 1,
+                            link.stats,
+                            oracle.stats
+                        );
+                        now += k - 1;
+                        // Head stamps are exact, so here the event *is* at
+                        // the horizon: one cycle out.
+                        prop_assert!(
+                            link.next_event_in(now) == Some(1),
+                            "event not at horizon after advance"
+                        );
+                    }
+                    Some(_) => {
+                        link.deliver(now + 1, &mut out, 64);
+                        link.end_cycle();
+                        now += 1;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
